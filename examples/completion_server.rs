@@ -1,0 +1,90 @@
+//! Tensor-completion service: train a model, then serve prediction queries
+//! over a line-oriented TCP protocol (std-only; tokio is not in the offline
+//! crate set).  Demonstrates the "decomposed once, queried forever" usage
+//! the paper motivates for recommender backends.
+//!
+//! Protocol:  client sends `i1 i2 ... iN\n`, server replies `<prediction>\n`;
+//! `quit` closes the connection.
+//!
+//! Run: `cargo run --release --example completion_server` (serves a few
+//! self-issued queries, then exits — set `SERVE_FOREVER=1` to keep serving).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use fasttucker::coordinator::{Trainer, TrainConfig};
+use fasttucker::model::TuckerModel;
+use fasttucker::synth::{generate, SynthConfig};
+
+fn serve(model: &TuckerModel, stream: TcpStream) -> anyhow::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 || line.trim() == "quit" {
+            return Ok(());
+        }
+        let coords: Result<Vec<u32>, _> =
+            line.split_whitespace().map(|t| t.parse::<u32>()).collect();
+        let reply = match coords {
+            Ok(c) if c.len() == model.order()
+                && c.iter().zip(&model.dims).all(|(&i, &d)| i < d) =>
+            {
+                format!("{:.4}\n", model.predict_one(&c))
+            }
+            _ => "ERR expected N in-bounds indices\n".to_string(),
+        };
+        stream.write_all(reply.as_bytes())?;
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    // Train a small model first (or load one with --model).
+    let args: Vec<String> = std::env::args().collect();
+    let model = if let Some(pos) = args.iter().position(|a| a == "--model") {
+        TuckerModel::load(std::path::Path::new(&args[pos + 1]))?
+    } else {
+        let tensor = generate(&SynthConfig::order_sweep(3, 256, 50_000, 5));
+        let mut trainer = Trainer::new(&tensor, TrainConfig::default())?;
+        for _ in 0..8 {
+            trainer.epoch(&tensor)?;
+        }
+        trainer.model
+    };
+
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    println!("completion server on {addr} (order {}, dims {:?})", model.order(), model.dims);
+
+    if std::env::var("SERVE_FOREVER").is_ok() {
+        for stream in listener.incoming() {
+            let model = model.clone();
+            std::thread::spawn(move || {
+                let _ = serve(&model, stream.expect("accept"));
+            });
+        }
+        return Ok(());
+    }
+
+    // Self-test: issue a few queries from a client thread and print replies.
+    let server_model = model.clone();
+    let handle = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().expect("accept");
+        serve(&server_model, stream).expect("serve");
+    });
+    let mut client = TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(client.try_clone()?);
+    for query in ["1 2 3", "10 20 30", "bad input", "9999 0 0", "quit"] {
+        client.write_all(format!("{query}\n").as_bytes())?;
+        if query == "quit" {
+            break;
+        }
+        let mut reply = String::new();
+        reader.read_line(&mut reply)?;
+        println!("  {query:>12} -> {}", reply.trim());
+    }
+    handle.join().unwrap();
+    println!("server exited cleanly");
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! HHLST scenario: high-order, high-dimensional, large-scale sparse
+//! tensors — the regime the paper's Table 1 says only the FastTucker
+//! family handles.  Sweeps tensor order 3..8 (the paper's §5.1 synthetic
+//! family, laptop-scaled) and reports per-iteration time and the padding /
+//! memory behaviour that drives the Fig. 2-3 curves.
+//!
+//! Run: `cargo run --release --example highorder`
+
+use fasttucker::coordinator::{Algo, Trainer, TrainConfig};
+use fasttucker::synth::{generate, SynthConfig};
+
+fn main() -> anyhow::Result<()> {
+    println!(
+        "{:<6} {:>10} {:>12} {:>12} {:>10} {:>8}",
+        "order", "nnz", "factor", "core", "memory", "pad%"
+    );
+    for order in 3..=8 {
+        let tensor = generate(&SynthConfig::order_sweep(order, 64, 30_000, 3));
+        let mut cfg = TrainConfig::default();
+        cfg.algo = Algo::Plus;
+        let mut trainer = Trainer::new(&tensor, cfg)?;
+        // warm the executables, then measure one epoch
+        trainer.epoch(&tensor)?;
+        let st = trainer.epoch(&tensor)?;
+        println!(
+            "{:<6} {:>10} {:>12} {:>12} {:>10} {:>7.1}%",
+            order,
+            tensor.nnz(),
+            format!("{:.3}s", st.factor.total().as_secs_f64()),
+            format!("{:.3}s", st.core.total().as_secs_f64()),
+            format!(
+                "{:.3}s",
+                (st.factor.memory() + st.core.memory()).as_secs_f64()
+            ),
+            100.0 * st.factor.padding_ratio(),
+        );
+    }
+    println!("\nFastTuckerPlus iteration time grows ~linearly with order");
+    println!("(the paper's Fig. 2 shape) because D-chains share all C^(n).");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Quickstart + end-to-end validation driver.
+//!
+//! Generates a Netflix-like synthetic rating tensor (the laptop-scale
+//! surrogate for the paper's real datasets — DESIGN.md §3), trains a
+//! FastTuckerPlus decomposition through the full three-layer stack
+//! (Pallas-lowered HLO executed on the PJRT CPU client from the Rust
+//! coordinator), and logs the RMSE/MAE convergence curve plus per-phase
+//! timings.  The numbers recorded in EXPERIMENTS.md §E2E come from this.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use fasttucker::coordinator::{Trainer, TrainConfig};
+use fasttucker::synth::{generate, SynthConfig};
+use fasttucker::tensor::split::train_test_split;
+
+fn main() -> anyhow::Result<()> {
+    let nnz = std::env::var("QS_NNZ")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200_000);
+    let epochs = std::env::var("QS_EPOCHS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(15);
+
+    println!("generating netflix-like surrogate ({nnz} nnz)...");
+    let tensor = generate(&SynthConfig::netflix_like(nnz, 7));
+    let (train, test) = train_test_split(&tensor, 0.2, 7);
+    println!(
+        "dims {:?}, train {} / test {} entries, density {:.2e}",
+        tensor.dims,
+        train.nnz(),
+        test.nnz(),
+        tensor.density()
+    );
+
+    let cfg = TrainConfig::default(); // plus / tc / calculation / hlo
+    let mut trainer = Trainer::new(&train, cfg)?;
+    println!("runtime: {} (PJRT)", trainer.platform());
+
+    let (rmse, mae) = trainer.evaluate(&test)?;
+    println!("epoch  0: rmse {rmse:.4} mae {mae:.4} (random init)");
+    let t0 = std::time::Instant::now();
+    let mut best = rmse;
+    for epoch in 1..=epochs {
+        let st = trainer.epoch(&train)?;
+        let (rmse, mae) = trainer.evaluate(&test)?;
+        best = best.min(rmse);
+        println!(
+            "epoch {epoch:>2}: rmse {rmse:.4} mae {mae:.4} | factor {:.3}s (exec {:.3}s, mem {:.3}s) core {:.3}s | pad {:.1}%",
+            st.factor.total().as_secs_f64(),
+            st.factor.exec.as_secs_f64(),
+            st.factor.memory().as_secs_f64(),
+            st.core.total().as_secs_f64(),
+            100.0 * st.factor.padding_ratio()
+        );
+    }
+    println!(
+        "done in {:.1}s; best test RMSE {best:.4} (init was {rmse0:.4})",
+        t0.elapsed().as_secs_f64(),
+        rmse0 = rmse
+    );
+    anyhow::ensure!(best < 0.9 * rmse, "training failed to converge");
+    println!("CONVERGED ✓");
+    Ok(())
+}

@@ -1,0 +1,85 @@
+"""AOT lowering: jax -> HLO text + manifest.json.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the rust `xla` 0.1.6 crate) rejects; the text parser reassigns
+ids and round-trips cleanly.
+
+Run as ``python -m compile.aot --out ../artifacts`` (what `make artifacts`
+does).  Lowering is incremental: an artifact is re-lowered only when missing,
+so `make artifacts` is cheap when inputs are unchanged (the Makefile dep on
+the kernel sources forces a rebuild when they change).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(kernel: str, n: int, j: int, r: int, s: int, out_dir: str) -> dict:
+    name = model.artifact_name(kernel, n, j, r, s)
+    path = os.path.join(out_dir, name + ".hlo.txt")
+    entry = {
+        "name": name,
+        "kernel": kernel,
+        "n": n, "j": j, "r": r, "s": s,
+        "file": os.path.basename(path),
+    }
+    fn, args = model.build(kernel, n, j, r, s)
+    entry["inputs"] = [list(a.shape) for a in args]
+    if not os.path.exists(path):
+        lowered = fn.lower(*args)
+        text = to_hlo_text(lowered)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)
+        print(f"  lowered {name} ({len(text)//1024} KiB)")
+    return entry
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated kernel-name prefixes to lower")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    prefixes = args.only.split(",") if args.only else None
+
+    entries = []
+    for cfg in model.artifact_configs():
+        kernel = cfg[0]
+        if prefixes and not any(kernel.startswith(p) for p in prefixes):
+            continue
+        entries.append(lower_one(*cfg, out_dir=args.out))
+
+    manifest = {
+        "format": 1,
+        "dtype": "f32",
+        "artifacts": entries,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(entries)} artifacts in {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,18 @@
+"""L1 Pallas kernels for the FastTucker family (see DESIGN.md)."""
+
+from .fasttuckerplus import (  # noqa: F401
+    compute_c,
+    plus_core,
+    plus_core_storage,
+    plus_factor,
+    plus_factor_storage,
+    predict,
+)
+from .fasttucker import (  # noqa: F401
+    fasttucker_core_mode,
+    fasttucker_factor_mode,
+)
+from .fastertucker import (  # noqa: F401
+    fastertucker_core_mode,
+    fastertucker_factor_mode,
+)

@@ -1,0 +1,110 @@
+"""Shared building blocks for the L1 Pallas kernels.
+
+Two contraction variants mirror the paper's CUDA-core vs Tensor-core split,
+re-thought for TPU (see DESIGN.md §Hardware-Adaptation):
+
+* ``tc``  — ``jnp.dot`` with ``preferred_element_type=float32``: on a real TPU
+  this is the MXU (systolic array) path, the analog of WMMA 16x16x16 tiles.
+* ``cc``  — broadcast-multiply + sum reduction: the VPU (vector unit) path,
+  the analog of doing the same contraction on CUDA cores with warp shuffles.
+
+Both produce identical numerics in f32; only the op structure differs, which
+is exactly the contrast the paper's Table 8 / Fig. 4 measure.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Tile sizes mirror the paper's WMMA geometry: M = 16 samples per "warp",
+# J_n and R multiples of 16.  TILE_S is the batch-axis block held in VMEM per
+# grid step (the warp-register analog).
+WMMA = 16
+
+
+def tile(s: int) -> int:
+    """Batch-axis tile for a block of S samples.
+
+    Two regimes (DESIGN.md §Perf, L1):
+    * small S (tests, toy runs): the largest power-of-two divisor up to 128
+      — exercises the multi-step grid/BlockSpec pipeline, which is the real
+      TPU schedule (128-sample VMEM tiles streaming HBM->VMEM).
+    * large S (production artifacts, S >= 1024): one grid step covering the
+      whole block.  Under interpret=True a multi-step grid lowers to an XLA
+      while-loop that re-materializes the full output via dynamic-update-
+      slice every step — O(S^2/TILE) copies; measured 3.2 ms vs 0.8 ms per
+      4096-sample block.  On CPU there is no VMEM to respect, so grid=1 is
+      the faithful *and* fast lowering; the TPU BlockSpec schedule is still
+      validated by the small-S configs in pytest.
+    """
+    if s >= 1024:
+        return s
+    t = 128
+    while t > 1 and s % t != 0:
+        t //= 2
+    return t
+
+
+def matmul(a, b, variant: str):
+    """``a @ b`` with the given variant.  a: [m,k], b: [k,n] -> [m,n]."""
+    if variant == "tc":
+        return jnp.dot(a, b, preferred_element_type=jnp.float32)
+    if variant == "cc":
+        # VPU-shaped: explicit broadcast + reduce, no dot/MXU op.
+        return (a[:, :, None] * b[None, :, :]).sum(axis=1)
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+def matmul_t(a, b, variant: str):
+    """``a.T @ b`` without materializing the transpose.  a: [s,m], b: [s,n]
+    -> [m,n].  The explicit-transpose form (`jnp.dot(a.T, b)`) forces a
+    layout change per grid step on the CPU backend (~5x slower measured);
+    `dot_general` contracting over axis 0 of both operands avoids it and on
+    TPU maps to the same MXU pass."""
+    if variant == "tc":
+        return jax.lax.dot_general(
+            a, b, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    if variant == "cc":
+        return (a[:, :, None] * b[:, None, :]).sum(axis=0)
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+def matmul_nt(a, b, variant: str):
+    """``a @ b.T`` without materializing the transpose.  a: [m,k], b: [n,k]
+    -> [m,n].  Same rationale as :func:`matmul_t`."""
+    if variant == "tc":
+        return jax.lax.dot_general(
+            a, b, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    if variant == "cc":
+        return (a[:, None, :] * b[None, :, :]).sum(axis=2)
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+def hadamard_chain(cs):
+    """Given the list C^(n) [S,R] for n=0..N-1, return (D, full) where
+    D[n] = prod_{k != n} C^(k) and full = prod_k C^(k).
+
+    Uses the prefix/suffix-product trick: 2(N-1) Hadamard products per chain
+    instead of the naive N(N-1) (division-free, stable at zeros).  This is the
+    paper's "shared, reusable intermediate" insight (Table 4, Plus column).
+    """
+    n = len(cs)
+    pre = [None] * (n + 1)
+    suf = [None] * (n + 1)
+    pre[0] = jnp.ones_like(cs[0])
+    suf[n] = jnp.ones_like(cs[0])
+    for i in range(n):
+        pre[i + 1] = pre[i] * cs[i]
+    for i in range(n - 1, -1, -1):
+        suf[i] = suf[i + 1] * cs[i]
+    d = [pre[i] * suf[i + 1] for i in range(n)]
+    return d, pre[n]
+
+
+def predict_from_c(cs):
+    """x_hat [S] from the per-mode projection rows C^(n) [S,R]."""
+    _, full = hadamard_chain(cs)
+    return full.sum(axis=-1)

@@ -1,0 +1,122 @@
+"""L1 Pallas kernels for the FasterTucker baseline (Algorithm 2, Eqs. 18-19).
+
+FasterTucker avoids recomputing C^(k) = A^(k) B^(k) for the non-target modes
+by *reading* precomputed rows c^(k)_{i_k,:} from memory (the storage scheme
+the paper's §5.6 contrasts with Plus's recompute-on-tensor-cores).  Only the
+target mode's own C rows are recomputed, because its factor rows change.
+
+As with the FastTucker kernels, the host rotates the target mode to index 0
+and calls once per mode, preserving the baseline's traffic pattern:
+(M+R)*sum J_n + N(N-1)R parameters read per batch (Table 4).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import hadamard_chain, matmul, matmul_nt, matmul_t, tile
+
+
+
+
+def _factor_mode_kernel(a0_ref, co_ref, b0_ref, x_ref, hp_ref,
+                        out_ref, c0_ref, xhat_ref, *, n_modes, variant):
+    a0 = a0_ref[...]        # [TS, J]   target-mode factor rows
+    co = co_ref[...]        # [N-1, TS, R] precomputed rows of the other modes
+    b0 = b0_ref[...]        # [J, R]
+    x = x_ref[...]
+    lr, lam = hp_ref[0], hp_ref[1]
+    c0 = matmul(a0, b0, variant)                       # recompute own C rows
+    cs = [c0] + [co[k] for k in range(n_modes - 1)]
+    d, full = hadamard_chain(cs)
+    xhat = full.sum(axis=-1)
+    err = x - xhat
+    g = err[:, None] * matmul_nt(d[0], b0, variant) - lam * a0
+    a0_new = a0 + lr * g
+    out_ref[...] = a0_new
+    # Refresh the stored C rows for the updated mode (Alg. 2 line 13).
+    c0_ref[...] = matmul(a0_new, b0, variant)
+    xhat_ref[...] = xhat
+
+
+def fastertucker_factor_mode(a0, c_others, b0, x, hp, *, variant: str = "tc"):
+    """Eq.-18 update.  a0:[S,J], c_others:[N-1,S,R], b0:[J,R], x:[S], hp:[2].
+    Returns (a0_new [S,J], c0_new [S,R], x_hat [S])."""
+    s, j = a0.shape
+    nm1, _, r = c_others.shape
+    n_modes = nm1 + 1
+    ts = tile(s)
+    return pl.pallas_call(
+        functools.partial(_factor_mode_kernel, n_modes=n_modes, variant=variant),
+        grid=(s // ts,),
+        in_specs=[
+            pl.BlockSpec((ts, j), lambda i: (i, 0)),
+            pl.BlockSpec((nm1, ts, r), lambda i: (0, i, 0)),
+            pl.BlockSpec((j, r), lambda i: (0, 0)),
+            pl.BlockSpec((ts,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ts, j), lambda i: (i, 0)),
+            pl.BlockSpec((ts, r), lambda i: (i, 0)),
+            pl.BlockSpec((ts,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, j), jnp.float32),
+            jax.ShapeDtypeStruct((s, r), jnp.float32),
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+        ],
+        interpret=True,
+    )(a0, c_others, b0, x, hp)
+
+
+def _core_mode_kernel(a0_ref, co_ref, b0_ref, x_ref, grad_ref, xhat_ref, *,
+                      n_modes, variant):
+    a0 = a0_ref[...]
+    co = co_ref[...]
+    b0 = b0_ref[...]
+    x = x_ref[...]
+    c0 = matmul(a0, b0, variant)
+    cs = [c0] + [co[k] for k in range(n_modes - 1)]
+    d, full = hadamard_chain(cs)
+    xhat = full.sum(axis=-1)
+    err = x - xhat
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        grad_ref[...] = jnp.zeros_like(grad_ref)
+
+    e = err[:, None] * a0
+    grad_ref[...] += matmul_t(e, d[0], variant)
+    xhat_ref[...] = xhat
+
+
+def fastertucker_core_mode(a0, c_others, b0, x, *, variant: str = "tc"):
+    """Eq.-19 raw gradient.  Returns (grad [J,R], x_hat [S])."""
+    s, j = a0.shape
+    nm1, _, r = c_others.shape
+    n_modes = nm1 + 1
+    ts = tile(s)
+    return pl.pallas_call(
+        functools.partial(_core_mode_kernel, n_modes=n_modes, variant=variant),
+        grid=(s // ts,),
+        in_specs=[
+            pl.BlockSpec((ts, j), lambda i: (i, 0)),
+            pl.BlockSpec((nm1, ts, r), lambda i: (0, i, 0)),
+            pl.BlockSpec((j, r), lambda i: (0, 0)),
+            pl.BlockSpec((ts,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((j, r), lambda i: (0, 0)),
+            pl.BlockSpec((ts,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((j, r), jnp.float32),
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+        ],
+        interpret=True,
+    )(a0, c_others, b0, x)

@@ -1,0 +1,273 @@
+"""L1 Pallas kernels for FastTuckerPlus (Algorithm 3, Eqs. 14-15).
+
+Each kernel processes a block of S samples in grid steps of TILE_S (the
+"warp processes one Psi" analog).  All contractions are WMMA/MXU-shaped:
+[TILE_S x J] . [J x R] with J, R multiples of 16.
+
+Kernels (all interpret=True -> plain HLO, runnable on the CPU PJRT client):
+
+* ``plus_factor``          — Eq. 14: update ALL factor rows of the batch.
+* ``plus_core``            — Eq. 15: accumulate core-matrix gradients.
+* ``plus_factor_storage``  — Table 9 "Storage" scheme: D from precomputed C rows.
+* ``plus_core_storage``    — same for the core phase.
+* ``predict``              — x_hat only (eval path).
+* ``compute_c``            — C^(n) = A^(n) B^(n) chunk (storage-scheme precompute).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import hadamard_chain, matmul, matmul_nt, matmul_t, tile
+
+
+
+
+# ---------------------------------------------------------------------------
+# plus_factor: a_new[n] = a[n] + lr*(err * (D[n] @ B[n]^T) - lam*a[n])
+# ---------------------------------------------------------------------------
+
+def _plus_factor_kernel(a_ref, b_ref, x_ref, hp_ref, out_ref, xhat_ref, *,
+                        n_modes: int, variant: str):
+    a = a_ref[...]          # [N, TS, J]
+    b = b_ref[...]          # [N, J, R]
+    x = x_ref[...]          # [TS]
+    lr, lam = hp_ref[0], hp_ref[1]
+    cs = [matmul(a[n], b[n], variant) for n in range(n_modes)]   # C^(n) [TS,R]
+    d, full = hadamard_chain(cs)
+    xhat = full.sum(axis=-1)
+    err = x - xhat          # [TS]
+    for n in range(n_modes):
+        g = err[:, None] * matmul_nt(d[n], b[n], variant) - lam * a[n]
+        out_ref[n, :, :] = a[n] + lr * g
+    xhat_ref[...] = xhat
+
+
+def plus_factor(a, b, x, hp, *, variant: str = "tc"):
+    """Batched Eq.-14 step.  a:[N,S,J] gathered rows, b:[N,J,R], x:[S],
+    hp:[2] = (lr, lam).  Returns (a_new [N,S,J], x_hat [S])."""
+    n_modes, s, j = a.shape
+    r = b.shape[2]
+    ts = tile(s)
+    grid = (s // ts,)
+    return pl.pallas_call(
+        functools.partial(_plus_factor_kernel, n_modes=n_modes, variant=variant),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_modes, ts, j), lambda i: (0, i, 0)),
+            pl.BlockSpec((n_modes, j, r), lambda i: (0, 0, 0)),
+            pl.BlockSpec((ts,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n_modes, ts, j), lambda i: (0, i, 0)),
+            pl.BlockSpec((ts,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_modes, s, j), jnp.float32),
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+        ],
+        interpret=True,
+    )(a, b, x, hp)
+
+
+# ---------------------------------------------------------------------------
+# plus_core: grad[n] = sum_s err_s * a_s^(n)T d_s^(n)  (Eq. 15, raw gradient;
+# the L3 coordinator applies  B += lr*(grad/S - lam*B)  once per block, the
+# analog of the paper's register-accumulate + atomicAdd-at-the-end).
+# ---------------------------------------------------------------------------
+
+def _plus_core_kernel(a_ref, b_ref, x_ref, grad_ref, xhat_ref, *,
+                      n_modes: int, variant: str):
+    a = a_ref[...]
+    b = b_ref[...]
+    x = x_ref[...]
+    cs = [matmul(a[n], b[n], variant) for n in range(n_modes)]
+    d, full = hadamard_chain(cs)
+    xhat = full.sum(axis=-1)
+    err = x - xhat
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        grad_ref[...] = jnp.zeros_like(grad_ref)
+
+    for n in range(n_modes):
+        e = err[:, None] * a[n]                       # E^(n) [TS,J]
+        grad_ref[n, :, :] += matmul_t(e, d[n], variant)
+    xhat_ref[...] = xhat
+
+
+def plus_core(a, b, x, *, variant: str = "tc"):
+    """Batched Eq.-15 gradient.  Returns (grad [N,J,R], x_hat [S])."""
+    n_modes, s, j = a.shape
+    r = b.shape[2]
+    ts = tile(s)
+    return pl.pallas_call(
+        functools.partial(_plus_core_kernel, n_modes=n_modes, variant=variant),
+        grid=(s // ts,),
+        in_specs=[
+            pl.BlockSpec((n_modes, ts, j), lambda i: (0, i, 0)),
+            pl.BlockSpec((n_modes, j, r), lambda i: (0, 0, 0)),
+            pl.BlockSpec((ts,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n_modes, j, r), lambda i: (0, 0, 0)),
+            pl.BlockSpec((ts,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_modes, j, r), jnp.float32),
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+        ],
+        interpret=True,
+    )(a, b, x)
+
+
+# ---------------------------------------------------------------------------
+# Storage-scheme variants (Table 9 / Fig. 5): C rows are *read* (inputs
+# gathered by L3 from a precomputed C^(n) = A^(n) B^(n)) instead of recomputed
+# on the matrix unit.  This trades N matmuls for N*[S,R] of extra traffic —
+# exactly the trade §5.6 of the paper measures.
+# ---------------------------------------------------------------------------
+
+def _plus_factor_storage_kernel(a_ref, c_ref, b_ref, x_ref, hp_ref,
+                                out_ref, xhat_ref, *, n_modes, variant):
+    a = a_ref[...]
+    c = c_ref[...]          # [N, TS, R] precomputed rows
+    b = b_ref[...]
+    x = x_ref[...]
+    lr, lam = hp_ref[0], hp_ref[1]
+    d, full = hadamard_chain([c[n] for n in range(n_modes)])
+    xhat = full.sum(axis=-1)
+    err = x - xhat
+    for n in range(n_modes):
+        g = err[:, None] * matmul_nt(d[n], b[n], variant) - lam * a[n]
+        out_ref[n, :, :] = a[n] + lr * g
+    xhat_ref[...] = xhat
+
+
+def plus_factor_storage(a, c, b, x, hp, *, variant: str = "tc"):
+    n_modes, s, j = a.shape
+    r = b.shape[2]
+    ts = tile(s)
+    return pl.pallas_call(
+        functools.partial(_plus_factor_storage_kernel, n_modes=n_modes,
+                          variant=variant),
+        grid=(s // ts,),
+        in_specs=[
+            pl.BlockSpec((n_modes, ts, j), lambda i: (0, i, 0)),
+            pl.BlockSpec((n_modes, ts, r), lambda i: (0, i, 0)),
+            pl.BlockSpec((n_modes, j, r), lambda i: (0, 0, 0)),
+            pl.BlockSpec((ts,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n_modes, ts, j), lambda i: (0, i, 0)),
+            pl.BlockSpec((ts,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_modes, s, j), jnp.float32),
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+        ],
+        interpret=True,
+    )(a, c, b, x, hp)
+
+
+def _plus_core_storage_kernel(a_ref, c_ref, x_ref, grad_ref, xhat_ref, *,
+                              n_modes, variant):
+    a = a_ref[...]
+    c = c_ref[...]
+    x = x_ref[...]
+    d, full = hadamard_chain([c[n] for n in range(n_modes)])
+    xhat = full.sum(axis=-1)
+    err = x - xhat
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        grad_ref[...] = jnp.zeros_like(grad_ref)
+
+    for n in range(n_modes):
+        e = err[:, None] * a[n]
+        grad_ref[n, :, :] += matmul_t(e, d[n], variant)
+    xhat_ref[...] = xhat
+
+
+def plus_core_storage(a, c, x, *, variant: str = "tc"):
+    n_modes, s, j = a.shape
+    r = c.shape[2]
+    ts = tile(s)
+    return pl.pallas_call(
+        functools.partial(_plus_core_storage_kernel, n_modes=n_modes,
+                          variant=variant),
+        grid=(s // ts,),
+        in_specs=[
+            pl.BlockSpec((n_modes, ts, j), lambda i: (0, i, 0)),
+            pl.BlockSpec((n_modes, ts, r), lambda i: (0, i, 0)),
+            pl.BlockSpec((ts,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n_modes, j, r), lambda i: (0, 0, 0)),
+            pl.BlockSpec((ts,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_modes, j, r), jnp.float32),
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+        ],
+        interpret=True,
+    )(a, c, x)
+
+
+# ---------------------------------------------------------------------------
+# predict + compute_c
+# ---------------------------------------------------------------------------
+
+def _predict_kernel(a_ref, b_ref, xhat_ref, *, n_modes, variant):
+    a = a_ref[...]
+    b = b_ref[...]
+    cs = [matmul(a[n], b[n], variant) for n in range(n_modes)]
+    _, full = hadamard_chain(cs)
+    xhat_ref[...] = full.sum(axis=-1)
+
+
+def predict(a, b, *, variant: str = "tc"):
+    """x_hat [S] for gathered rows a:[N,S,J] and cores b:[N,J,R]."""
+    n_modes, s, j = a.shape
+    r = b.shape[2]
+    ts = tile(s)
+    return pl.pallas_call(
+        functools.partial(_predict_kernel, n_modes=n_modes, variant=variant),
+        grid=(s // ts,),
+        in_specs=[
+            pl.BlockSpec((n_modes, ts, j), lambda i: (0, i, 0)),
+            pl.BlockSpec((n_modes, j, r), lambda i: (0, 0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((ts,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((s,), jnp.float32)],
+        interpret=True,
+    )(a, b)
+
+
+def _compute_c_kernel(a_ref, b_ref, c_ref, *, variant):
+    c_ref[...] = matmul(a_ref[...], b_ref[...], variant)
+
+
+def compute_c(a, b, *, variant: str = "tc"):
+    """One chunk of the storage-scheme precompute: C = A_chunk @ B.
+    a: [CHUNK, J], b: [J, R] -> [CHUNK, R]."""
+    chunk, j = a.shape
+    r = b.shape[1]
+    ts = tile(chunk)
+    return pl.pallas_call(
+        functools.partial(_compute_c_kernel, variant=variant),
+        grid=(chunk // ts,),
+        in_specs=[
+            pl.BlockSpec((ts, j), lambda i: (i, 0)),
+            pl.BlockSpec((j, r), lambda i: (0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((ts, r), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((chunk, r), jnp.float32)],
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,116 @@
+"""Pure-jnp oracles for every L1 kernel.
+
+These are the correctness ground truth: straightforward einsum/broadcast
+implementations of Eqs. 14-19 with no Pallas, no tiling, no variants.
+pytest asserts each kernel (tc AND cc variants) against these to ~1e-5.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def predict_ref(a, b):
+    """x_hat [S].  a: [N,S,J], b: [N,J,R]."""
+    c = jnp.einsum("nsj,njr->nsr", a, b)
+    return jnp.prod(c, axis=0).sum(axis=-1)
+
+
+def _c_d(a, b):
+    c = jnp.einsum("nsj,njr->nsr", a, b)          # [N,S,R]
+    full = jnp.prod(c, axis=0)                    # [S,R]
+    n = a.shape[0]
+    d = jnp.stack([jnp.prod(jnp.delete(c, k, axis=0), axis=0)
+                   for k in range(n)])            # [N,S,R]
+    return c, d, full
+
+
+def plus_factor_ref(a, b, x, hp):
+    """(a_new [N,S,J], x_hat [S]) — Eq. 14."""
+    lr, lam = hp[0], hp[1]
+    _, d, full = _c_d(a, b)
+    xhat = full.sum(axis=-1)
+    err = (x - xhat)[None, :, None]               # [1,S,1]
+    db = jnp.einsum("nsr,njr->nsj", d, b)         # D^(n) B^(n)T
+    a_new = a + lr * (err * db - lam * a)
+    return a_new, xhat
+
+
+def plus_core_ref(a, b, x):
+    """(grad [N,J,R], x_hat [S]) — Eq. 15, raw gradient (no reg/lr)."""
+    _, d, full = _c_d(a, b)
+    xhat = full.sum(axis=-1)
+    err = x - xhat
+    e = err[None, :, None] * a                    # [N,S,J]
+    grad = jnp.einsum("nsj,nsr->njr", e, d)
+    return grad, xhat
+
+
+def plus_factor_storage_ref(a, c, b, x, hp):
+    lr, lam = hp[0], hp[1]
+    n = a.shape[0]
+    full = jnp.prod(c, axis=0)
+    d = jnp.stack([jnp.prod(jnp.delete(c, k, axis=0), axis=0)
+                   for k in range(n)])
+    xhat = full.sum(axis=-1)
+    err = (x - xhat)[None, :, None]
+    db = jnp.einsum("nsr,njr->nsj", d, b)
+    return a + lr * (err * db - lam * a), xhat
+
+
+def plus_core_storage_ref(a, c, x):
+    n = a.shape[0]
+    full = jnp.prod(c, axis=0)
+    d = jnp.stack([jnp.prod(jnp.delete(c, k, axis=0), axis=0)
+                   for k in range(n)])
+    xhat = full.sum(axis=-1)
+    e = (x - xhat)[None, :, None] * a
+    return jnp.einsum("nsj,nsr->njr", e, d), xhat
+
+
+def fasttucker_factor_mode_ref(a, b, x, hp):
+    """(a0_new [S,J], x_hat [S]) — Eq. 16 for the rotated-to-front mode."""
+    lr, lam = hp[0], hp[1]
+    _, d, full = _c_d(a, b)
+    xhat = full.sum(axis=-1)
+    err = (x - xhat)[:, None]
+    g = err * (d[0] @ b[0].T) - lam * a[0]
+    return a[0] + lr * g, xhat
+
+
+def fasttucker_core_mode_ref(a, b, x):
+    """(grad [J,R], x_hat [S]) — Eq. 17 raw gradient."""
+    _, d, full = _c_d(a, b)
+    xhat = full.sum(axis=-1)
+    e = (x - xhat)[:, None] * a[0]
+    return e.T @ d[0], xhat
+
+
+def _faster_c_d(a0, c_others, b0):
+    c0 = a0 @ b0                                  # [S,R]
+    cs = jnp.concatenate([c0[None], c_others], axis=0)
+    full = jnp.prod(cs, axis=0)
+    d0 = jnp.prod(c_others, axis=0)               # exclude mode 0
+    return c0, d0, full
+
+
+def fastertucker_factor_mode_ref(a0, c_others, b0, x, hp):
+    """(a0_new, c0_new, x_hat) — Eq. 18."""
+    lr, lam = hp[0], hp[1]
+    _, d0, full = _faster_c_d(a0, c_others, b0)
+    xhat = full.sum(axis=-1)
+    err = (x - xhat)[:, None]
+    a0_new = a0 + lr * (err * (d0 @ b0.T) - lam * a0)
+    return a0_new, a0_new @ b0, xhat
+
+
+def fastertucker_core_mode_ref(a0, c_others, b0, x):
+    """(grad [J,R], x_hat) — Eq. 19 raw gradient."""
+    _, d0, full = _faster_c_d(a0, c_others, b0)
+    xhat = full.sum(axis=-1)
+    e = (x - xhat)[:, None] * a0
+    return e.T @ d0, xhat
+
+
+def compute_c_ref(a, b):
+    return a @ b

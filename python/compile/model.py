@@ -1,0 +1,180 @@
+"""L2: the FastTucker-family compute graphs, assembled from the L1 kernels.
+
+Each entry in :data:`KERNELS` is a build-time computation the Rust L3
+coordinator executes via PJRT.  ``build(name, n, j, r, s)`` returns the jax
+callable plus its example arguments; ``aot.py`` lowers these to HLO text.
+
+Shape conventions (all f32):
+    a   [N, S, J]   gathered factor rows (mode-major; target mode rotated to
+                    index 0 for the per-mode baseline kernels)
+    b   [N, J, R]   core matrices (rotated likewise)
+    c   [N, S, R]   precomputed projection rows (storage scheme)
+    x   [S]         sample values
+    hp  [2]         (learning rate, regularization lambda)
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels as K
+
+F32 = jnp.float32
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+@dataclass(frozen=True)
+class KernelDef:
+    """A lowerable computation: `args(n,j,r,s)` gives the example shapes."""
+
+    fn: object
+    args: object  # callable (n, j, r, s) -> tuple of ShapeDtypeStructs
+
+
+def _plus_factor(variant):
+    return KernelDef(
+        fn=functools.partial(K.plus_factor, variant=variant),
+        args=lambda n, j, r, s: (_spec(n, s, j), _spec(n, j, r), _spec(s), _spec(2)),
+    )
+
+
+def _plus_core(variant):
+    return KernelDef(
+        fn=functools.partial(K.plus_core, variant=variant),
+        args=lambda n, j, r, s: (_spec(n, s, j), _spec(n, j, r), _spec(s)),
+    )
+
+
+def _plus_factor_storage(variant):
+    return KernelDef(
+        fn=functools.partial(K.plus_factor_storage, variant=variant),
+        args=lambda n, j, r, s: (
+            _spec(n, s, j), _spec(n, s, r), _spec(n, j, r), _spec(s), _spec(2)),
+    )
+
+
+def _plus_core_storage(variant):
+    return KernelDef(
+        fn=functools.partial(K.plus_core_storage, variant=variant),
+        args=lambda n, j, r, s: (_spec(n, s, j), _spec(n, s, r), _spec(s)),
+    )
+
+
+def _ft_factor(variant):
+    return KernelDef(
+        fn=functools.partial(K.fasttucker_factor_mode, variant=variant),
+        args=lambda n, j, r, s: (_spec(n, s, j), _spec(n, j, r), _spec(s), _spec(2)),
+    )
+
+
+def _ft_core(variant):
+    return KernelDef(
+        fn=functools.partial(K.fasttucker_core_mode, variant=variant),
+        args=lambda n, j, r, s: (_spec(n, s, j), _spec(n, j, r), _spec(s)),
+    )
+
+
+def _fst_factor(variant):
+    return KernelDef(
+        fn=functools.partial(K.fastertucker_factor_mode, variant=variant),
+        args=lambda n, j, r, s: (
+            _spec(s, j), _spec(n - 1, s, r), _spec(j, r), _spec(s), _spec(2)),
+    )
+
+
+def _fst_core(variant):
+    return KernelDef(
+        fn=functools.partial(K.fastertucker_core_mode, variant=variant),
+        args=lambda n, j, r, s: (
+            _spec(s, j), _spec(n - 1, s, r), _spec(j, r), _spec(s)),
+    )
+
+
+def _predict(variant):
+    return KernelDef(
+        fn=functools.partial(K.predict, variant=variant),
+        args=lambda n, j, r, s: (_spec(n, s, j), _spec(n, j, r)),
+    )
+
+
+def _compute_c(variant):
+    # `s` doubles as the row-chunk size; `n` is unused.
+    return KernelDef(
+        fn=functools.partial(K.compute_c, variant=variant),
+        args=lambda n, j, r, s: (_spec(s, j), _spec(j, r)),
+    )
+
+
+KERNELS: dict[str, KernelDef] = {}
+for v in ("tc", "cc"):
+    KERNELS[f"plus_factor_{v}"] = _plus_factor(v)
+    KERNELS[f"plus_core_{v}"] = _plus_core(v)
+    KERNELS[f"plus_factor_storage_{v}"] = _plus_factor_storage(v)
+    KERNELS[f"plus_core_storage_{v}"] = _plus_core_storage(v)
+    KERNELS[f"fasttucker_factor_{v}"] = _ft_factor(v)
+    KERNELS[f"fasttucker_core_{v}"] = _ft_core(v)
+    KERNELS[f"fastertucker_factor_{v}"] = _fst_factor(v)
+    KERNELS[f"fastertucker_core_{v}"] = _fst_core(v)
+KERNELS["predict"] = _predict("tc")
+KERNELS["compute_c"] = _compute_c("tc")
+
+
+def artifact_name(kernel: str, n: int, j: int, r: int, s: int) -> str:
+    return f"{kernel}_n{n}_j{j}_r{r}_s{s}"
+
+
+def build(kernel: str, n: int, j: int, r: int, s: int):
+    """Return (jitted_fn, example_args) for one artifact config."""
+    kd = KERNELS[kernel]
+    # Wrap so outputs are a flat tuple (stable interchange with rust).
+    def wrapped(*args):
+        out = kd.fn(*args)
+        return tuple(out) if isinstance(out, (tuple, list)) else (out,)
+    return jax.jit(wrapped), kd.args(n, j, r, s)
+
+
+# ---------------------------------------------------------------------------
+# The artifact set `make artifacts` produces.  Kept deliberately explicit so
+# the manifest doubles as documentation of what the benches rely on.
+# ---------------------------------------------------------------------------
+
+# Block size S: larger blocks amortize the per-execute PJRT dispatch cost
+# (the L3 §Perf pass measured ~0.5 ms fixed overhead per call on the CPU
+# client; S=4096 cut plus-phase wall time ~3x vs S=512).  The VMEM tile per
+# grid step stays 128 samples regardless.
+DEFAULT_S = 4096
+SWEEP_S = 2048
+
+
+def artifact_configs():
+    """Yield (kernel, n, j, r, s) for every artifact we ship."""
+    # Base config: 3-order (Netflix/Yahoo-like), J=R=16 as in the paper §5.1.
+    for kernel in KERNELS:
+        if kernel == "compute_c":
+            yield (kernel, 3, 16, 16, DEFAULT_S)
+        else:
+            yield (kernel, 3, 16, 16, DEFAULT_S)
+    # Order sweep 4..8 (Fig. 2/3/4/5 analogs) for every algorithm, tc + cc.
+    for n in range(4, 9):
+        for kernel in (
+            "plus_factor_tc", "plus_core_tc",
+            "plus_factor_cc", "plus_core_cc",
+            "plus_factor_storage_tc", "plus_core_storage_tc",
+            "fasttucker_factor_tc", "fasttucker_core_tc",
+            "fasttucker_factor_cc", "fasttucker_core_cc",
+            "fastertucker_factor_tc", "fastertucker_core_tc",
+            "fastertucker_factor_cc", "fastertucker_core_cc",
+            "predict",
+        ):
+            yield (kernel, n, 16, 16, SWEEP_S)
+    # Parameter sweep (Table 10): (J,R) in {16,32}^2 minus the base point.
+    for (j, r) in ((16, 32), (32, 16), (32, 32)):
+        for kernel in ("plus_factor_tc", "plus_core_tc", "predict", "compute_c"):
+            yield (kernel, 3, j, r, DEFAULT_S)

@@ -1,0 +1,161 @@
+"""Kernel-vs-oracle correctness: every Pallas kernel (tc AND cc variants)
+against the pure-jnp reference, across shapes.  This is the CORE correctness
+signal for L1."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile import kernels as K
+
+jax.config.update("jax_platform_name", "cpu")
+
+RTOL, ATOL = 1e-4, 1e-4
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * 0.5)
+
+
+def data(n=3, s=64, j=16, r=16, seed=0):
+    rng = np.random.default_rng(seed)
+    a = rand(rng, n, s, j)
+    b = rand(rng, n, j, r)
+    x = rand(rng, s)
+    hp = jnp.asarray([0.01, 0.001], dtype=np.float32)
+    return a, b, x, hp
+
+
+SHAPES = [(3, 64, 16, 16), (4, 32, 16, 16), (3, 128, 32, 16), (5, 16, 16, 32)]
+VARIANTS = ["tc", "cc"]
+
+
+@pytest.mark.parametrize("n,s,j,r", SHAPES)
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_plus_factor(n, s, j, r, variant):
+    a, b, x, hp = data(n, s, j, r)
+    a_new, xhat = K.plus_factor(a, b, x, hp, variant=variant)
+    a_ref, xhat_ref = ref.plus_factor_ref(a, b, x, hp)
+    np.testing.assert_allclose(xhat, xhat_ref, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(a_new, a_ref, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("n,s,j,r", SHAPES)
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_plus_core(n, s, j, r, variant):
+    a, b, x, _ = data(n, s, j, r)
+    grad, xhat = K.plus_core(a, b, x, variant=variant)
+    grad_ref, xhat_ref = ref.plus_core_ref(a, b, x)
+    np.testing.assert_allclose(xhat, xhat_ref, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(grad, grad_ref, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("n,s,j,r", SHAPES[:2])
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_plus_factor_storage(n, s, j, r, variant):
+    a, b, x, hp = data(n, s, j, r)
+    c = jnp.einsum("nsj,njr->nsr", a, b)
+    a_new, xhat = K.plus_factor_storage(a, c, b, x, hp, variant=variant)
+    a_ref, xhat_ref = ref.plus_factor_storage_ref(a, c, b, x, hp)
+    np.testing.assert_allclose(xhat, xhat_ref, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(a_new, a_ref, rtol=RTOL, atol=ATOL)
+    # storage scheme with fresh C must agree with the calculation scheme
+    a_calc, _ = K.plus_factor(a, b, x, hp, variant=variant)
+    np.testing.assert_allclose(a_new, a_calc, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("n,s,j,r", SHAPES[:2])
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_plus_core_storage(n, s, j, r, variant):
+    a, b, x, _ = data(n, s, j, r)
+    c = jnp.einsum("nsj,njr->nsr", a, b)
+    grad, xhat = K.plus_core_storage(a, c, x, variant=variant)
+    grad_ref, xhat_ref = ref.plus_core_storage_ref(a, c, x)
+    np.testing.assert_allclose(xhat, xhat_ref, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(grad, grad_ref, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("n,s,j,r", SHAPES)
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_fasttucker_factor(n, s, j, r, variant):
+    a, b, x, hp = data(n, s, j, r)
+    a0, xhat = K.fasttucker_factor_mode(a, b, x, hp, variant=variant)
+    a0_ref, xhat_ref = ref.fasttucker_factor_mode_ref(a, b, x, hp)
+    np.testing.assert_allclose(xhat, xhat_ref, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(a0, a0_ref, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("n,s,j,r", SHAPES)
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_fasttucker_core(n, s, j, r, variant):
+    a, b, x, _ = data(n, s, j, r)
+    grad, xhat = K.fasttucker_core_mode(a, b, x, variant=variant)
+    grad_ref, xhat_ref = ref.fasttucker_core_mode_ref(a, b, x)
+    np.testing.assert_allclose(xhat, xhat_ref, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(grad, grad_ref, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("n,s,j,r", SHAPES)
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_fastertucker_factor(n, s, j, r, variant):
+    a, b, x, hp = data(n, s, j, r)
+    c_others = jnp.einsum("nsj,njr->nsr", a[1:], b[1:])
+    a0, c0, xhat = K.fastertucker_factor_mode(a[0], c_others, b[0], x, hp,
+                                              variant=variant)
+    a0_ref, c0_ref, xhat_ref = ref.fastertucker_factor_mode_ref(
+        a[0], c_others, b[0], x, hp)
+    np.testing.assert_allclose(xhat, xhat_ref, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(a0, a0_ref, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(c0, c0_ref, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("n,s,j,r", SHAPES)
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_fastertucker_core(n, s, j, r, variant):
+    a, b, x, _ = data(n, s, j, r)
+    c_others = jnp.einsum("nsj,njr->nsr", a[1:], b[1:])
+    grad, xhat = K.fastertucker_core_mode(a[0], c_others, b[0], x,
+                                          variant=variant)
+    grad_ref, xhat_ref = ref.fastertucker_core_mode_ref(a[0], c_others, b[0], x)
+    np.testing.assert_allclose(xhat, xhat_ref, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(grad, grad_ref, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("n,s,j,r", SHAPES)
+def test_predict(n, s, j, r):
+    a, b, _, _ = data(n, s, j, r)
+    xhat = K.predict(a, b)[0]
+    np.testing.assert_allclose(xhat, ref.predict_ref(a, b), rtol=RTOL, atol=ATOL)
+
+
+def test_compute_c():
+    a, b, _, _ = data(3, 64, 16, 16)
+    c = K.compute_c(a[0], b[0])[0]
+    np.testing.assert_allclose(c, ref.compute_c_ref(a[0], b[0]),
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_tc_cc_agree():
+    """The two variants are the SAME math (Table 8's contrast is structural)."""
+    a, b, x, hp = data(3, 64, 16, 16)
+    a_tc, _ = K.plus_factor(a, b, x, hp, variant="tc")
+    a_cc, _ = K.plus_factor(a, b, x, hp, variant="cc")
+    np.testing.assert_allclose(a_tc, a_cc, rtol=1e-5, atol=1e-5)
+
+
+def test_padding_rows_are_inert():
+    """Zero-padded samples (a-rows = 0, x = 0) must not change anything:
+    the L3 coordinator relies on this for partial blocks."""
+    a, b, x, hp = data(3, 64, 16, 16)
+    a = a.at[:, 32:, :].set(0.0)
+    x = x.at[32:].set(0.0)
+    a_new, xhat = K.plus_factor(a, b, x, hp, variant="tc")
+    np.testing.assert_allclose(a_new[:, 32:, :], np.zeros_like(a_new[:, 32:, :]),
+                               atol=1e-7)
+    np.testing.assert_allclose(xhat[32:], np.zeros(32), atol=1e-7)
+    grad_full, _ = K.plus_core(a, b, x)
+    grad_half, _ = K.plus_core(a[:, :32, :], b, x[:32])
+    np.testing.assert_allclose(grad_full, grad_half, rtol=1e-3, atol=1e-3)

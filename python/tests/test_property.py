@@ -1,0 +1,110 @@
+"""Hypothesis sweeps over kernel shapes/values: the L1 kernels must agree
+with the pure-jnp oracle for arbitrary (N, S, J, R) in the supported range
+and arbitrary finite inputs, in both variants."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+SHAPE = st.tuples(
+    st.integers(min_value=3, max_value=6),            # N
+    st.sampled_from([16, 32, 48, 64]),                # S
+    st.sampled_from([16, 32]),                        # J
+    st.sampled_from([16, 32]),                        # R
+)
+
+
+def make(n, s, j, r, seed, scale):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((n, s, j), dtype=np.float32) * scale)
+    b = jnp.asarray(rng.standard_normal((n, j, r), dtype=np.float32) * scale)
+    x = jnp.asarray(rng.standard_normal(s, dtype=np.float32))
+    hp = jnp.asarray([0.01, 0.001], dtype=np.float32)
+    return a, b, x, hp
+
+
+@settings(max_examples=12, deadline=None)
+@given(shape=SHAPE, seed=st.integers(0, 2**31 - 1),
+       scale=st.floats(min_value=0.01, max_value=1.0),
+       variant=st.sampled_from(["tc", "cc"]))
+def test_plus_factor_matches_ref(shape, seed, scale, variant):
+    a, b, x, hp = make(*shape, seed, scale)
+    a_new, xhat = K.plus_factor(a, b, x, hp, variant=variant)
+    a_ref, xhat_ref = ref.plus_factor_ref(a, b, x, hp)
+    # f32 accumulation-order noise grows with N and scale; 1% relative is
+    # the right bound for order-6 chains of dots at scale ~1.
+    np.testing.assert_allclose(xhat, xhat_ref, rtol=1e-2, atol=5e-3)
+    np.testing.assert_allclose(a_new, a_ref, rtol=1e-2, atol=5e-3)
+
+
+@settings(max_examples=12, deadline=None)
+@given(shape=SHAPE, seed=st.integers(0, 2**31 - 1),
+       variant=st.sampled_from(["tc", "cc"]))
+def test_plus_core_matches_ref(shape, seed, variant):
+    a, b, x, _ = make(*shape, seed, 0.4)
+    grad, xhat = K.plus_core(a, b, x, variant=variant)
+    grad_ref, xhat_ref = ref.plus_core_ref(a, b, x)
+    np.testing.assert_allclose(xhat, xhat_ref, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(grad, grad_ref, rtol=5e-3, atol=5e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(shape=SHAPE, seed=st.integers(0, 2**31 - 1))
+def test_predict_matches_ref(shape, seed):
+    a, b, _, _ = make(*shape, seed, 0.5)
+    xhat = K.predict(a, b)[0]
+    np.testing.assert_allclose(xhat, ref.predict_ref(a, b),
+                               rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(shape=SHAPE, seed=st.integers(0, 2**31 - 1))
+def test_fastertucker_consistent_with_plus_forward(shape, seed):
+    """Cross-algorithm invariant: with fresh (non-stale) C rows, the
+    FasterTucker forward x_hat equals the Plus forward x_hat."""
+    a, b, x, _ = make(*shape, seed, 0.4)
+    c_others = jnp.einsum("nsj,njr->nsr", a[1:], b[1:])
+    _, xhat_fst = K.fastertucker_core_mode(a[0], c_others, b[0], x)
+    xhat_plus = ref.predict_ref(a, b)
+    np.testing.assert_allclose(xhat_fst, x - (x - xhat_plus), rtol=1e-3,
+                               atol=1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       s=st.sampled_from([16, 48, 128]))
+def test_factor_step_descends_loss(seed, s):
+    """One Eq.-14 step with a small lr must not increase the squared error
+    of the batch (descent property of the true gradient at small steps)."""
+    a, b, x, _ = make(3, s, 16, 16, seed, 0.3)
+    hp = jnp.asarray([1e-3, 0.0], dtype=np.float32)
+    xhat0 = ref.predict_ref(a, b)
+    a_new, _ = K.plus_factor(a, b, x, hp)
+    xhat1 = ref.predict_ref(a_new, b)
+    loss0 = float(((x - xhat0) ** 2).sum())
+    loss1 = float(((x - xhat1) ** 2).sum())
+    assert loss1 <= loss0 * 1.001, f"{loss0} -> {loss1}"
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_core_grad_is_true_gradient(seed):
+    """The kernel's core gradient must equal the autodiff gradient of the
+    0.5*sum((x-xhat)^2) loss wrt B (up to sign convention)."""
+    import jax
+
+    a, b, x, _ = make(3, 32, 16, 16, seed, 0.3)
+
+    def loss(b_):
+        xhat = ref.predict_ref(a, b_)
+        return 0.5 * ((x - xhat) ** 2).sum()
+
+    autograd = jax.grad(loss)(b)
+    grad, _ = K.plus_core(a, b, x)
+    # kernel returns ascent direction on err (descent on loss is -grad)
+    np.testing.assert_allclose(grad, -autograd, rtol=5e-3, atol=5e-3)

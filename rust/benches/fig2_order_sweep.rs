@@ -1,0 +1,27 @@
+//! Fig. 2 — single-iteration running time vs tensor order (3..8) on the
+//! synthetic family, for all three algorithms (TC variants).
+//!
+//! Paper shape: Plus lowest everywhere and growing ~linearly with order;
+//! FastTucker growing fastest (its per-mode recompute is O(N^2) in the
+//! mode loop); FasterTucker in between but with heavy fiber padding.
+
+use fasttucker::bench::{bench_phases, report, Row};
+use fasttucker::coordinator::{Algo, TrainConfig};
+use fasttucker::synth::{generate, SynthConfig};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let (warmup, reps, nnz) = if quick { (0, 1, 8_000) } else { (1, 3, 30_000) };
+    let mut rows: Vec<Row> = Vec::new();
+    for order in 3..=8 {
+        let train = generate(&SynthConfig::order_sweep(order, 64, nnz, 3));
+        for algo in [Algo::FastTucker, Algo::FasterTucker, Algo::FasterTuckerCoo, Algo::Plus] {
+            let mut cfg = TrainConfig::default();
+            cfg.algo = algo;
+            let label = format!("n{order}/{}", algo.name());
+            rows.extend(bench_phases(&label, &train, cfg, warmup, reps)?);
+        }
+    }
+    report("Fig. 2 — iteration time vs order (synthetic)", &rows);
+    Ok(())
+}

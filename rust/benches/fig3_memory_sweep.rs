@@ -1,0 +1,39 @@
+//! Fig. 3 — memory-access time vs tensor order (3..8).
+//!
+//! Paper shape: Plus has both the smallest traffic time and the slowest
+//! growth rate with order; FasterTucker overtakes FasterTuckerCOO-like
+//! behaviour at order >= 4 because fibers get sparser.
+
+use fasttucker::bench::{bench_phases, measure_bandwidth, report, Row};
+use fasttucker::coordinator::{Algo, TrainConfig};
+use fasttucker::cost;
+use fasttucker::synth::{generate, SynthConfig};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let (warmup, reps, nnz) = if quick { (0, 1, 8_000) } else { (1, 3, 30_000) };
+    let bw = measure_bandwidth();
+    let mut rows: Vec<Row> = Vec::new();
+    for order in 3..=8 {
+        let train = generate(&SynthConfig::order_sweep(order, 64, nnz, 3));
+        let shape = cost::Shape { n: order, j: 16, r: 16, m: 16 };
+        for algo in [Algo::FastTucker, Algo::FasterTucker, Algo::FasterTuckerCoo, Algo::Plus] {
+            let mut cfg = TrainConfig::default();
+            cfg.algo = algo;
+            let label = format!("n{order}/{}", algo.name());
+            let mut rs = bench_phases(&label, &train, cfg, warmup, reps)?;
+            for r in &mut rs {
+                if let Some((_, mem)) = r.extra.iter().find(|(k, _)| k == "memory_s") {
+                    r.median_s = *mem;
+                }
+                r.extra.push((
+                    "analytic_mem_s".into(),
+                    cost::memory_time_s(algo.cost_algo(), shape, train.nnz(), bw),
+                ));
+            }
+            rows.extend(rs);
+        }
+    }
+    report("Fig. 3 — memory-access time vs order (median_s = measured)", &rows);
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! Fig. 4 — Tensor-Core (MXU-path) speedup vs tensor order (3..8).
+//!
+//! Paper shape: FastTucker and Plus keep a large TC speedup across orders
+//! (growing with order for Plus's core phase); FasterTucker stays ~1x.
+
+use fasttucker::bench::{bench_phases, report, Row};
+use fasttucker::coordinator::{Algo, TrainConfig, Variant};
+use fasttucker::synth::{generate, SynthConfig};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let (warmup, reps, nnz) = if quick { (0, 1, 6_000) } else { (1, 2, 20_000) };
+    let mut rows: Vec<Row> = Vec::new();
+    for order in 3..=8 {
+        let train = generate(&SynthConfig::order_sweep(order, 64, nnz, 3));
+        for algo in [Algo::FastTucker, Algo::FasterTucker, Algo::FasterTuckerCoo, Algo::Plus] {
+            let mut cc_rows = Vec::new();
+            for variant in [Variant::Cc, Variant::Tc] {
+                let mut cfg = TrainConfig::default();
+                cfg.algo = algo;
+                cfg.variant = variant;
+                let label = format!("n{order}/{}_{}", algo.name(), variant.suffix());
+                let rs = bench_phases(&label, &train, cfg, warmup, reps)?;
+                if variant == Variant::Cc {
+                    cc_rows = rs;
+                } else {
+                    for (mut tc, cc) in rs.into_iter().zip(cc_rows.drain(..)) {
+                        tc.extra
+                            .push(("tc_speedup".into(), cc.median_s / tc.median_s));
+                        rows.push(tc);
+                    }
+                }
+            }
+        }
+    }
+    report("Fig. 4 — MXU speedup vs order (tc_speedup extras)", &rows);
+    Ok(())
+}

@@ -1,0 +1,27 @@
+//! Fig. 5 — calculation vs storage across tensor order (3..8), TC variant.
+//!
+//! Paper shape: Calculation stays below Storage at every order under the
+//! matrix-unit path, and the gap widens with order (more C^(n) tables to
+//! precompute and read).
+
+use fasttucker::bench::{bench_phases, report, Row};
+use fasttucker::coordinator::{Strategy, TrainConfig, Variant};
+use fasttucker::synth::{generate, SynthConfig};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let (warmup, reps, nnz) = if quick { (0, 1, 6_000) } else { (1, 2, 20_000) };
+    let mut rows: Vec<Row> = Vec::new();
+    for order in 3..=8 {
+        let train = generate(&SynthConfig::order_sweep(order, 64, nnz, 3));
+        for strategy in [Strategy::Calculation, Strategy::Storage] {
+            let mut cfg = TrainConfig::default();
+            cfg.variant = Variant::Tc;
+            cfg.strategy = strategy;
+            let label = format!("n{order}/plus_tc_{strategy:?}").to_lowercase();
+            rows.extend(bench_phases(&label, &train, cfg, warmup, reps)?);
+        }
+    }
+    report("Fig. 5 — calculation vs storage across order (TC)", &rows);
+    Ok(())
+}

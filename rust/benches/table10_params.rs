@@ -1,0 +1,42 @@
+//! Table 10 — FastTuckerPlus runtime under (R, J) in {16,32}^2 on the
+//! real-dataset surrogates.
+//!
+//! Paper shape: doubling J or R increases runtime by LESS than 2x (the
+//! batch's fixed overheads and the MXU's tile efficiency amortize), and
+//! J doubles the factor-phase cost more than R does (R leaves the A_Ψ
+//! traffic unchanged).
+
+use fasttucker::bench::{bench_phases, report, Row};
+use fasttucker::coordinator::TrainConfig;
+use fasttucker::synth::{generate, SynthConfig};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let (warmup, reps, nnz) = if quick { (0, 1, 20_000) } else { (1, 3, 80_000) };
+    for (ds, cfg_t) in [
+        ("netflix-like", SynthConfig::netflix_like(nnz, 7)),
+        ("yahoo-like", SynthConfig::yahoo_like(nnz, 8)),
+    ] {
+        let train = generate(&cfg_t);
+        let mut rows: Vec<Row> = Vec::new();
+        let mut base: Option<(f64, f64)> = None;
+        for (j, r) in [(16, 16), (16, 32), (32, 16), (32, 32)] {
+            let mut cfg = TrainConfig::default();
+            cfg.j = j;
+            cfg.r = r;
+            let label = format!("j{j}_r{r}");
+            let mut rs = bench_phases(&label, &train, cfg, warmup, reps)?;
+            match base {
+                None => base = Some((rs[0].median_s, rs[1].median_s)),
+                Some((bf, bc)) => {
+                    let (f, c) = (rs[0].median_s / bf, rs[1].median_s / bc);
+                    rs[0].extra.push(("vs_16_16".into(), f));
+                    rs[1].extra.push(("vs_16_16".into(), c));
+                }
+            }
+            rows.extend(rs);
+        }
+        report(&format!("Table 10 — runtime vs (J,R) ({ds})"), &rows);
+    }
+    Ok(())
+}

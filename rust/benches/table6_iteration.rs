@@ -1,0 +1,68 @@
+//! Table 6 — single-iteration running time of every algorithm, factor and
+//! core phases, on the Netflix-like and Yahoo!Music-like surrogates, with
+//! speedups relative to the FastTucker CC baseline (the paper's
+//! cuFastTucker row).
+//!
+//! Paper shape to reproduce: Plus_TC fastest in both phases; Plus_CC slower
+//! than FasterTucker but ~3x faster than FastTucker_CC; _TC variants beat
+//! their _CC counterparts except FasterTucker (minimal matmul work).
+
+use fasttucker::bench::{bench_phases, report, Row};
+use fasttucker::coordinator::{Algo, TrainConfig, Variant};
+use fasttucker::synth::{generate, SynthConfig};
+
+fn main() -> anyhow::Result<()> {
+    let (warmup, reps, nnz) = knobs();
+    for (ds, cfg_t) in [
+        ("netflix-like", SynthConfig::netflix_like(nnz, 7)),
+        ("yahoo-like", SynthConfig::yahoo_like(nnz, 8)),
+    ] {
+        let train = generate(&cfg_t);
+        let mut rows: Vec<Row> = Vec::new();
+        for (algo, variant) in [
+            (Algo::FastTucker, Variant::Cc),
+            (Algo::FastTucker, Variant::Tc),
+            (Algo::FasterTucker, Variant::Cc),
+            (Algo::FasterTucker, Variant::Tc),
+            (Algo::FasterTuckerCoo, Variant::Cc),
+            (Algo::FasterTuckerCoo, Variant::Tc),
+            (Algo::Plus, Variant::Cc),
+            (Algo::Plus, Variant::Tc),
+        ] {
+            let mut cfg = TrainConfig::default();
+            cfg.algo = algo;
+            cfg.variant = variant;
+            let label = format!("{}_{}", algo.name(), variant.suffix());
+            rows.extend(bench_phases(&label, &train, cfg, warmup, reps)?);
+        }
+        // speedup vs fasttucker_cc per phase (paper's baseline column)
+        for phase in ["factor", "core"] {
+            let base = rows
+                .iter()
+                .find(|r| r.label == format!("fasttucker_cc/{phase}"))
+                .map(|r| r.median_s)
+                .unwrap_or(f64::NAN);
+            let updates: Vec<(String, f64)> = rows
+                .iter()
+                .filter(|r| r.label.ends_with(&format!("/{phase}")))
+                .map(|r| (r.label.clone(), base / r.median_s))
+                .collect();
+            for (label, speedup) in updates {
+                if let Some(r) = rows.iter_mut().find(|r| r.label == label) {
+                    r.extra.push(("speedup_vs_fasttucker_cc".into(), speedup));
+                }
+            }
+        }
+        report(&format!("Table 6 — single-iteration time ({ds})"), &rows);
+    }
+    Ok(())
+}
+
+fn knobs() -> (usize, usize, usize) {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    if quick {
+        (0, 1, 20_000)
+    } else {
+        (1, 3, 80_000)
+    }
+}

@@ -1,0 +1,48 @@
+//! Table 8 — speedup from the matrix-unit path: time(CC) / time(TC) per
+//! algorithm and phase on the real-dataset surrogates.
+//!
+//! Paper shape: large speedups for FastTucker and Plus (their inner loop is
+//! dominated by MXU-tileable matmuls); ~1x or below for FasterTucker
+//! (memory-bound, almost no matmul work to accelerate).
+
+use fasttucker::bench::{bench_phases, report, Row};
+use fasttucker::coordinator::{Algo, TrainConfig, Variant};
+use fasttucker::synth::{generate, SynthConfig};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let (warmup, reps, nnz) = if quick { (0, 1, 20_000) } else { (1, 3, 80_000) };
+    for (ds, cfg_t) in [
+        ("netflix-like", SynthConfig::netflix_like(nnz, 7)),
+        ("yahoo-like", SynthConfig::yahoo_like(nnz, 8)),
+    ] {
+        let train = generate(&cfg_t);
+        let mut rows: Vec<Row> = Vec::new();
+        for algo in [Algo::FastTucker, Algo::FasterTucker, Algo::FasterTuckerCoo, Algo::Plus] {
+            let mut cc_rows = Vec::new();
+            for variant in [Variant::Cc, Variant::Tc] {
+                let mut cfg = TrainConfig::default();
+                cfg.algo = algo;
+                cfg.variant = variant;
+                let label = format!("{}_{}", algo.name(), variant.suffix());
+                let rs = bench_phases(&label, &train, cfg, warmup, reps)?;
+                if variant == Variant::Cc {
+                    cc_rows = rs.clone();
+                } else {
+                    for (mut tc, cc) in rs.into_iter().zip(cc_rows.drain(..)) {
+                        tc.extra
+                            .push(("tc_speedup".into(), cc.median_s / tc.median_s));
+                        rows.push(cc);
+                        rows.push(tc);
+                    }
+                    continue;
+                }
+            }
+        }
+        report(
+            &format!("Table 8 — Tensor-Core (MXU) speedup ({ds}); see tc_speedup extras"),
+            &rows,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,36 @@
+//! Table 9 — "replace memory access with calculation" (§5.6): for
+//! FastTuckerPlus, compare recomputing C_Ψ^(n) on the matrix unit
+//! (Calculation) against precomputing C^(n) and reading rows (Storage),
+//! in both kernel variants.
+//!
+//! Paper shape: under the CC (vector/scalar) path Storage wins — the
+//! recompute is expensive; under the TC (MXU) path Calculation wins — the
+//! matrix unit recomputes faster than memory can deliver the stored rows.
+//! This crossover is the paper's central systems claim.
+
+use fasttucker::bench::{bench_phases, report, Row};
+use fasttucker::coordinator::{Strategy, TrainConfig, Variant};
+use fasttucker::synth::{generate, SynthConfig};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let (warmup, reps, nnz) = if quick { (0, 1, 20_000) } else { (1, 3, 80_000) };
+    for (ds, cfg_t) in [
+        ("netflix-like", SynthConfig::netflix_like(nnz, 7)),
+        ("yahoo-like", SynthConfig::yahoo_like(nnz, 8)),
+    ] {
+        let train = generate(&cfg_t);
+        let mut rows: Vec<Row> = Vec::new();
+        for variant in [Variant::Cc, Variant::Tc] {
+            for strategy in [Strategy::Calculation, Strategy::Storage] {
+                let mut cfg = TrainConfig::default();
+                cfg.variant = variant;
+                cfg.strategy = strategy;
+                let label = format!("plus_{}_{:?}", variant.suffix(), strategy).to_lowercase();
+                rows.extend(bench_phases(&label, &train, cfg, warmup, reps)?);
+            }
+        }
+        report(&format!("Table 9 — calculation vs storage ({ds})"), &rows);
+    }
+    Ok(())
+}

@@ -1,0 +1,213 @@
+//! Measurement harness (criterion is not in the offline crate set).
+//!
+//! Methodology: `warmup` untimed runs, then `reps` timed runs; report
+//! median and MAD (median absolute deviation) — robust to the occasional
+//! scheduler hiccup that pollutes mean/stddev on shared machines.  Rows are
+//! printed as a human table and appended as JSON lines for regeneration
+//! scripts (EXPERIMENTS.md cites these).
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::{self, Json};
+
+/// One measurement row.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub label: String,
+    pub median_s: f64,
+    pub mad_s: f64,
+    pub reps: usize,
+    /// free-form extras (speedup columns, padding ratios, ...)
+    pub extra: Vec<(String, f64)>,
+}
+
+impl Row {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("label", json::s(&self.label)),
+            ("median_s", json::num(self.median_s)),
+            ("mad_s", json::num(self.mad_s)),
+            ("reps", json::num(self.reps as f64)),
+        ];
+        let extras: Vec<(String, Json)> = self
+            .extra
+            .iter()
+            .map(|(k, v)| (k.clone(), json::num(*v)))
+            .collect();
+        let mut obj = match json::obj(pairs.drain(..).collect()) {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        for (k, v) in extras {
+            obj.insert(k, v);
+        }
+        Json::Obj(obj)
+    }
+}
+
+/// Time `f` with the harness methodology; `f` returns a scalar that is
+/// folded into a black-box sink so the work cannot be optimized away.
+pub fn measure<F: FnMut() -> f64>(label: &str, warmup: usize, reps: usize, mut f: F) -> Row {
+    let mut sink = 0f64;
+    for _ in 0..warmup {
+        sink += f();
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        sink += f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    std::hint::black_box(sink);
+    let (median, mad) = median_mad(&mut times);
+    Row {
+        label: label.to_string(),
+        median_s: median,
+        mad_s: mad,
+        reps: reps.max(1),
+        extra: Vec::new(),
+    }
+}
+
+/// Median and MAD of a sample (sorts in place).
+pub fn median_mad(xs: &mut [f64]) -> (f64, f64) {
+    assert!(!xs.is_empty());
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = xs[xs.len() / 2];
+    let mut dev: Vec<f64> = xs.iter().map(|x| (x - med).abs()).collect();
+    dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (med, dev[dev.len() / 2])
+}
+
+/// Pretty-print a set of rows as an aligned table with a title, and emit
+/// `BENCH_JSON {..}` lines that tooling can scrape from bench output.
+pub fn report(title: &str, rows: &[Row]) {
+    println!("\n=== {title} ===");
+    let w = rows.iter().map(|r| r.label.len()).max().unwrap_or(8).max(8);
+    println!("{:<w$}  {:>12}  {:>10}  extras", "case", "median", "mad");
+    for r in rows {
+        print!(
+            "{:<w$}  {:>12}  {:>10}",
+            r.label,
+            fmt_secs(r.median_s),
+            fmt_secs(r.mad_s)
+        );
+        for (k, v) in &r.extra {
+            print!("  {k}={v:.4}");
+        }
+        println!();
+    }
+    for r in rows {
+        println!("BENCH_JSON {}", r.to_json().dump());
+    }
+}
+
+/// Human-scale duration formatting.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+/// Effective host memory bandwidth (bytes/s) measured with a large memcpy —
+/// feeds the Table 7 analytic traffic model.
+pub fn measure_bandwidth() -> f64 {
+    let n = 64 * 1024 * 1024 / 4; // 64 MiB of f32
+    let src = vec![1.0f32; n];
+    let mut dst = vec![0.0f32; n];
+    // warm
+    dst.copy_from_slice(&src);
+    let t0 = Instant::now();
+    let reps = 8;
+    for _ in 0..reps {
+        dst.copy_from_slice(&src);
+        std::hint::black_box(&dst);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    // read + write per copy
+    (reps * 2 * n * 4) as f64 / dt
+}
+
+/// Measure the two training phases (factor / core) of one configuration on
+/// one tensor — the primitive every paper-table bench is built from.
+/// Returns `[factor_row, core_row]` with memory-time and padding extras.
+pub fn bench_phases(
+    label: &str,
+    train: &crate::tensor::SparseTensor,
+    cfg: crate::coordinator::TrainConfig,
+    warmup: usize,
+    reps: usize,
+) -> anyhow::Result<Vec<Row>> {
+    let mut trainer = crate::coordinator::Trainer::new(train, cfg)?;
+    let mut mk = |phase: &str| -> anyhow::Result<Row> {
+        let mut mems = Vec::new();
+        let mut pads = Vec::new();
+        let mut row = {
+            let trainer = &mut trainer;
+            let mems = &mut mems;
+            let pads = &mut pads;
+            measure(&format!("{label}/{phase}"), warmup, reps, move || {
+                let st = if phase == "factor" {
+                    trainer.factor_phase(train).expect("factor phase")
+                } else {
+                    trainer.core_phase(train).expect("core phase")
+                };
+                mems.push(st.memory().as_secs_f64());
+                pads.push(st.padding_ratio());
+                st.total().as_secs_f64()
+            })
+        };
+        let (mem, _) = median_mad(&mut mems);
+        row.extra.push(("memory_s".into(), mem));
+        row.extra.push(("padding".into(), pads.last().copied().unwrap_or(0.0)));
+        Ok(row)
+    };
+    Ok(vec![mk("factor")?, mk("core")?])
+}
+
+/// Convenience: time a single closure once (setup-heavy paths).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_mad_basics() {
+        let mut xs = vec![5.0, 1.0, 3.0];
+        let (m, d) = median_mad(&mut xs);
+        assert_eq!(m, 3.0);
+        assert_eq!(d, 2.0);
+    }
+
+    #[test]
+    fn measure_produces_sane_row() {
+        let r = measure("t", 1, 3, || {
+            std::thread::sleep(Duration::from_millis(2));
+            1.0
+        });
+        assert!(r.median_s >= 0.001);
+        assert_eq!(r.reps, 3);
+    }
+
+    #[test]
+    fn bandwidth_positive() {
+        let bw = measure_bandwidth();
+        assert!(bw > 1e8, "bandwidth {bw}"); // > 100 MB/s on anything real
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(2.0).ends_with(" s"));
+        assert!(fmt_secs(0.002).ends_with(" ms"));
+        assert!(fmt_secs(2e-6).ends_with(" µs"));
+    }
+}

@@ -1,0 +1,159 @@
+//! Run configuration for the trainer / CLI / benches.
+
+use std::path::PathBuf;
+
+use crate::cpu_ref::Hyper;
+
+/// Which decomposition algorithm to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// Algorithm 1 (per-mode convex SGD, mode-slice sampling).
+    FastTucker,
+    /// Algorithm 2 (per-mode SGD with stored C rows, fiber sampling with
+    /// warp-aligned groups — the paper's cuFasterTucker).
+    FasterTucker,
+    /// Algorithm 2 with densely packed fibers (the paper's
+    /// cuFasterTuckerCOO): full occupancy, no shared-intermediate reuse.
+    FasterTuckerCoo,
+    /// Algorithm 3 — the paper's contribution (two-block non-convex SGD,
+    /// uniform sampling).
+    Plus,
+}
+
+impl Algo {
+    pub fn parse(s: &str) -> Option<Algo> {
+        match s {
+            "fasttucker" => Some(Algo::FastTucker),
+            "fastertucker" => Some(Algo::FasterTucker),
+            "fastertuckercoo" => Some(Algo::FasterTuckerCoo),
+            "plus" | "fasttuckerplus" => Some(Algo::Plus),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Algo::FastTucker => "fasttucker",
+            Algo::FasterTucker => "fastertucker",
+            Algo::FasterTuckerCoo => "fastertuckercoo",
+            Algo::Plus => "plus",
+        }
+    }
+
+    pub fn cost_algo(self) -> crate::cost::Algo {
+        match self {
+            Algo::FastTucker => crate::cost::Algo::FastTucker,
+            Algo::FasterTucker | Algo::FasterTuckerCoo => crate::cost::Algo::FasterTucker,
+            Algo::Plus => crate::cost::Algo::FastTuckerPlus,
+        }
+    }
+}
+
+/// Kernel variant: MXU/dot-shaped (the Tensor-Core analog) or
+/// VPU/elementwise (the CUDA-Core analog).  See DESIGN.md §Hardware-Adaptation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    Tc,
+    Cc,
+}
+
+impl Variant {
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s {
+            "tc" => Some(Variant::Tc),
+            "cc" => Some(Variant::Cc),
+            _ => None,
+        }
+    }
+
+    pub fn suffix(self) -> &'static str {
+        match self {
+            Variant::Tc => "tc",
+            Variant::Cc => "cc",
+        }
+    }
+}
+
+/// C^(n) handling for FastTuckerPlus (§5.6): recompute per batch on the
+/// matrix unit, or precompute + read rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    Calculation,
+    Storage,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Option<Strategy> {
+        match s {
+            "calculation" | "calc" => Some(Strategy::Calculation),
+            "storage" | "store" => Some(Strategy::Storage),
+            _ => None,
+        }
+    }
+}
+
+/// Execution backend: the PJRT/HLO path (the system under test) or the
+/// scalar CPU reference (oracle / scalar baseline).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Hlo,
+    CpuRef,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "hlo" => Some(Backend::Hlo),
+            "cpu" | "cpuref" => Some(Backend::CpuRef),
+            _ => None,
+        }
+    }
+}
+
+/// Full trainer configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub algo: Algo,
+    pub variant: Variant,
+    pub strategy: Strategy,
+    pub backend: Backend,
+    pub j: usize,
+    pub r: usize,
+    pub hyper: Hyper,
+    pub seed: u64,
+    pub artifact_dir: PathBuf,
+    /// Worker threads for batch assembly (0 = auto).
+    pub threads: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            algo: Algo::Plus,
+            variant: Variant::Tc,
+            strategy: Strategy::Calculation,
+            backend: Backend::Hlo,
+            j: 16,
+            r: 16,
+            hyper: Hyper::default(),
+            seed: 42,
+            artifact_dir: PathBuf::from("artifacts"),
+            threads: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_enums() {
+        assert_eq!(Algo::parse("plus"), Some(Algo::Plus));
+        assert_eq!(Algo::parse("fasttucker"), Some(Algo::FastTucker));
+        assert_eq!(Algo::parse("x"), None);
+        assert_eq!(Variant::parse("tc"), Some(Variant::Tc));
+        assert_eq!(Strategy::parse("storage"), Some(Strategy::Storage));
+        assert_eq!(Backend::parse("cpu"), Some(Backend::CpuRef));
+    }
+}

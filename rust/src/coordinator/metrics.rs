@@ -1,0 +1,147 @@
+//! Per-epoch instrumentation: wall times of every pipeline stage, block
+//! counts, padding waste.  These are the numbers the Table 6/7 and Fig. 2/3
+//! benches report, so they are first-class here rather than ad-hoc timers.
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::{self, Json};
+
+/// Stage timings accumulated over one phase (factor or core) of an epoch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseStats {
+    /// sampling / block construction
+    pub sample: Duration,
+    /// host gather of factor / C rows into staging slabs (memory access)
+    pub gather: Duration,
+    /// PJRT execute (compute)
+    pub exec: Duration,
+    /// host scatter of results back (memory access)
+    pub scatter: Duration,
+    /// storage-scheme C precompute
+    pub precompute: Duration,
+    pub blocks: usize,
+    pub samples: usize,
+    pub padded_slots: usize,
+}
+
+impl PhaseStats {
+    pub fn total(&self) -> Duration {
+        self.sample + self.gather + self.exec + self.scatter + self.precompute
+    }
+
+    /// Host memory-access time (the Table 7 analog: parameter reads+writes).
+    pub fn memory(&self) -> Duration {
+        self.gather + self.scatter + self.precompute
+    }
+
+    pub fn padding_ratio(&self) -> f64 {
+        let total = self.samples + self.padded_slots;
+        if total == 0 {
+            0.0
+        } else {
+            self.padded_slots as f64 / total as f64
+        }
+    }
+
+    pub fn merge(&mut self, o: &PhaseStats) {
+        self.sample += o.sample;
+        self.gather += o.gather;
+        self.exec += o.exec;
+        self.scatter += o.scatter;
+        self.precompute += o.precompute;
+        self.blocks += o.blocks;
+        self.samples += o.samples;
+        self.padded_slots += o.padded_slots;
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("sample_s", json::num(self.sample.as_secs_f64())),
+            ("gather_s", json::num(self.gather.as_secs_f64())),
+            ("exec_s", json::num(self.exec.as_secs_f64())),
+            ("scatter_s", json::num(self.scatter.as_secs_f64())),
+            ("precompute_s", json::num(self.precompute.as_secs_f64())),
+            ("total_s", json::num(self.total().as_secs_f64())),
+            ("memory_s", json::num(self.memory().as_secs_f64())),
+            ("blocks", json::num(self.blocks as f64)),
+            ("samples", json::num(self.samples as f64)),
+            ("padding", json::num(self.padding_ratio())),
+        ])
+    }
+}
+
+/// Both phases of one epoch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EpochStats {
+    pub factor: PhaseStats,
+    pub core: PhaseStats,
+}
+
+impl EpochStats {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("factor", self.factor.to_json()),
+            ("core", self.core.to_json()),
+        ])
+    }
+}
+
+/// Scope timer: `let _t = Timed::new(&mut stats.gather);` — adds elapsed on
+/// drop.  (Manual start/stop reads better in the trainer loop, so we also
+/// expose `time_into`.)
+pub fn time_into<T>(slot: &mut Duration, f: impl FnOnce() -> T) -> T {
+    let t0 = Instant::now();
+    let out = f();
+    *slot += t0.elapsed();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_into_accumulates() {
+        let mut d = Duration::ZERO;
+        let v = time_into(&mut d, || {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(d >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn padding_ratio() {
+        let s = PhaseStats {
+            samples: 75,
+            padded_slots: 25,
+            ..Default::default()
+        };
+        assert!((s.padding_ratio() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = PhaseStats {
+            blocks: 2,
+            samples: 10,
+            ..Default::default()
+        };
+        let b = PhaseStats {
+            blocks: 3,
+            samples: 5,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.blocks, 5);
+        assert_eq!(a.samples, 15);
+    }
+
+    #[test]
+    fn json_shape() {
+        let e = EpochStats::default();
+        let j = e.to_json();
+        assert!(j.get("factor").unwrap().get("exec_s").is_some());
+    }
+}

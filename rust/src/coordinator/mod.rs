@@ -1,0 +1,9 @@
+//! The L3 coordinator: configuration, training loop, metrics.
+
+pub mod config;
+pub mod metrics;
+pub mod trainer;
+
+pub use config::{Algo, Backend, Strategy, TrainConfig, Variant};
+pub use metrics::{EpochStats, PhaseStats};
+pub use trainer::Trainer;

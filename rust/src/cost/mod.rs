@@ -1,0 +1,205 @@
+//! Analytic cost models — a direct transcription of the paper's Table 4
+//! (memory parameters read, multiply counts) plus bandwidth-scaled time
+//! estimates used for the Table 7 / Fig. 3 memory-access experiments and
+//! the DESIGN.md §Perf MXU/VMEM estimates.
+
+/// Which algorithm a cost row describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    FastTucker,
+    FasterTucker,
+    FastTuckerPlus,
+}
+
+impl Algo {
+    pub fn name(self) -> &'static str {
+        match self {
+            Algo::FastTucker => "fasttucker",
+            Algo::FasterTucker => "fastertucker",
+            Algo::FastTuckerPlus => "fasttuckerplus",
+        }
+    }
+}
+
+/// Problem shape for one batch: N modes, uniform rank J per mode, Kruskal
+/// rank R, batch M.
+#[derive(Clone, Copy, Debug)]
+pub struct Shape {
+    pub n: usize,
+    pub j: usize,
+    pub r: usize,
+    pub m: usize,
+}
+
+impl Shape {
+    pub fn sum_j(&self) -> usize {
+        self.n * self.j
+    }
+}
+
+/// Parameters read from memory per batch, totalled over all modes
+/// (Table 4, "Total for all n" row of the read section).
+pub fn params_read(algo: Algo, s: Shape) -> usize {
+    let Shape { n, r, m, .. } = s;
+    let sum_j = s.sum_j();
+    match algo {
+        // (MN - M + R + 1) * sum J_n
+        Algo::FastTucker => (m * n - m + r + 1) * sum_j,
+        // (M + R) * sum J_n + N(N-1)R
+        Algo::FasterTucker => (m + r) * sum_j + n * (n - 1) * r,
+        // (M + R) * sum J_n
+        Algo::FastTuckerPlus => (m + r) * sum_j,
+    }
+}
+
+/// Multiplications to form the D chains per batch, totalled over all modes
+/// (Table 4, calculation of D / d rows).
+pub fn d_chain_muls(algo: Algo, s: Shape) -> usize {
+    let Shape { n, r, m, .. } = s;
+    let sum_j = s.sum_j();
+    match algo {
+        // MR((N-1) sum J_n + N(N-2))
+        Algo::FastTucker => m * r * ((n - 1) * sum_j + n * (n - 2)),
+        // N(N-2)R   (C rows are read, only the Hadamard chain is computed)
+        Algo::FasterTucker => n * (n - 2) * r,
+        // MR(sum J_n + N(N-2))
+        Algo::FastTuckerPlus => m * r * (sum_j + n * (n - 2)),
+    }
+}
+
+/// Multiplications for the B D^T products per batch, totalled over modes
+/// (Table 4, calculation of B D^T rows).
+pub fn bd_muls(algo: Algo, s: Shape) -> usize {
+    let Shape { n: _, r, m, .. } = s;
+    let sum_j = s.sum_j();
+    match algo {
+        Algo::FastTucker => m * r * sum_j,
+        Algo::FasterTucker => r * sum_j,
+        Algo::FastTuckerPlus => m * r * sum_j,
+    }
+}
+
+/// Parameters written back per batch (Table 4, update rows).
+pub fn params_written(algo: Algo, s: Shape) -> usize {
+    let Shape { n, j, m, .. } = s;
+    match algo {
+        Algo::FastTucker => n * j,      // one row per mode
+        Algo::FasterTucker => m * n * j,
+        Algo::FastTuckerPlus => m * n * j,
+    }
+}
+
+/// Estimated memory-access seconds for a full pass over `nnz` samples, given
+/// measured effective bandwidth (bytes/s).  This is the model behind our
+/// Table 7 / Fig. 3 reproduction: the paper's numbers are CUDA-event
+/// measurements of exactly this traffic.
+pub fn memory_time_s(algo: Algo, s: Shape, nnz: usize, bandwidth: f64) -> f64 {
+    let batches = nnz.div_ceil(s.m);
+    let bytes = (params_read(algo, s) + params_written(algo, s)) as f64 * 4.0;
+    batches as f64 * bytes / bandwidth
+}
+
+/// FLOPs (2*muls, counting the adds of each FMA) of a full pass.
+pub fn flops_per_pass(algo: Algo, s: Shape, nnz: usize) -> f64 {
+    let batches = nnz.div_ceil(s.m) as f64;
+    batches * 2.0 * (d_chain_muls(algo, s) + bd_muls(algo, s)) as f64
+}
+
+/// L1 kernel VMEM footprint estimate in bytes for a grid step holding
+/// `tile_s` samples (DESIGN.md §Perf): the a-block, core block, C/D/E tiles
+/// and the value/err vectors, all f32.
+pub fn vmem_bytes(s: Shape, tile_s: usize) -> usize {
+    let Shape { n, j, r, .. } = s;
+    4 * (n * tile_s * j            // a tile
+        + n * j * r                // cores
+        + 3 * tile_s * r           // C, D and one temp row block
+        + 2 * tile_s               // x, err
+        + tile_s * j)              // E / output tile
+}
+
+/// MXU-eligible fraction of the kernel's multiplies (dot-shaped work over
+/// total work) — the utilization *estimate* recorded in EXPERIMENTS.md.
+pub fn mxu_fraction(algo: Algo, s: Shape) -> f64 {
+    // FasterTucker reads its C rows from memory and its remaining products
+    // are matrix-vector shaped — no MXU-tileable work (the paper's Table 1
+    // gives it the lowest Tensor-Core adaptability).
+    let dot = match algo {
+        Algo::FasterTucker => return 0.0,
+        // C^(n) recompute + D B^T are dot-shaped in FastTucker(+Plus)
+        Algo::FastTucker => (bd_muls(algo, s) + s.m * s.r * (s.n - 1) * s.sum_j()) as f64,
+        Algo::FastTuckerPlus => (bd_muls(algo, s) + s.m * s.r * s.sum_j()) as f64,
+    };
+    let total = (d_chain_muls(algo, s) + bd_muls(algo, s)) as f64;
+    (dot / total).min(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const S: Shape = Shape {
+        n: 3,
+        j: 16,
+        r: 16,
+        m: 16,
+    };
+
+    #[test]
+    fn table4_ordering_reads() {
+        // Plus reads strictly less than FastTucker and FasterTucker.
+        let plus = params_read(Algo::FastTuckerPlus, S);
+        let fast = params_read(Algo::FastTucker, S);
+        let faster = params_read(Algo::FasterTucker, S);
+        assert!(plus < faster && faster < fast, "{plus} {faster} {fast}");
+        // exact formulas at the paper's M=16, N=3, J=R=16
+        assert_eq!(plus, (16 + 16) * 48);
+        assert_eq!(faster, (16 + 16) * 48 + 3 * 2 * 16);
+        assert_eq!(fast, (16 * 3 - 16 + 16 + 1) * 48);
+    }
+
+    #[test]
+    fn table4_dchain() {
+        assert_eq!(
+            d_chain_muls(Algo::FastTuckerPlus, S),
+            16 * 16 * (48 + 3 * 1)
+        );
+        assert_eq!(d_chain_muls(Algo::FasterTucker, S), 3 * 1 * 16);
+        assert_eq!(
+            d_chain_muls(Algo::FastTucker, S),
+            16 * 16 * (2 * 48 + 3 * 1)
+        );
+    }
+
+    #[test]
+    fn growth_with_order() {
+        // Plus memory grows linearly in N; FastTucker superlinearly.
+        let t = |n| Shape { n, ..S };
+        let g_plus = params_read(Algo::FastTuckerPlus, t(8)) as f64
+            / params_read(Algo::FastTuckerPlus, t(4)) as f64;
+        let g_fast =
+            params_read(Algo::FastTucker, t(8)) as f64 / params_read(Algo::FastTucker, t(4)) as f64;
+        assert!(g_plus < g_fast);
+    }
+
+    #[test]
+    fn vmem_within_budget() {
+        // default artifact tile: 128 samples, N<=8, J=R<=32
+        let s = Shape {
+            n: 8,
+            j: 32,
+            r: 32,
+            m: 16,
+        };
+        assert!(vmem_bytes(s, 128) < 16 * 1024 * 1024);
+    }
+
+    #[test]
+    fn mxu_fraction_sane() {
+        for algo in [Algo::FastTucker, Algo::FasterTucker, Algo::FastTuckerPlus] {
+            let f = mxu_fraction(algo, S);
+            assert!((0.0..=1.0).contains(&f), "{algo:?} {f}");
+        }
+        assert!(mxu_fraction(Algo::FastTuckerPlus, S) > 0.9);
+        assert_eq!(mxu_fraction(Algo::FasterTucker, S), 0.0);
+    }
+}

@@ -1,0 +1,443 @@
+//! Pure-Rust scalar reference implementations of Algorithms 1-3.
+//!
+//! Three roles:
+//! 1. correctness oracle for the HLO/PJRT path (integration tests assert the
+//!    runtime-backed trainer matches these to f32 tolerance);
+//! 2. the "CUDA cores, no batching" analog in the Table 8 / Fig. 4 speedup
+//!    experiments (scalar dot products ≙ per-thread FMA path);
+//! 3. the convergence baseline for the Fig. 1 analog (faithful sequential
+//!    per-sample updates, no Hogwild batching effects).
+
+use crate::model::TuckerModel;
+use crate::tensor::{FiberIndex, ModeSliceIndex, SparseTensor};
+use crate::util::rng::Pcg32;
+
+/// Hyper-parameters shared by all algorithms.
+#[derive(Clone, Copy, Debug)]
+pub struct Hyper {
+    pub lr_a: f32,
+    pub lr_b: f32,
+    pub lam_a: f32,
+    pub lam_b: f32,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        Self {
+            lr_a: 0.01,
+            lr_b: 0.005,
+            lam_a: 0.01,
+            lam_b: 0.01,
+        }
+    }
+}
+
+/// Scratch to avoid per-sample allocation.
+struct Scratch {
+    c: Vec<f32>,   // N x R projection rows
+    d: Vec<f32>,   // N x R complementary products
+    pre: Vec<f32>, // (N+1) x R prefix
+    suf: Vec<f32>, // (N+1) x R suffix
+}
+
+impl Scratch {
+    fn new(n: usize, r: usize) -> Self {
+        Self {
+            c: vec![0.0; n * r],
+            d: vec![0.0; n * r],
+            pre: vec![0.0; (n + 1) * r],
+            suf: vec![0.0; (n + 1) * r],
+        }
+    }
+}
+
+/// Compute per-mode projections c^(n) = a^(n) B^(n), the exclusion products
+/// d^(n) (prefix/suffix trick) and the prediction for one entry.
+fn forward(model: &TuckerModel, coords: &[u32], s: &mut Scratch) -> f32 {
+    let n = model.order();
+    let (j, r) = (model.j, model.r);
+    for m in 0..n {
+        let row = model.factor_row(m, coords[m] as usize);
+        let core = &model.cores[m];
+        let c = &mut s.c[m * r..(m + 1) * r];
+        c.fill(0.0);
+        for jj in 0..j {
+            let a = row[jj];
+            let brow = &core[jj * r..(jj + 1) * r];
+            for rr in 0..r {
+                c[rr] += a * brow[rr];
+            }
+        }
+    }
+    // prefix/suffix
+    s.pre[..r].fill(1.0);
+    for m in 0..n {
+        for rr in 0..r {
+            s.pre[(m + 1) * r + rr] = s.pre[m * r + rr] * s.c[m * r + rr];
+        }
+    }
+    s.suf[n * r..(n + 1) * r].fill(1.0);
+    for m in (0..n).rev() {
+        for rr in 0..r {
+            s.suf[m * r + rr] = s.suf[(m + 1) * r + rr] * s.c[m * r + rr];
+        }
+    }
+    for m in 0..n {
+        for rr in 0..r {
+            s.d[m * r + rr] = s.pre[m * r + rr] * s.suf[(m + 1) * r + rr];
+        }
+    }
+    s.pre[n * r..(n + 1) * r].iter().sum()
+}
+
+/// One FastTuckerPlus (Alg. 3) factor pass over the given entry order:
+/// per sample, update ALL factor rows simultaneously (Eq. 12).
+pub fn plus_factor_pass(model: &mut TuckerModel, t: &SparseTensor, order: &[u32], hp: Hyper) {
+    let n = model.order();
+    let (j, r) = (model.j, model.r);
+    let mut s = Scratch::new(n, r);
+    let mut db = vec![0.0f32; j];
+    for &e in order {
+        let coords = t.coords(e as usize).to_vec();
+        let xhat = forward(model, &coords, &mut s);
+        let err = t.values[e as usize] - xhat;
+        for m in 0..n {
+            // db = d^(m) B^(m)^T
+            let core = &model.cores[m];
+            for jj in 0..j {
+                let mut acc = 0.0f32;
+                let brow = &core[jj * r..(jj + 1) * r];
+                for rr in 0..r {
+                    acc += s.d[m * r + rr] * brow[rr];
+                }
+                db[jj] = acc;
+            }
+            let row_start = coords[m] as usize * j;
+            let row = &mut model.factors[m][row_start..row_start + j];
+            for jj in 0..j {
+                row[jj] += hp.lr_a * (err * db[jj] - hp.lam_a * row[jj]);
+            }
+        }
+    }
+}
+
+/// One FastTuckerPlus (Alg. 3) core pass: accumulate gradients for all
+/// B^(n) over `order`, then apply once (Eq. 13 with the paper's
+/// accumulate-then-atomicAdd schedule).
+pub fn plus_core_pass(model: &mut TuckerModel, t: &SparseTensor, order: &[u32], hp: Hyper) {
+    let n = model.order();
+    let (j, r) = (model.j, model.r);
+    let mut s = Scratch::new(n, r);
+    let mut grad = vec![0.0f32; n * j * r];
+    for &e in order {
+        let coords = t.coords(e as usize);
+        let xhat = forward(model, coords, &mut s);
+        let err = t.values[e as usize] - xhat;
+        for m in 0..n {
+            let row = model.factor_row(m, coords[m] as usize);
+            let g = &mut grad[m * j * r..(m + 1) * j * r];
+            for jj in 0..j {
+                let ea = err * row[jj];
+                for rr in 0..r {
+                    g[jj * r + rr] += ea * s.d[m * r + rr];
+                }
+            }
+        }
+    }
+    model.apply_core_grad(&grad, order.len(), hp.lr_b, hp.lam_b);
+}
+
+/// One FastTucker (Alg. 1) factor pass: for each mode n, walk Ω grouped by
+/// slice (Ω_{i_n}^(n)) and update only a^(n)_{i_n,:} per sample (Eq. 8).
+pub fn fasttucker_factor_pass(
+    model: &mut TuckerModel,
+    t: &SparseTensor,
+    slices: &[ModeSliceIndex],
+    hp: Hyper,
+) {
+    let n = model.order();
+    let (j, r) = (model.j, model.r);
+    let mut s = Scratch::new(n, r);
+    let mut db = vec![0.0f32; j];
+    for (mode, idx) in slices.iter().enumerate() {
+        for i in 0..model.dims[mode] as usize {
+            for &e in idx.slice(i) {
+                let coords = t.coords(e as usize).to_vec();
+                let xhat = forward(model, &coords, &mut s);
+                let err = t.values[e as usize] - xhat;
+                let core = &model.cores[mode];
+                for jj in 0..j {
+                    let mut acc = 0.0f32;
+                    for rr in 0..r {
+                        acc += s.d[mode * r + rr] * core[jj * r + rr];
+                    }
+                    db[jj] = acc;
+                }
+                let row_start = coords[mode] as usize * j;
+                let row = &mut model.factors[mode][row_start..row_start + j];
+                for jj in 0..j {
+                    row[jj] += hp.lr_a * (err * db[jj] - hp.lam_a * row[jj]);
+                }
+            }
+        }
+    }
+}
+
+/// One FastTucker (Alg. 1) core pass: per mode, accumulate grad of B^(n)
+/// over all of Ω, apply at mode end (Eq. 9).
+pub fn fasttucker_core_pass(model: &mut TuckerModel, t: &SparseTensor, hp: Hyper) {
+    let n = model.order();
+    let (j, r) = (model.j, model.r);
+    let mut s = Scratch::new(n, r);
+    for mode in 0..n {
+        let mut grad = vec![0.0f32; j * r];
+        for e in 0..t.nnz() {
+            let coords = t.coords(e);
+            let xhat = forward(model, coords, &mut s);
+            let err = t.values[e] - xhat;
+            let row = model.factor_row(mode, coords[mode] as usize);
+            for jj in 0..j {
+                let ea = err * row[jj];
+                for rr in 0..r {
+                    grad[jj * r + rr] += ea * s.d[mode * r + rr];
+                }
+            }
+        }
+        model.apply_core_grad_mode(mode, &grad, t.nnz(), hp.lr_b, hp.lam_b);
+    }
+}
+
+/// One FasterTucker (Alg. 2) factor pass with the storage scheme: C^(n) is
+/// precomputed per mode pass and *read*; only the target mode's projection
+/// is recomputed as its rows change.
+pub fn fastertucker_factor_pass(
+    model: &mut TuckerModel,
+    t: &SparseTensor,
+    fibers: &[FiberIndex],
+    hp: Hyper,
+) {
+    let n = model.order();
+    let (j, r) = (model.j, model.r);
+    let mut db = vec![0.0f32; j];
+    let mut d = vec![0.0f32; r];
+    let mut c_own = vec![0.0f32; r];
+    for (mode, idx) in fibers.iter().enumerate() {
+        // storage scheme: C^(k) for all k (refreshed at mode-pass start)
+        let c_stored: Vec<Vec<f32>> = (0..n).map(|m| compute_c_full(model, m)).collect();
+        for f in 0..idx.num_fibers() {
+            let fiber = idx.fiber(f);
+            // d is shared by the whole fiber (all non-target coords equal)
+            let c0 = t.coords(fiber[0] as usize);
+            d.fill(1.0);
+            for m in 0..n {
+                if m == mode {
+                    continue;
+                }
+                let crow = &c_stored[m][c0[m] as usize * r..(c0[m] as usize + 1) * r];
+                for rr in 0..r {
+                    d[rr] *= crow[rr];
+                }
+            }
+            for &e in fiber {
+                let coords = t.coords(e as usize).to_vec();
+                // recompute own projection from the live row
+                let row_start = coords[mode] as usize * j;
+                {
+                    let row = &model.factors[mode][row_start..row_start + j];
+                    let core = &model.cores[mode];
+                    c_own.fill(0.0);
+                    for jj in 0..j {
+                        for rr in 0..r {
+                            c_own[rr] += row[jj] * core[jj * r + rr];
+                        }
+                    }
+                }
+                let xhat: f32 = (0..r).map(|rr| c_own[rr] * d[rr]).sum();
+                let err = t.values[e as usize] - xhat;
+                let core = &model.cores[mode];
+                for jj in 0..j {
+                    let mut acc = 0.0f32;
+                    for rr in 0..r {
+                        acc += d[rr] * core[jj * r + rr];
+                    }
+                    db[jj] = acc;
+                }
+                let row = &mut model.factors[mode][row_start..row_start + j];
+                for jj in 0..j {
+                    row[jj] += hp.lr_a * (err * db[jj] - hp.lam_a * row[jj]);
+                }
+            }
+        }
+    }
+}
+
+/// One FasterTucker (Alg. 2) core pass (storage scheme).
+pub fn fastertucker_core_pass(
+    model: &mut TuckerModel,
+    t: &SparseTensor,
+    fibers: &[FiberIndex],
+    hp: Hyper,
+) {
+    let n = model.order();
+    let (j, r) = (model.j, model.r);
+    let mut d = vec![0.0f32; r];
+    for (mode, idx) in fibers.iter().enumerate() {
+        let c_stored: Vec<Vec<f32>> = (0..n).map(|m| compute_c_full(model, m)).collect();
+        let mut grad = vec![0.0f32; j * r];
+        let mut count = 0usize;
+        for f in 0..idx.num_fibers() {
+            let fiber = idx.fiber(f);
+            let c0 = t.coords(fiber[0] as usize);
+            d.fill(1.0);
+            for m in 0..n {
+                if m == mode {
+                    continue;
+                }
+                let crow = &c_stored[m][c0[m] as usize * r..(c0[m] as usize + 1) * r];
+                for rr in 0..r {
+                    d[rr] *= crow[rr];
+                }
+            }
+            for &e in fiber {
+                let coords = t.coords(e as usize);
+                let crow =
+                    &c_stored[mode][coords[mode] as usize * r..(coords[mode] as usize + 1) * r];
+                let xhat: f32 = (0..r).map(|rr| crow[rr] * d[rr]).sum();
+                let err = t.values[e as usize] - xhat;
+                let row = model.factor_row(mode, coords[mode] as usize);
+                for jj in 0..j {
+                    let ea = err * row[jj];
+                    for rr in 0..r {
+                        grad[jj * r + rr] += ea * d[rr];
+                    }
+                }
+                count += 1;
+            }
+        }
+        model.apply_core_grad_mode(mode, &grad, count, hp.lr_b, hp.lam_b);
+    }
+}
+
+/// Dense projection table C^(n) = A^(n) B^(n)  (I_n x R).
+pub fn compute_c_full(model: &TuckerModel, mode: usize) -> Vec<f32> {
+    let (j, r) = (model.j, model.r);
+    let i = model.dims[mode] as usize;
+    let mut c = vec![0.0f32; i * r];
+    let f = &model.factors[mode];
+    let core = &model.cores[mode];
+    for row in 0..i {
+        let a = &f[row * j..(row + 1) * j];
+        let cr = &mut c[row * r..(row + 1) * r];
+        for jj in 0..j {
+            let av = a[jj];
+            let brow = &core[jj * r..(jj + 1) * r];
+            for rr in 0..r {
+                cr[rr] += av * brow[rr];
+            }
+        }
+    }
+    c
+}
+
+/// RMSE / MAE over a test tensor (scalar path).
+pub fn evaluate(model: &TuckerModel, test: &SparseTensor) -> (f64, f64) {
+    let mut s = Scratch::new(model.order(), model.r);
+    let mut sse = 0f64;
+    let mut sae = 0f64;
+    for e in 0..test.nnz() {
+        let xhat = forward(model, test.coords(e), &mut s);
+        let err = (test.values[e] - xhat) as f64;
+        sse += err * err;
+        sae += err.abs();
+    }
+    let n = test.nnz().max(1) as f64;
+    ((sse / n).sqrt(), sae / n)
+}
+
+/// Shuffled epoch order for the Plus passes.
+pub fn epoch_order(nnz: usize, seed: u64, epoch: u64) -> Vec<u32> {
+    let mut rng = Pcg32::new(seed, 0xE40C ^ epoch);
+    let mut ids: Vec<u32> = (0..nnz as u32).collect();
+    rng.shuffle(&mut ids);
+    ids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::{generate, SynthConfig};
+    use crate::tensor::split::train_test_split;
+
+    fn setup() -> (TuckerModel, SparseTensor, SparseTensor) {
+        let t = generate(&SynthConfig::order_sweep(3, 32, 3000, 21));
+        let (train, test) = train_test_split(&t, 0.2, 1);
+        let model = TuckerModel::init(&train.dims, 16, 16, 5);
+        (model, train, test)
+    }
+
+    #[test]
+    fn plus_converges() {
+        let (mut model, train, test) = setup();
+        let (rmse0, _) = evaluate(&model, &test);
+        let hp = Hyper::default();
+        for epoch in 0..12 {
+            let order = epoch_order(train.nnz(), 3, epoch);
+            plus_factor_pass(&mut model, &train, &order, hp);
+            plus_core_pass(&mut model, &train, &order, hp);
+        }
+        let (rmse1, mae1) = evaluate(&model, &test);
+        assert!(
+            rmse1 < rmse0 * 0.8,
+            "no convergence: {rmse0} -> {rmse1} (mae {mae1})"
+        );
+        assert!(model.param_norm().is_finite());
+    }
+
+    #[test]
+    fn fasttucker_converges() {
+        let (mut model, train, test) = setup();
+        let (rmse0, _) = evaluate(&model, &test);
+        let hp = Hyper::default();
+        let slices: Vec<_> = (0..3).map(|m| ModeSliceIndex::build(&train, m)).collect();
+        for _ in 0..8 {
+            fasttucker_factor_pass(&mut model, &train, &slices, hp);
+            fasttucker_core_pass(&mut model, &train, hp);
+        }
+        let (rmse1, _) = evaluate(&model, &test);
+        assert!(rmse1 < rmse0 * 0.9, "no convergence: {rmse0} -> {rmse1}");
+    }
+
+    #[test]
+    fn fastertucker_converges() {
+        let (mut model, train, test) = setup();
+        let (rmse0, _) = evaluate(&model, &test);
+        let hp = Hyper::default();
+        let fibers: Vec<_> = (0..3).map(|m| FiberIndex::build(&train, m)).collect();
+        for _ in 0..8 {
+            fastertucker_factor_pass(&mut model, &train, &fibers, hp);
+            fastertucker_core_pass(&mut model, &train, &fibers, hp);
+        }
+        let (rmse1, _) = evaluate(&model, &test);
+        assert!(rmse1 < rmse0 * 0.9, "no convergence: {rmse0} -> {rmse1}");
+    }
+
+    #[test]
+    fn compute_c_matches_predict() {
+        let (model, train, _) = setup();
+        let n = model.order();
+        let cs: Vec<Vec<f32>> = (0..n).map(|m| compute_c_full(&model, m)).collect();
+        for e in (0..train.nnz()).step_by(97) {
+            let coords = train.coords(e);
+            let mut want = 0f32;
+            for rr in 0..model.r {
+                let mut p = 1f32;
+                for m in 0..n {
+                    p *= cs[m][coords[m] as usize * model.r + rr];
+                }
+                want += p;
+            }
+            let got = model.predict_one(coords);
+            assert!((want - got).abs() < 1e-3, "{want} vs {got}");
+        }
+    }
+}

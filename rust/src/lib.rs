@@ -1,0 +1,53 @@
+//! # fasttucker — a reproduction of *cuFastTuckerPlus* (CS.DC 2024)
+//!
+//! Stochastic parallel sparse FastTucker decomposition, built as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`), the paper's
+//!   tensor-core hot spot re-thought for the TPU MXU (WMMA 16x16x16 tiles →
+//!   MXU-shaped `[S,J]x[J,R]` matmuls), lowered once at build time.
+//! * **L2** — JAX step functions (`python/compile/model.py`) AOT-exported to
+//!   HLO text artifacts (`make artifacts`).
+//! * **L3** — this crate: the coordinator.  Sparse tensor substrate, the
+//!   three Table-3 sampling strategies, gather/scatter batch assembly, the
+//!   PJRT runtime that executes the artifacts, trainers for all three
+//!   algorithms (FastTucker / FasterTucker / FastTuckerPlus), analytic cost
+//!   models, benchmarks for every table and figure in the paper, and a CLI.
+//!
+//! Python never runs at decomposition time; the binary is self-contained
+//! once `artifacts/` exists.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use fasttucker::prelude::*;
+//!
+//! let tensor = fasttucker::synth::generate(
+//!     &fasttucker::synth::SynthConfig::order_sweep(3, 64, 10_000, 1));
+//! let (train, test) = fasttucker::tensor::split::train_test_split(&tensor, 0.2, 1);
+//! let cfg = TrainConfig::default();
+//! let mut trainer = Trainer::new(&train, cfg).unwrap();
+//! for epoch in 0..10 {
+//!     let stats = trainer.epoch(&train).unwrap();
+//!     let (rmse, mae) = trainer.evaluate(&test).unwrap();
+//!     println!("epoch {epoch}: rmse {rmse:.4} mae {mae:.4} ({stats:?})");
+//! }
+//! ```
+
+pub mod bench;
+pub mod coordinator;
+pub mod cost;
+pub mod cpu_ref;
+pub mod model;
+pub mod runtime;
+pub mod sampler;
+pub mod synth;
+pub mod tensor;
+pub mod util;
+
+pub mod prelude {
+    pub use crate::coordinator::config::{Algo, Strategy, TrainConfig, Variant};
+    pub use crate::coordinator::trainer::Trainer;
+    pub use crate::model::TuckerModel;
+    pub use crate::tensor::SparseTensor;
+}

@@ -1,0 +1,276 @@
+//! `fasttucker` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   synth  — generate a synthetic sparse tensor (presets or custom)
+//!   train  — run a decomposition and report per-epoch RMSE/MAE + timings
+//!   cost   — print the Table-4 analytic cost model for a configuration
+//!   info   — runtime / artifact inventory
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use fasttucker::coordinator::{Algo, Backend, Strategy, TrainConfig, Variant};
+use fasttucker::coordinator::Trainer;
+use fasttucker::cost;
+use fasttucker::synth::{generate, SynthConfig};
+use fasttucker::tensor::{io, split::train_test_split};
+use fasttucker::util::cli::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> &'static str {
+    "usage: fasttucker <synth|train|cost|info> [flags]\n\
+     \n\
+     synth --out FILE [--preset netflix|yahoo|order] [--order N] [--dim I]\n\
+           [--nnz K] [--seed S]\n\
+     train --data FILE [--algo plus|fasttucker|fastertucker] [--variant tc|cc]\n\
+           [--strategy calc|storage] [--backend hlo|cpu] [--epochs T]\n\
+           [--j J] [--r R] [--lr-a F] [--lr-b F] [--lam-a F] [--lam-b F]\n\
+           [--test-frac F] [--seed S] [--artifacts DIR] [--save FILE]\n\
+     cost  [--order N] [--j J] [--r R] [--m M] [--nnz K]\n\
+     info  [--artifacts DIR]"
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let Some((cmd, rest)) = argv.split_first() else {
+        bail!("{}", usage());
+    };
+    match cmd.as_str() {
+        "synth" => cmd_synth(rest.to_vec()),
+        "train" => cmd_train(rest.to_vec()),
+        "cost" => cmd_cost(rest.to_vec()),
+        "info" => cmd_info(rest.to_vec()),
+        "profile" => cmd_profile(rest.to_vec()),
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{}", usage()),
+    }
+}
+
+fn cmd_synth(argv: Vec<String>) -> Result<()> {
+    let a = Args::parse(
+        argv,
+        &["out", "preset", "order", "dim", "nnz", "seed"],
+        &[],
+    )
+    .map_err(anyhow::Error::msg)?;
+    let out = PathBuf::from(a.get("out").context("--out required")?);
+    let seed = a.get_parse("seed", 1u64).map_err(anyhow::Error::msg)?;
+    let nnz = a.get_parse("nnz", 200_000usize).map_err(anyhow::Error::msg)?;
+    let cfg = match a.get_or("preset", "order") {
+        "netflix" => SynthConfig::netflix_like(nnz, seed),
+        "yahoo" => SynthConfig::yahoo_like(nnz, seed),
+        "order" => {
+            let order = a.get_parse("order", 3usize).map_err(anyhow::Error::msg)?;
+            let dim = a.get_parse("dim", 1000u32).map_err(anyhow::Error::msg)?;
+            SynthConfig::order_sweep(order, dim, nnz, seed)
+        }
+        p => bail!("unknown preset {p:?}"),
+    };
+    let t = generate(&cfg);
+    if out.extension().map(|e| e == "ftb").unwrap_or(false) {
+        io::write_binary(&t, &out)?;
+    } else {
+        io::write_text(&t, &out)?;
+    }
+    println!(
+        "wrote {:?}: order {} dims {:?} nnz {} density {:.2e}",
+        out,
+        t.order(),
+        t.dims,
+        t.nnz(),
+        t.density()
+    );
+    Ok(())
+}
+
+fn cmd_train(argv: Vec<String>) -> Result<()> {
+    let a = Args::parse(
+        argv,
+        &[
+            "data", "algo", "variant", "strategy", "backend", "epochs", "j", "r", "lr-a",
+            "lr-b", "lam-a", "lam-b", "test-frac", "seed", "artifacts", "save", "toy",
+        ],
+        &["toy"],
+    )
+    .map_err(anyhow::Error::msg)?;
+    let tensor = if a.get_bool("toy") {
+        io::toy_dataset()
+    } else {
+        let data = a.get("data").context("--data FILE (or --toy) required")?;
+        io::read_auto(Path::new(data))?
+    };
+    let mut cfg = TrainConfig::default();
+    if let Some(s) = a.get("algo") {
+        cfg.algo = Algo::parse(s).with_context(|| format!("bad --algo {s}"))?;
+    }
+    if let Some(s) = a.get("variant") {
+        cfg.variant = Variant::parse(s).with_context(|| format!("bad --variant {s}"))?;
+    }
+    if let Some(s) = a.get("strategy") {
+        cfg.strategy = Strategy::parse(s).with_context(|| format!("bad --strategy {s}"))?;
+    }
+    if let Some(s) = a.get("backend") {
+        cfg.backend = Backend::parse(s).with_context(|| format!("bad --backend {s}"))?;
+    }
+    cfg.j = a.get_parse("j", cfg.j).map_err(anyhow::Error::msg)?;
+    cfg.r = a.get_parse("r", cfg.r).map_err(anyhow::Error::msg)?;
+    cfg.seed = a.get_parse("seed", cfg.seed).map_err(anyhow::Error::msg)?;
+    cfg.hyper.lr_a = a.get_parse("lr-a", cfg.hyper.lr_a).map_err(anyhow::Error::msg)?;
+    cfg.hyper.lr_b = a.get_parse("lr-b", cfg.hyper.lr_b).map_err(anyhow::Error::msg)?;
+    cfg.hyper.lam_a = a.get_parse("lam-a", cfg.hyper.lam_a).map_err(anyhow::Error::msg)?;
+    cfg.hyper.lam_b = a.get_parse("lam-b", cfg.hyper.lam_b).map_err(anyhow::Error::msg)?;
+    cfg.artifact_dir = PathBuf::from(a.get_or("artifacts", "artifacts"));
+    let epochs: usize = a.get_parse("epochs", 10).map_err(anyhow::Error::msg)?;
+    let test_frac: f64 = a.get_parse("test-frac", 0.2).map_err(anyhow::Error::msg)?;
+
+    let (train, test) = train_test_split(&tensor, test_frac, cfg.seed);
+    println!(
+        "train nnz {} / test nnz {} | algo {} variant {} backend {:?}",
+        train.nnz(),
+        test.nnz(),
+        cfg.algo.name(),
+        cfg.variant.suffix(),
+        cfg.backend
+    );
+    let mut trainer = Trainer::new(&train, cfg.clone())?;
+    println!("runtime platform: {}", trainer.platform());
+    let (rmse0, mae0) = trainer.evaluate(&test)?;
+    println!("epoch  0: rmse {rmse0:.4}  mae {mae0:.4}  (init)");
+    for epoch in 1..=epochs {
+        let stats = trainer.epoch(&train)?;
+        let (rmse, mae) = trainer.evaluate(&test)?;
+        println!(
+            "epoch {epoch:>2}: rmse {rmse:.4}  mae {mae:.4}  factor {:.3}s core {:.3}s (mem {:.3}s, pad {:.1}%)",
+            stats.factor.total().as_secs_f64(),
+            stats.core.total().as_secs_f64(),
+            (stats.factor.memory() + stats.core.memory()).as_secs_f64(),
+            100.0 * stats.factor.padding_ratio(),
+        );
+    }
+    if let Some(path) = a.get("save") {
+        trainer.model.save(Path::new(path))?;
+        println!("saved model to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_cost(argv: Vec<String>) -> Result<()> {
+    let a = Args::parse(argv, &["order", "j", "r", "m", "nnz"], &[]).map_err(anyhow::Error::msg)?;
+    let shape = cost::Shape {
+        n: a.get_parse("order", 3usize).map_err(anyhow::Error::msg)?,
+        j: a.get_parse("j", 16usize).map_err(anyhow::Error::msg)?,
+        r: a.get_parse("r", 16usize).map_err(anyhow::Error::msg)?,
+        m: a.get_parse("m", 16usize).map_err(anyhow::Error::msg)?,
+    };
+    let nnz: usize = a.get_parse("nnz", 1_000_000).map_err(anyhow::Error::msg)?;
+    println!(
+        "Table 4 cost model (N={} J={} R={} M={}, |Ω|={nnz}):",
+        shape.n, shape.j, shape.r, shape.m
+    );
+    println!(
+        "{:<16} {:>14} {:>14} {:>14} {:>12} {:>10}",
+        "algorithm", "params read", "D-chain muls", "B·D muls", "written", "MXU frac"
+    );
+    for algo in [
+        cost::Algo::FastTucker,
+        cost::Algo::FasterTucker,
+        cost::Algo::FastTuckerPlus,
+    ] {
+        println!(
+            "{:<16} {:>14} {:>14} {:>14} {:>12} {:>10.2}",
+            algo.name(),
+            cost::params_read(algo, shape),
+            cost::d_chain_muls(algo, shape),
+            cost::bd_muls(algo, shape),
+            cost::params_written(algo, shape),
+            cost::mxu_fraction(algo, shape),
+        );
+    }
+    println!("\nper-pass estimates over |Ω| (bandwidth-scaled):");
+    let bw = fasttucker::bench::measure_bandwidth();
+    println!("measured host bandwidth: {:.2} GB/s", bw / 1e9);
+    for algo in [
+        cost::Algo::FastTucker,
+        cost::Algo::FasterTucker,
+        cost::Algo::FastTuckerPlus,
+    ] {
+        println!(
+            "{:<16} memory {:>10}  flops {:.3e}",
+            algo.name(),
+            fasttucker::bench::fmt_secs(cost::memory_time_s(algo, shape, nnz, bw)),
+            cost::flops_per_pass(algo, shape, nnz),
+        );
+    }
+    Ok(())
+}
+
+/// Raw executable microbenchmark: `fasttucker profile --name <artifact>`
+/// times `execute` with synthetic inputs, isolating PJRT/XLA cost from the
+/// coordinator (gather/scatter/sampling).  The L2 §Perf numbers in
+/// EXPERIMENTS.md come from this.
+fn cmd_profile(argv: Vec<String>) -> Result<()> {
+    let a = Args::parse(argv, &["artifacts", "name", "reps"], &[]).map_err(anyhow::Error::msg)?;
+    let dir = PathBuf::from(a.get_or("artifacts", "artifacts"));
+    let engine = fasttucker::runtime::Engine::new(&dir)?;
+    let reps: usize = a.get_parse("reps", 50).map_err(anyhow::Error::msg)?;
+    let names: Vec<String> = match a.get("name") {
+        Some(n) => n.split(',').map(|s| s.to_string()).collect(),
+        None => engine.manifest().iter().map(|i| i.name.clone()).collect(),
+    };
+    for name in names {
+        let exe = engine.load_named(&name)?;
+        let inputs: Vec<Vec<f32>> = exe
+            .info
+            .inputs
+            .iter()
+            .map(|shape| vec![0.1f32; shape.iter().product()])
+            .collect();
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let row = fasttucker::bench::measure(&name, 3, reps, || {
+            exe.run(&refs).expect("execute");
+            0.0
+        });
+        println!(
+            "{:<44} {:>12} (mad {})",
+            row.label,
+            fasttucker::bench::fmt_secs(row.median_s),
+            fasttucker::bench::fmt_secs(row.mad_s)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(argv: Vec<String>) -> Result<()> {
+    let a = Args::parse(argv, &["artifacts"], &[]).map_err(anyhow::Error::msg)?;
+    let dir = PathBuf::from(a.get_or("artifacts", "artifacts"));
+    let engine = fasttucker::runtime::Engine::new(&dir)?;
+    println!("platform: {}", engine.platform());
+    println!("artifacts in {dir:?}: {}", engine.manifest().len());
+    let mut kernels: Vec<&str> = engine.manifest().iter().map(|a| a.kernel.as_str()).collect();
+    kernels.sort_unstable();
+    kernels.dedup();
+    for k in kernels {
+        let configs: Vec<String> = engine
+            .manifest()
+            .iter()
+            .filter(|a| a.kernel == k)
+            .map(|a| format!("n{}j{}r{}s{}", a.n, a.j, a.r, a.s))
+            .collect();
+        println!("  {k}: {}", configs.join(" "));
+    }
+    Ok(())
+}

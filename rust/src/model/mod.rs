@@ -1,0 +1,416 @@
+//! Model state: factor matrices `A^(n) ∈ R^{I_n x J}`, core matrices
+//! `B^(n) ∈ R^{J x R}`, the gather/scatter hot path that feeds the PJRT
+//! executables, and checkpointing.
+//!
+//! Storage is row-major `Vec<f32>` per mode.  J and R are uniform across
+//! modes (the paper sets J_n = 16 for all n) and multiples of 16 to keep
+//! every matmul WMMA/MXU-tileable.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::Pcg32;
+
+/// The decomposition parameters for one tensor.
+#[derive(Clone, Debug)]
+pub struct TuckerModel {
+    pub dims: Vec<u32>,
+    pub j: usize,
+    pub r: usize,
+    /// `factors[n]` is `I_n x J` row-major.
+    pub factors: Vec<Vec<f32>>,
+    /// `cores[n]` is `J x R` row-major.
+    pub cores: Vec<Vec<f32>>,
+}
+
+impl TuckerModel {
+    /// Random init ~ N(0, 1/sqrt(J)) offset slightly positive, matching the
+    /// common rating-data init (keeps early predictions near the mean).
+    pub fn init(dims: &[u32], j: usize, r: usize, seed: u64) -> Self {
+        assert!(j % 16 == 0 && r % 16 == 0, "J and R must be multiples of 16");
+        let mut rng = Pcg32::new(seed, 0x0DE1);
+        let scale_a = 1.0 / (j as f32).sqrt();
+        let scale_b = 1.0 / (r as f32).sqrt();
+        let factors = dims
+            .iter()
+            .map(|&d| {
+                (0..d as usize * j)
+                    .map(|_| rng.gen_normal() * scale_a + 0.5 * scale_a)
+                    .collect()
+            })
+            .collect();
+        let cores = dims
+            .iter()
+            .map(|_| {
+                (0..j * r)
+                    .map(|_| rng.gen_normal() * scale_b + 0.5 * scale_b)
+                    .collect()
+            })
+            .collect();
+        Self {
+            dims: dims.to_vec(),
+            j,
+            r,
+            factors,
+            cores,
+        }
+    }
+
+    /// Init calibrated so the initial prediction magnitude matches
+    /// `mean_value`: solves `R * (J μ_a μ_b)^N ≈ mean` for the entry means.
+    /// Essential for high orders — with the naive init the per-mode dots are
+    /// ~0.25, so an order-8 prediction is 0.25^8 ≈ 1e-5 and every gradient
+    /// vanishes (the HHLST regime the paper targets needs this).
+    pub fn init_with_mean(dims: &[u32], j: usize, r: usize, seed: u64, mean_value: f32) -> Self {
+        let mut model = Self::init(dims, j, r, seed);
+        let n = dims.len() as f32;
+        let target = (mean_value.abs().max(0.1) / r as f32).powf(1.0 / n);
+        // per-entry mean so that J * mu_a * mu_b = target
+        let mu = (target / j as f32).sqrt();
+        let mut rng = Pcg32::new(seed, 0xCA1B);
+        for f in model.factors.iter_mut().chain(model.cores.iter_mut()) {
+            for w in f.iter_mut() {
+                *w = mu * (1.0 + 0.3 * rng.gen_normal());
+            }
+        }
+        model
+    }
+
+    #[inline]
+    pub fn order(&self) -> usize {
+        self.dims.len()
+    }
+
+    #[inline]
+    pub fn factor_row(&self, mode: usize, i: usize) -> &[f32] {
+        &self.factors[mode][i * self.j..(i + 1) * self.j]
+    }
+
+    /// Predict one entry on the CPU (scalar path; eval/serving fallback).
+    pub fn predict_one(&self, coords: &[u32]) -> f32 {
+        let n = self.order();
+        let (j, r) = (self.j, self.r);
+        let mut acc = vec![1.0f32; r];
+        for m in 0..n {
+            let row = self.factor_row(m, coords[m] as usize);
+            let core = &self.cores[m];
+            for rr in 0..r {
+                let mut dot = 0.0f32;
+                for jj in 0..j {
+                    dot += row[jj] * core[jj * r + rr];
+                }
+                acc[rr] *= dot;
+            }
+        }
+        acc.iter().sum()
+    }
+
+    /// Gather factor rows for a batch into `out` laid out `[N, S, J]`
+    /// (mode-major), the layout the L1 kernels expect.  `coords` is the
+    /// entry-major COO index slab for the batch (`S x N`).  Rows beyond
+    /// `valid` are zeroed (inert padding — see `test_padding_rows_are_inert`
+    /// in the python suite).
+    pub fn gather_batch(&self, coords: &[u32], valid: usize, out: &mut [f32]) {
+        let n = self.order();
+        let j = self.j;
+        let s = out.len() / (n * j);
+        debug_assert_eq!(out.len(), n * s * j);
+        debug_assert!(valid <= s);
+        debug_assert_eq!(coords.len(), valid * n);
+        for m in 0..n {
+            let dst_mode = &mut out[m * s * j..(m + 1) * s * j];
+            let fm = &self.factors[m];
+            for e in 0..valid {
+                let row = coords[e * n + m] as usize;
+                dst_mode[e * j..(e + 1) * j].copy_from_slice(&fm[row * j..(row + 1) * j]);
+            }
+            dst_mode[valid * j..].fill(0.0);
+        }
+    }
+
+    /// Scatter updated rows `[N, S, J]` back into the factor matrices.
+    /// Duplicate rows within a batch: the last occurrence wins (Hogwild-style
+    /// benign race, as in the paper's warp-parallel updates).
+    pub fn scatter_batch(&mut self, coords: &[u32], valid: usize, updated: &[f32]) {
+        let n = self.order();
+        let j = self.j;
+        let s = updated.len() / (n * j);
+        for m in 0..n {
+            let src_mode = &updated[m * s * j..(m + 1) * s * j];
+            let fm = &mut self.factors[m];
+            for e in 0..valid {
+                let row = coords[e * n + m] as usize;
+                fm[row * j..(row + 1) * j].copy_from_slice(&src_mode[e * j..(e + 1) * j]);
+            }
+        }
+    }
+
+    /// Gather with mode order rotated so tensor mode `mode` lands at output
+    /// position 0 (the per-mode baseline kernels always update index 0):
+    /// output position `k` holds rows of tensor mode `(mode + k) % N`.
+    pub fn gather_batch_rotated(&self, coords: &[u32], valid: usize, mode: usize, out: &mut [f32]) {
+        let n = self.order();
+        let j = self.j;
+        let s = out.len() / (n * j);
+        for k in 0..n {
+            let src_mode = (mode + k) % n;
+            let dst = &mut out[k * s * j..(k + 1) * s * j];
+            let fm = &self.factors[src_mode];
+            for e in 0..valid {
+                let row = coords[e * n + src_mode] as usize;
+                dst[e * j..(e + 1) * j].copy_from_slice(&fm[row * j..(row + 1) * j]);
+            }
+            dst[valid * j..].fill(0.0);
+        }
+    }
+
+    /// Gather only `mode`'s rows into `[S, J]`.
+    pub fn gather_mode_rows(&self, mode: usize, coords: &[u32], valid: usize, out: &mut [f32]) {
+        let n = self.order();
+        let j = self.j;
+        let fm = &self.factors[mode];
+        for e in 0..valid {
+            let row = coords[e * n + mode] as usize;
+            out[e * j..(e + 1) * j].copy_from_slice(&fm[row * j..(row + 1) * j]);
+        }
+        out[valid * j..].fill(0.0);
+    }
+
+    /// Scatter `[S, J]` updated rows back into `mode`'s factor matrix.
+    pub fn scatter_mode_rows(&mut self, mode: usize, coords: &[u32], valid: usize, rows: &[f32]) {
+        let n = self.order();
+        let j = self.j;
+        let fm = &mut self.factors[mode];
+        for e in 0..valid {
+            let row = coords[e * n + mode] as usize;
+            fm[row * j..(row + 1) * j].copy_from_slice(&rows[e * j..(e + 1) * j]);
+        }
+    }
+
+    /// Pack cores into `[N, J, R]` (mode-major) for the kernels.
+    pub fn pack_cores(&self, out: &mut [f32]) {
+        let sz = self.j * self.r;
+        debug_assert_eq!(out.len(), self.order() * sz);
+        for (m, core) in self.cores.iter().enumerate() {
+            out[m * sz..(m + 1) * sz].copy_from_slice(core);
+        }
+    }
+
+    /// Pack cores with `mode` rotated to the front (baseline per-mode
+    /// kernels always update index 0).
+    pub fn pack_cores_rotated(&self, mode: usize, out: &mut [f32]) {
+        let n = self.order();
+        let sz = self.j * self.r;
+        for k in 0..n {
+            let src = (mode + k) % n;
+            out[k * sz..(k + 1) * sz].copy_from_slice(&self.cores[src]);
+        }
+    }
+
+    /// Apply an accumulated core gradient `[N, J, R]`:
+    /// `B^(n) += lr * (grad^(n)/count - lam*B^(n))` — the paper's
+    /// accumulate-then-apply (Alg. 5 atomicAdd analog).
+    pub fn apply_core_grad(&mut self, grad: &[f32], count: usize, lr: f32, lam: f32) {
+        let sz = self.j * self.r;
+        let scale = lr / count.max(1) as f32;
+        for (m, core) in self.cores.iter_mut().enumerate() {
+            let g = &grad[m * sz..(m + 1) * sz];
+            for (w, &gv) in core.iter_mut().zip(g) {
+                *w += scale * gv - lr * lam * *w;
+            }
+        }
+    }
+
+    /// Same for a single rotated mode (baseline kernels): gradient is `[J,R]`
+    /// for `mode`.
+    pub fn apply_core_grad_mode(&mut self, mode: usize, grad: &[f32], count: usize, lr: f32, lam: f32) {
+        let scale = lr / count.max(1) as f32;
+        let core = &mut self.cores[mode];
+        for (w, &gv) in core.iter_mut().zip(grad) {
+            *w += scale * gv - lr * lam * *w;
+        }
+    }
+
+    /// Frobenius norm of all parameters (divergence tripwire).
+    pub fn param_norm(&self) -> f64 {
+        let mut acc = 0f64;
+        for f in &self.factors {
+            acc += f.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+        }
+        for c in &self.cores {
+            acc += c.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+        }
+        acc.sqrt()
+    }
+
+    // --- checkpointing ----------------------------------------------------
+
+    const MAGIC: &'static [u8; 4] = b"FTM1";
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(Self::MAGIC)?;
+        w.write_all(&(self.order() as u32).to_le_bytes())?;
+        w.write_all(&(self.j as u32).to_le_bytes())?;
+        w.write_all(&(self.r as u32).to_le_bytes())?;
+        for &d in &self.dims {
+            w.write_all(&d.to_le_bytes())?;
+        }
+        for f in &self.factors {
+            for v in f {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        for c in &self.cores {
+            for v in c {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != Self::MAGIC {
+            bail!("not a model checkpoint");
+        }
+        let order = read_u32(&mut r)? as usize;
+        let j = read_u32(&mut r)? as usize;
+        let rr = read_u32(&mut r)? as usize;
+        let mut dims = Vec::with_capacity(order);
+        for _ in 0..order {
+            dims.push(read_u32(&mut r)?);
+        }
+        let mut factors = Vec::with_capacity(order);
+        for &d in &dims {
+            factors.push(read_f32s(&mut r, d as usize * j)?);
+        }
+        let mut cores = Vec::with_capacity(order);
+        for _ in 0..order {
+            cores.push(read_f32s(&mut r, j * rr)?);
+        }
+        Ok(Self {
+            dims,
+            j,
+            r: rr,
+            factors,
+            cores,
+        })
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_f32s<R: Read>(r: &mut R, n: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> TuckerModel {
+        TuckerModel::init(&[10, 12, 14], 16, 16, 42)
+    }
+
+    #[test]
+    fn init_shapes() {
+        let m = model();
+        assert_eq!(m.factors[0].len(), 10 * 16);
+        assert_eq!(m.factors[2].len(), 14 * 16);
+        assert_eq!(m.cores[1].len(), 16 * 16);
+    }
+
+    #[test]
+    #[should_panic]
+    fn init_rejects_non_multiple_of_16() {
+        TuckerModel::init(&[4, 4], 8, 16, 0);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let mut m = model();
+        let coords: Vec<u32> = vec![0, 1, 2, 3, 4, 5, 9, 11, 13];
+        let (n, s, j) = (3, 4, 16);
+        let mut buf = vec![0f32; n * s * j];
+        m.gather_batch(&coords, 3, &mut buf);
+        // padding zeroed
+        assert!(buf[0 * s * j + 3 * j..(0 * s * j) + 4 * j].iter().all(|&v| v == 0.0));
+        // gathered rows match source
+        assert_eq!(&buf[0..j], m.factor_row(0, 0));
+        assert_eq!(&buf[s * j + j..s * j + 2 * j], m.factor_row(1, 4));
+        // scatter modified rows back
+        let mut upd = buf.clone();
+        for v in upd.iter_mut() {
+            *v += 1.0;
+        }
+        m.scatter_batch(&coords, 3, &upd);
+        assert!((m.factor_row(0, 0)[0] - (buf[0] + 1.0)).abs() < 1e-6);
+        assert!((m.factor_row(2, 13)[5] - (buf[2 * s * j + 2 * j + 5] + 1.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn predict_matches_manual() {
+        let m = TuckerModel::init(&[4, 4], 16, 16, 7);
+        let p = m.predict_one(&[1, 2]);
+        // manual: sum_r (a1.b^(1)_r)(a2.b^(2)_r)
+        let mut want = 0f32;
+        for r in 0..16 {
+            let mut p1 = 0f32;
+            let mut p2 = 0f32;
+            for j in 0..16 {
+                p1 += m.factor_row(0, 1)[j] * m.cores[0][j * 16 + r];
+                p2 += m.factor_row(1, 2)[j] * m.cores[1][j * 16 + r];
+            }
+            want += p1 * p2;
+        }
+        assert!((p - want).abs() < 1e-4);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let m = model();
+        let dir = std::env::temp_dir().join("ft_model_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.ftm");
+        m.save(&p).unwrap();
+        let u = TuckerModel::load(&p).unwrap();
+        assert_eq!(m.dims, u.dims);
+        assert_eq!(m.factors, u.factors);
+        assert_eq!(m.cores, u.cores);
+    }
+
+    #[test]
+    fn rotated_core_pack() {
+        let m = model();
+        let sz = 16 * 16;
+        let mut buf = vec![0f32; 3 * sz];
+        m.pack_cores_rotated(1, &mut buf);
+        assert_eq!(&buf[0..sz], &m.cores[1][..]);
+        assert_eq!(&buf[sz..2 * sz], &m.cores[2][..]);
+        assert_eq!(&buf[2 * sz..], &m.cores[0][..]);
+    }
+
+    #[test]
+    fn core_grad_apply() {
+        let mut m = model();
+        let before = m.cores[0][0];
+        let grad = vec![1.0f32; 3 * 16 * 16];
+        m.apply_core_grad(&grad, 10, 0.1, 0.0);
+        assert!((m.cores[0][0] - (before + 0.1 / 10.0)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,137 @@
+//! Executable engine: PJRT CPU client + compile-once cache + typed execute.
+//!
+//! `Engine` owns the `PjRtClient` and a cache of compiled executables keyed
+//! by artifact name; `Executable::run` stages `&[f32]` slabs as literals,
+//! executes, and unpacks the return tuple back to `Vec<f32>` slabs.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactInfo, Manifest};
+
+/// Compiled-artifact engine.  Not `Send`: PJRT client handles stay on the
+/// thread that created them (the coordinator's executor thread).
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<BTreeMap<String, Rc<Executable>>>,
+}
+
+/// One compiled computation plus its interface metadata.
+///
+/// Execution goes through `execute_b` with self-managed `PjRtBuffer` inputs:
+/// the crate's literal-based `execute` transfers each input literal to a
+/// device buffer and `release()`s it without ever freeing — ~2 MB leaked per
+/// call, which OOM-killed long bench runs (EXPERIMENTS.md §Perf #6).  Owning
+/// the buffers ourselves restores correct Drop semantics and also skips one
+/// host-side literal copy per input.
+pub struct Executable {
+    pub info: ArtifactInfo,
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client and load the manifest from `artifact_dir`.
+    pub fn new(artifact_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the artifact with this exact name.
+    pub fn load_named(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let info = self
+            .manifest
+            .get(name)
+            .with_context(|| format!("artifact {name} not in manifest"))?
+            .clone();
+        let proto = xla::HloModuleProto::from_text_file(&info.file)
+            .with_context(|| format!("parse HLO text {:?}", info.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {name}"))?;
+        let e = Rc::new(Executable {
+            info,
+            exe,
+            client: self.client.clone(),
+        });
+        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Resolve by (kernel, n, j, r) and compile.
+    pub fn load(&self, kernel: &str, n: usize, j: usize, r: usize) -> Result<Rc<Executable>> {
+        let name = self.manifest.find(kernel, n, j, r)?.name.clone();
+        self.load_named(&name)
+    }
+
+    /// Resolve ignoring N (order-independent kernels like `compute_c`).
+    pub fn load_any_n(&self, kernel: &str, j: usize, r: usize) -> Result<Rc<Executable>> {
+        let name = self.manifest.find_any_n(kernel, j, r)?.name.clone();
+        self.load_named(&name)
+    }
+}
+
+impl Executable {
+    /// Execute with f32 slabs matching the artifact's declared input shapes.
+    /// Returns the output tuple as f32 slabs.
+    pub fn run(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.info.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.info.name,
+                self.info.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut bufs = Vec::with_capacity(inputs.len());
+        for (k, (&data, shape)) in inputs.iter().zip(&self.info.inputs).enumerate() {
+            let want: usize = shape.iter().product();
+            if data.len() != want {
+                bail!(
+                    "{}: input {k} has {} elements, shape {:?} wants {want}",
+                    self.info.name,
+                    data.len(),
+                    shape
+                );
+            }
+            let buf = self
+                .client
+                .buffer_from_host_buffer::<f32>(data, shape, None)
+                .with_context(|| format!("stage input {k} shape {shape:?}"))?;
+            bufs.push(buf);
+        }
+        let result = self.exe.execute_b::<xla::PjRtBuffer>(&bufs)?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        drop(bufs);
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result.to_tuple().context("unpack result tuple")?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().context("result to_vec"))
+            .collect()
+    }
+}

@@ -1,0 +1,188 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.  `manifest.json` lists every lowered kernel with its config
+//! (kernel name, N, J, R, S) and input shapes; the runtime resolves logical
+//! requests ("plus_factor_tc for N=3, J=16, R=16") to files through it.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub kernel: String,
+    pub n: usize,
+    pub j: usize,
+    pub r: usize,
+    pub s: usize,
+    pub file: PathBuf,
+    pub inputs: Vec<Vec<usize>>,
+}
+
+/// Parsed manifest with lookup by (kernel, n, j, r).
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    by_name: BTreeMap<String, ArtifactInfo>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} — run `make artifacts` first"))?;
+        let root = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e}"))?;
+        let format = root
+            .get("format")
+            .and_then(Json::as_usize)
+            .context("manifest missing format")?;
+        if format != 1 {
+            bail!("unsupported manifest format {format}");
+        }
+        let mut by_name = BTreeMap::new();
+        for a in root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest missing artifacts")?
+        {
+            let get_us = |k: &str| -> Result<usize> {
+                a.get(k)
+                    .and_then(Json::as_usize)
+                    .with_context(|| format!("artifact entry missing {k}"))
+            };
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .context("artifact missing name")?
+                .to_string();
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .context("artifact missing inputs")?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()
+                        .context("bad input shape")?
+                        .iter()
+                        .map(|d| d.as_usize().context("bad dim"))
+                        .collect::<Result<Vec<_>>>()
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let info = ArtifactInfo {
+                kernel: a
+                    .get("kernel")
+                    .and_then(Json::as_str)
+                    .context("artifact missing kernel")?
+                    .to_string(),
+                n: get_us("n")?,
+                j: get_us("j")?,
+                r: get_us("r")?,
+                s: get_us("s")?,
+                file: dir.join(
+                    a.get("file")
+                        .and_then(Json::as_str)
+                        .context("artifact missing file")?,
+                ),
+                inputs,
+                name: name.clone(),
+            };
+            by_name.insert(name, info);
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            by_name,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.by_name.get(name)
+    }
+
+    /// Find an artifact for `kernel` with the given decomposition config.
+    /// Any S is accepted (the trainer adapts its block size to the artifact).
+    pub fn find(&self, kernel: &str, n: usize, j: usize, r: usize) -> Result<&ArtifactInfo> {
+        self.by_name
+            .values()
+            .filter(|a| a.kernel == kernel && a.n == n && a.j == j && a.r == r)
+            .max_by_key(|a| a.s)
+            .with_context(|| {
+                format!("no artifact for kernel={kernel} n={n} j={j} r={r}; re-run `make artifacts`")
+            })
+    }
+
+    /// Like [`find`](Self::find) but ignoring N — for kernels whose shape is
+    /// order-independent (`compute_c` works on one mode's matrices).
+    pub fn find_any_n(&self, kernel: &str, j: usize, r: usize) -> Result<&ArtifactInfo> {
+        self.by_name
+            .values()
+            .filter(|a| a.kernel == kernel && a.j == j && a.r == r)
+            .max_by_key(|a| a.s)
+            .with_context(|| format!("no artifact for kernel={kernel} j={j} r={r}"))
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ArtifactInfo> {
+        self.by_name.values()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    #[test]
+    fn loads_and_finds() {
+        let dir = std::env::temp_dir().join("ft_manifest_test");
+        write_manifest(
+            &dir,
+            r#"{"format":1,"dtype":"f32","artifacts":[
+                {"name":"plus_factor_tc_n3_j16_r16_s512","kernel":"plus_factor_tc",
+                 "n":3,"j":16,"r":16,"s":512,"file":"a.hlo.txt",
+                 "inputs":[[3,512,16],[3,16,16],[512],[2]]},
+                {"name":"plus_factor_tc_n3_j16_r16_s128","kernel":"plus_factor_tc",
+                 "n":3,"j":16,"r":16,"s":128,"file":"b.hlo.txt",
+                 "inputs":[[3,128,16],[3,16,16],[128],[2]]}
+            ]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.len(), 2);
+        let a = m.find("plus_factor_tc", 3, 16, 16).unwrap();
+        assert_eq!(a.s, 512); // prefers the larger block
+        assert_eq!(a.inputs[0], vec![3, 512, 16]);
+        assert!(m.find("nope", 3, 16, 16).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let dir = std::env::temp_dir().join("ft_manifest_bad");
+        write_manifest(&dir, r#"{"format":99,"artifacts":[]}"#);
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_file_is_helpful() {
+        let err = Manifest::load(Path::new("/nonexistent-dir")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

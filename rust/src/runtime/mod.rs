@@ -1,0 +1,13 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`, produced by
+//! `make artifacts`), compile them once per process on the CPU PJRT client,
+//! and execute them from the L3 hot path.
+//!
+//! HLO *text* is the interchange format (not serialized protos): jax >= 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod exec;
+pub mod manifest;
+
+pub use exec::{Engine, Executable};
+pub use manifest::{ArtifactInfo, Manifest};

@@ -1,0 +1,262 @@
+//! Sampling strategies — one per row of the paper's Table 3.
+//!
+//! Every strategy yields fixed-size *blocks* of `S` sample slots (the HLO
+//! batch shape), each slot either an entry id or `PAD`.  A block is the
+//! analog of a grid launch: `S/16` "warps" of `M = 16` samples.
+//!
+//! * [`uniform_blocks`] — FastTuckerPlus: Ψ from the whole Ω.  An epoch is a
+//!   shuffled pass over Ω, so blocks are always full: perfect load balance
+//!   (the paper's "load-balanced sampling method").
+//! * [`mode_slice_blocks`] — FastTucker: every 16-slot warp group holds
+//!   samples sharing the mode-`n` index `i_n` (Ψ ⊂ Ω_{i_n}^(n)); short
+//!   groups are padded, reproducing Alg. 1's warp-level imbalance.
+//! * [`fiber_blocks`] — FasterTucker: warp groups are fibers
+//!   (Ω^(n)_{i_1,..,i_{n-1},i_{n+1},..}); real fibers are mostly much
+//!   shorter than 16, so padding waste is large — exactly the effect the
+//!   paper describes ("most Ω contain fewer than M elements").
+
+use crate::tensor::{FiberIndex, ModeSliceIndex, SparseTensor};
+use crate::util::rng::Pcg32;
+
+/// Padding slot marker.
+pub const PAD: u32 = u32::MAX;
+
+/// The paper's warp sample count M.
+pub const WARP_M: usize = 16;
+
+/// One executable-shaped batch of sample slots.
+#[derive(Clone, Debug)]
+pub struct Block {
+    /// Length S; `PAD` marks inert slots.
+    pub ids: Vec<u32>,
+    /// Number of non-PAD slots.
+    pub valid: usize,
+}
+
+impl Block {
+    fn new(s: usize) -> Self {
+        Self {
+            ids: Vec::with_capacity(s),
+            valid: 0,
+        }
+    }
+
+    fn seal(mut self, s: usize) -> Self {
+        debug_assert!(self.ids.len() <= s);
+        self.valid = self.ids.iter().filter(|&&i| i != PAD).count();
+        self.ids.resize(s, PAD);
+        self
+    }
+}
+
+/// FastTuckerPlus sampling: shuffled full pass over Ω in blocks of `s`.
+pub fn uniform_blocks(t: &SparseTensor, s: usize, seed: u64, epoch: u64) -> Vec<Block> {
+    let mut rng = Pcg32::new(seed, 0x0731 ^ epoch);
+    let mut ids: Vec<u32> = (0..t.nnz() as u32).collect();
+    rng.shuffle(&mut ids);
+    ids.chunks(s)
+        .map(|chunk| {
+            let mut b = Block::new(s);
+            b.ids.extend_from_slice(chunk);
+            b.seal(s)
+        })
+        .collect()
+}
+
+/// Pack variable-length groups into blocks: each group is cut into 16-slot
+/// warps (last warp of a group padded), warps concatenated into blocks of
+/// `s`.  `groups` supplies (start, end) ranges into `entries`.
+fn pack_grouped(entries: &[u32], offsets: &[u32], s: usize, rng: &mut Pcg32) -> Vec<Block> {
+    debug_assert!(s % WARP_M == 0);
+    let n_groups = offsets.len() - 1;
+    let mut order: Vec<u32> = (0..n_groups as u32).collect();
+    rng.shuffle(&mut order);
+    let mut blocks = Vec::new();
+    let mut cur = Block::new(s);
+    for &g in &order {
+        let lo = offsets[g as usize] as usize;
+        let hi = offsets[g as usize + 1] as usize;
+        if lo == hi {
+            continue;
+        }
+        for warp in entries[lo..hi].chunks(WARP_M) {
+            if cur.ids.len() + WARP_M > s {
+                blocks.push(std::mem::replace(&mut cur, Block::new(s)).seal(s));
+            }
+            cur.ids.extend_from_slice(warp);
+            // pad the warp tail so the next group starts on a warp boundary
+            cur.ids.resize(cur.ids.len().div_ceil(WARP_M) * WARP_M, PAD);
+        }
+    }
+    if !cur.ids.is_empty() {
+        blocks.push(cur.seal(s));
+    }
+    blocks
+}
+
+/// FastTucker sampling for `mode`: warp groups share the mode index.
+pub fn mode_slice_blocks(
+    idx: &ModeSliceIndex,
+    s: usize,
+    seed: u64,
+    epoch: u64,
+) -> Vec<Block> {
+    let mut rng = Pcg32::new(seed, 0x517C_E ^ (epoch << 8) ^ idx.mode as u64);
+    pack_grouped(&idx.entries, &idx.offsets, s, &mut rng)
+}
+
+/// FasterTucker sampling for `mode`: warp groups are fibers.
+pub fn fiber_blocks(idx: &FiberIndex, s: usize, seed: u64, epoch: u64) -> Vec<Block> {
+    let mut rng = Pcg32::new(seed, 0xF1BE_12 ^ (epoch << 8) ^ idx.mode as u64);
+    pack_grouped(&idx.entries, &idx.offsets, s, &mut rng)
+}
+
+/// FasterTuckerCOO sampling: fibers in shuffled order but packed *densely*
+/// (no warp alignment) — the paper's cuFasterTuckerCOO variant, which trades
+/// the shared-intermediate reuse for full occupancy.  Blocks are always full
+/// except the last.
+pub fn fiber_blocks_coo(idx: &FiberIndex, s: usize, seed: u64, epoch: u64) -> Vec<Block> {
+    let mut rng = Pcg32::new(seed, 0xF1BE_C0 ^ (epoch << 8) ^ idx.mode as u64);
+    let n_groups = idx.num_fibers();
+    let mut order: Vec<u32> = (0..n_groups as u32).collect();
+    rng.shuffle(&mut order);
+    let mut blocks = Vec::new();
+    let mut cur = Block::new(s);
+    for &g in &order {
+        for &e in idx.fiber(g as usize) {
+            if cur.ids.len() == s {
+                blocks.push(std::mem::replace(&mut cur, Block::new(s)).seal(s));
+            }
+            cur.ids.push(e);
+        }
+    }
+    if !cur.ids.is_empty() {
+        blocks.push(cur.seal(s));
+    }
+    blocks
+}
+
+/// Padding overhead of a block list: padded slots / total slots.  This is
+/// the measurable analog of the paper's load-imbalance column in Table 1.
+pub fn padding_ratio(blocks: &[Block]) -> f64 {
+    let total: usize = blocks.iter().map(|b| b.ids.len()).sum();
+    let valid: usize = blocks.iter().map(|b| b.valid).sum();
+    if total == 0 {
+        0.0
+    } else {
+        1.0 - valid as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::{generate, SynthConfig};
+
+    fn tensor() -> SparseTensor {
+        generate(&SynthConfig::order_sweep(3, 32, 1500, 11))
+    }
+
+    #[test]
+    fn uniform_covers_omega_exactly_once() {
+        let t = tensor();
+        let blocks = uniform_blocks(&t, 256, 1, 0);
+        let mut seen = vec![0u32; t.nnz()];
+        for b in &blocks {
+            for &id in &b.ids {
+                if id != PAD {
+                    seen[id as usize] += 1;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+        // only the last block may be padded
+        for b in &blocks[..blocks.len() - 1] {
+            assert_eq!(b.valid, 256);
+        }
+    }
+
+    #[test]
+    fn uniform_epochs_differ() {
+        let t = tensor();
+        let a = uniform_blocks(&t, 256, 1, 0);
+        let b = uniform_blocks(&t, 256, 1, 1);
+        assert_ne!(a[0].ids, b[0].ids);
+    }
+
+    #[test]
+    fn mode_slice_warps_share_index() {
+        let t = tensor();
+        let idx = ModeSliceIndex::build(&t, 0);
+        let blocks = mode_slice_blocks(&idx, 256, 2, 0);
+        let mut covered = 0usize;
+        for b in &blocks {
+            for warp in b.ids.chunks(WARP_M) {
+                let mut slice_ix = None;
+                for &id in warp {
+                    if id == PAD {
+                        continue;
+                    }
+                    covered += 1;
+                    let c = t.coords(id as usize)[0];
+                    match slice_ix {
+                        None => slice_ix = Some(c),
+                        Some(s) => assert_eq!(s, c, "warp mixes slices"),
+                    }
+                }
+            }
+        }
+        assert_eq!(covered, t.nnz());
+    }
+
+    #[test]
+    fn fiber_warps_share_all_other_coords() {
+        let t = tensor();
+        let idx = FiberIndex::build(&t, 1);
+        let blocks = fiber_blocks(&idx, 256, 3, 0);
+        let mut covered = 0usize;
+        for b in &blocks {
+            for warp in b.ids.chunks(WARP_M) {
+                let mut first: Option<Vec<u32>> = None;
+                for &id in warp {
+                    if id == PAD {
+                        continue;
+                    }
+                    covered += 1;
+                    let c = t.coords(id as usize);
+                    let key: Vec<u32> = c
+                        .iter()
+                        .enumerate()
+                        .filter(|(m, _)| *m != 1)
+                        .map(|(_, &v)| v)
+                        .collect();
+                    match &first {
+                        None => first = Some(key),
+                        Some(f) => assert_eq!(f, &key, "warp mixes fibers"),
+                    }
+                }
+            }
+        }
+        assert_eq!(covered, t.nnz());
+    }
+
+    #[test]
+    fn fiber_padding_exceeds_uniform() {
+        let t = tensor();
+        let u = padding_ratio(&uniform_blocks(&t, 256, 1, 0));
+        let f = padding_ratio(&fiber_blocks(&FiberIndex::build(&t, 0), 256, 1, 0));
+        assert!(f > u, "fiber {f} <= uniform {u}");
+    }
+
+    #[test]
+    fn blocks_are_exactly_s_long() {
+        let t = tensor();
+        for b in uniform_blocks(&t, 128, 5, 0) {
+            assert_eq!(b.ids.len(), 128);
+        }
+        let idx = ModeSliceIndex::build(&t, 2);
+        for b in mode_slice_blocks(&idx, 128, 5, 0) {
+            assert_eq!(b.ids.len(), 128);
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! Synthetic sparse tensors (the paper's §5.1 synthetic datasets, plus
+//! scaled surrogates for the license-gated Netflix / Yahoo!Music tensors —
+//! see DESIGN.md §3 for why the substitution preserves behaviour).
+//!
+//! Entries are generated from a planted low-rank FastTucker model
+//! (`x = Σ_r Π_n a^(n)·b^(n)_r + noise`) so SGD has a true signal to
+//! recover (Fig. 1 convergence analog); coordinates are drawn from
+//! per-mode Zipf distributions to reproduce real rating-data skew.
+
+use crate::tensor::SparseTensor;
+use crate::util::rng::{Pcg32, Zipf};
+
+/// Generator configuration.
+#[derive(Clone, Debug)]
+pub struct SynthConfig {
+    pub dims: Vec<u32>,
+    pub nnz: usize,
+    /// Planted Kruskal rank of the ground-truth core.
+    pub rank: usize,
+    /// Planted per-mode factor width (J of the ground truth).
+    pub j: usize,
+    /// Observation noise stddev.
+    pub noise: f32,
+    /// Zipf exponent for coordinate skew (0 => uniform).
+    pub zipf: f64,
+    /// Clamp values into [min,max] (rating scale), if set.
+    pub clamp: Option<(f32, f32)>,
+    pub seed: u64,
+}
+
+impl SynthConfig {
+    /// Paper §5.1 synthetic family: order-N cubic tensor.  Dim and nnz are
+    /// scaled (laptop-class substitute for I=10,000 / |Ω|=1e8).
+    pub fn order_sweep(order: usize, dim: u32, nnz: usize, seed: u64) -> Self {
+        Self {
+            dims: vec![dim; order],
+            nnz,
+            rank: 4,
+            j: 8,
+            noise: 0.05,
+            zipf: 0.0, // paper's synthetic tensors are uniform
+            clamp: Some((1.0, 5.0)),
+            seed,
+        }
+    }
+
+    /// Netflix surrogate: 3-order users x movies x time, 1/100 dims
+    /// (vs the real 480189 x 17770 x 2182 with 99M nnz).  The dim scale is
+    /// chosen so nnz/row stays in the real data's regime (~10-200 ratings
+    /// per user) at laptop-scale nnz — that ratio is what decides the
+    /// storage-vs-calculation crossover (§5.6).
+    pub fn netflix_like(nnz: usize, seed: u64) -> Self {
+        Self {
+            dims: vec![4_801, 1_777, 218],
+            nnz,
+            rank: 8,
+            j: 16,
+            noise: 0.25,
+            zipf: 1.05,
+            clamp: Some((1.0, 5.0)),
+            seed,
+        }
+    }
+
+    /// Yahoo!Music surrogate: 1/100 dims of 1000990 x 624961 x 3075
+    /// (same regime rationale as [`netflix_like`](Self::netflix_like)).
+    pub fn yahoo_like(nnz: usize, seed: u64) -> Self {
+        Self {
+            dims: vec![10_009, 6_249, 307],
+            nnz,
+            rank: 8,
+            j: 16,
+            noise: 0.3,
+            zipf: 1.1,
+            clamp: Some((0.025, 5.0)),
+            seed,
+        }
+    }
+}
+
+/// Generate the tensor.  Duplicated coordinates are deduped (last wins), so
+/// the realised nnz may be slightly below `cfg.nnz` for dense configs.
+pub fn generate(cfg: &SynthConfig) -> SparseTensor {
+    let n = cfg.dims.len();
+    let mut rng = Pcg32::new(cfg.seed, 0xDA7A);
+    // Planted model parameters.
+    let factors: Vec<Vec<f32>> = cfg
+        .dims
+        .iter()
+        .map(|&d| {
+            (0..d as usize * cfg.j)
+                .map(|_| rng.gen_normal() * (1.0 / (cfg.j as f32).sqrt()) + 0.3)
+                .collect()
+        })
+        .collect();
+    let cores: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            (0..cfg.j * cfg.rank)
+                .map(|_| rng.gen_normal() * (1.0 / (cfg.rank as f32).sqrt()) + 0.2)
+                .collect()
+        })
+        .collect();
+    let zipfs: Vec<Option<Zipf>> = cfg
+        .dims
+        .iter()
+        .map(|&d| {
+            if cfg.zipf > 0.0 {
+                Some(Zipf::new(d as usize, cfg.zipf))
+            } else {
+                None
+            }
+        })
+        .collect();
+
+    let mut t = SparseTensor::new(cfg.dims.clone());
+    let mut coords = vec![0u32; n];
+    let mut perm: Vec<Vec<u32>> = Vec::new();
+    // Random per-mode permutation so Zipf "head" ids are scattered.
+    for &d in &cfg.dims {
+        let mut p: Vec<u32> = (0..d).collect();
+        rng.shuffle(&mut p);
+        perm.push(p);
+    }
+    for _ in 0..cfg.nnz {
+        for m in 0..n {
+            let raw = match &zipfs[m] {
+                Some(z) => z.sample(&mut rng) as u32,
+                None => rng.gen_range(cfg.dims[m]),
+            };
+            coords[m] = perm[m][raw as usize];
+        }
+        // planted value: Σ_r Π_n (a_{i_n,:} · b_{:,r})
+        let mut v = 0.0f32;
+        for r in 0..cfg.rank {
+            let mut p = 1.0f32;
+            for m in 0..n {
+                let row = &factors[m][coords[m] as usize * cfg.j..(coords[m] as usize + 1) * cfg.j];
+                let col = &cores[m];
+                let mut dot = 0.0f32;
+                for jj in 0..cfg.j {
+                    dot += row[jj] * col[jj * cfg.rank + r];
+                }
+                p *= dot;
+            }
+            v += p;
+        }
+        v += rng.gen_normal() * cfg.noise;
+        if let Some((lo, hi)) = cfg.clamp {
+            v = v.clamp(lo, hi);
+        }
+        t.push(&coords, v);
+    }
+    t.sort_dedup();
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_requested_shape() {
+        let cfg = SynthConfig::order_sweep(3, 64, 2000, 1);
+        let t = generate(&cfg);
+        assert_eq!(t.dims, vec![64, 64, 64]);
+        assert!(t.nnz() > 1800); // some dedup loss allowed
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = SynthConfig::order_sweep(4, 32, 500, 9);
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.indices, b.indices);
+        assert_eq!(a.values, b.values);
+    }
+
+    #[test]
+    fn clamped_values() {
+        let cfg = SynthConfig::netflix_like(5000, 3);
+        let t = generate(&cfg);
+        assert!(t.values.iter().all(|&v| (1.0..=5.0).contains(&v)));
+    }
+
+    #[test]
+    fn zipf_skews_mode_popularity() {
+        let mut cfg = SynthConfig::netflix_like(20_000, 5);
+        cfg.dims = vec![2000, 500, 100];
+        let t = generate(&cfg);
+        let idx = crate::tensor::ModeSliceIndex::build(&t, 0);
+        assert!(idx.imbalance() > 2.0, "imbalance {}", idx.imbalance());
+    }
+
+    #[test]
+    fn higher_orders() {
+        for order in [5, 8] {
+            let cfg = SynthConfig::order_sweep(order, 16, 300, 2);
+            let t = generate(&cfg);
+            assert_eq!(t.order(), order);
+            t.validate().unwrap();
+        }
+    }
+}

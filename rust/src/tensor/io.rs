@@ -1,0 +1,258 @@
+//! Tensor I/O: a text COO format (one `i1 i2 ... iN value` line per entry,
+//! whitespace-separated, `#` comments, 0-based indices) and a faster binary
+//! format (`FTB1`) for benchmark datasets.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::coo::SparseTensor;
+
+/// Read a text COO file.  First non-comment line must be the header:
+/// `dims I1 I2 ... IN`.
+pub fn read_text(path: &Path) -> Result<SparseTensor> {
+    let f = File::open(path).with_context(|| format!("open {path:?}"))?;
+    parse_text(BufReader::new(f))
+}
+
+pub fn parse_text<R: BufRead>(r: R) -> Result<SparseTensor> {
+    let mut tensor: Option<SparseTensor> = None;
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut toks = line.split_whitespace();
+        match &mut tensor {
+            None => {
+                let head = toks.next();
+                if head != Some("dims") {
+                    bail!("line {}: expected 'dims I1 ... IN' header", lineno + 1);
+                }
+                let dims: Vec<u32> = toks
+                    .map(|t| t.parse().with_context(|| format!("line {}: bad dim", lineno + 1)))
+                    .collect::<Result<_>>()?;
+                if dims.len() < 2 {
+                    bail!("need at least 2 dims");
+                }
+                tensor = Some(SparseTensor::new(dims));
+            }
+            Some(t) => {
+                let n = t.order();
+                let mut coords = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let tok = toks
+                        .next()
+                        .with_context(|| format!("line {}: too few indices", lineno + 1))?;
+                    coords.push(tok.parse::<u32>().with_context(|| {
+                        format!("line {}: bad index {tok:?}", lineno + 1)
+                    })?);
+                }
+                let vtok = toks
+                    .next()
+                    .with_context(|| format!("line {}: missing value", lineno + 1))?;
+                let v: f32 = vtok
+                    .parse()
+                    .with_context(|| format!("line {}: bad value {vtok:?}", lineno + 1))?;
+                if toks.next().is_some() {
+                    bail!("line {}: trailing tokens", lineno + 1);
+                }
+                t.push(&coords, v);
+            }
+        }
+    }
+    let t = tensor.ok_or_else(|| anyhow::anyhow!("empty tensor file"))?;
+    t.validate()?;
+    Ok(t)
+}
+
+pub fn write_text(t: &SparseTensor, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    write!(w, "dims")?;
+    for d in &t.dims {
+        write!(w, " {d}")?;
+    }
+    writeln!(w)?;
+    for e in 0..t.nnz() {
+        for c in t.coords(e) {
+            write!(w, "{c} ")?;
+        }
+        writeln!(w, "{}", t.values[e])?;
+    }
+    Ok(())
+}
+
+const MAGIC: &[u8; 4] = b"FTB1";
+
+/// Binary format: magic, u32 order, dims, u64 nnz, indices (u32 LE), values
+/// (f32 LE).  ~10x faster to load than text for multi-million-nnz tensors.
+pub fn write_binary(t: &SparseTensor, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(t.order() as u32).to_le_bytes())?;
+    for d in &t.dims {
+        w.write_all(&d.to_le_bytes())?;
+    }
+    w.write_all(&(t.nnz() as u64).to_le_bytes())?;
+    // bulk-write via byte reinterpretation (LE host assumed; checked below)
+    w.write_all(as_bytes_u32(&t.indices))?;
+    w.write_all(as_bytes_f32(&t.values))?;
+    Ok(())
+}
+
+pub fn read_binary(path: &Path) -> Result<SparseTensor> {
+    let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: not an FTB1 file");
+    }
+    let order = read_u32(&mut r)? as usize;
+    if !(2..=16).contains(&order) {
+        bail!("implausible order {order}");
+    }
+    let mut dims = Vec::with_capacity(order);
+    for _ in 0..order {
+        dims.push(read_u32(&mut r)?);
+    }
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    let nnz = u64::from_le_bytes(b8) as usize;
+    let mut t = SparseTensor::new(dims);
+    t.indices = read_vec_u32(&mut r, nnz * order)?;
+    t.values = read_vec_f32(&mut r, nnz)?;
+    t.validate()?;
+    Ok(t)
+}
+
+/// Load either format by extension (`.ftb` binary, anything else text).
+pub fn read_auto(path: &Path) -> Result<SparseTensor> {
+    if path.extension().map(|e| e == "ftb").unwrap_or(false) {
+        read_binary(path)
+    } else {
+        read_text(path)
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_vec_u32<R: Read>(r: &mut R, n: usize) -> Result<Vec<u32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn read_vec_f32<R: Read>(r: &mut R, n: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(target_endian = "little")]
+fn as_bytes_u32(v: &[u32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+#[cfg(target_endian = "little")]
+fn as_bytes_f32(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+/// The toy dataset shipped with the repo (mirrors the paper's reproducibility
+/// toy data): a deterministic 8x8x8 low-rank tensor with 64 observed entries.
+pub fn toy_dataset() -> SparseTensor {
+    use crate::util::rng::Pcg32;
+    let mut rng = Pcg32::new(0xF057_70CE, 0);
+    let dims = vec![8u32, 8, 8];
+    // rank-2 ground truth factors
+    let f: Vec<Vec<f32>> = (0..3)
+        .map(|_| (0..8 * 2).map(|_| rng.gen_normal() * 0.7 + 0.5).collect())
+        .collect();
+    let mut t = SparseTensor::new(dims);
+    for _ in 0..64 {
+        let c = [
+            rng.gen_range(8),
+            rng.gen_range(8),
+            rng.gen_range(8),
+        ];
+        let mut v = 0.0f32;
+        for r in 0..2 {
+            v += f[0][c[0] as usize * 2 + r] * f[1][c[1] as usize * 2 + r]
+                * f[2][c[2] as usize * 2 + r];
+        }
+        t.push(&c, v + rng.gen_normal() * 0.01);
+    }
+    t.sort_dedup();
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn text_roundtrip() {
+        let t = toy_dataset();
+        let dir = std::env::temp_dir().join("ft_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("toy.coo");
+        write_text(&t, &p).unwrap();
+        let u = read_text(&p).unwrap();
+        assert_eq!(t.dims, u.dims);
+        assert_eq!(t.indices, u.indices);
+        for (a, b) in t.values.iter().zip(&u.values) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn binary_roundtrip_exact() {
+        let t = toy_dataset();
+        let dir = std::env::temp_dir().join("ft_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("toy.ftb");
+        write_binary(&t, &p).unwrap();
+        let u = read_binary(&p).unwrap();
+        assert_eq!(t.dims, u.dims);
+        assert_eq!(t.indices, u.indices);
+        assert_eq!(t.values, u.values); // bit-exact
+    }
+
+    #[test]
+    fn parse_text_errors() {
+        assert!(parse_text("".as_bytes()).is_err());
+        assert!(parse_text("dims 4 4\n0 0\n".as_bytes()).is_err()); // missing value
+        assert!(parse_text("dims 4 4\n9 0 1.0\n".as_bytes()).is_err()); // oob
+        assert!(parse_text("nodims\n".as_bytes()).is_err());
+        assert!(parse_text("dims 4 4\n0 0 1.0 extra\n".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn parse_text_with_comments() {
+        let t = parse_text("# hi\ndims 2 2\n0 0 1.5 # entry\n1 1 2.5\n".as_bytes()).unwrap();
+        assert_eq!(t.nnz(), 2);
+        assert_eq!(t.values, vec![1.5, 2.5]);
+    }
+
+    #[test]
+    fn toy_is_deterministic() {
+        let a = toy_dataset();
+        let b = toy_dataset();
+        assert_eq!(a.indices, b.indices);
+        assert_eq!(a.values, b.values);
+        assert!(a.nnz() > 32);
+    }
+}

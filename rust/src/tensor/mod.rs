@@ -1,0 +1,9 @@
+//! Sparse tensor substrate: COO storage, sampling indexes, I/O, splits.
+
+pub mod coo;
+pub mod index;
+pub mod io;
+pub mod split;
+
+pub use coo::SparseTensor;
+pub use index::{FiberIndex, ModeSliceIndex};

@@ -1,0 +1,60 @@
+//! Seeded train/test split (the paper's Ω / Γ).
+
+use crate::util::rng::Pcg32;
+
+use super::coo::SparseTensor;
+
+/// Split `t` into (train, test) with `test_frac` of entries held out.
+/// Deterministic for a given seed.
+pub fn train_test_split(t: &SparseTensor, test_frac: f64, seed: u64) -> (SparseTensor, SparseTensor) {
+    assert!((0.0..1.0).contains(&test_frac));
+    let mut rng = Pcg32::new(seed, 0x5911_7);
+    let mut ids: Vec<u32> = (0..t.nnz() as u32).collect();
+    rng.shuffle(&mut ids);
+    let n_test = (t.nnz() as f64 * test_frac).round() as usize;
+    let mut train = SparseTensor::new(t.dims.clone());
+    let mut test = SparseTensor::new(t.dims.clone());
+    for (k, &e) in ids.iter().enumerate() {
+        let e = e as usize;
+        let dst = if k < n_test { &mut test } else { &mut train };
+        dst.push(t.coords(e), t.values[e]);
+    }
+    train.sort_dedup();
+    test.sort_dedup();
+    (train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::io::toy_dataset;
+
+    #[test]
+    fn split_partitions() {
+        let t = toy_dataset();
+        let (tr, te) = train_test_split(&t, 0.25, 1);
+        assert_eq!(tr.nnz() + te.nnz(), t.nnz());
+        let frac = te.nnz() as f64 / t.nnz() as f64;
+        assert!((frac - 0.25).abs() < 0.05, "frac {frac}");
+    }
+
+    #[test]
+    fn split_deterministic() {
+        let t = toy_dataset();
+        let (a, _) = train_test_split(&t, 0.2, 7);
+        let (b, _) = train_test_split(&t, 0.2, 7);
+        assert_eq!(a.indices, b.indices);
+    }
+
+    #[test]
+    fn split_disjoint() {
+        let t = toy_dataset();
+        let (tr, te) = train_test_split(&t, 0.3, 3);
+        use std::collections::HashSet;
+        let key = |t: &SparseTensor, e: usize| t.coords(e).to_vec();
+        let tr_set: HashSet<_> = (0..tr.nnz()).map(|e| key(&tr, e)).collect();
+        for e in 0..te.nnz() {
+            assert!(!tr_set.contains(&key(&te, e)));
+        }
+    }
+}

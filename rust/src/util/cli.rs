@@ -1,0 +1,113 @@
+//! Tiny flag parser (no clap in the offline crate set).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments.  Unknown flags are an error so typos surface immediately.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+    allowed: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` (without the program name).  `allowed` lists valid flag
+    /// names; boolean flags get the value `"true"`.
+    pub fn parse(
+        argv: impl IntoIterator<Item = String>,
+        allowed: &[&str],
+        bools: &[&str],
+    ) -> Result<Args, String> {
+        let mut out = Args {
+            allowed: allowed.iter().map(|s| s.to_string()).collect(),
+            ..Default::default()
+        };
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                let (key, val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                if !allowed.contains(&key.as_str()) {
+                    return Err(format!("unknown flag --{key}"));
+                }
+                let val = match val {
+                    Some(v) => v,
+                    None if bools.contains(&key.as_str()) => "true".to_string(),
+                    None => it
+                        .next()
+                        .ok_or_else(|| format!("--{key} needs a value"))?,
+                };
+                out.flags.insert(key, val);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        debug_assert!(self.allowed.iter().any(|k| k == key), "undeclared flag {key}");
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key}: cannot parse {v:?}")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_forms() {
+        let a = Args::parse(
+            argv(&["--n", "3", "--j=16", "--verbose", "pos1"]),
+            &["n", "j", "verbose"],
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.get("n"), Some("3"));
+        assert_eq!(a.get_parse("j", 0usize).unwrap(), 16);
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing_value() {
+        assert!(Args::parse(argv(&["--nope"]), &["n"], &[]).is_err());
+        assert!(Args::parse(argv(&["--n"]), &["n"], &[]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(argv(&[]), &["n"], &[]).unwrap();
+        assert_eq!(a.get_parse("n", 7usize).unwrap(), 7);
+        assert_eq!(a.get_or("n", "x"), "x");
+    }
+}

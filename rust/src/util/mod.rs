@@ -1,0 +1,10 @@
+//! Dependency-free substrates: rng, json, thread pool, CLI parsing.
+//!
+//! The build environment is offline with a fixed vendored crate set (no
+//! `rand`/`serde`/`rayon`/`clap`/`tokio`/`criterion`) — see DESIGN.md §3.
+//! Each substitute is small, documented and unit-tested.
+
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod rng;

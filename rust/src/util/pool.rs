@@ -1,0 +1,119 @@
+//! Scoped worker pool over std threads (no tokio/rayon in the offline set).
+//!
+//! The coordinator's host-side hot path — gathering factor rows for the next
+//! block while the PJRT executable runs the current one — is parallelised
+//! with `parallel_chunks`, the only primitive we need: split `n` items into
+//! per-thread ranges and run a closure on each.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (env `FT_THREADS` overrides).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("FT_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// Run `f(range)` over disjoint chunks of `0..n` on up to `threads` workers.
+/// Blocks until all chunks are done.  `f` must be `Sync` (it is shared).
+pub fn parallel_chunks<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        f(0..n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            scope.spawn(move || f(lo..hi));
+        }
+    });
+}
+
+/// Work-stealing-ish dynamic scheduler: workers grab items one index at a
+/// time via an atomic counter.  Better than `parallel_chunks` when item cost
+/// is very uneven (e.g. fiber-sampler batches).
+pub fn parallel_items<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let f = &f;
+            let next = &next;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunks_cover_all_once() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        parallel_chunks(1000, 7, |range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn items_cover_all_once() {
+        let hits: Vec<AtomicU64> = (0..537).map(|_| AtomicU64::new(0)).collect();
+        parallel_items(537, 5, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn zero_and_one_items() {
+        parallel_chunks(0, 4, |_| panic!("should not run"));
+        let ran = AtomicU64::new(0);
+        parallel_chunks(1, 4, |r| {
+            assert_eq!(r, 0..1);
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+    }
+}

@@ -1,0 +1,265 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline crate set has no `rand`, so we carry our own: a SplitMix64
+//! seeder + PCG32 (XSH-RR) streams.  PCG32 is statistically solid for
+//! simulation workloads, cheap (one 64-bit LCG step per draw), and lets every
+//! subsystem (synth data, samplers, init) own an independent, reproducible
+//! stream derived from a single run seed.
+
+/// SplitMix64: used to expand one user seed into well-mixed stream seeds.
+#[derive(Clone, Copy, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG32 (pcg_xsh_rr_64_32): the workhorse stream.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    /// Create a stream from `seed`; `stream` selects an independent sequence.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut sm = SplitMix64::new(seed ^ stream.wrapping_mul(0xDA94_2042_E4DD_58B5));
+        let mut rng = Self {
+            state: 0,
+            inc: (sm.next_u64() << 1) | 1,
+        };
+        rng.state = sm.next_u64();
+        rng.next_u32();
+        rng
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6_364_136_223_846_793_005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, bound)` without modulo bias (Lemire's method).
+    #[inline]
+    pub fn gen_range(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        let mut m = (self.next_u32() as u64).wrapping_mul(bound as u64);
+        let mut lo = m as u32;
+        if lo < bound {
+            let t = bound.wrapping_neg() % bound;
+            while lo < t {
+                m = (self.next_u32() as u64).wrapping_mul(bound as u64);
+                lo = m as u32;
+            }
+        }
+        (m >> 32) as u32
+    }
+
+    /// Uniform usize in `[0, bound)` (bound may exceed u32::MAX).
+    #[inline]
+    pub fn gen_index(&mut self, bound: usize) -> usize {
+        if bound <= u32::MAX as usize {
+            self.gen_range(bound as u32) as usize
+        } else {
+            (self.next_u64() % bound as u64) as usize
+        }
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn gen_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1 << 24) as f32)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Standard normal via Box–Muller (pairs cached would add state; the
+    /// single-draw form is fine for init/synth workloads).
+    pub fn gen_normal(&mut self) -> f32 {
+        let u1 = (1.0 - self.gen_f64()).max(f64::MIN_POSITIVE);
+        let u2 = self.gen_f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Zipf-distributed index sampler over `[0, n)` with exponent `s` — used by
+/// the synthetic generators to reproduce the index skew of real rating
+/// tensors (a few very active users/items, a long tail).
+/// Rejection-inversion (Hörmann & Derflinger), O(1) amortized per draw.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: f64,
+    s: f64,
+    h_x1: f64,
+    h_n: f64,
+    dividing: f64,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n >= 1);
+        let n = n as f64;
+        let h = |x: f64, s: f64| -> f64 {
+            if (s - 1.0).abs() < 1e-9 {
+                (1.0 + x).ln()
+            } else {
+                ((1.0 + x).powf(1.0 - s) - 1.0) / (1.0 - s)
+            }
+        };
+        Self {
+            n,
+            s,
+            h_x1: h(1.5, s) - 1.0,
+            h_n: h(n + 0.5, s),
+            dividing: h(0.5, s),
+        }
+    }
+
+    fn h_inv(&self, x: f64) -> f64 {
+        if (self.s - 1.0).abs() < 1e-9 {
+            x.exp() - 1.0
+        } else {
+            (1.0 + x * (1.0 - self.s)).powf(1.0 / (1.0 - self.s)) - 1.0
+        }
+    }
+
+    /// Draw an index in `[0, n)` (0 is the most frequent).
+    pub fn sample(&self, rng: &mut Pcg32) -> usize {
+        loop {
+            let u = self.dividing + rng.gen_f64() * (self.h_n - self.dividing);
+            let x = self.h_inv(u);
+            let k = (x + 0.5).floor().max(1.0).min(self.n);
+            if k - x <= self.h_x1
+                || u >= {
+                    let hk = if (self.s - 1.0).abs() < 1e-9 {
+                        (k + 0.5).ln()
+                    } else {
+                        ((k + 0.5).powf(1.0 - self.s) - 1.0) / (1.0 - self.s)
+                    };
+                    hk - k.powf(-self.s)
+                }
+            {
+                return k as usize - 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pcg32_reproducible() {
+        let mut a = Pcg32::new(42, 0);
+        let mut b = Pcg32::new(42, 0);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn pcg32_streams_differ() {
+        let mut a = Pcg32::new(42, 0);
+        let mut b = Pcg32::new(42, 1);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn gen_range_unbiased_bounds() {
+        let mut rng = Pcg32::new(7, 3);
+        for bound in [1u32, 2, 3, 10, 1000] {
+            for _ in 0..200 {
+                assert!(rng.gen_range(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn gen_f32_in_unit_interval() {
+        let mut rng = Pcg32::new(1, 1);
+        for _ in 0..1000 {
+            let v = rng.gen_f32();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg32::new(9, 0);
+        let n = 20_000;
+        let (mut sum, mut sumsq) = (0f64, 0f64);
+        for _ in 0..n {
+            let v = rng.gen_normal() as f64;
+            sum += v;
+            sumsq += v * v;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn zipf_skew_and_bounds() {
+        let z = Zipf::new(1000, 1.1);
+        let mut rng = Pcg32::new(3, 0);
+        let mut head = 0usize;
+        let n = 10_000;
+        for _ in 0..n {
+            let k = z.sample(&mut rng);
+            assert!(k < 1000);
+            if k < 10 {
+                head += 1;
+            }
+        }
+        // top-1% of indices should take far more than 1% of mass
+        assert!(head > n / 20, "head {head}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg32::new(5, 5);
+        let mut v: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,239 @@
+//! Property-based tests (proptest is not in the offline crate set, so this
+//! file carries a tiny seeded-sweep harness: N random cases per property,
+//! failures report the case seed for replay).
+//!
+//! Properties cover the coordinator-facing invariants: sampling coverage and
+//! constraints (Table 3), gather/scatter consistency, index correctness,
+//! split semantics, cost-model monotonicity, JSON round-trips.
+
+use fasttucker::cost;
+use fasttucker::model::TuckerModel;
+use fasttucker::sampler::{self, PAD, WARP_M};
+use fasttucker::synth::{generate, SynthConfig};
+use fasttucker::tensor::{split, FiberIndex, ModeSliceIndex, SparseTensor};
+use fasttucker::util::json::Json;
+use fasttucker::util::rng::Pcg32;
+
+/// Run `prop` for `cases` random seeds; panic with the failing seed.
+fn forall(cases: u64, prop: impl Fn(&mut Pcg32)) {
+    for seed in 0..cases {
+        let mut rng = Pcg32::new(0xBEEF ^ seed, seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            panic!("property failed for case seed {seed}: {e:?}");
+        }
+    }
+}
+
+fn random_tensor(rng: &mut Pcg32) -> SparseTensor {
+    let order = 3 + rng.gen_index(3);
+    let dim = 8 + rng.gen_range(56) as u32;
+    let nnz = 100 + rng.gen_index(2000);
+    generate(&SynthConfig::order_sweep(order, dim, nnz, rng.next_u64()))
+}
+
+#[test]
+fn prop_uniform_blocks_partition_omega() {
+    forall(8, |rng| {
+        let t = random_tensor(rng);
+        let s = [64usize, 128, 256][rng.gen_index(3)];
+        let blocks = sampler::uniform_blocks(&t, s, rng.next_u64(), rng.next_u64());
+        let mut seen = vec![false; t.nnz()];
+        for b in &blocks {
+            assert_eq!(b.ids.len(), s);
+            for &id in b.ids.iter().filter(|&&i| i != PAD) {
+                assert!(!seen[id as usize], "duplicate sample");
+                seen[id as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x), "missing samples");
+    });
+}
+
+#[test]
+fn prop_mode_slice_blocks_warp_constraint() {
+    forall(6, |rng| {
+        let t = random_tensor(rng);
+        let mode = rng.gen_index(t.order());
+        let idx = ModeSliceIndex::build(&t, mode);
+        let blocks = sampler::mode_slice_blocks(&idx, 128, rng.next_u64(), 0);
+        let mut count = 0;
+        for b in &blocks {
+            for warp in b.ids.chunks(WARP_M) {
+                let vals: Vec<u32> = warp
+                    .iter()
+                    .filter(|&&i| i != PAD)
+                    .map(|&i| t.coords(i as usize)[mode])
+                    .collect();
+                count += vals.len();
+                assert!(vals.windows(2).all(|w| w[0] == w[1]), "mixed slice in warp");
+            }
+        }
+        assert_eq!(count, t.nnz());
+    });
+}
+
+#[test]
+fn prop_fiber_index_partitions_and_groups() {
+    forall(6, |rng| {
+        let t = random_tensor(rng);
+        let mode = rng.gen_index(t.order());
+        let idx = FiberIndex::build(&t, mode);
+        let mut seen = vec![false; t.nnz()];
+        for f in 0..idx.num_fibers() {
+            let ids = idx.fiber(f);
+            let key = |e: u32| {
+                let c = t.coords(e as usize);
+                c.iter()
+                    .enumerate()
+                    .filter(|(m, _)| *m != mode)
+                    .map(|(_, &v)| v)
+                    .collect::<Vec<_>>()
+            };
+            let k0 = key(ids[0]);
+            for &e in ids {
+                assert_eq!(key(e), k0);
+                assert!(!seen[e as usize]);
+                seen[e as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x));
+    });
+}
+
+#[test]
+fn prop_gather_scatter_identity() {
+    forall(8, |rng| {
+        let order = 3 + rng.gen_index(3);
+        let dims: Vec<u32> = (0..order).map(|_| 8 + rng.gen_range(40)).collect();
+        let model = TuckerModel::init(&dims, 16, 16, rng.next_u64());
+        let mut m2 = model.clone();
+        let s = 32;
+        let valid = 1 + rng.gen_index(s);
+        let coords: Vec<u32> = (0..valid * order)
+            .map(|i| rng.gen_range(dims[i % order]))
+            .collect();
+        let mut buf = vec![0f32; order * s * 16];
+        model.gather_batch(&coords, valid, &mut buf);
+        // scatter the gathered rows straight back: model must be unchanged
+        // unless the batch contained duplicate rows (last-wins is identity
+        // here because values are identical).
+        m2.scatter_batch(&coords, valid, &buf);
+        for m in 0..order {
+            assert_eq!(model.factors[m], m2.factors[m], "mode {m} changed");
+        }
+    });
+}
+
+#[test]
+fn prop_rotated_gather_matches_plain() {
+    forall(8, |rng| {
+        let order = 3 + rng.gen_index(2);
+        let dims: Vec<u32> = (0..order).map(|_| 8 + rng.gen_range(24)).collect();
+        let model = TuckerModel::init(&dims, 16, 16, rng.next_u64());
+        let s = 16;
+        let valid = s;
+        let coords: Vec<u32> = (0..valid * order)
+            .map(|i| rng.gen_range(dims[i % order]))
+            .collect();
+        let mut plain = vec![0f32; order * s * 16];
+        model.gather_batch(&coords, valid, &mut plain);
+        for mode in 0..order {
+            let mut rot = vec![0f32; order * s * 16];
+            model.gather_batch_rotated(&coords, valid, mode, &mut rot);
+            for k in 0..order {
+                let src = (mode + k) % order;
+                assert_eq!(
+                    &rot[k * s * 16..(k + 1) * s * 16],
+                    &plain[src * s * 16..(src + 1) * s * 16],
+                    "mode {mode} pos {k}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_split_partition_disjoint_union() {
+    forall(8, |rng| {
+        let t = random_tensor(rng);
+        let frac = 0.1 + rng.gen_f64() * 0.4;
+        let (tr, te) = split::train_test_split(&t, frac, rng.next_u64());
+        assert_eq!(tr.nnz() + te.nnz(), t.nnz());
+        // re-splitting with the same seed is identical
+        let seed = 777;
+        let (a1, _) = split::train_test_split(&t, frac, seed);
+        let (a2, _) = split::train_test_split(&t, frac, seed);
+        assert_eq!(a1.indices, a2.indices);
+    });
+}
+
+#[test]
+fn prop_cost_model_monotone() {
+    forall(16, |rng| {
+        let s = cost::Shape {
+            n: 3 + rng.gen_index(6),
+            j: 16 * (1 + rng.gen_index(2)),
+            r: 16 * (1 + rng.gen_index(2)),
+            m: 16,
+        };
+        // Table 4's central ordering must hold for every shape
+        let plus = cost::params_read(cost::Algo::FastTuckerPlus, s);
+        let faster = cost::params_read(cost::Algo::FasterTucker, s);
+        let fast = cost::params_read(cost::Algo::FastTucker, s);
+        assert!(plus <= faster && faster <= fast, "{s:?}");
+        // cost grows with every dimension of the shape
+        let bigger = cost::Shape { n: s.n + 1, ..s };
+        assert!(cost::params_read(cost::Algo::FastTuckerPlus, bigger) > plus);
+        assert!(
+            cost::d_chain_muls(cost::Algo::FastTuckerPlus, bigger)
+                > cost::d_chain_muls(cost::Algo::FastTuckerPlus, s)
+        );
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    forall(32, |rng| {
+        // build a random JSON value, dump, parse, compare
+        fn gen_value(rng: &mut Pcg32, depth: usize) -> Json {
+            match if depth == 0 { rng.gen_index(4) } else { rng.gen_index(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.gen_f32() < 0.5),
+                2 => Json::Num((rng.gen_f64() * 2000.0 - 1000.0).round()),
+                3 => Json::Str(format!("s{}-\"q\"\n", rng.next_u32())),
+                4 => Json::Arr((0..rng.gen_index(4)).map(|_| gen_value(rng, depth - 1)).collect()),
+                _ => Json::Obj(
+                    (0..rng.gen_index(4))
+                        .map(|i| (format!("k{i}"), gen_value(rng, depth - 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let v = gen_value(rng, 3);
+        let re = Json::parse(&v.dump()).unwrap();
+        assert_eq!(v, re);
+    });
+}
+
+#[test]
+fn prop_sort_dedup_idempotent_and_sorted() {
+    forall(8, |rng| {
+        let mut t = SparseTensor::new(vec![16, 16, 16]);
+        for _ in 0..rng.gen_index(500) {
+            t.push(
+                &[rng.gen_range(16), rng.gen_range(16), rng.gen_range(16)],
+                rng.gen_normal(),
+            );
+        }
+        t.sort_dedup();
+        let once = (t.indices.clone(), t.values.clone());
+        t.sort_dedup();
+        assert_eq!((t.indices.clone(), t.values.clone()), once);
+        for e in 1..t.nnz() {
+            assert!(t.coords(e - 1) < t.coords(e), "not strictly sorted");
+        }
+    });
+}

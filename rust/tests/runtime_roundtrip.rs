@@ -1,0 +1,201 @@
+//! Runtime round-trip tests: the HLO/PJRT path must agree with the scalar
+//! CPU reference numerics.  This is the cross-layer correctness contract —
+//! L1 kernels were verified against the jnp oracle in pytest; here we verify
+//! L3's staging (gather/rotate/scatter) + the compiled artifacts against the
+//! independent Rust implementation of the same math.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use std::path::Path;
+
+use fasttucker::coordinator::{Algo, Backend, Strategy, TrainConfig, Trainer, Variant};
+use fasttucker::cpu_ref;
+use fasttucker::model::TuckerModel;
+use fasttucker::runtime::Engine;
+use fasttucker::synth::{generate, SynthConfig};
+use fasttucker::tensor::split::train_test_split;
+
+fn artifacts() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: no artifacts/ (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn engine_loads_and_reports() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::new(dir).unwrap();
+    assert!(engine.manifest().len() >= 50, "expected full artifact set");
+    assert_eq!(engine.platform(), "cpu");
+    // same name twice -> cached Rc
+    let a = engine.load("predict", 3, 16, 16).unwrap();
+    let b = engine.load("predict", 3, 16, 16).unwrap();
+    assert!(std::rc::Rc::ptr_eq(&a, &b));
+}
+
+#[test]
+fn predict_artifact_matches_scalar_model() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::new(dir).unwrap();
+    let exe = engine.load("predict", 3, 16, 16).unwrap();
+    let s = exe.info.s;
+    let model = TuckerModel::init(&[40, 50, 60], 16, 16, 9);
+
+    // batch of synthetic coordinates
+    let coords: Vec<u32> = (0..s)
+        .flat_map(|e| [(e % 40) as u32, (e % 50) as u32, (e % 60) as u32])
+        .collect();
+    let mut a = vec![0f32; 3 * s * 16];
+    model.gather_batch(&coords, s, &mut a);
+    let mut cores = vec![0f32; 3 * 16 * 16];
+    model.pack_cores(&mut cores);
+    let out = exe.run(&[&a, &cores]).unwrap();
+    for e in (0..s).step_by(17) {
+        let want = model.predict_one(&coords[e * 3..e * 3 + 3]);
+        let got = out[0][e];
+        assert!(
+            (want - got).abs() < 1e-3 * (1.0 + want.abs()),
+            "entry {e}: scalar {want} vs hlo {got}"
+        );
+    }
+}
+
+#[test]
+fn run_rejects_wrong_shapes() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::new(dir).unwrap();
+    let exe = engine.load("predict", 3, 16, 16).unwrap();
+    let bad = vec![0f32; 7];
+    assert!(exe.run(&[&bad, &bad]).is_err());
+    assert!(exe.run(&[&bad]).is_err());
+}
+
+/// HLO epoch == cpu_ref epoch, exactly (to f32 tolerance), on a
+/// collision-free tensor.  When every sample touches distinct factor rows,
+/// per-sample sequential updates (cpu_ref) and batched block updates (HLO)
+/// are mathematically identical, so this pins the whole staging + kernel +
+/// scatter pipeline against the independent Rust implementation.
+#[test]
+fn hlo_epoch_matches_cpu_ref_exactly_without_collisions() {
+    let Some(_) = artifacts() else { return };
+    // 512 entries (= one artifact block), all coordinates distinct per mode.
+    let dim = 600u32;
+    let mut t = fasttucker::tensor::SparseTensor::new(vec![dim, dim, dim]);
+    let mut rng = fasttucker::util::rng::Pcg32::new(77, 0);
+    let mut perms: Vec<Vec<u32>> = (0..3)
+        .map(|_| {
+            let mut p: Vec<u32> = (0..dim).collect();
+            rng.shuffle(&mut p);
+            p
+        })
+        .collect();
+    for e in 0..512usize {
+        let c = [perms[0][e], perms[1][e], perms[2][e]];
+        t.push(&c, rng.gen_normal());
+    }
+    perms.clear();
+
+    let mut models = Vec::new();
+    for backend in [Backend::Hlo, Backend::CpuRef] {
+        let mut cfg = TrainConfig::default();
+        cfg.backend = backend;
+        cfg.seed = 5;
+        let mut tr = Trainer::new(&t, cfg).unwrap();
+        tr.epoch(&t).unwrap();
+        models.push(tr.model.clone());
+    }
+    let (hlo, cpu) = (&models[0], &models[1]);
+    for m in 0..3 {
+        for (i, (a, b)) in hlo.factors[m].iter().zip(&cpu.factors[m]).enumerate() {
+            assert!(
+                (a - b).abs() < 2e-4 * (1.0 + a.abs()),
+                "factor[{m}][{i}]: hlo {a} vs cpu {b}"
+            );
+        }
+        for (i, (a, b)) in hlo.cores[m].iter().zip(&cpu.cores[m]).enumerate() {
+            assert!(
+                (a - b).abs() < 2e-4 * (1.0 + a.abs()),
+                "core[{m}][{i}]: hlo {a} vs cpu {b}"
+            );
+        }
+    }
+}
+
+/// Every algorithm x variant x strategy combination must run and reduce
+/// training error through the HLO path.
+#[test]
+fn all_algorithms_train_via_hlo() {
+    let Some(_) = artifacts() else { return };
+    let tensor = generate(&SynthConfig::order_sweep(3, 48, 4_000, 44));
+    let (train, test) = train_test_split(&tensor, 0.2, 4);
+    for (algo, variant, strategy) in [
+        (Algo::Plus, Variant::Tc, Strategy::Calculation),
+        (Algo::Plus, Variant::Cc, Strategy::Calculation),
+        (Algo::Plus, Variant::Tc, Strategy::Storage),
+        (Algo::Plus, Variant::Cc, Strategy::Storage),
+        (Algo::FastTucker, Variant::Tc, Strategy::Calculation),
+        (Algo::FastTucker, Variant::Cc, Strategy::Calculation),
+        (Algo::FasterTucker, Variant::Tc, Strategy::Storage),
+        (Algo::FasterTucker, Variant::Cc, Strategy::Storage),
+    ] {
+        let mut cfg = TrainConfig::default();
+        cfg.algo = algo;
+        cfg.variant = variant;
+        cfg.strategy = strategy;
+        let mut tr = Trainer::new(&train, cfg).unwrap();
+        let (rmse0, _) = tr.evaluate(&test).unwrap();
+        for _ in 0..4 {
+            tr.epoch(&train).unwrap();
+        }
+        let (rmse1, _) = tr.evaluate(&test).unwrap();
+        assert!(
+            rmse1 < rmse0,
+            "{:?}/{:?}/{:?}: rmse {rmse0} -> {rmse1} did not improve",
+            algo,
+            variant,
+            strategy
+        );
+        assert!(tr.model.param_norm().is_finite());
+    }
+}
+
+/// Order sweep: the high-order artifact set must be loadable and trainable.
+#[test]
+fn high_order_hlo_training() {
+    let Some(_) = artifacts() else { return };
+    for order in [4, 6, 8] {
+        let tensor = generate(&SynthConfig::order_sweep(order, 24, 2_000, 5));
+        let mut cfg = TrainConfig::default();
+        cfg.seed = 6;
+        let mut tr = Trainer::new(&tensor, cfg).unwrap();
+        let (rmse0, _) = tr.evaluate(&tensor).unwrap();
+        for _ in 0..6 {
+            tr.epoch(&tensor).unwrap();
+        }
+        let (rmse1, _) = tr.evaluate(&tensor).unwrap();
+        assert!(
+            rmse1 < rmse0 * 0.999 && rmse1.is_finite(),
+            "order {order}: {rmse0} -> {rmse1}"
+        );
+    }
+}
+
+/// The cpu_ref evaluate and the HLO predict-based evaluate must agree on the
+/// same model.
+#[test]
+fn evaluate_agrees_across_backends() {
+    let Some(_) = artifacts() else { return };
+    let tensor = generate(&SynthConfig::order_sweep(3, 48, 3_000, 55));
+    let (train, test) = train_test_split(&tensor, 0.3, 5);
+    let cfg = TrainConfig::default();
+    let mut tr = Trainer::new(&train, cfg).unwrap();
+    tr.epoch(&train).unwrap();
+    let (rmse_hlo, mae_hlo) = tr.evaluate(&test).unwrap();
+    let (rmse_cpu, mae_cpu) = cpu_ref::evaluate(&tr.model, &test);
+    assert!((rmse_hlo - rmse_cpu).abs() < 1e-3, "{rmse_hlo} vs {rmse_cpu}");
+    assert!((mae_hlo - mae_cpu).abs() < 1e-3, "{mae_hlo} vs {mae_cpu}");
+}
