@@ -12,7 +12,7 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 
-use fasttucker::coordinator::{Trainer, TrainConfig};
+use fasttucker::coordinator::{Backend, Trainer, TrainConfig};
 use fasttucker::model::TuckerModel;
 use fasttucker::synth::{generate, SynthConfig};
 
@@ -46,7 +46,12 @@ fn main() -> anyhow::Result<()> {
         TuckerModel::load(std::path::Path::new(&args[pos + 1]))?
     } else {
         let tensor = generate(&SynthConfig::order_sweep(3, 256, 50_000, 5));
-        let mut trainer = Trainer::new(&tensor, TrainConfig::default())?;
+        let mut cfg = TrainConfig::default();
+        if !cfg.hlo_available() {
+            eprintln!("note: no artifacts; using --backend parallel");
+            cfg.backend = Backend::ParallelCpu;
+        }
+        let mut trainer = Trainer::new(&tensor, cfg)?;
         for _ in 0..8 {
             trainer.epoch(&tensor)?;
         }

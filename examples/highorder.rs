@@ -6,10 +6,16 @@
 //!
 //! Run: `cargo run --release --example highorder`
 
-use fasttucker::coordinator::{Algo, Trainer, TrainConfig};
+use fasttucker::coordinator::{Algo, Backend, Trainer, TrainConfig};
 use fasttucker::synth::{generate, SynthConfig};
 
 fn main() -> anyhow::Result<()> {
+    let backend = if TrainConfig::default().hlo_available() {
+        Backend::Hlo
+    } else {
+        eprintln!("note: no artifacts; using --backend parallel");
+        Backend::ParallelCpu
+    };
     println!(
         "{:<6} {:>10} {:>12} {:>12} {:>10} {:>8}",
         "order", "nnz", "factor", "core", "memory", "pad%"
@@ -18,6 +24,7 @@ fn main() -> anyhow::Result<()> {
         let tensor = generate(&SynthConfig::order_sweep(order, 64, 30_000, 3));
         let mut cfg = TrainConfig::default();
         cfg.algo = Algo::Plus;
+        cfg.backend = backend;
         let mut trainer = Trainer::new(&tensor, cfg)?;
         // warm the executables, then measure one epoch
         trainer.epoch(&tensor)?;

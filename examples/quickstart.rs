@@ -9,7 +9,7 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use fasttucker::coordinator::{Trainer, TrainConfig};
+use fasttucker::coordinator::{Backend, Trainer, TrainConfig};
 use fasttucker::synth::{generate, SynthConfig};
 use fasttucker::tensor::split::train_test_split;
 
@@ -34,9 +34,13 @@ fn main() -> anyhow::Result<()> {
         tensor.density()
     );
 
-    let cfg = TrainConfig::default(); // plus / tc / calculation / hlo
+    let mut cfg = TrainConfig::default(); // plus / tc / calculation
+    if !cfg.hlo_available() {
+        eprintln!("note: no artifacts (run `make artifacts` for the HLO backend); using --backend parallel");
+        cfg.backend = Backend::ParallelCpu;
+    }
     let mut trainer = Trainer::new(&train, cfg)?;
-    println!("runtime: {} (PJRT)", trainer.platform());
+    println!("runtime: {}", trainer.platform());
 
     let (rmse, mae) = trainer.evaluate(&test)?;
     println!("epoch  0: rmse {rmse:.4} mae {mae:.4} (random init)");

@@ -5,7 +5,7 @@
 //!
 //! Run: `cargo run --release --example recommender`
 
-use fasttucker::coordinator::{Trainer, TrainConfig};
+use fasttucker::coordinator::{Backend, Trainer, TrainConfig};
 use fasttucker::synth::{generate, SynthConfig};
 use fasttucker::tensor::split::train_test_split;
 
@@ -22,7 +22,12 @@ fn main() -> anyhow::Result<()> {
         tensor.dims
     );
 
-    let mut trainer = Trainer::new(&train, TrainConfig::default())?;
+    let mut cfg = TrainConfig::default();
+    if !cfg.hlo_available() {
+        eprintln!("note: no artifacts; using --backend parallel");
+        cfg.backend = Backend::ParallelCpu;
+    }
+    let mut trainer = Trainer::new(&train, cfg)?;
     for epoch in 1..=12 {
         trainer.epoch(&train)?;
         if epoch % 4 == 0 {

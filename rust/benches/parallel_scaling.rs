@@ -1,0 +1,63 @@
+//! ParallelCpu vs CpuRef — epoch-time scaling of the Hogwild backend.
+//!
+//! The paper's core systems claim is that the two-phase SGD parallelizes
+//! with negligible coordination; this bench measures the Rust analog:
+//! per-epoch (factor + core) wall time of the scalar path at 1 thread
+//! (`CpuRef`) vs the Hogwild block-sharded backend at increasing worker
+//! counts, on the Netflix-like surrogate.  Reported rows include the
+//! speedup vs the serial baseline.
+//!
+//! Run: `cargo bench --bench parallel_scaling` (BENCH_QUICK=1 shrinks it).
+//! Record the printed table in ARCHITECTURE.md §Bench notes when hardware
+//! changes.
+
+use fasttucker::bench::{bench_phases, report, Row};
+use fasttucker::coordinator::{Backend, TrainConfig};
+use fasttucker::synth::{generate, SynthConfig};
+use fasttucker::util::pool;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let (warmup, reps, nnz) = if quick { (1, 3, 30_000) } else { (2, 7, 150_000) };
+    let train = generate(&SynthConfig::netflix_like(nnz, 7));
+
+    let mut rows: Vec<Row> = Vec::new();
+    let mut cfg = TrainConfig::default();
+    cfg.backend = Backend::CpuRef;
+    rows.extend(bench_phases("cpu_ref", &train, cfg.clone(), warmup, reps)?);
+
+    let max_threads = pool::default_threads();
+    let mut threads = 2usize;
+    while threads <= max_threads {
+        cfg.backend = Backend::ParallelCpu;
+        cfg.threads = threads;
+        let label = format!("parallel_cpu_t{threads}");
+        rows.extend(bench_phases(&label, &train, cfg.clone(), warmup, reps)?);
+        threads *= 2;
+    }
+
+    // speedup vs the serial scalar baseline, per phase
+    for phase in ["factor", "core"] {
+        let base = rows
+            .iter()
+            .find(|r| r.label == format!("cpu_ref/{phase}"))
+            .map(|r| r.median_s)
+            .unwrap_or(f64::NAN);
+        let updates: Vec<(String, f64)> = rows
+            .iter()
+            .filter(|r| r.label.ends_with(&format!("/{phase}")))
+            .map(|r| (r.label.clone(), base / r.median_s))
+            .collect();
+        for (label, speedup) in updates {
+            if let Some(r) = rows.iter_mut().find(|r| r.label == label) {
+                r.extra.push(("speedup_vs_serial".into(), speedup));
+            }
+        }
+    }
+
+    report(
+        &format!("ParallelCpu scaling — netflix-like, {nnz} nnz"),
+        &rows,
+    );
+    Ok(())
+}

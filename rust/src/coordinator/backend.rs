@@ -1,0 +1,734 @@
+//! Pluggable execution backends — the layer between the generic phase
+//! driver ([`crate::coordinator::phases`]) and the kernels.
+//!
+//! A [`StepBackend`] executes *staged blocks*; everything above it
+//! (sampling schedule, streaming/staging, pass structure, gradient
+//! application, stats accounting) is backend-independent and lives in the
+//! phase driver.  Implementations:
+//!
+//! * [`HloBackend`] — the system under test: compiled PJRT/HLO artifacts
+//!   (L1 Pallas kernels lowered through L2), plus the storage-scheme
+//!   projection tables and the staging slabs they need.
+//! * [`CpuBackend`] — the scalar path.  With `workers = 1` it is the
+//!   sequential `cpu_ref` oracle (`Backend::CpuRef`); with `workers > 1`
+//!   it is the `Backend::ParallelCpu` Hogwild engine: block slots are
+//!   sharded across `std::thread` workers which scatter factor rows
+//!   lock-free through [`SharedFactors`] (the paper's per-thread FMA
+//!   analog, finally parallel).
+//!
+//! Both run the identical block schedule, so backends are comparable
+//! epoch-for-epoch.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::config::{Algo, Backend, Strategy, TrainConfig};
+use crate::coordinator::metrics::{time_into, PhaseStats};
+use crate::cpu_ref::{self, step, Hyper};
+use crate::model::{SharedFactors, TuckerModel};
+use crate::runtime::{Engine, Executable};
+use crate::sampler::StagedBlock;
+use crate::tensor::SparseTensor;
+use crate::util::pool;
+
+/// Which half of the paper's two-phase iteration is running.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Factor,
+    Core,
+}
+
+/// Core-gradient accumulator for one pass: `[N, J, R]` for the all-modes
+/// (Plus) schedule, `[J, R]` for a single-mode pass.  Backends add into
+/// `grad`; the phase driver counts samples and applies once at pass end
+/// (the paper's accumulate-then-atomicAdd schedule).
+pub struct CoreAccum {
+    pub grad: Vec<f32>,
+    pub count: usize,
+    pub mode: Option<usize>,
+}
+
+impl CoreAccum {
+    pub fn new(model: &TuckerModel, mode: Option<usize>) -> CoreAccum {
+        let sz = match mode {
+            None => model.order() * model.j * model.r,
+            Some(_) => model.j * model.r,
+        };
+        CoreAccum {
+            grad: vec![0f32; sz],
+            count: 0,
+            mode,
+        }
+    }
+
+    /// Apply the accumulated gradient to the core matrices.
+    pub fn apply(self, model: &mut TuckerModel, lr: f32, lam: f32) {
+        match self.mode {
+            None => model.apply_core_grad(&self.grad, self.count, lr, lam),
+            Some(m) => model.apply_core_grad_mode(m, &self.grad, self.count, lr, lam),
+        }
+    }
+}
+
+/// One execution backend: runs staged blocks for both phases.
+///
+/// Contract with the phase driver: `refresh_c` is called once per phase
+/// (before any pass), `begin_pass` once per pass (`mode = None` for the
+/// all-modes Plus schedule, `Some(m)` for per-mode schedules), then
+/// `run_factor_block` / `run_core_block` once per staged block.  Stage
+/// timings go into the provided [`PhaseStats`]; block/sample counting is
+/// the driver's job.
+pub trait StepBackend {
+    /// Human-readable runtime description (for logs).
+    fn platform(&self) -> String;
+
+    /// Block slot count S this backend wants for `phase`.
+    fn block_size(&self, phase: Phase) -> usize;
+
+    /// Refresh the storage-scheme projection tables `C^(n)` if this
+    /// configuration uses them (no-op otherwise).
+    fn refresh_c(&mut self, model: &TuckerModel) -> Result<()>;
+
+    /// Prepare per-pass state (pack cores, snapshot `B^(mode)`, size slabs).
+    fn begin_pass(&mut self, model: &TuckerModel, phase: Phase, mode: Option<usize>)
+        -> Result<()>;
+
+    /// Execute one factor-phase block: gather rows, run the update kernel,
+    /// scatter updated rows back into `model`.
+    fn run_factor_block(
+        &mut self,
+        model: &mut TuckerModel,
+        block: &StagedBlock,
+        mode: Option<usize>,
+        st: &mut PhaseStats,
+    ) -> Result<()>;
+
+    /// Execute one core-phase block: compute the core gradient contribution
+    /// and add it into `acc.grad` (factors are read-only here).
+    fn run_core_block(
+        &mut self,
+        model: &mut TuckerModel,
+        block: &StagedBlock,
+        mode: Option<usize>,
+        acc: &mut CoreAccum,
+        st: &mut PhaseStats,
+    ) -> Result<()>;
+
+    /// Batched RMSE/MAE evaluation, if this backend has a predict kernel;
+    /// `None` falls back to the scalar evaluator.
+    fn predict_batch(
+        &mut self,
+        model: &TuckerModel,
+        test: &SparseTensor,
+    ) -> Result<Option<(f64, f64)>>;
+}
+
+/// Build the backend selected by `cfg.backend`.
+pub fn make_backend(train: &SparseTensor, cfg: &TrainConfig) -> Result<Box<dyn StepBackend>> {
+    match cfg.backend {
+        Backend::Hlo => Ok(Box::new(HloBackend::new(train, cfg)?)),
+        Backend::CpuRef => Ok(Box::new(CpuBackend::new(cfg, 1))),
+        Backend::ParallelCpu => {
+            let workers = if cfg.threads == 0 {
+                pool::default_threads()
+            } else {
+                cfg.threads
+            };
+            Ok(Box::new(CpuBackend::new(cfg, workers.max(1))))
+        }
+    }
+}
+
+/// Gather stored C rows for a block into `[K, S, R]`, where output mode `k`
+/// corresponds to tensor mode `modes[k]`.
+fn gather_c_rows(
+    c_store: &[Vec<f32>],
+    r: usize,
+    n: usize,
+    out: &mut [f32],
+    coords: &[u32],
+    valid: usize,
+    s: usize,
+    modes: &[usize],
+) {
+    for (k, &m) in modes.iter().enumerate() {
+        let dst = &mut out[k * s * r..(k + 1) * s * r];
+        let src = &c_store[m];
+        for e in 0..valid {
+            let row = coords[e * n + m] as usize;
+            dst[e * r..(e + 1) * r].copy_from_slice(&src[row * r..(row + 1) * r]);
+        }
+        dst[valid * r..].fill(0.0);
+    }
+}
+
+// ======================================================================
+// HLO / PJRT backend
+// ======================================================================
+
+/// PJRT-executed backend wrapping the compiled artifact [`Engine`].
+pub struct HloBackend {
+    cfg: TrainConfig,
+    engine: Engine,
+    factor_exe: Rc<Executable>,
+    core_exe: Rc<Executable>,
+    predict_exe: Rc<Executable>,
+    compute_c_exe: Option<Rc<Executable>>,
+    /// Storage-scheme projection tables C^(n) (I_n x R each).
+    c_store: Vec<Vec<f32>>,
+    // staging slabs, reused across blocks
+    buf_a: Vec<f32>,
+    buf_c: Vec<f32>,
+    buf_cores: Vec<f32>,
+    /// FasterTucker per-pass snapshot of `B^(mode)`.
+    b0: Vec<f32>,
+    /// Tensor modes in kernel order for C-row gathering this pass.
+    pass_modes: Vec<usize>,
+}
+
+impl HloBackend {
+    /// Load and compile the artifacts for the configured
+    /// (algo, variant, strategy).
+    pub fn new(train: &SparseTensor, cfg: &TrainConfig) -> Result<HloBackend> {
+        let n = train.order();
+        let v = cfg.variant.suffix();
+        let engine = Engine::new(&cfg.artifact_dir)?;
+        let (fk, ck) = match (cfg.algo, cfg.strategy) {
+            (Algo::Plus, Strategy::Calculation) => {
+                (format!("plus_factor_{v}"), format!("plus_core_{v}"))
+            }
+            (Algo::Plus, Strategy::Storage) => (
+                format!("plus_factor_storage_{v}"),
+                format!("plus_core_storage_{v}"),
+            ),
+            (Algo::FastTucker, _) => (
+                format!("fasttucker_factor_{v}"),
+                format!("fasttucker_core_{v}"),
+            ),
+            (Algo::FasterTucker | Algo::FasterTuckerCoo, _) => (
+                format!("fastertucker_factor_{v}"),
+                format!("fastertucker_core_{v}"),
+            ),
+        };
+        let factor_exe = engine.load(&fk, n, cfg.j, cfg.r)?;
+        let core_exe = engine.load(&ck, n, cfg.j, cfg.r)?;
+        let predict_exe = engine.load("predict", n, cfg.j, cfg.r)?;
+        let compute_c_exe = if matches!(cfg.algo, Algo::FasterTucker | Algo::FasterTuckerCoo)
+            || cfg.strategy == Strategy::Storage
+        {
+            Some(engine.load_any_n("compute_c", cfg.j, cfg.r)?)
+        } else {
+            None
+        };
+        let c_store = train
+            .dims
+            .iter()
+            .map(|&d| vec![0f32; d as usize * cfg.r])
+            .collect();
+        Ok(HloBackend {
+            engine,
+            factor_exe,
+            core_exe,
+            predict_exe,
+            compute_c_exe,
+            c_store,
+            buf_a: Vec::new(),
+            buf_c: Vec::new(),
+            buf_cores: vec![0f32; n * cfg.j * cfg.r],
+            b0: Vec::new(),
+            pass_modes: Vec::new(),
+            cfg: cfg.clone(),
+        })
+    }
+
+    fn uses_c_store(&self) -> bool {
+        matches!(self.cfg.algo, Algo::FasterTucker | Algo::FasterTuckerCoo)
+            || (self.cfg.algo == Algo::Plus && self.cfg.strategy == Strategy::Storage)
+    }
+
+    fn storage_plus(&self) -> bool {
+        self.cfg.algo == Algo::Plus && self.cfg.strategy == Strategy::Storage
+    }
+
+    fn hp_factor(&self) -> [f32; 2] {
+        [self.cfg.hyper.lr_a, self.cfg.hyper.lam_a]
+    }
+
+    fn exe_for(&self, phase: Phase) -> Rc<Executable> {
+        match phase {
+            Phase::Factor => self.factor_exe.clone(),
+            Phase::Core => self.core_exe.clone(),
+        }
+    }
+}
+
+impl StepBackend for HloBackend {
+    fn platform(&self) -> String {
+        self.engine.platform()
+    }
+
+    fn block_size(&self, phase: Phase) -> usize {
+        self.exe_for(phase).info.s
+    }
+
+    /// Refresh C^(n) = A^(n) B^(n) through the `compute_c` executable, in
+    /// row chunks of the artifact's S.
+    fn refresh_c(&mut self, model: &TuckerModel) -> Result<()> {
+        if !self.uses_c_store() {
+            return Ok(());
+        }
+        let exe = self
+            .compute_c_exe
+            .clone()
+            .context("compute_c executable not loaded")?;
+        let chunk = exe.info.s;
+        let (j, r) = (self.cfg.j, self.cfg.r);
+        let n = model.order();
+        let mut a_chunk = vec![0f32; chunk * j];
+        for m in 0..n {
+            let rows = model.dims[m] as usize;
+            let fm = &model.factors[m];
+            let b = &model.cores[m];
+            let cs = &mut self.c_store[m];
+            let mut lo = 0usize;
+            while lo < rows {
+                let hi = (lo + chunk).min(rows);
+                let len = hi - lo;
+                a_chunk[..len * j].copy_from_slice(&fm[lo * j..hi * j]);
+                a_chunk[len * j..].fill(0.0);
+                let out = exe.run(&[&a_chunk, b])?;
+                cs[lo * r..hi * r].copy_from_slice(&out[0][..len * r]);
+                lo = hi;
+            }
+        }
+        Ok(())
+    }
+
+    fn begin_pass(
+        &mut self,
+        model: &TuckerModel,
+        phase: Phase,
+        mode: Option<usize>,
+    ) -> Result<()> {
+        let s = self.exe_for(phase).info.s;
+        let n = model.order();
+        let (j, r) = (self.cfg.j, self.cfg.r);
+        match (self.cfg.algo, mode) {
+            (Algo::Plus, None) => {
+                model.pack_cores(&mut self.buf_cores);
+                self.buf_a.resize(n * s * j, 0.0);
+                if self.storage_plus() {
+                    self.buf_c.resize(n * s * r, 0.0);
+                    self.pass_modes = (0..n).collect();
+                }
+            }
+            (Algo::FastTucker, Some(m)) => {
+                model.pack_cores_rotated(m, &mut self.buf_cores);
+                self.buf_a.resize(n * s * j, 0.0);
+            }
+            (Algo::FasterTucker | Algo::FasterTuckerCoo, Some(m)) => {
+                self.b0 = model.cores[m].clone();
+                self.buf_a.resize(s * j, 0.0);
+                self.buf_c.resize((n - 1) * s * r, 0.0);
+                self.pass_modes = (1..n).map(|k| (m + k) % n).collect();
+            }
+            (algo, mode) => bail!("invalid pass schedule: {algo:?} with mode {mode:?}"),
+        }
+        Ok(())
+    }
+
+    fn run_factor_block(
+        &mut self,
+        model: &mut TuckerModel,
+        block: &StagedBlock,
+        mode: Option<usize>,
+        st: &mut PhaseStats,
+    ) -> Result<()> {
+        let exe = self.factor_exe.clone();
+        let hp = self.hp_factor();
+        let n = model.order();
+        let r = self.cfg.r;
+        match (self.cfg.algo, mode) {
+            (Algo::Plus, None) => {
+                time_into(&mut st.gather, || {
+                    model.gather_batch(&block.coords, block.valid, &mut self.buf_a);
+                });
+                let storage = self.storage_plus();
+                let out = time_into(&mut st.exec, || {
+                    if storage {
+                        gather_c_rows(
+                            &self.c_store,
+                            r,
+                            n,
+                            &mut self.buf_c,
+                            &block.coords,
+                            block.valid,
+                            block.s,
+                            &self.pass_modes,
+                        );
+                        exe.run(&[
+                            &self.buf_a,
+                            &self.buf_c,
+                            &self.buf_cores,
+                            &block.values,
+                            &hp,
+                        ])
+                    } else {
+                        exe.run(&[&self.buf_a, &self.buf_cores, &block.values, &hp])
+                    }
+                })?;
+                time_into(&mut st.scatter, || {
+                    model.scatter_batch(&block.coords, block.valid, &out[0]);
+                });
+            }
+            (Algo::FastTucker, Some(m)) => {
+                time_into(&mut st.gather, || {
+                    model.gather_batch_rotated(&block.coords, block.valid, m, &mut self.buf_a);
+                });
+                let out = time_into(&mut st.exec, || {
+                    exe.run(&[&self.buf_a, &self.buf_cores, &block.values, &hp])
+                })?;
+                time_into(&mut st.scatter, || {
+                    model.scatter_mode_rows(m, &block.coords, block.valid, &out[0]);
+                });
+            }
+            (Algo::FasterTucker | Algo::FasterTuckerCoo, Some(m)) => {
+                time_into(&mut st.gather, || {
+                    model.gather_mode_rows(m, &block.coords, block.valid, &mut self.buf_a);
+                    gather_c_rows(
+                        &self.c_store,
+                        r,
+                        n,
+                        &mut self.buf_c,
+                        &block.coords,
+                        block.valid,
+                        block.s,
+                        &self.pass_modes,
+                    );
+                });
+                let out = time_into(&mut st.exec, || {
+                    exe.run(&[&self.buf_a, &self.buf_c, &self.b0, &block.values, &hp])
+                })?;
+                time_into(&mut st.scatter, || {
+                    model.scatter_mode_rows(m, &block.coords, block.valid, &out[0]);
+                    // Alg. 2 line 13: refresh stored C rows of the updated mode.
+                    let cs = &mut self.c_store[m];
+                    for e in 0..block.valid {
+                        let row = block.coords[e * n + m] as usize;
+                        cs[row * r..(row + 1) * r].copy_from_slice(&out[1][e * r..(e + 1) * r]);
+                    }
+                });
+            }
+            (algo, mode) => bail!("invalid factor block: {algo:?} with mode {mode:?}"),
+        }
+        Ok(())
+    }
+
+    fn run_core_block(
+        &mut self,
+        model: &mut TuckerModel,
+        block: &StagedBlock,
+        mode: Option<usize>,
+        acc: &mut CoreAccum,
+        st: &mut PhaseStats,
+    ) -> Result<()> {
+        let exe = self.core_exe.clone();
+        let n = model.order();
+        let r = self.cfg.r;
+        let out = match (self.cfg.algo, mode) {
+            (Algo::Plus, None) => {
+                time_into(&mut st.gather, || {
+                    model.gather_batch(&block.coords, block.valid, &mut self.buf_a);
+                });
+                let storage = self.storage_plus();
+                time_into(&mut st.exec, || {
+                    if storage {
+                        gather_c_rows(
+                            &self.c_store,
+                            r,
+                            n,
+                            &mut self.buf_c,
+                            &block.coords,
+                            block.valid,
+                            block.s,
+                            &self.pass_modes,
+                        );
+                        exe.run(&[&self.buf_a, &self.buf_c, &block.values])
+                    } else {
+                        exe.run(&[&self.buf_a, &self.buf_cores, &block.values])
+                    }
+                })?
+            }
+            (Algo::FastTucker, Some(m)) => {
+                time_into(&mut st.gather, || {
+                    model.gather_batch_rotated(&block.coords, block.valid, m, &mut self.buf_a);
+                });
+                time_into(&mut st.exec, || {
+                    exe.run(&[&self.buf_a, &self.buf_cores, &block.values])
+                })?
+            }
+            (Algo::FasterTucker | Algo::FasterTuckerCoo, Some(m)) => {
+                time_into(&mut st.gather, || {
+                    model.gather_mode_rows(m, &block.coords, block.valid, &mut self.buf_a);
+                    gather_c_rows(
+                        &self.c_store,
+                        r,
+                        n,
+                        &mut self.buf_c,
+                        &block.coords,
+                        block.valid,
+                        block.s,
+                        &self.pass_modes,
+                    );
+                });
+                time_into(&mut st.exec, || {
+                    exe.run(&[&self.buf_a, &self.buf_c, &self.b0, &block.values])
+                })?
+            }
+            (algo, mode) => bail!("invalid core block: {algo:?} with mode {mode:?}"),
+        };
+        time_into(&mut st.scatter, || {
+            for (g, &v) in acc.grad.iter_mut().zip(out[0].iter()) {
+                *g += v;
+            }
+        });
+        Ok(())
+    }
+
+    /// Batched evaluation through the `predict` artifact.
+    fn predict_batch(
+        &mut self,
+        model: &TuckerModel,
+        test: &SparseTensor,
+    ) -> Result<Option<(f64, f64)>> {
+        let exe = self.predict_exe.clone();
+        let s = exe.info.s;
+        let n = test.order();
+        let j = self.cfg.j;
+        model.pack_cores(&mut self.buf_cores);
+        self.buf_a.resize(n * s * j, 0.0);
+        let mut coords = vec![0u32; s * n];
+        let mut values = vec![0f32; s];
+        let mut sse = 0f64;
+        let mut sae = 0f64;
+        let mut lo = 0usize;
+        while lo < test.nnz() {
+            let valid = (test.nnz() - lo).min(s);
+            for e in 0..valid {
+                coords[e * n..(e + 1) * n].copy_from_slice(test.coords(lo + e));
+                values[e] = test.values[lo + e];
+            }
+            coords[valid * n..].fill(0);
+            values[valid..].fill(0.0);
+            model.gather_batch(&coords, valid, &mut self.buf_a);
+            let out = exe.run(&[&self.buf_a, &self.buf_cores])?;
+            for e in 0..valid {
+                let err = (values[e] - out[0][e]) as f64;
+                sse += err * err;
+                sae += err.abs();
+            }
+            lo += valid;
+        }
+        let cnt = test.nnz().max(1) as f64;
+        Ok(Some(((sse / cnt).sqrt(), sae / cnt)))
+    }
+}
+
+// ======================================================================
+// Scalar CPU backend (serial oracle + Hogwild-parallel)
+// ======================================================================
+
+/// Block slot count for the CPU backends (multiple of the warp size; large
+/// enough that the per-block scheduling overhead vanishes, small enough
+/// that the streaming scheduler's double buffer keeps both stages busy).
+pub const CPU_BLOCK_S: usize = 8192;
+
+/// Scalar block executor.  `workers = 1` reproduces the sequential
+/// `cpu_ref` semantics exactly; `workers > 1` shards each block's valid
+/// slots across scoped threads with Hogwild scatter through
+/// [`SharedFactors`].
+pub struct CpuBackend {
+    algo: Algo,
+    hyper: Hyper,
+    workers: usize,
+    /// Stored projection tables (FasterTucker-family only), refreshed per
+    /// pass in `begin_pass`.
+    c_store: Vec<Vec<f32>>,
+}
+
+impl CpuBackend {
+    pub fn new(cfg: &TrainConfig, workers: usize) -> CpuBackend {
+        CpuBackend {
+            algo: cfg.algo,
+            hyper: cfg.hyper,
+            workers: workers.max(1),
+            c_store: Vec::new(),
+        }
+    }
+
+    fn uses_c_store(&self) -> bool {
+        matches!(self.algo, Algo::FasterTucker | Algo::FasterTuckerCoo)
+    }
+}
+
+/// Dispatch one factor-step range to the algorithm's scalar kernel.
+fn factor_step(
+    algo: Algo,
+    mode: Option<usize>,
+    shared: &SharedFactors<'_>,
+    data: &step::BlockData<'_>,
+    range: std::ops::Range<usize>,
+) {
+    match (algo, mode) {
+        (Algo::Plus, None) => step::plus_factor_range(shared, data, range),
+        (Algo::FastTucker, Some(m)) => step::mode_factor_range(shared, data, m, range),
+        (Algo::FasterTucker | Algo::FasterTuckerCoo, Some(m)) => {
+            step::stored_factor_range(shared, data, m, range)
+        }
+        _ => unreachable!("algo/pass schedule mismatch"),
+    }
+}
+
+/// Dispatch one core-step range to the algorithm's scalar kernel.
+fn core_step(
+    algo: Algo,
+    mode: Option<usize>,
+    shared: &SharedFactors<'_>,
+    data: &step::BlockData<'_>,
+    range: std::ops::Range<usize>,
+    grad: &mut [f32],
+) {
+    match (algo, mode) {
+        (Algo::Plus, None) => step::plus_core_range(shared, data, range, grad),
+        (Algo::FastTucker, Some(m)) => step::mode_core_range(shared, data, m, range, grad),
+        (Algo::FasterTucker | Algo::FasterTuckerCoo, Some(m)) => {
+            step::stored_core_range(shared, data, m, range, grad)
+        }
+        _ => unreachable!("algo/pass schedule mismatch"),
+    }
+}
+
+impl StepBackend for CpuBackend {
+    fn platform(&self) -> String {
+        if self.workers <= 1 {
+            "cpu_ref".to_string()
+        } else {
+            format!("parallel_cpu({} threads)", self.workers)
+        }
+    }
+
+    fn block_size(&self, _phase: Phase) -> usize {
+        CPU_BLOCK_S
+    }
+
+    fn refresh_c(&mut self, _model: &TuckerModel) -> Result<()> {
+        // the scalar path refreshes per pass (in `begin_pass`), matching
+        // the per-mode-pass refresh of the sequential oracle
+        Ok(())
+    }
+
+    fn begin_pass(
+        &mut self,
+        model: &TuckerModel,
+        _phase: Phase,
+        _mode: Option<usize>,
+    ) -> Result<()> {
+        if self.uses_c_store() {
+            self.c_store = (0..model.order())
+                .map(|m| cpu_ref::compute_c_full(model, m))
+                .collect();
+        }
+        Ok(())
+    }
+
+    fn run_factor_block(
+        &mut self,
+        model: &mut TuckerModel,
+        block: &StagedBlock,
+        mode: Option<usize>,
+        st: &mut PhaseStats,
+    ) -> Result<()> {
+        if block.valid == 0 {
+            return Ok(());
+        }
+        let (n, j, r) = (model.order(), model.j, model.r);
+        let (algo, hyper, workers) = (self.algo, self.hyper, self.workers.min(block.valid));
+        time_into(&mut st.exec, || {
+            let (factors, cores) = (&mut model.factors, &model.cores);
+            let shared = SharedFactors::new(factors, j);
+            let data = step::BlockData {
+                cores,
+                c_store: &self.c_store,
+                coords: &block.coords,
+                values: &block.values,
+                n,
+                j,
+                r,
+                hyper,
+            };
+            if workers <= 1 {
+                factor_step(algo, mode, &shared, &data, 0..block.valid);
+            } else {
+                pool::parallel_chunks(block.valid, workers, |range| {
+                    factor_step(algo, mode, &shared, &data, range);
+                });
+            }
+        });
+        Ok(())
+    }
+
+    fn run_core_block(
+        &mut self,
+        model: &mut TuckerModel,
+        block: &StagedBlock,
+        mode: Option<usize>,
+        acc: &mut CoreAccum,
+        st: &mut PhaseStats,
+    ) -> Result<()> {
+        if block.valid == 0 {
+            return Ok(());
+        }
+        let (n, j, r) = (model.order(), model.j, model.r);
+        let (algo, hyper, workers) = (self.algo, self.hyper, self.workers.min(block.valid));
+        let glen = acc.grad.len();
+        time_into(&mut st.exec, || {
+            let (factors, cores) = (&mut model.factors, &model.cores);
+            let shared = SharedFactors::new(factors, j);
+            let data = step::BlockData {
+                cores,
+                c_store: &self.c_store,
+                coords: &block.coords,
+                values: &block.values,
+                n,
+                j,
+                r,
+                hyper,
+            };
+            if workers <= 1 {
+                core_step(algo, mode, &shared, &data, 0..block.valid, &mut acc.grad);
+            } else {
+                let partials = std::sync::Mutex::new(Vec::with_capacity(workers));
+                pool::parallel_chunks(block.valid, workers, |range| {
+                    let mut g = vec![0f32; glen];
+                    core_step(algo, mode, &shared, &data, range, &mut g);
+                    partials.lock().unwrap().push(g);
+                });
+                for g in partials.into_inner().unwrap() {
+                    for (a, b) in acc.grad.iter_mut().zip(&g) {
+                        *a += b;
+                    }
+                }
+            }
+        });
+        Ok(())
+    }
+
+    fn predict_batch(
+        &mut self,
+        _model: &TuckerModel,
+        _test: &SparseTensor,
+    ) -> Result<Option<(f64, f64)>> {
+        Ok(None) // scalar evaluator handles it
+    }
+}

@@ -92,20 +92,33 @@ impl Strategy {
     }
 }
 
-/// Execution backend: the PJRT/HLO path (the system under test) or the
-/// scalar CPU reference (oracle / scalar baseline).
+/// Execution backend: the PJRT/HLO path (the system under test), the
+/// scalar CPU reference (oracle / scalar baseline), or the Hogwild
+/// multi-threaded CPU engine (the paper's per-thread FMA path, parallel).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {
     Hlo,
     CpuRef,
+    ParallelCpu,
 }
 
 impl Backend {
     pub fn parse(s: &str) -> Option<Backend> {
         match s {
             "hlo" => Some(Backend::Hlo),
-            "cpu" | "cpuref" => Some(Backend::CpuRef),
+            "cpu" | "cpuref" | "cpu_ref" => Some(Backend::CpuRef),
+            "parallel" | "parallelcpu" | "parallel-cpu" | "parallel_cpu" => {
+                Some(Backend::ParallelCpu)
+            }
             _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Hlo => "hlo",
+            Backend::CpuRef => "cpu_ref",
+            Backend::ParallelCpu => "parallel_cpu",
         }
     }
 }
@@ -122,8 +135,19 @@ pub struct TrainConfig {
     pub hyper: Hyper,
     pub seed: u64,
     pub artifact_dir: PathBuf,
-    /// Worker threads for batch assembly (0 = auto).
+    /// Worker threads for the `ParallelCpu` backend's Hogwild block
+    /// sharding (0 = auto-detect via `util::pool::default_threads`).
     pub threads: usize,
+}
+
+impl TrainConfig {
+    /// Whether the HLO backend's compiled artifacts are present under
+    /// [`TrainConfig::artifact_dir`] (the manifest the runtime loads).
+    /// Examples and tools use this to fall back to a CPU backend from a
+    /// clean checkout.
+    pub fn hlo_available(&self) -> bool {
+        self.artifact_dir.join("manifest.json").exists()
+    }
 }
 
 impl Default for TrainConfig {
@@ -155,5 +179,10 @@ mod tests {
         assert_eq!(Variant::parse("tc"), Some(Variant::Tc));
         assert_eq!(Strategy::parse("storage"), Some(Strategy::Storage));
         assert_eq!(Backend::parse("cpu"), Some(Backend::CpuRef));
+        assert_eq!(Backend::parse("parallel"), Some(Backend::ParallelCpu));
+        // name() round-trips through parse()
+        for b in [Backend::Hlo, Backend::CpuRef, Backend::ParallelCpu] {
+            assert_eq!(Backend::parse(b.name()), Some(b));
+        }
     }
 }

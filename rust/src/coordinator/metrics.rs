@@ -9,7 +9,9 @@ use crate::util::json::{self, Json};
 /// Stage timings accumulated over one phase (factor or core) of an epoch.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PhaseStats {
-    /// sampling / block construction
+    /// *Exposed* sampling/staging time: the wait on the pipelined block
+    /// scheduler's producer thread.  Near zero when the double buffer
+    /// fully hides block construction behind execution.
     pub sample: Duration,
     /// host gather of factor / C rows into staging slabs (memory access)
     pub gather: Duration,

@@ -1,9 +1,20 @@
-//! The L3 coordinator: configuration, training loop, metrics.
+//! The L3 coordinator, split into its three refactored layers:
+//!
+//! * [`trainer`] — thin driver owning model + indexes + backend;
+//! * [`phases`] — generic factor/core phase logic over the streaming
+//!   block scheduler (one implementation for every algorithm/backend);
+//! * [`backend`] — the pluggable [`backend::StepBackend`] execution layer
+//!   (PJRT/HLO, serial CPU oracle, Hogwild parallel CPU);
+//!
+//! plus [`config`] and [`metrics`].
 
+pub mod backend;
 pub mod config;
 pub mod metrics;
+pub mod phases;
 pub mod trainer;
 
+pub use backend::{make_backend, CoreAccum, HloBackend, CpuBackend, Phase, StepBackend};
 pub use config::{Algo, Backend, Strategy, TrainConfig, Variant};
 pub use metrics::{EpochStats, PhaseStats};
-pub use trainer::Trainer;
+pub use trainer::{tensor_fingerprint, Trainer};

@@ -1,0 +1,119 @@
+//! Backend-independent phase driver: one generic factor phase and one
+//! generic core phase for every (algorithm, backend) combination.
+//!
+//! A phase is a sequence of *passes* (a single all-modes pass for
+//! FastTuckerPlus, one pass per tensor mode for the baseline algorithms).
+//! Each pass streams staged blocks from the pipelined scheduler
+//! ([`StagedStream`]) — sampling and staging of block *k+1* overlap the
+//! execution of block *k* on a producer thread — and hands every block to
+//! the configured [`StepBackend`].  Core-phase gradients accumulate in a
+//! [`CoreAccum`] and are applied once per pass (the paper's
+//! accumulate-then-atomicAdd schedule).
+//!
+//! Timing semantics: `st.sample` records the *exposed* sampling/staging
+//! time (the wait on the producer), so a well-pipelined run shows it near
+//! zero even though staging work still happens — that differential IS the
+//! pipelining win the paper's overlap argument predicts.
+
+use anyhow::Result;
+
+use crate::coordinator::backend::{CoreAccum, Phase, StepBackend};
+use crate::coordinator::config::{Algo, TrainConfig};
+use crate::coordinator::metrics::{time_into, PhaseStats};
+use crate::model::TuckerModel;
+use crate::sampler::{BlockIter, StagedStream};
+use crate::tensor::{FiberIndex, ModeSliceIndex, SparseTensor};
+
+/// Seed salt separating the core phase's sample stream from the factor
+/// phase's (kept from the pre-refactor trainer for continuity).
+const CORE_SEED_SALT: u64 = 0xC0DE;
+
+/// Pass schedule for one phase: `None` = all-modes (Plus), `Some(m)` = the
+/// per-mode passes of the baseline algorithms.
+fn schedule(algo: Algo, order: usize) -> Vec<Option<usize>> {
+    match algo {
+        Algo::Plus => vec![None],
+        Algo::FastTucker | Algo::FasterTucker | Algo::FasterTuckerCoo => {
+            (0..order).map(Some).collect()
+        }
+    }
+}
+
+/// Block source for one pass of one algorithm.
+#[allow(clippy::too_many_arguments)]
+fn block_iter<'a>(
+    algo: Algo,
+    train: &'a SparseTensor,
+    slice_idx: &'a [ModeSliceIndex],
+    fiber_idx: &'a [FiberIndex],
+    mode: Option<usize>,
+    s: usize,
+    seed: u64,
+    epoch: u64,
+) -> BlockIter<'a> {
+    match (algo, mode) {
+        (Algo::Plus, None) => BlockIter::uniform(train, s, seed, epoch),
+        (Algo::FastTucker, Some(m)) => BlockIter::mode_slice(&slice_idx[m], s, seed, epoch),
+        (Algo::FasterTucker, Some(m)) => BlockIter::fiber(&fiber_idx[m], s, seed, epoch),
+        (Algo::FasterTuckerCoo, Some(m)) => BlockIter::fiber_coo(&fiber_idx[m], s, seed, epoch),
+        _ => unreachable!("pass schedule / algorithm mismatch"),
+    }
+}
+
+/// Run one phase (factor or core) of one epoch.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_phase(
+    phase: Phase,
+    cfg: &TrainConfig,
+    backend: &mut dyn StepBackend,
+    model: &mut TuckerModel,
+    train: &SparseTensor,
+    slice_idx: &[ModeSliceIndex],
+    fiber_idx: &[FiberIndex],
+    epoch_no: u64,
+) -> Result<PhaseStats> {
+    let mut st = PhaseStats::default();
+    time_into(&mut st.precompute, || backend.refresh_c(model))?;
+    let seed = match phase {
+        Phase::Factor => cfg.seed,
+        Phase::Core => cfg.seed ^ CORE_SEED_SALT,
+    };
+    let s = backend.block_size(phase);
+    for mode in schedule(cfg.algo, train.order()) {
+        time_into(&mut st.precompute, || backend.begin_pass(model, phase, mode))?;
+        let mut acc = match phase {
+            Phase::Core => Some(CoreAccum::new(model, mode)),
+            Phase::Factor => None,
+        };
+        // iterator construction does the O(nnz) shuffle / group ordering, so
+        // charge it to the sample bucket like the eager samplers were
+        let iter = time_into(&mut st.sample, || {
+            block_iter(
+                cfg.algo, train, slice_idx, fiber_idx, mode, s, seed, epoch_no,
+            )
+        });
+        std::thread::scope(|scope| -> Result<()> {
+            let mut stream = StagedStream::spawn(scope, train, iter);
+            while let Some(block) = time_into(&mut st.sample, || stream.next()) {
+                match phase {
+                    Phase::Factor => backend.run_factor_block(model, &block, mode, &mut st)?,
+                    Phase::Core => {
+                        let acc = acc.as_mut().expect("core pass has an accumulator");
+                        backend.run_core_block(model, &block, mode, acc, &mut st)?;
+                        acc.count += block.valid;
+                    }
+                }
+                st.blocks += 1;
+                st.samples += block.valid;
+                st.padded_slots += block.s - block.valid;
+            }
+            Ok(())
+        })?;
+        if let Some(acc) = acc {
+            time_into(&mut st.scatter, || {
+                acc.apply(model, cfg.hyper.lr_b, cfg.hyper.lam_b)
+            });
+        }
+    }
+    Ok(st)
+}

@@ -1,97 +1,74 @@
-//! The coordinator's training loop — the L3 half of the paper's system.
+//! The coordinator's training driver — the L3 top of the paper's system.
 //!
-//! One `Trainer` owns the model state, the sampling indexes, the staging
-//! slabs, and (for the HLO backend) the PJRT engine with the compiled
-//! kernels for the configured (algo, variant, strategy).  `epoch()` runs the
-//! paper's two phases:
-//!
-//! 1. **factor phase** — update factor matrices (Alg. 4 analog: gather
-//!    `A_Ψ` rows, execute the factor kernel, scatter updated rows back);
-//! 2. **core phase** — accumulate core-matrix gradients over all blocks and
-//!    apply once (Alg. 5 analog: register accumulate + atomicAdd at end).
-//!
-//! Every stage is timed into [`PhaseStats`] — those numbers ARE the
-//! Table 6/7 / Fig. 2/3 measurements.
+//! After the backend refactor the `Trainer` is deliberately thin: it owns
+//! the model, the sampling indexes and a boxed [`StepBackend`], and
+//! delegates both phases of `epoch()` to the generic phase driver in
+//! [`crate::coordinator::phases`].  All backend- and algorithm-specific
+//! execution lives behind the [`StepBackend`] trait
+//! ([`crate::coordinator::backend`]); all scheduling (pass structure,
+//! pipelined block streaming, gradient application) lives in the phase
+//! driver.  The per-epoch [`EpochStats`] remain the Table 6/7 and
+//! Fig. 2/3 measurements.
 
-use std::rc::Rc;
+use anyhow::{ensure, Result};
 
-use anyhow::{ensure, Context, Result};
-
-use crate::coordinator::config::{Algo, Backend, Strategy, TrainConfig};
-use crate::coordinator::metrics::{time_into, EpochStats, PhaseStats};
+use crate::coordinator::backend::{self, Phase, StepBackend};
+use crate::coordinator::config::{Algo, TrainConfig};
+use crate::coordinator::metrics::{EpochStats, PhaseStats};
+use crate::coordinator::phases;
 use crate::cpu_ref;
 use crate::model::TuckerModel;
-use crate::runtime::{Engine, Executable};
-use crate::sampler::{self, Block, PAD};
 use crate::tensor::{FiberIndex, ModeSliceIndex, SparseTensor};
+
+/// Cheap structural fingerprint of a tensor: dims + nnz + first/last entry
+/// (coords and value bits), FNV-1a mixed.  `epoch()` uses it to reject a
+/// *different* tensor of the same size — the nnz-only check it replaces
+/// accepted any same-cardinality impostor.
+pub fn tensor_fingerprint(t: &SparseTensor) -> u64 {
+    fn mix(h: &mut u64, x: u64) {
+        *h ^= x;
+        *h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    mix(&mut h, t.order() as u64);
+    for &d in &t.dims {
+        mix(&mut h, d as u64);
+    }
+    mix(&mut h, t.nnz() as u64);
+    if t.nnz() > 0 {
+        for &c in t.coords(0) {
+            mix(&mut h, c as u64);
+        }
+        for &c in t.coords(t.nnz() - 1) {
+            mix(&mut h, c as u64);
+        }
+        mix(&mut h, t.values[0].to_bits() as u64);
+        mix(&mut h, t.values[t.nnz() - 1].to_bits() as u64);
+    }
+    h
+}
 
 /// Training driver for one tensor + one configuration.
 pub struct Trainer {
     pub cfg: TrainConfig,
     pub model: TuckerModel,
-    engine: Option<Engine>,
-    // compiled kernels (HLO backend)
-    factor_exe: Option<Rc<Executable>>,
-    core_exe: Option<Rc<Executable>>,
-    predict_exe: Option<Rc<Executable>>,
-    compute_c_exe: Option<Rc<Executable>>,
-    // sampling indexes
+    backend: Box<dyn StepBackend>,
+    // sampling indexes (built per the algorithm's Table-3 strategy)
     slice_idx: Vec<ModeSliceIndex>,
     fiber_idx: Vec<FiberIndex>,
-    // storage-scheme projection tables C^(n) (I_n x R each)
-    c_store: Vec<Vec<f32>>,
-    // staging slabs, reused across blocks
-    buf_a: Vec<f32>,
-    buf_c: Vec<f32>,
-    buf_x: Vec<f32>,
-    buf_cores: Vec<f32>,
-    buf_coords: Vec<u32>,
     pub epoch_no: u64,
-    train_nnz: usize,
+    fingerprint: u64,
 }
 
 impl Trainer {
     /// Build a trainer for `train`.  For the HLO backend this loads and
-    /// compiles the artifacts for the configured algorithm.
+    /// compiles the artifacts for the configured algorithm; the CPU
+    /// backends need no artifacts.
     pub fn new(train: &SparseTensor, cfg: TrainConfig) -> Result<Trainer> {
         let n = train.order();
         let model =
             TuckerModel::init_with_mean(&train.dims, cfg.j, cfg.r, cfg.seed, train.mean_value());
-        let v = cfg.variant.suffix();
-
-        let mut engine = None;
-        let (mut factor_exe, mut core_exe, mut predict_exe, mut compute_c_exe) =
-            (None, None, None, None);
-        if cfg.backend == Backend::Hlo {
-            let eng = Engine::new(&cfg.artifact_dir)?;
-            let (fk, ck) = match (cfg.algo, cfg.strategy) {
-                (Algo::Plus, Strategy::Calculation) => {
-                    (format!("plus_factor_{v}"), format!("plus_core_{v}"))
-                }
-                (Algo::Plus, Strategy::Storage) => (
-                    format!("plus_factor_storage_{v}"),
-                    format!("plus_core_storage_{v}"),
-                ),
-                (Algo::FastTucker, _) => (
-                    format!("fasttucker_factor_{v}"),
-                    format!("fasttucker_core_{v}"),
-                ),
-                (Algo::FasterTucker | Algo::FasterTuckerCoo, _) => (
-                    format!("fastertucker_factor_{v}"),
-                    format!("fastertucker_core_{v}"),
-                ),
-            };
-            factor_exe = Some(eng.load(&fk, n, cfg.j, cfg.r)?);
-            core_exe = Some(eng.load(&ck, n, cfg.j, cfg.r)?);
-            predict_exe = Some(eng.load("predict", n, cfg.j, cfg.r)?);
-            if matches!(cfg.algo, Algo::FasterTucker | Algo::FasterTuckerCoo)
-                || cfg.strategy == Strategy::Storage
-            {
-                compute_c_exe = Some(eng.load_any_n("compute_c", cfg.j, cfg.r)?);
-            }
-            engine = Some(eng);
-        }
-
+        let backend = backend::make_backend(train, &cfg)?;
         let slice_idx = if cfg.algo == Algo::FastTucker {
             (0..n).map(|m| ModeSliceIndex::build(train, m)).collect()
         } else {
@@ -102,29 +79,13 @@ impl Trainer {
         } else {
             Vec::new()
         };
-        let c_store = train
-            .dims
-            .iter()
-            .map(|&d| vec![0f32; d as usize * cfg.r])
-            .collect();
-
         Ok(Trainer {
             model,
-            engine,
-            factor_exe,
-            core_exe,
-            predict_exe,
-            compute_c_exe,
+            backend,
             slice_idx,
             fiber_idx,
-            c_store,
-            buf_a: Vec::new(),
-            buf_c: Vec::new(),
-            buf_x: Vec::new(),
-            buf_cores: vec![0f32; n * cfg.j * cfg.r],
-            buf_coords: Vec::new(),
             epoch_no: 0,
-            train_nnz: train.nnz(),
+            fingerprint: tensor_fingerprint(train),
             cfg,
         })
     }
@@ -132,7 +93,7 @@ impl Trainer {
     /// Run one full iteration (factor phase + core phase) over `train`.
     pub fn epoch(&mut self, train: &SparseTensor) -> Result<EpochStats> {
         ensure!(
-            train.nnz() == self.train_nnz,
+            tensor_fingerprint(train) == self.fingerprint,
             "epoch() must receive the tensor the trainer was built for"
         );
         let factor = self.factor_phase(train)?;
@@ -143,537 +104,43 @@ impl Trainer {
 
     /// Factor-matrix update phase only (Table 6a measures this in isolation).
     pub fn factor_phase(&mut self, train: &SparseTensor) -> Result<PhaseStats> {
-        match self.cfg.backend {
-            Backend::CpuRef => self.cpu_factor_phase(train),
-            Backend::Hlo => match self.cfg.algo {
-                Algo::Plus => self.plus_factor_phase(train),
-                Algo::FastTucker => self.fasttucker_factor_phase(train),
-                Algo::FasterTucker | Algo::FasterTuckerCoo => {
-                    self.fastertucker_factor_phase(train)
-                }
-            },
-        }
+        phases::run_phase(
+            Phase::Factor,
+            &self.cfg,
+            self.backend.as_mut(),
+            &mut self.model,
+            train,
+            &self.slice_idx,
+            &self.fiber_idx,
+            self.epoch_no,
+        )
     }
 
     /// Core-matrix update phase only (Table 6b).
     pub fn core_phase(&mut self, train: &SparseTensor) -> Result<PhaseStats> {
-        match self.cfg.backend {
-            Backend::CpuRef => self.cpu_core_phase(train),
-            Backend::Hlo => match self.cfg.algo {
-                Algo::Plus => self.plus_core_phase(train),
-                Algo::FastTucker => self.fasttucker_core_phase(train),
-                Algo::FasterTucker | Algo::FasterTuckerCoo => {
-                    self.fastertucker_core_phase(train)
-                }
-            },
-        }
+        phases::run_phase(
+            Phase::Core,
+            &self.cfg,
+            self.backend.as_mut(),
+            &mut self.model,
+            train,
+            &self.slice_idx,
+            &self.fiber_idx,
+            self.epoch_no,
+        )
     }
 
-    // -- block staging ------------------------------------------------------
-
-    /// Materialize a block: coords slab (valid x N) + padded value slab [S].
-    fn stage_block(&mut self, train: &SparseTensor, block: &Block, s: usize) {
-        let n = train.order();
-        self.buf_coords.clear();
-        self.buf_x.clear();
-        self.buf_x.resize(s, 0.0);
-        let mut slot = 0usize;
-        for &id in &block.ids {
-            if id == PAD {
-                continue;
-            }
-            // compact valid entries to the front; kernels are per-slot so
-            // reordering within a block is sound for uniform sampling, and
-            // grouped samplers only pad at warp tails (order preserved).
-            self.buf_coords.extend_from_slice(train.coords(id as usize));
-            self.buf_x[slot] = train.values[id as usize];
-            slot += 1;
-        }
-        debug_assert_eq!(slot, block.valid);
-        let _ = n;
-    }
-
-    fn hp_factor(&self) -> [f32; 2] {
-        [self.cfg.hyper.lr_a, self.cfg.hyper.lam_a]
-    }
-
-    /// Refresh the storage-scheme projection tables C^(n) = A^(n) B^(n)
-    /// through the `compute_c` executable, in row chunks of the artifact's S.
-    fn refresh_c_store(&mut self) -> Result<()> {
-        let exe = self
-            .compute_c_exe
-            .clone()
-            .context("compute_c executable not loaded")?;
-        let chunk = exe.info.s;
-        let (j, r) = (self.cfg.j, self.cfg.r);
-        let n = self.model.order();
-        let mut a_chunk = vec![0f32; chunk * j];
-        for m in 0..n {
-            let rows = self.model.dims[m] as usize;
-            let fm = &self.model.factors[m];
-            let b = &self.model.cores[m];
-            let cs = &mut self.c_store[m];
-            let mut lo = 0usize;
-            while lo < rows {
-                let hi = (lo + chunk).min(rows);
-                let len = hi - lo;
-                a_chunk[..len * j].copy_from_slice(&fm[lo * j..hi * j]);
-                a_chunk[len * j..].fill(0.0);
-                let out = exe.run(&[&a_chunk, b])?;
-                cs[lo * r..hi * r].copy_from_slice(&out[0][..len * r]);
-                lo = hi;
-            }
-        }
-        Ok(())
-    }
-
-    /// Gather stored C rows for a block into `[K, S, R]` where mode `k` of
-    /// the output corresponds to tensor mode `mode_of(k)`.
-    fn gather_c_rows(
-        &self,
-        out: &mut [f32],
-        coords: &[u32],
-        valid: usize,
-        s: usize,
-        modes: &[usize],
-    ) {
-        let n = self.model.order();
-        let r = self.cfg.r;
-        for (k, &m) in modes.iter().enumerate() {
-            let dst = &mut out[k * s * r..(k + 1) * s * r];
-            let src = &self.c_store[m];
-            for e in 0..valid {
-                let row = coords[e * n + m] as usize;
-                dst[e * r..(e + 1) * r].copy_from_slice(&src[row * r..(row + 1) * r]);
-            }
-            dst[valid * r..].fill(0.0);
-        }
-    }
-
-    // -- FastTuckerPlus (Algorithm 3) ---------------------------------------
-
-    fn plus_factor_phase(&mut self, train: &SparseTensor) -> Result<PhaseStats> {
-        let exe = self.factor_exe.clone().unwrap();
-        let s = exe.info.s;
-        let n = train.order();
-        let (j, r) = (self.cfg.j, self.cfg.r);
-        let mut st = PhaseStats::default();
-        let storage = self.cfg.strategy == Strategy::Storage;
-        if storage {
-            time_into(&mut st.precompute, || self.refresh_c_store())?;
-        }
-        let blocks = time_into(&mut st.sample, || {
-            sampler::uniform_blocks(train, s, self.cfg.seed, self.epoch_no)
-        });
-        self.model.pack_cores(&mut self.buf_cores);
-        let hp = self.hp_factor();
-        self.buf_a.resize(n * s * j, 0.0);
-        if storage {
-            self.buf_c.resize(n * s * r, 0.0);
-        }
-        let all_modes: Vec<usize> = (0..n).collect();
-        for block in &blocks {
-            self.stage_block(train, block, s);
-            time_into(&mut st.gather, || {
-                self.model
-                    .gather_batch(&self.buf_coords, block.valid, &mut self.buf_a);
-            });
-            let out = time_into(&mut st.exec, || {
-                if storage {
-                    let coords = &self.buf_coords;
-                    // gather_c_rows borrows &self; split via local copy of refs
-                    let mut c = std::mem::take(&mut self.buf_c);
-                    self.gather_c_rows(&mut c, coords, block.valid, s, &all_modes);
-                    let res = exe.run(&[&self.buf_a, &c, &self.buf_cores, &self.buf_x, &hp]);
-                    self.buf_c = c;
-                    res
-                } else {
-                    exe.run(&[&self.buf_a, &self.buf_cores, &self.buf_x, &hp])
-                }
-            })?;
-            time_into(&mut st.scatter, || {
-                self.model
-                    .scatter_batch(&self.buf_coords, block.valid, &out[0]);
-            });
-            st.blocks += 1;
-            st.samples += block.valid;
-            st.padded_slots += s - block.valid;
-        }
-        Ok(st)
-    }
-
-    fn plus_core_phase(&mut self, train: &SparseTensor) -> Result<PhaseStats> {
-        let exe = self.core_exe.clone().unwrap();
-        let s = exe.info.s;
-        let n = train.order();
-        let (j, r) = (self.cfg.j, self.cfg.r);
-        let mut st = PhaseStats::default();
-        let storage = self.cfg.strategy == Strategy::Storage;
-        if storage {
-            time_into(&mut st.precompute, || self.refresh_c_store())?;
-        }
-        let blocks = time_into(&mut st.sample, || {
-            sampler::uniform_blocks(train, s, self.cfg.seed ^ 0xC0DE, self.epoch_no)
-        });
-        self.model.pack_cores(&mut self.buf_cores);
-        self.buf_a.resize(n * s * j, 0.0);
-        if storage {
-            self.buf_c.resize(n * s * r, 0.0);
-        }
-        let mut grad = vec![0f32; n * j * r];
-        let all_modes: Vec<usize> = (0..n).collect();
-        for block in &blocks {
-            self.stage_block(train, block, s);
-            time_into(&mut st.gather, || {
-                self.model
-                    .gather_batch(&self.buf_coords, block.valid, &mut self.buf_a);
-            });
-            let out = time_into(&mut st.exec, || {
-                if storage {
-                    let mut c = std::mem::take(&mut self.buf_c);
-                    self.gather_c_rows(&mut c, &self.buf_coords, block.valid, s, &all_modes);
-                    let res = exe.run(&[&self.buf_a, &c, &self.buf_x]);
-                    self.buf_c = c;
-                    res
-                } else {
-                    exe.run(&[&self.buf_a, &self.buf_cores, &self.buf_x])
-                }
-            })?;
-            time_into(&mut st.scatter, || {
-                for (g, &v) in grad.iter_mut().zip(out[0].iter()) {
-                    *g += v;
-                }
-            });
-            st.blocks += 1;
-            st.samples += block.valid;
-            st.padded_slots += s - block.valid;
-        }
-        time_into(&mut st.scatter, || {
-            self.model
-                .apply_core_grad(&grad, st.samples, self.cfg.hyper.lr_b, self.cfg.hyper.lam_b);
-        });
-        Ok(st)
-    }
-
-    // -- FastTucker (Algorithm 1) -------------------------------------------
-
-    fn fasttucker_factor_phase(&mut self, train: &SparseTensor) -> Result<PhaseStats> {
-        let exe = self.factor_exe.clone().unwrap();
-        let s = exe.info.s;
-        let n = train.order();
-        let j = self.cfg.j;
-        let mut st = PhaseStats::default();
-        self.buf_a.resize(n * s * j, 0.0);
-        let hp = self.hp_factor();
-        for mode in 0..n {
-            let blocks = time_into(&mut st.sample, || {
-                sampler::mode_slice_blocks(&self.slice_idx[mode], s, self.cfg.seed, self.epoch_no)
-            });
-            self.model.pack_cores_rotated(mode, &mut self.buf_cores);
-            for block in &blocks {
-                self.stage_block(train, block, s);
-                time_into(&mut st.gather, || {
-                    self.model.gather_batch_rotated(
-                        &self.buf_coords,
-                        block.valid,
-                        mode,
-                        &mut self.buf_a,
-                    );
-                });
-                let out = time_into(&mut st.exec, || {
-                    exe.run(&[&self.buf_a, &self.buf_cores, &self.buf_x, &hp])
-                })?;
-                time_into(&mut st.scatter, || {
-                    self.model
-                        .scatter_mode_rows(mode, &self.buf_coords, block.valid, &out[0]);
-                });
-                st.blocks += 1;
-                st.samples += block.valid;
-                st.padded_slots += s - block.valid;
-            }
-        }
-        Ok(st)
-    }
-
-    fn fasttucker_core_phase(&mut self, train: &SparseTensor) -> Result<PhaseStats> {
-        let exe = self.core_exe.clone().unwrap();
-        let s = exe.info.s;
-        let n = train.order();
-        let (j, r) = (self.cfg.j, self.cfg.r);
-        let mut st = PhaseStats::default();
-        self.buf_a.resize(n * s * j, 0.0);
-        for mode in 0..n {
-            let blocks = time_into(&mut st.sample, || {
-                sampler::mode_slice_blocks(
-                    &self.slice_idx[mode],
-                    s,
-                    self.cfg.seed ^ 0xC0DE,
-                    self.epoch_no,
-                )
-            });
-            self.model.pack_cores_rotated(mode, &mut self.buf_cores);
-            let mut grad = vec![0f32; j * r];
-            let mut count = 0usize;
-            for block in &blocks {
-                self.stage_block(train, block, s);
-                time_into(&mut st.gather, || {
-                    self.model.gather_batch_rotated(
-                        &self.buf_coords,
-                        block.valid,
-                        mode,
-                        &mut self.buf_a,
-                    );
-                });
-                let out = time_into(&mut st.exec, || {
-                    exe.run(&[&self.buf_a, &self.buf_cores, &self.buf_x])
-                })?;
-                time_into(&mut st.scatter, || {
-                    for (g, &v) in grad.iter_mut().zip(out[0].iter()) {
-                        *g += v;
-                    }
-                });
-                st.blocks += 1;
-                st.samples += block.valid;
-                st.padded_slots += s - block.valid;
-                count += block.valid;
-            }
-            time_into(&mut st.scatter, || {
-                self.model.apply_core_grad_mode(
-                    mode,
-                    &grad,
-                    count,
-                    self.cfg.hyper.lr_b,
-                    self.cfg.hyper.lam_b,
-                );
-            });
-        }
-        Ok(st)
-    }
-
-    // -- FasterTucker (Algorithm 2) -----------------------------------------
-
-    fn fastertucker_factor_phase(&mut self, train: &SparseTensor) -> Result<PhaseStats> {
-        let exe = self.factor_exe.clone().unwrap();
-        let s = exe.info.s;
-        let n = train.order();
-        let (j, r) = (self.cfg.j, self.cfg.r);
-        let mut st = PhaseStats::default();
-        // Alg. 2 line 2: calculate and store C^(n).
-        time_into(&mut st.precompute, || self.refresh_c_store())?;
-        self.buf_a.resize(s * j, 0.0);
-        self.buf_c.resize((n - 1) * s * r, 0.0);
-        let hp = self.hp_factor();
-        for mode in 0..n {
-            let blocks = time_into(&mut st.sample, || {
-                if self.cfg.algo == Algo::FasterTuckerCoo {
-                    sampler::fiber_blocks_coo(&self.fiber_idx[mode], s, self.cfg.seed, self.epoch_no)
-                } else {
-                    sampler::fiber_blocks(&self.fiber_idx[mode], s, self.cfg.seed, self.epoch_no)
-                }
-            });
-            let other_modes: Vec<usize> = (1..n).map(|k| (mode + k) % n).collect();
-            let b0 = self.model.cores[mode].clone();
-            for block in &blocks {
-                self.stage_block(train, block, s);
-                time_into(&mut st.gather, || {
-                    self.model.gather_mode_rows(
-                        mode,
-                        &self.buf_coords,
-                        block.valid,
-                        &mut self.buf_a,
-                    );
-                    let mut c = std::mem::take(&mut self.buf_c);
-                    self.gather_c_rows(&mut c, &self.buf_coords, block.valid, s, &other_modes);
-                    self.buf_c = c;
-                });
-                let out = time_into(&mut st.exec, || {
-                    exe.run(&[&self.buf_a, &self.buf_c, &b0, &self.buf_x, &hp])
-                })?;
-                time_into(&mut st.scatter, || {
-                    self.model
-                        .scatter_mode_rows(mode, &self.buf_coords, block.valid, &out[0]);
-                    // Alg. 2 line 13: refresh stored C rows of the updated mode.
-                    let cs = &mut self.c_store[mode];
-                    for e in 0..block.valid {
-                        let row = self.buf_coords[e * n + mode] as usize;
-                        cs[row * r..(row + 1) * r]
-                            .copy_from_slice(&out[1][e * r..(e + 1) * r]);
-                    }
-                });
-                st.blocks += 1;
-                st.samples += block.valid;
-                st.padded_slots += s - block.valid;
-            }
-        }
-        Ok(st)
-    }
-
-    fn fastertucker_core_phase(&mut self, train: &SparseTensor) -> Result<PhaseStats> {
-        let exe = self.core_exe.clone().unwrap();
-        let s = exe.info.s;
-        let n = train.order();
-        let (j, r) = (self.cfg.j, self.cfg.r);
-        let mut st = PhaseStats::default();
-        time_into(&mut st.precompute, || self.refresh_c_store())?;
-        self.buf_a.resize(s * j, 0.0);
-        self.buf_c.resize((n - 1) * s * r, 0.0);
-        for mode in 0..n {
-            let blocks = time_into(&mut st.sample, || {
-                if self.cfg.algo == Algo::FasterTuckerCoo {
-                    sampler::fiber_blocks_coo(
-                        &self.fiber_idx[mode],
-                        s,
-                        self.cfg.seed ^ 0xC0DE,
-                        self.epoch_no,
-                    )
-                } else {
-                    sampler::fiber_blocks(
-                        &self.fiber_idx[mode],
-                        s,
-                        self.cfg.seed ^ 0xC0DE,
-                        self.epoch_no,
-                    )
-                }
-            });
-            let other_modes: Vec<usize> = (1..n).map(|k| (mode + k) % n).collect();
-            let b0 = self.model.cores[mode].clone();
-            let mut grad = vec![0f32; j * r];
-            let mut count = 0usize;
-            for block in &blocks {
-                self.stage_block(train, block, s);
-                time_into(&mut st.gather, || {
-                    self.model.gather_mode_rows(
-                        mode,
-                        &self.buf_coords,
-                        block.valid,
-                        &mut self.buf_a,
-                    );
-                    let mut c = std::mem::take(&mut self.buf_c);
-                    self.gather_c_rows(&mut c, &self.buf_coords, block.valid, s, &other_modes);
-                    self.buf_c = c;
-                });
-                let out = time_into(&mut st.exec, || {
-                    exe.run(&[&self.buf_a, &self.buf_c, &b0, &self.buf_x])
-                })?;
-                time_into(&mut st.scatter, || {
-                    for (g, &v) in grad.iter_mut().zip(out[0].iter()) {
-                        *g += v;
-                    }
-                });
-                st.blocks += 1;
-                st.samples += block.valid;
-                st.padded_slots += s - block.valid;
-                count += block.valid;
-            }
-            time_into(&mut st.scatter, || {
-                self.model.apply_core_grad_mode(
-                    mode,
-                    &grad,
-                    count,
-                    self.cfg.hyper.lr_b,
-                    self.cfg.hyper.lam_b,
-                );
-            });
-        }
-        Ok(st)
-    }
-
-    // -- CPU reference backend ----------------------------------------------
-
-    fn cpu_factor_phase(&mut self, train: &SparseTensor) -> Result<PhaseStats> {
-        let mut st = PhaseStats::default();
-        let hp = self.cfg.hyper;
-        time_into(&mut st.exec, || match self.cfg.algo {
-            Algo::Plus => {
-                let order = cpu_ref::epoch_order(train.nnz(), self.cfg.seed, self.epoch_no);
-                cpu_ref::plus_factor_pass(&mut self.model, train, &order, hp);
-            }
-            Algo::FastTucker => {
-                if self.slice_idx.is_empty() {
-                    self.slice_idx = (0..train.order())
-                        .map(|m| ModeSliceIndex::build(train, m))
-                        .collect();
-                }
-                cpu_ref::fasttucker_factor_pass(&mut self.model, train, &self.slice_idx, hp);
-            }
-            Algo::FasterTucker | Algo::FasterTuckerCoo => {
-                if self.fiber_idx.is_empty() {
-                    self.fiber_idx = (0..train.order())
-                        .map(|m| FiberIndex::build(train, m))
-                        .collect();
-                }
-                cpu_ref::fastertucker_factor_pass(&mut self.model, train, &self.fiber_idx, hp);
-            }
-        });
-        st.samples = train.nnz();
-        Ok(st)
-    }
-
-    fn cpu_core_phase(&mut self, train: &SparseTensor) -> Result<PhaseStats> {
-        let mut st = PhaseStats::default();
-        let hp = self.cfg.hyper;
-        time_into(&mut st.exec, || match self.cfg.algo {
-            Algo::Plus => {
-                let order =
-                    cpu_ref::epoch_order(train.nnz(), self.cfg.seed ^ 0xC0DE, self.epoch_no);
-                cpu_ref::plus_core_pass(&mut self.model, train, &order, hp);
-            }
-            Algo::FastTucker => cpu_ref::fasttucker_core_pass(&mut self.model, train, hp),
-            Algo::FasterTucker | Algo::FasterTuckerCoo => {
-                cpu_ref::fastertucker_core_pass(&mut self.model, train, &self.fiber_idx, hp)
-            }
-        });
-        st.samples = train.nnz();
-        Ok(st)
-    }
-
-    // -- evaluation -----------------------------------------------------------
-
-    /// RMSE and MAE on a held-out tensor.  Uses the `predict` artifact on the
-    /// HLO backend (batched), the scalar path otherwise.
+    /// RMSE and MAE on a held-out tensor.  Uses the backend's batched
+    /// predict kernel when it has one, the scalar path otherwise.
     pub fn evaluate(&mut self, test: &SparseTensor) -> Result<(f64, f64)> {
-        match (&self.predict_exe, self.cfg.backend) {
-            (Some(exe), Backend::Hlo) => {
-                let exe = exe.clone();
-                let s = exe.info.s;
-                let n = test.order();
-                let j = self.cfg.j;
-                self.model.pack_cores(&mut self.buf_cores);
-                self.buf_a.resize(n * s * j, 0.0);
-                let mut sse = 0f64;
-                let mut sae = 0f64;
-                let ids: Vec<u32> = (0..test.nnz() as u32).collect();
-                for chunk in ids.chunks(s) {
-                    let block = Block {
-                        ids: {
-                            let mut v = chunk.to_vec();
-                            v.resize(s, PAD);
-                            v
-                        },
-                        valid: chunk.len(),
-                    };
-                    self.stage_block(test, &block, s);
-                    self.model
-                        .gather_batch(&self.buf_coords, block.valid, &mut self.buf_a);
-                    let out = exe.run(&[&self.buf_a, &self.buf_cores])?;
-                    for e in 0..block.valid {
-                        let err = (self.buf_x[e] - out[0][e]) as f64;
-                        sse += err * err;
-                        sae += err.abs();
-                    }
-                }
-                let cnt = test.nnz().max(1) as f64;
-                Ok(((sse / cnt).sqrt(), sae / cnt))
-            }
-            _ => Ok(cpu_ref::evaluate(&self.model, test)),
+        match self.backend.predict_batch(&self.model, test)? {
+            Some(rmse_mae) => Ok(rmse_mae),
+            None => Ok(cpu_ref::evaluate(&self.model, test)),
         }
     }
 
     /// Platform string of the runtime (for logs).
     pub fn platform(&self) -> String {
-        self.engine
-            .as_ref()
-            .map(|e| e.platform())
-            .unwrap_or_else(|| "cpu_ref".to_string())
+        self.backend.platform()
     }
 }

@@ -7,6 +7,12 @@
 //!    experiments (scalar dot products ≙ per-thread FMA path);
 //! 3. the convergence baseline for the Fig. 1 analog (faithful sequential
 //!    per-sample updates, no Hogwild batching effects).
+//!
+//! The whole-pass functions below are the *oracles*; the CPU execution
+//! backends run the block-level re-formulation in [`step`] (same per-sample
+//! math, scheduled by `coordinator::phases`, optionally Hogwild-parallel).
+
+pub mod step;
 
 use crate::model::TuckerModel;
 use crate::tensor::{FiberIndex, ModeSliceIndex, SparseTensor};

@@ -1,0 +1,406 @@
+//! Block-level scalar step kernels, the execution core of the CPU backends.
+//!
+//! Each function processes a contiguous `range` of valid slots from a
+//! staged block (`coords` `[S, N]` / `values` `[S]` slabs) and performs the
+//! per-sample math of one algorithm — the same equations as the whole-pass
+//! oracles in the parent module, restructured around blocks so the generic
+//! phase driver (`coordinator::phases`) can schedule them.
+//!
+//! All factor access goes through [`SharedFactors`] (relaxed atomic rows):
+//!
+//! * `workers = 1` — the serial `CpuRef` backend; relaxed atomics on a
+//!   single thread are plain loads/stores, so trajectories are exactly the
+//!   sequential per-sample semantics.
+//! * `workers > 1` — the `ParallelCpu` backend shards `range` across
+//!   threads; colliding row writes are the paper's benign Hogwild race,
+//!   expressed as last-writer-wins relaxed stores.
+//!
+//! Core-phase functions never write the model: they accumulate into a
+//! caller-provided gradient slab (per-worker locals, merged afterwards),
+//! the paper's accumulate-then-atomicAdd schedule.
+
+use std::ops::Range;
+
+use crate::model::SharedFactors;
+
+use super::Hyper;
+
+/// Read-only inputs shared by every step in a block.
+pub struct BlockData<'a> {
+    /// Core matrices `B^(n)`, `J x R` row-major each.
+    pub cores: &'a [Vec<f32>],
+    /// Stored projection tables `C^(n)` (`I_n x R`); empty for algorithms
+    /// that do not use the storage scheme.
+    pub c_store: &'a [Vec<f32>],
+    /// Entry coordinates `[S, N]`, valid slots compacted to the front.
+    pub coords: &'a [u32],
+    /// Entry values `[S]`.
+    pub values: &'a [f32],
+    pub n: usize,
+    pub j: usize,
+    pub r: usize,
+    pub hyper: Hyper,
+}
+
+impl BlockData<'_> {
+    #[inline]
+    fn entry_coords(&self, e: usize) -> &[u32] {
+        &self.coords[e * self.n..(e + 1) * self.n]
+    }
+}
+
+/// Per-worker scratch (no per-sample allocation).
+struct Scratch {
+    rows: Vec<f32>,    // N x J gathered factor rows
+    new_row: Vec<f32>, // J updated row
+    c: Vec<f32>,       // N x R projections
+    d: Vec<f32>,       // N x R exclusion products
+    pre: Vec<f32>,     // (N+1) x R prefix
+    suf: Vec<f32>,     // (N+1) x R suffix
+    db: Vec<f32>,      // J
+}
+
+impl Scratch {
+    fn new(n: usize, j: usize, r: usize) -> Scratch {
+        Scratch {
+            rows: vec![0.0; n * j],
+            new_row: vec![0.0; j],
+            c: vec![0.0; n * r],
+            d: vec![0.0; n * r],
+            pre: vec![0.0; (n + 1) * r],
+            suf: vec![0.0; (n + 1) * r],
+            db: vec![0.0; j],
+        }
+    }
+}
+
+/// Projections c^(n), exclusion products d^(n) and the prediction, from
+/// pre-gathered rows (the staged analog of the oracle's `forward`).
+fn forward_rows(data: &BlockData, s: &mut Scratch) -> f32 {
+    let (n, j, r) = (data.n, data.j, data.r);
+    for m in 0..n {
+        let row = &s.rows[m * j..(m + 1) * j];
+        let core = &data.cores[m];
+        let c = &mut s.c[m * r..(m + 1) * r];
+        c.fill(0.0);
+        for jj in 0..j {
+            let a = row[jj];
+            let brow = &core[jj * r..(jj + 1) * r];
+            for rr in 0..r {
+                c[rr] += a * brow[rr];
+            }
+        }
+    }
+    s.pre[..r].fill(1.0);
+    for m in 0..n {
+        for rr in 0..r {
+            s.pre[(m + 1) * r + rr] = s.pre[m * r + rr] * s.c[m * r + rr];
+        }
+    }
+    s.suf[n * r..(n + 1) * r].fill(1.0);
+    for m in (0..n).rev() {
+        for rr in 0..r {
+            s.suf[m * r + rr] = s.suf[(m + 1) * r + rr] * s.c[m * r + rr];
+        }
+    }
+    for m in 0..n {
+        for rr in 0..r {
+            s.d[m * r + rr] = s.pre[m * r + rr] * s.suf[(m + 1) * r + rr];
+        }
+    }
+    s.pre[n * r..(n + 1) * r].iter().sum()
+}
+
+#[inline]
+fn load_all_rows(shared: &SharedFactors<'_>, data: &BlockData, coords: &[u32], s: &mut Scratch) {
+    let j = data.j;
+    for m in 0..data.n {
+        shared.load_row(m, coords[m] as usize, &mut s.rows[m * j..(m + 1) * j]);
+    }
+}
+
+#[inline]
+fn db_from_core(core: &[f32], d: &[f32], j: usize, r: usize, db: &mut [f32]) {
+    for jj in 0..j {
+        let mut acc = 0.0f32;
+        let brow = &core[jj * r..(jj + 1) * r];
+        for rr in 0..r {
+            acc += d[rr] * brow[rr];
+        }
+        db[jj] = acc;
+    }
+}
+
+/// FastTuckerPlus (Alg. 3) factor step: update ALL factor rows of each
+/// sample simultaneously (Eq. 12).
+pub fn plus_factor_range(shared: &SharedFactors<'_>, data: &BlockData, range: Range<usize>) {
+    let (n, j, r) = (data.n, data.j, data.r);
+    let hp = data.hyper;
+    let mut s = Scratch::new(n, j, r);
+    for e in range {
+        let coords = data.entry_coords(e);
+        load_all_rows(shared, data, coords, &mut s);
+        let xhat = forward_rows(data, &mut s);
+        let err = data.values[e] - xhat;
+        for m in 0..n {
+            db_from_core(&data.cores[m], &s.d[m * r..(m + 1) * r], j, r, &mut s.db);
+            let row = &s.rows[m * j..(m + 1) * j];
+            for jj in 0..j {
+                s.new_row[jj] = row[jj] + hp.lr_a * (err * s.db[jj] - hp.lam_a * row[jj]);
+            }
+            shared.store_row(m, coords[m] as usize, &s.new_row);
+        }
+    }
+}
+
+/// FastTuckerPlus (Alg. 3) core step: accumulate `∂B^(n)` for every mode
+/// into `grad` (`[N, J, R]`), applied once per phase by the caller.
+pub fn plus_core_range(
+    shared: &SharedFactors<'_>,
+    data: &BlockData,
+    range: Range<usize>,
+    grad: &mut [f32],
+) {
+    let (n, j, r) = (data.n, data.j, data.r);
+    let mut s = Scratch::new(n, j, r);
+    for e in range {
+        let coords = data.entry_coords(e);
+        load_all_rows(shared, data, coords, &mut s);
+        let xhat = forward_rows(data, &mut s);
+        let err = data.values[e] - xhat;
+        for m in 0..n {
+            let row = &s.rows[m * j..(m + 1) * j];
+            let g = &mut grad[m * j * r..(m + 1) * j * r];
+            for jj in 0..j {
+                let ea = err * row[jj];
+                for rr in 0..r {
+                    g[jj * r + rr] += ea * s.d[m * r + rr];
+                }
+            }
+        }
+    }
+}
+
+/// FastTucker (Alg. 1) factor step for one mode: full forward, update only
+/// `a^(mode)` (Eq. 8).
+pub fn mode_factor_range(
+    shared: &SharedFactors<'_>,
+    data: &BlockData,
+    mode: usize,
+    range: Range<usize>,
+) {
+    let (n, j, r) = (data.n, data.j, data.r);
+    let hp = data.hyper;
+    let mut s = Scratch::new(n, j, r);
+    for e in range {
+        let coords = data.entry_coords(e);
+        load_all_rows(shared, data, coords, &mut s);
+        let xhat = forward_rows(data, &mut s);
+        let err = data.values[e] - xhat;
+        db_from_core(&data.cores[mode], &s.d[mode * r..(mode + 1) * r], j, r, &mut s.db);
+        let row = &s.rows[mode * j..(mode + 1) * j];
+        for jj in 0..j {
+            s.new_row[jj] = row[jj] + hp.lr_a * (err * s.db[jj] - hp.lam_a * row[jj]);
+        }
+        shared.store_row(mode, coords[mode] as usize, &s.new_row);
+    }
+}
+
+/// FastTucker (Alg. 1) core step for one mode: accumulate `∂B^(mode)` into
+/// `grad` (`[J, R]`), applied at pass end (Eq. 9).
+pub fn mode_core_range(
+    shared: &SharedFactors<'_>,
+    data: &BlockData,
+    mode: usize,
+    range: Range<usize>,
+    grad: &mut [f32],
+) {
+    let (n, j, r) = (data.n, data.j, data.r);
+    let mut s = Scratch::new(n, j, r);
+    for e in range {
+        let coords = data.entry_coords(e);
+        load_all_rows(shared, data, coords, &mut s);
+        let xhat = forward_rows(data, &mut s);
+        let err = data.values[e] - xhat;
+        let row = &s.rows[mode * j..(mode + 1) * j];
+        for jj in 0..j {
+            let ea = err * row[jj];
+            for rr in 0..r {
+                grad[jj * r + rr] += ea * s.d[mode * r + rr];
+            }
+        }
+    }
+}
+
+/// Exclusion product d from the stored projection tables (all modes except
+/// `mode`) for one entry.
+#[inline]
+fn stored_d(data: &BlockData, coords: &[u32], mode: usize, d: &mut [f32]) {
+    let r = data.r;
+    d.fill(1.0);
+    for m in 0..data.n {
+        if m == mode {
+            continue;
+        }
+        let row = coords[m] as usize;
+        let crow = &data.c_store[m][row * r..(row + 1) * r];
+        for rr in 0..r {
+            d[rr] *= crow[rr];
+        }
+    }
+}
+
+/// FasterTucker (Alg. 2) factor step for one mode (storage scheme): d from
+/// stored C rows, own projection recomputed from the live row.
+pub fn stored_factor_range(
+    shared: &SharedFactors<'_>,
+    data: &BlockData,
+    mode: usize,
+    range: Range<usize>,
+) {
+    let (j, r) = (data.j, data.r);
+    let hp = data.hyper;
+    let mut d = vec![0f32; r];
+    let mut c_own = vec![0f32; r];
+    let mut row = vec![0f32; j];
+    let mut new_row = vec![0f32; j];
+    let mut db = vec![0f32; j];
+    let core = &data.cores[mode];
+    for e in range {
+        let coords = data.entry_coords(e);
+        stored_d(data, coords, mode, &mut d);
+        shared.load_row(mode, coords[mode] as usize, &mut row);
+        c_own.fill(0.0);
+        for jj in 0..j {
+            let a = row[jj];
+            let brow = &core[jj * r..(jj + 1) * r];
+            for rr in 0..r {
+                c_own[rr] += a * brow[rr];
+            }
+        }
+        let xhat: f32 = (0..r).map(|rr| c_own[rr] * d[rr]).sum();
+        let err = data.values[e] - xhat;
+        db_from_core(core, &d, j, r, &mut db);
+        for jj in 0..j {
+            new_row[jj] = row[jj] + hp.lr_a * (err * db[jj] - hp.lam_a * row[jj]);
+        }
+        shared.store_row(mode, coords[mode] as usize, &new_row);
+    }
+}
+
+/// FasterTucker (Alg. 2) core step for one mode (storage scheme):
+/// prediction entirely from stored C rows, gradient into `grad` (`[J, R]`).
+pub fn stored_core_range(
+    shared: &SharedFactors<'_>,
+    data: &BlockData,
+    mode: usize,
+    range: Range<usize>,
+    grad: &mut [f32],
+) {
+    let (j, r) = (data.j, data.r);
+    let mut d = vec![0f32; r];
+    let mut row = vec![0f32; j];
+    for e in range {
+        let coords = data.entry_coords(e);
+        stored_d(data, coords, mode, &mut d);
+        let crow_lo = coords[mode] as usize * r;
+        let crow = &data.c_store[mode][crow_lo..crow_lo + r];
+        let xhat: f32 = (0..r).map(|rr| crow[rr] * d[rr]).sum();
+        let err = data.values[e] - xhat;
+        shared.load_row(mode, coords[mode] as usize, &mut row);
+        for jj in 0..j {
+            let ea = err * row[jj];
+            for rr in 0..r {
+                grad[jj * r + rr] += ea * d[rr];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TuckerModel;
+    use crate::synth::{generate, SynthConfig};
+    use crate::tensor::SparseTensor;
+
+    fn staged(t: &SparseTensor) -> (Vec<u32>, Vec<f32>) {
+        let mut coords = Vec::new();
+        let mut values = Vec::new();
+        for e in 0..t.nnz() {
+            coords.extend_from_slice(t.coords(e));
+            values.push(t.values[e]);
+        }
+        (coords, values)
+    }
+
+    /// The block step over one full-tensor "block" in entry order must match
+    /// the whole-pass oracle exactly (same math, same order).
+    #[test]
+    fn plus_factor_step_matches_oracle_pass() {
+        let t = generate(&SynthConfig::order_sweep(3, 24, 800, 3));
+        let hp = Hyper::default();
+        let mut a = TuckerModel::init(&t.dims, 16, 16, 9);
+        let mut b = a.clone();
+
+        let order: Vec<u32> = (0..t.nnz() as u32).collect();
+        super::super::plus_factor_pass(&mut a, &t, &order, hp);
+
+        let (coords, values) = staged(&t);
+        let cores = b.cores.clone();
+        {
+            let shared = SharedFactors::new(&mut b.factors, 16);
+            let data = BlockData {
+                cores: &cores,
+                c_store: &[],
+                coords: &coords,
+                values: &values,
+                n: 3,
+                j: 16,
+                r: 16,
+                hyper: hp,
+            };
+            plus_factor_range(&shared, &data, 0..t.nnz());
+        }
+        for m in 0..3 {
+            for (x, y) in a.factors[m].iter().zip(&b.factors[m]) {
+                assert!((x - y).abs() < 1e-6, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn plus_core_step_matches_oracle_pass() {
+        let t = generate(&SynthConfig::order_sweep(3, 24, 800, 5));
+        let hp = Hyper::default();
+        let mut a = TuckerModel::init(&t.dims, 16, 16, 11);
+        let mut b = a.clone();
+
+        let order: Vec<u32> = (0..t.nnz() as u32).collect();
+        super::super::plus_core_pass(&mut a, &t, &order, hp);
+
+        let (coords, values) = staged(&t);
+        let cores = b.cores.clone();
+        let mut grad = vec![0f32; 3 * 16 * 16];
+        {
+            let shared = SharedFactors::new(&mut b.factors, 16);
+            let data = BlockData {
+                cores: &cores,
+                c_store: &[],
+                coords: &coords,
+                values: &values,
+                n: 3,
+                j: 16,
+                r: 16,
+                hyper: hp,
+            };
+            plus_core_range(&shared, &data, 0..t.nnz(), &mut grad);
+        }
+        b.apply_core_grad(&grad, t.nnz(), hp.lr_b, hp.lam_b);
+        for m in 0..3 {
+            for (x, y) in a.cores[m].iter().zip(&b.cores[m]) {
+                assert!((x - y).abs() < 1e-6, "{x} vs {y}");
+            }
+        }
+    }
+}

@@ -8,14 +8,30 @@
 //!   MXU-shaped `[S,J]x[J,R]` matmuls), lowered once at build time.
 //! * **L2** — JAX step functions (`python/compile/model.py`) AOT-exported to
 //!   HLO text artifacts (`make artifacts`).
-//! * **L3** — this crate: the coordinator.  Sparse tensor substrate, the
-//!   three Table-3 sampling strategies, gather/scatter batch assembly, the
-//!   PJRT runtime that executes the artifacts, trainers for all three
-//!   algorithms (FastTucker / FasterTucker / FastTuckerPlus), analytic cost
-//!   models, benchmarks for every table and figure in the paper, and a CLI.
+//! * **L3** — this crate: the coordinator, itself layered as
+//!   `coordinator::trainer` (thin driver) → `coordinator::phases` (generic
+//!   factor/core phase logic) → `sampler::stream` (pipelined block
+//!   scheduler: sample/stage block *k+1* while block *k* executes) →
+//!   `coordinator::backend::StepBackend` (pluggable execution) →
+//!   `runtime::Engine` (PJRT) or `cpu_ref::step` (scalar kernels).
+//!
+//! Execution backends (`--backend` on the CLI, [`prelude::Backend`] in
+//! code):
+//!
+//! * `hlo` — compiled PJRT/HLO artifacts, the system under test;
+//! * `cpu` — the sequential scalar oracle;
+//! * `parallel` — Hogwild multi-threaded scalar engine: block slots
+//!   sharded across workers with lock-free scatter into the factor
+//!   matrices ([`model::SharedFactors`]).
+//!
+//! Supporting modules: sparse tensor substrate ([`tensor`]), the three
+//! Table-3 sampling strategies ([`sampler`]), model state + gather/scatter
+//! ([`model`]), analytic cost models ([`cost`]), the bench harness
+//! ([`bench`]), synthetic datasets ([`synth`]), and utilities ([`util`]).
+//! See `ARCHITECTURE.md` for the full layering diagram.
 //!
 //! Python never runs at decomposition time; the binary is self-contained
-//! once `artifacts/` exists.
+//! once `artifacts/` exists, and the CPU backends need no artifacts at all.
 //!
 //! ## Quick start
 //!
@@ -25,7 +41,8 @@
 //! let tensor = fasttucker::synth::generate(
 //!     &fasttucker::synth::SynthConfig::order_sweep(3, 64, 10_000, 1));
 //! let (train, test) = fasttucker::tensor::split::train_test_split(&tensor, 0.2, 1);
-//! let cfg = TrainConfig::default();
+//! let mut cfg = TrainConfig::default();
+//! cfg.backend = Backend::ParallelCpu; // no artifacts needed
 //! let mut trainer = Trainer::new(&train, cfg).unwrap();
 //! for epoch in 0..10 {
 //!     let stats = trainer.epoch(&train).unwrap();
@@ -46,7 +63,7 @@ pub mod tensor;
 pub mod util;
 
 pub mod prelude {
-    pub use crate::coordinator::config::{Algo, Strategy, TrainConfig, Variant};
+    pub use crate::coordinator::config::{Algo, Backend, Strategy, TrainConfig, Variant};
     pub use crate::coordinator::trainer::Trainer;
     pub use crate::model::TuckerModel;
     pub use crate::tensor::SparseTensor;

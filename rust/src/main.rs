@@ -35,9 +35,9 @@ fn usage() -> &'static str {
      synth --out FILE [--preset netflix|yahoo|order] [--order N] [--dim I]\n\
            [--nnz K] [--seed S]\n\
      train --data FILE [--algo plus|fasttucker|fastertucker] [--variant tc|cc]\n\
-           [--strategy calc|storage] [--backend hlo|cpu] [--epochs T]\n\
-           [--j J] [--r R] [--lr-a F] [--lr-b F] [--lam-a F] [--lam-b F]\n\
-           [--test-frac F] [--seed S] [--artifacts DIR] [--save FILE]\n\
+           [--strategy calc|storage] [--backend hlo|cpu|parallel] [--threads K]\n\
+           [--epochs T] [--j J] [--r R] [--lr-a F] [--lr-b F] [--lam-a F]\n\
+           [--lam-b F] [--test-frac F] [--seed S] [--artifacts DIR] [--save FILE]\n\
      cost  [--order N] [--j J] [--r R] [--m M] [--nnz K]\n\
      info  [--artifacts DIR]"
 }
@@ -101,8 +101,8 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     let a = Args::parse(
         argv,
         &[
-            "data", "algo", "variant", "strategy", "backend", "epochs", "j", "r", "lr-a",
-            "lr-b", "lam-a", "lam-b", "test-frac", "seed", "artifacts", "save", "toy",
+            "data", "algo", "variant", "strategy", "backend", "threads", "epochs", "j", "r",
+            "lr-a", "lr-b", "lam-a", "lam-b", "test-frac", "seed", "artifacts", "save", "toy",
         ],
         &["toy"],
     )
@@ -126,6 +126,7 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     if let Some(s) = a.get("backend") {
         cfg.backend = Backend::parse(s).with_context(|| format!("bad --backend {s}"))?;
     }
+    cfg.threads = a.get_parse("threads", cfg.threads).map_err(anyhow::Error::msg)?;
     cfg.j = a.get_parse("j", cfg.j).map_err(anyhow::Error::msg)?;
     cfg.r = a.get_parse("r", cfg.r).map_err(anyhow::Error::msg)?;
     cfg.seed = a.get_parse("seed", cfg.seed).map_err(anyhow::Error::msg)?;

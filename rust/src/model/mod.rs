@@ -6,6 +6,10 @@
 //! modes (the paper sets J_n = 16 for all n) and multiples of 16 to keep
 //! every matmul WMMA/MXU-tileable.
 
+pub mod shared;
+
+pub use shared::SharedFactors;
+
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
@@ -110,16 +114,16 @@ impl TuckerModel {
 
     /// Gather factor rows for a batch into `out` laid out `[N, S, J]`
     /// (mode-major), the layout the L1 kernels expect.  `coords` is the
-    /// entry-major COO index slab for the batch (`S x N`).  Rows beyond
-    /// `valid` are zeroed (inert padding — see `test_padding_rows_are_inert`
-    /// in the python suite).
+    /// entry-major COO index slab for the batch (full `[S, N]`, zero-padded
+    /// past `valid`).  Rows beyond `valid` are zeroed (inert padding — see
+    /// `test_padding_rows_are_inert` in the python suite).
     pub fn gather_batch(&self, coords: &[u32], valid: usize, out: &mut [f32]) {
         let n = self.order();
         let j = self.j;
         let s = out.len() / (n * j);
         debug_assert_eq!(out.len(), n * s * j);
         debug_assert!(valid <= s);
-        debug_assert_eq!(coords.len(), valid * n);
+        debug_assert!(coords.len() >= valid * n);
         for m in 0..n {
             let dst_mode = &mut out[m * s * j..(m + 1) * s * j];
             let fm = &self.factors[m];

@@ -1,0 +1,122 @@
+//! Sharded factor-matrix access for Hogwild-style parallel SGD.
+//!
+//! The paper's factor phase scatters updated rows from many warps into the
+//! factor matrices without synchronization — colliding writes are a benign
+//! race (§ Hogwild).  Rust forbids plain data races, so [`SharedFactors`]
+//! reinterprets each factor matrix as a slice of `AtomicU32` and performs
+//! per-element *relaxed* loads/stores of the f32 bit patterns: the same
+//! lock-free semantics (no ordering, last-writer-wins per element) with
+//! defined behavior.
+//!
+//! A single-threaded worker going through this view performs exactly the
+//! same arithmetic as direct `&mut` access, which is why the serial
+//! `CpuRef` backend and the `ParallelCpu` backend share one scalar step
+//! implementation (`cpu_ref::step`) and produce bit-identical trajectories
+//! at `workers = 1`.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use super::TuckerModel;
+
+/// Atomic view over a model's factor matrices, shareable across worker
+/// threads for the duration of a block execution.
+pub struct SharedFactors<'a> {
+    modes: Vec<&'a [AtomicU32]>,
+    j: usize,
+}
+
+/// Reinterpret an exclusively borrowed f32 slice as atomics.
+///
+/// Sound because `AtomicU32` has the same size, alignment and bit validity
+/// as `u32`/`f32`, and the `&mut` borrow guarantees no other non-atomic
+/// access for the view's lifetime.
+fn as_atomic(v: &mut [f32]) -> &[AtomicU32] {
+    unsafe { std::slice::from_raw_parts(v.as_mut_ptr() as *const AtomicU32, v.len()) }
+}
+
+impl<'a> SharedFactors<'a> {
+    /// Build the view from the factor matrices (one `I_n x J` slab per
+    /// mode).  Callers typically split-borrow `&mut model.factors` so the
+    /// cores stay readable alongside.
+    pub fn new(factors: &'a mut [Vec<f32>], j: usize) -> SharedFactors<'a> {
+        SharedFactors {
+            modes: factors.iter_mut().map(|f| as_atomic(f)).collect(),
+            j,
+        }
+    }
+
+    #[inline]
+    pub fn j(&self) -> usize {
+        self.j
+    }
+
+    /// Load row `i` of mode `mode` into `out` (length J).
+    #[inline]
+    pub fn load_row(&self, mode: usize, i: usize, out: &mut [f32]) {
+        let row = &self.modes[mode][i * self.j..(i + 1) * self.j];
+        for (o, a) in out.iter_mut().zip(row) {
+            *o = f32::from_bits(a.load(Ordering::Relaxed));
+        }
+    }
+
+    /// Store `row` (length J) into row `i` of mode `mode` — the lock-free
+    /// scatter: element-wise relaxed stores, last writer wins.
+    #[inline]
+    pub fn store_row(&self, mode: usize, i: usize, row: &[f32]) {
+        let dst = &self.modes[mode][i * self.j..(i + 1) * self.j];
+        for (a, &v) in dst.iter().zip(row) {
+            a.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_preserves_rows() {
+        let mut model = TuckerModel::init(&[8, 8], 16, 16, 3);
+        let before = model.factors[0][16..32].to_vec();
+        {
+            let shared = SharedFactors::new(&mut model.factors, 16);
+            let mut row = vec![0f32; 16];
+            shared.load_row(0, 1, &mut row);
+            assert_eq!(row, before);
+            for v in row.iter_mut() {
+                *v += 1.0;
+            }
+            shared.store_row(0, 1, &row);
+        }
+        for (a, b) in model.factors[0][16..32].iter().zip(&before) {
+            assert!((a - (b + 1.0)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn concurrent_disjoint_rows_are_exact() {
+        let mut model = TuckerModel::init(&[64, 8], 16, 16, 5);
+        let expect: Vec<Vec<f32>> = (0..64)
+            .map(|i| {
+                model.factors[0][i * 16..(i + 1) * 16]
+                    .iter()
+                    .map(|v| v * 2.0)
+                    .collect()
+            })
+            .collect();
+        {
+            let shared = &SharedFactors::new(&mut model.factors, 16);
+            crate::util::pool::parallel_items(64, 4, |i| {
+                let mut row = vec![0f32; 16];
+                shared.load_row(0, i, &mut row);
+                for v in row.iter_mut() {
+                    *v *= 2.0;
+                }
+                shared.store_row(0, i, &row);
+            });
+        }
+        for (i, want) in expect.iter().enumerate() {
+            assert_eq!(&model.factors[0][i * 16..(i + 1) * 16], &want[..]);
+        }
+    }
+}

@@ -14,9 +14,18 @@
 //!   (Ω^(n)_{i_1,..,i_{n-1},i_{n+1},..}); real fibers are mostly much
 //!   shorter than 16, so padding waste is large — exactly the effect the
 //!   paper describes ("most Ω contain fewer than M elements").
+//!
+//! The training hot path does not materialize eager `Vec<Block>` lists any
+//! more: [`stream::BlockIter`] generates blocks lazily and
+//! [`stream::StagedStream`] double-buffers their staging on a producer
+//! thread (gather block *k+1* while block *k* executes).  The eager
+//! functions below remain as thin `collect()`s for benches and tests.
+
+pub mod stream;
+
+pub use stream::{stage, BlockIter, StagedBlock, StagedStream};
 
 use crate::tensor::{FiberIndex, ModeSliceIndex, SparseTensor};
-use crate::util::rng::Pcg32;
 
 /// Padding slot marker.
 pub const PAD: u32 = u32::MAX;
@@ -50,65 +59,20 @@ impl Block {
 }
 
 /// FastTuckerPlus sampling: shuffled full pass over Ω in blocks of `s`.
+/// (Eager wrapper over [`BlockIter::uniform`] — benches and tests use it;
+/// the trainer streams through [`StagedStream`] instead.)
 pub fn uniform_blocks(t: &SparseTensor, s: usize, seed: u64, epoch: u64) -> Vec<Block> {
-    let mut rng = Pcg32::new(seed, 0x0731 ^ epoch);
-    let mut ids: Vec<u32> = (0..t.nnz() as u32).collect();
-    rng.shuffle(&mut ids);
-    ids.chunks(s)
-        .map(|chunk| {
-            let mut b = Block::new(s);
-            b.ids.extend_from_slice(chunk);
-            b.seal(s)
-        })
-        .collect()
-}
-
-/// Pack variable-length groups into blocks: each group is cut into 16-slot
-/// warps (last warp of a group padded), warps concatenated into blocks of
-/// `s`.  `groups` supplies (start, end) ranges into `entries`.
-fn pack_grouped(entries: &[u32], offsets: &[u32], s: usize, rng: &mut Pcg32) -> Vec<Block> {
-    debug_assert!(s % WARP_M == 0);
-    let n_groups = offsets.len() - 1;
-    let mut order: Vec<u32> = (0..n_groups as u32).collect();
-    rng.shuffle(&mut order);
-    let mut blocks = Vec::new();
-    let mut cur = Block::new(s);
-    for &g in &order {
-        let lo = offsets[g as usize] as usize;
-        let hi = offsets[g as usize + 1] as usize;
-        if lo == hi {
-            continue;
-        }
-        for warp in entries[lo..hi].chunks(WARP_M) {
-            if cur.ids.len() + WARP_M > s {
-                blocks.push(std::mem::replace(&mut cur, Block::new(s)).seal(s));
-            }
-            cur.ids.extend_from_slice(warp);
-            // pad the warp tail so the next group starts on a warp boundary
-            cur.ids.resize(cur.ids.len().div_ceil(WARP_M) * WARP_M, PAD);
-        }
-    }
-    if !cur.ids.is_empty() {
-        blocks.push(cur.seal(s));
-    }
-    blocks
+    BlockIter::uniform(t, s, seed, epoch).collect_blocks()
 }
 
 /// FastTucker sampling for `mode`: warp groups share the mode index.
-pub fn mode_slice_blocks(
-    idx: &ModeSliceIndex,
-    s: usize,
-    seed: u64,
-    epoch: u64,
-) -> Vec<Block> {
-    let mut rng = Pcg32::new(seed, 0x517C_E ^ (epoch << 8) ^ idx.mode as u64);
-    pack_grouped(&idx.entries, &idx.offsets, s, &mut rng)
+pub fn mode_slice_blocks(idx: &ModeSliceIndex, s: usize, seed: u64, epoch: u64) -> Vec<Block> {
+    BlockIter::mode_slice(idx, s, seed, epoch).collect_blocks()
 }
 
 /// FasterTucker sampling for `mode`: warp groups are fibers.
 pub fn fiber_blocks(idx: &FiberIndex, s: usize, seed: u64, epoch: u64) -> Vec<Block> {
-    let mut rng = Pcg32::new(seed, 0xF1BE_12 ^ (epoch << 8) ^ idx.mode as u64);
-    pack_grouped(&idx.entries, &idx.offsets, s, &mut rng)
+    BlockIter::fiber(idx, s, seed, epoch).collect_blocks()
 }
 
 /// FasterTuckerCOO sampling: fibers in shuffled order but packed *densely*
@@ -116,24 +80,7 @@ pub fn fiber_blocks(idx: &FiberIndex, s: usize, seed: u64, epoch: u64) -> Vec<Bl
 /// the shared-intermediate reuse for full occupancy.  Blocks are always full
 /// except the last.
 pub fn fiber_blocks_coo(idx: &FiberIndex, s: usize, seed: u64, epoch: u64) -> Vec<Block> {
-    let mut rng = Pcg32::new(seed, 0xF1BE_C0 ^ (epoch << 8) ^ idx.mode as u64);
-    let n_groups = idx.num_fibers();
-    let mut order: Vec<u32> = (0..n_groups as u32).collect();
-    rng.shuffle(&mut order);
-    let mut blocks = Vec::new();
-    let mut cur = Block::new(s);
-    for &g in &order {
-        for &e in idx.fiber(g as usize) {
-            if cur.ids.len() == s {
-                blocks.push(std::mem::replace(&mut cur, Block::new(s)).seal(s));
-            }
-            cur.ids.push(e);
-        }
-    }
-    if !cur.ids.is_empty() {
-        blocks.push(cur.seal(s));
-    }
-    blocks
+    BlockIter::fiber_coo(idx, s, seed, epoch).collect_blocks()
 }
 
 /// Padding overhead of a block list: padded slots / total slots.  This is

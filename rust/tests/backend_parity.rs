@@ -1,0 +1,199 @@
+//! Cross-backend and scheduler-parity tests for the refactored execution
+//! stack: streaming scheduler vs eager block lists, `ParallelCpu` vs
+//! `CpuRef` trajectories, multi-threaded convergence, and the tensor
+//! fingerprint guard.  All CPU-only — no artifacts required.
+
+use fasttucker::coordinator::{tensor_fingerprint, Algo, Backend, TrainConfig, Trainer};
+use fasttucker::sampler::{self, BlockIter};
+use fasttucker::synth::{generate, SynthConfig};
+use fasttucker::tensor::split::train_test_split;
+use fasttucker::tensor::{FiberIndex, ModeSliceIndex, SparseTensor};
+
+fn assert_blocks_eq(eager: &[sampler::Block], lazy: &[sampler::Block], what: &str) {
+    assert_eq!(eager.len(), lazy.len(), "{what}: block count");
+    for (i, (a, b)) in eager.iter().zip(lazy).enumerate() {
+        assert_eq!(a.ids, b.ids, "{what}: block {i} ids");
+        assert_eq!(a.valid, b.valid, "{what}: block {i} valid");
+    }
+}
+
+/// The streaming scheduler and the eager samplers must agree exactly for a
+/// fixed seed, for every strategy.
+#[test]
+fn streaming_scheduler_matches_eager_blocks() {
+    let t = generate(&SynthConfig::order_sweep(3, 40, 2_500, 31));
+    for (s, seed, epoch) in [(128usize, 1u64, 0u64), (256, 9, 3)] {
+        assert_blocks_eq(
+            &sampler::uniform_blocks(&t, s, seed, epoch),
+            &BlockIter::uniform(&t, s, seed, epoch).collect_blocks(),
+            "uniform",
+        );
+        for mode in 0..t.order() {
+            let sidx = ModeSliceIndex::build(&t, mode);
+            assert_blocks_eq(
+                &sampler::mode_slice_blocks(&sidx, s, seed, epoch),
+                &BlockIter::mode_slice(&sidx, s, seed, epoch).collect_blocks(),
+                "mode_slice",
+            );
+            let fidx = FiberIndex::build(&t, mode);
+            assert_blocks_eq(
+                &sampler::fiber_blocks(&fidx, s, seed, epoch),
+                &BlockIter::fiber(&fidx, s, seed, epoch).collect_blocks(),
+                "fiber",
+            );
+            assert_blocks_eq(
+                &sampler::fiber_blocks_coo(&fidx, s, seed, epoch),
+                &BlockIter::fiber_coo(&fidx, s, seed, epoch).collect_blocks(),
+                "fiber_coo",
+            );
+        }
+    }
+}
+
+/// `ParallelCpu` with one worker runs the identical scalar code path as
+/// `CpuRef`, so RMSE trajectories must match to f32 tolerance.
+#[test]
+fn parallel_cpu_one_thread_matches_cpu_ref() {
+    let tensor = generate(&SynthConfig::order_sweep(3, 32, 4_000, 17));
+    let (train, test) = train_test_split(&tensor, 0.2, 17);
+    for algo in [Algo::Plus, Algo::FastTucker, Algo::FasterTucker] {
+        let mut curves: Vec<Vec<f64>> = Vec::new();
+        for backend in [Backend::CpuRef, Backend::ParallelCpu] {
+            let mut cfg = TrainConfig::default();
+            cfg.backend = backend;
+            cfg.algo = algo;
+            cfg.threads = 1;
+            let mut tr = Trainer::new(&train, cfg).unwrap();
+            let mut curve = Vec::new();
+            for _ in 0..4 {
+                tr.epoch(&train).unwrap();
+                let (rmse, _) = tr.evaluate(&test).unwrap();
+                curve.push(rmse);
+            }
+            curves.push(curve);
+        }
+        for (a, b) in curves[0].iter().zip(&curves[1]) {
+            assert!(
+                (a - b).abs() < 1e-5 * (1.0 + a.abs()),
+                "{algo:?}: cpu_ref {a} vs parallel_cpu(1) {b}"
+            );
+        }
+    }
+}
+
+/// The paper's Hogwild claim, reproduced: the parallel backend with ≥2
+/// workers converges on the quickstart synthetic tensor.
+#[test]
+fn parallel_cpu_multithreaded_converges() {
+    let tensor = generate(&SynthConfig::netflix_like(30_000, 7));
+    let (train, test) = train_test_split(&tensor, 0.2, 7);
+    let mut cfg = TrainConfig::default();
+    cfg.backend = Backend::ParallelCpu;
+    cfg.threads = 4;
+    let mut tr = Trainer::new(&train, cfg).unwrap();
+    assert!(tr.platform().contains("parallel_cpu"));
+    let (rmse0, _) = tr.evaluate(&test).unwrap();
+    let mut last = rmse0;
+    for _ in 0..10 {
+        tr.epoch(&train).unwrap();
+        let (rmse, _) = tr.evaluate(&test).unwrap();
+        last = rmse;
+    }
+    assert!(
+        last < rmse0 * 0.9 && last.is_finite(),
+        "no convergence under Hogwild: {rmse0} -> {last}"
+    );
+    assert!(tr.model.param_norm().is_finite());
+}
+
+/// Every algorithm must also converge through the parallel backend (the
+/// per-mode schedules shard blocks too).
+#[test]
+fn all_algorithms_converge_parallel_cpu() {
+    let tensor = generate(&SynthConfig::order_sweep(3, 32, 3_000, 9));
+    let (train, test) = train_test_split(&tensor, 0.2, 9);
+    for algo in [Algo::Plus, Algo::FastTucker, Algo::FasterTucker, Algo::FasterTuckerCoo] {
+        let mut cfg = TrainConfig::default();
+        cfg.backend = Backend::ParallelCpu;
+        cfg.threads = 3;
+        cfg.algo = algo;
+        let mut tr = Trainer::new(&train, cfg).unwrap();
+        let (rmse0, _) = tr.evaluate(&test).unwrap();
+        for _ in 0..8 {
+            tr.epoch(&train).unwrap();
+        }
+        let (rmse1, _) = tr.evaluate(&test).unwrap();
+        assert!(rmse1 < rmse0, "{algo:?}: {rmse0} -> {rmse1}");
+    }
+}
+
+/// The fingerprint guard must reject a *different* tensor even when the
+/// dims and nnz match exactly (the old nnz-only check accepted this).
+#[test]
+fn fingerprint_rejects_same_size_tensor() {
+    // identical dims and nnz, different values — the old nnz-only check
+    // could not tell these apart
+    let mut a = SparseTensor::new(vec![16, 16, 16]);
+    let mut b = SparseTensor::new(vec![16, 16, 16]);
+    for e in 0..200u32 {
+        let c = [e % 16, (e / 3) % 16, (e / 7) % 16];
+        a.push(&c, 1.0 + (e % 5) as f32);
+        b.push(&c, 5.0 - (e % 5) as f32);
+    }
+    a.sort_dedup();
+    b.sort_dedup();
+    assert_eq!(a.nnz(), b.nnz());
+    assert_eq!(a.dims, b.dims);
+    assert_ne!(tensor_fingerprint(&a), tensor_fingerprint(&b));
+
+    let mut cfg = TrainConfig::default();
+    cfg.backend = Backend::CpuRef;
+    let mut tr = Trainer::new(&a, cfg).unwrap();
+    assert!(tr.epoch(&b).is_err(), "same-size impostor accepted");
+    assert!(tr.epoch(&a).is_ok());
+}
+
+/// Fingerprint sanity: stable for the same tensor, sensitive to a value
+/// edit at either end.
+#[test]
+fn fingerprint_is_stable_and_sensitive() {
+    let t = generate(&SynthConfig::order_sweep(3, 24, 500, 5));
+    assert_eq!(tensor_fingerprint(&t), tensor_fingerprint(&t.clone()));
+    let mut edited = t.clone();
+    let last = edited.nnz() - 1;
+    edited.values[last] += 1.0;
+    assert_ne!(tensor_fingerprint(&t), tensor_fingerprint(&edited));
+}
+
+/// Regression: the guard still rejects a different-nnz tensor (the old
+/// behavior) through the public API.
+#[test]
+fn fingerprint_rejects_different_nnz() {
+    let a = generate(&SynthConfig::order_sweep(3, 32, 1_000, 1));
+    let b = generate(&SynthConfig::order_sweep(3, 32, 2_000, 1));
+    let mut cfg = TrainConfig::default();
+    cfg.backend = Backend::ParallelCpu;
+    cfg.threads = 2;
+    let mut tr = Trainer::new(&a, cfg).unwrap();
+    assert!(tr.epoch(&b).is_err());
+}
+
+/// Staged blocks must carry full `[S, N]` coordinate slabs with defined
+/// padding (satellite of the scheduler refactor).
+#[test]
+fn staged_blocks_have_full_defined_slabs() {
+    let t: SparseTensor = generate(&SynthConfig::order_sweep(4, 16, 700, 3));
+    let n = t.order();
+    let mut it = BlockIter::uniform(&t, 64, 2, 1);
+    let mut blocks = 0;
+    while let Some(b) = it.next_block() {
+        let staged = sampler::stage(&t, &b);
+        assert_eq!(staged.coords.len(), 64 * n);
+        assert_eq!(staged.values.len(), 64);
+        for e in staged.valid..64 {
+            assert!(staged.coords[e * n..(e + 1) * n].iter().all(|&c| c == 0));
+        }
+        blocks += 1;
+    }
+    assert!(blocks > 0);
+}

@@ -104,6 +104,32 @@ fn prop_fiber_index_partitions_and_groups() {
 }
 
 #[test]
+fn prop_streaming_scheduler_matches_eager() {
+    forall(8, |rng| {
+        let t = random_tensor(rng);
+        let s = [64usize, 128, 256][rng.gen_index(3)];
+        let seed = rng.next_u64();
+        let epoch = rng.next_u64();
+        let eager = sampler::uniform_blocks(&t, s, seed, epoch);
+        let lazy = sampler::BlockIter::uniform(&t, s, seed, epoch).collect_blocks();
+        assert_eq!(eager.len(), lazy.len());
+        for (a, b) in eager.iter().zip(&lazy) {
+            assert_eq!(a.ids, b.ids);
+            assert_eq!(a.valid, b.valid);
+        }
+        // grouped strategies too: warp-aligned packing must be identical
+        let mode = rng.gen_index(t.order());
+        let idx = ModeSliceIndex::build(&t, mode);
+        let eager = sampler::mode_slice_blocks(&idx, s, seed, epoch);
+        let lazy = sampler::BlockIter::mode_slice(&idx, s, seed, epoch).collect_blocks();
+        assert_eq!(eager.len(), lazy.len());
+        for (a, b) in eager.iter().zip(&lazy) {
+            assert_eq!(a.ids, b.ids);
+        }
+    });
+}
+
+#[test]
 fn prop_gather_scatter_identity() {
     forall(8, |rng| {
         let order = 3 + rng.gen_index(3);
