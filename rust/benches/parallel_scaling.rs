@@ -1,11 +1,16 @@
-//! ParallelCpu vs CpuRef — epoch-time scaling of the Hogwild backend.
+//! ParallelCpu vs CpuRef — epoch-time scaling of the Hogwild backend, plus
+//! the tiled-vs-scalar CPU kernel comparison.
 //!
 //! The paper's core systems claim is that the two-phase SGD parallelizes
 //! with negligible coordination; this bench measures the Rust analog:
-//! per-epoch (factor + core) wall time of the scalar path at 1 thread
+//! per-epoch (factor + core) wall time of the CPU path at 1 thread
 //! (`CpuRef`) vs the Hogwild block-sharded backend at increasing worker
-//! counts, on the Netflix-like surrogate.  Reported rows include the
-//! speedup vs the serial baseline.
+//! counts, on the Netflix-like surrogate.  The serial configuration is
+//! measured twice — once with the scalar reference kernels
+//! (`--cpu-kernel scalar`) and once with the tiled microkernels (the
+//! default) — so the table shows both the microkernel speedup and the
+//! thread scaling on top of it.  Reported rows include the speedup vs the
+//! scalar serial baseline.
 //!
 //! Run: `cargo bench --bench parallel_scaling` (BENCH_QUICK=1 shrinks it).
 //! Record the printed table in ARCHITECTURE.md §Bench notes when hardware
@@ -13,6 +18,7 @@
 
 use fasttucker::bench::{bench_phases, report, Row};
 use fasttucker::coordinator::{Backend, TrainConfig};
+use fasttucker::kernel::KernelPolicy;
 use fasttucker::synth::{generate, SynthConfig};
 use fasttucker::util::pool;
 
@@ -24,6 +30,10 @@ fn main() -> anyhow::Result<()> {
     let mut rows: Vec<Row> = Vec::new();
     let mut cfg = TrainConfig::default();
     cfg.backend = Backend::CpuRef;
+    cfg.cpu_kernel = KernelPolicy::Scalar;
+    rows.extend(bench_phases("cpu_scalar", &train, cfg.clone(), warmup, reps)?);
+
+    cfg.cpu_kernel = KernelPolicy::Tiled;
     rows.extend(bench_phases("cpu_ref", &train, cfg.clone(), warmup, reps)?);
 
     let max_threads = pool::default_threads();
@@ -36,11 +46,11 @@ fn main() -> anyhow::Result<()> {
         threads *= 2;
     }
 
-    // speedup vs the serial scalar baseline, per phase
+    // speedup vs the scalar serial baseline, per phase
     for phase in ["factor", "core"] {
         let base = rows
             .iter()
-            .find(|r| r.label == format!("cpu_ref/{phase}"))
+            .find(|r| r.label == format!("cpu_scalar/{phase}"))
             .map(|r| r.median_s)
             .unwrap_or(f64::NAN);
         let updates: Vec<(String, f64)> = rows
@@ -50,7 +60,7 @@ fn main() -> anyhow::Result<()> {
             .collect();
         for (label, speedup) in updates {
             if let Some(r) = rows.iter_mut().find(|r| r.label == label) {
-                r.extra.push(("speedup_vs_serial".into(), speedup));
+                r.extra.push(("speedup_vs_scalar_serial".into(), speedup));
             }
         }
     }

@@ -13,15 +13,20 @@ use crate::util::json::{self, Json};
 /// One measurement row.
 #[derive(Clone, Debug)]
 pub struct Row {
+    /// Case label (`<config>/<phase>` for phase rows).
     pub label: String,
+    /// Median wall time in seconds.
     pub median_s: f64,
+    /// Median absolute deviation in seconds.
     pub mad_s: f64,
+    /// Timed repetitions behind the median.
     pub reps: usize,
     /// free-form extras (speedup columns, padding ratios, ...)
     pub extra: Vec<(String, f64)>,
 }
 
 impl Row {
+    /// Serialize for the `BENCH_JSON` scrape lines.
     pub fn to_json(&self) -> Json {
         let mut pairs = vec![
             ("label", json::s(&self.label)),

@@ -26,6 +26,7 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::config::{Algo, Backend, Strategy, TrainConfig};
 use crate::coordinator::metrics::{time_into, PhaseStats};
 use crate::cpu_ref::{self, step, Hyper};
+use crate::kernel::{self, InvariantPolicy, KernelCfg};
 use crate::model::{SharedFactors, TuckerModel};
 use crate::runtime::{Engine, Executable};
 use crate::sampler::StagedBlock;
@@ -35,7 +36,9 @@ use crate::util::pool;
 /// Which half of the paper's two-phase iteration is running.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Phase {
+    /// Factor-matrix update phase (the A^(n) updates).
     Factor,
+    /// Core-matrix update phase (the B^(n) gradient accumulation).
     Core,
 }
 
@@ -44,12 +47,16 @@ pub enum Phase {
 /// `grad`; the phase driver counts samples and applies once at pass end
 /// (the paper's accumulate-then-atomicAdd schedule).
 pub struct CoreAccum {
+    /// Accumulated gradient slab (`[N, J, R]` or `[J, R]`, see `mode`).
     pub grad: Vec<f32>,
+    /// Samples accumulated so far (the gradient is averaged on apply).
     pub count: usize,
+    /// `None` for the all-modes schedule, `Some(m)` for a per-mode pass.
     pub mode: Option<usize>,
 }
 
 impl CoreAccum {
+    /// Zeroed accumulator sized for `model` and the pass schedule.
     pub fn new(model: &TuckerModel, mode: Option<usize>) -> CoreAccum {
         let sz = match mode {
             None => model.order() * model.j * model.r,
@@ -536,7 +543,7 @@ impl StepBackend for HloBackend {
 }
 
 // ======================================================================
-// Scalar CPU backend (serial oracle + Hogwild-parallel)
+// CPU backend (tiled kernels; serial + Hogwild-parallel)
 // ======================================================================
 
 /// Block slot count for the CPU backends (multiple of the warp size; large
@@ -544,68 +551,48 @@ impl StepBackend for HloBackend {
 /// that the streaming scheduler's double buffer keeps both stages busy).
 pub const CPU_BLOCK_S: usize = 8192;
 
-/// Scalar block executor.  `workers = 1` reproduces the sequential
-/// `cpu_ref` semantics exactly; `workers > 1` shards each block's valid
-/// slots across scoped threads with Hogwild scatter through
-/// [`SharedFactors`].
+/// Block executor over the tiled CPU kernels ([`crate::kernel`]).
+/// `workers = 1` reproduces the sequential `cpu_ref` semantics exactly;
+/// `workers > 1` shards each block's valid slots across scoped threads with
+/// Hogwild scatter through [`SharedFactors`].
+///
+/// The kernel configuration comes from the run config: `cpu_kernel`
+/// selects tiled microkernels vs the scalar oracle, and the Table-9
+/// `strategy` knob maps onto the [`InvariantPolicy`] of the storage-scheme
+/// kernels (`calculation` → recompute per sample, `storage` → cache per
+/// fiber).
 pub struct CpuBackend {
     algo: Algo,
     hyper: Hyper,
     workers: usize,
+    kernel: KernelCfg,
     /// Stored projection tables (FasterTucker-family only), refreshed per
     /// pass in `begin_pass`.
     c_store: Vec<Vec<f32>>,
 }
 
 impl CpuBackend {
+    /// Build a CPU backend with `workers` Hogwild threads (1 = the serial
+    /// CpuRef oracle).
     pub fn new(cfg: &TrainConfig, workers: usize) -> CpuBackend {
+        let invariant = match cfg.strategy {
+            Strategy::Calculation => InvariantPolicy::Recompute,
+            Strategy::Storage => InvariantPolicy::CachePerFiber,
+        };
         CpuBackend {
             algo: cfg.algo,
             hyper: cfg.hyper,
             workers: workers.max(1),
+            kernel: KernelCfg {
+                policy: cfg.cpu_kernel,
+                invariant,
+            },
             c_store: Vec::new(),
         }
     }
 
     fn uses_c_store(&self) -> bool {
         matches!(self.algo, Algo::FasterTucker | Algo::FasterTuckerCoo)
-    }
-}
-
-/// Dispatch one factor-step range to the algorithm's scalar kernel.
-fn factor_step(
-    algo: Algo,
-    mode: Option<usize>,
-    shared: &SharedFactors<'_>,
-    data: &step::BlockData<'_>,
-    range: std::ops::Range<usize>,
-) {
-    match (algo, mode) {
-        (Algo::Plus, None) => step::plus_factor_range(shared, data, range),
-        (Algo::FastTucker, Some(m)) => step::mode_factor_range(shared, data, m, range),
-        (Algo::FasterTucker | Algo::FasterTuckerCoo, Some(m)) => {
-            step::stored_factor_range(shared, data, m, range)
-        }
-        _ => unreachable!("algo/pass schedule mismatch"),
-    }
-}
-
-/// Dispatch one core-step range to the algorithm's scalar kernel.
-fn core_step(
-    algo: Algo,
-    mode: Option<usize>,
-    shared: &SharedFactors<'_>,
-    data: &step::BlockData<'_>,
-    range: std::ops::Range<usize>,
-    grad: &mut [f32],
-) {
-    match (algo, mode) {
-        (Algo::Plus, None) => step::plus_core_range(shared, data, range, grad),
-        (Algo::FastTucker, Some(m)) => step::mode_core_range(shared, data, m, range, grad),
-        (Algo::FasterTucker | Algo::FasterTuckerCoo, Some(m)) => {
-            step::stored_core_range(shared, data, m, range, grad)
-        }
-        _ => unreachable!("algo/pass schedule mismatch"),
     }
 }
 
@@ -654,6 +641,7 @@ impl StepBackend for CpuBackend {
         }
         let (n, j, r) = (model.order(), model.j, model.r);
         let (algo, hyper, workers) = (self.algo, self.hyper, self.workers.min(block.valid));
+        let kcfg = self.kernel;
         time_into(&mut st.exec, || {
             let (factors, cores) = (&mut model.factors, &model.cores);
             let shared = SharedFactors::new(factors, j);
@@ -661,6 +649,7 @@ impl StepBackend for CpuBackend {
                 cores,
                 c_store: &self.c_store,
                 coords: &block.coords,
+                lanes: &block.lanes,
                 values: &block.values,
                 n,
                 j,
@@ -668,10 +657,10 @@ impl StepBackend for CpuBackend {
                 hyper,
             };
             if workers <= 1 {
-                factor_step(algo, mode, &shared, &data, 0..block.valid);
+                kernel::run_factor_range(algo, mode, &shared, &data, 0..block.valid, kcfg);
             } else {
                 pool::parallel_chunks(block.valid, workers, |range| {
-                    factor_step(algo, mode, &shared, &data, range);
+                    kernel::run_factor_range(algo, mode, &shared, &data, range, kcfg);
                 });
             }
         });
@@ -691,6 +680,7 @@ impl StepBackend for CpuBackend {
         }
         let (n, j, r) = (model.order(), model.j, model.r);
         let (algo, hyper, workers) = (self.algo, self.hyper, self.workers.min(block.valid));
+        let kcfg = self.kernel;
         let glen = acc.grad.len();
         time_into(&mut st.exec, || {
             let (factors, cores) = (&mut model.factors, &model.cores);
@@ -699,6 +689,7 @@ impl StepBackend for CpuBackend {
                 cores,
                 c_store: &self.c_store,
                 coords: &block.coords,
+                lanes: &block.lanes,
                 values: &block.values,
                 n,
                 j,
@@ -706,12 +697,13 @@ impl StepBackend for CpuBackend {
                 hyper,
             };
             if workers <= 1 {
-                core_step(algo, mode, &shared, &data, 0..block.valid, &mut acc.grad);
+                let range = 0..block.valid;
+                kernel::run_core_range(algo, mode, &shared, &data, range, &mut acc.grad, kcfg);
             } else {
                 let partials = std::sync::Mutex::new(Vec::with_capacity(workers));
                 pool::parallel_chunks(block.valid, workers, |range| {
                     let mut g = vec![0f32; glen];
-                    core_step(algo, mode, &shared, &data, range, &mut g);
+                    kernel::run_core_range(algo, mode, &shared, &data, range, &mut g, kcfg);
                     partials.lock().unwrap().push(g);
                 });
                 for g in partials.into_inner().unwrap() {

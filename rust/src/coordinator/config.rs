@@ -3,6 +3,7 @@
 use std::path::PathBuf;
 
 use crate::cpu_ref::Hyper;
+use crate::kernel::KernelPolicy;
 
 /// Which decomposition algorithm to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -21,6 +22,8 @@ pub enum Algo {
 }
 
 impl Algo {
+    /// Parse a CLI value (`plus`, `fasttucker`, `fastertucker`,
+    /// `fastertuckercoo`).
     pub fn parse(s: &str) -> Option<Algo> {
         match s {
             "fasttucker" => Some(Algo::FastTucker),
@@ -31,6 +34,7 @@ impl Algo {
         }
     }
 
+    /// Canonical CLI name.
     pub fn name(self) -> &'static str {
         match self {
             Algo::FastTucker => "fasttucker",
@@ -40,6 +44,7 @@ impl Algo {
         }
     }
 
+    /// The corresponding row of the Table-4 analytic cost model.
     pub fn cost_algo(self) -> crate::cost::Algo {
         match self {
             Algo::FastTucker => crate::cost::Algo::FastTucker,
@@ -53,11 +58,14 @@ impl Algo {
 /// VPU/elementwise (the CUDA-Core analog).  See DESIGN.md §Hardware-Adaptation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Variant {
+    /// Tensor-Core analog: matmul-shaped L1 kernels on the MXU.
     Tc,
+    /// CUDA-Core analog: elementwise/vector L1 kernels on the VPU.
     Cc,
 }
 
 impl Variant {
+    /// Parse a CLI value (`tc` / `cc`).
     pub fn parse(s: &str) -> Option<Variant> {
         match s {
             "tc" => Some(Variant::Tc),
@@ -66,6 +74,7 @@ impl Variant {
         }
     }
 
+    /// Artifact-name suffix for this variant.
     pub fn suffix(self) -> &'static str {
         match self {
             Variant::Tc => "tc",
@@ -75,14 +84,19 @@ impl Variant {
 }
 
 /// C^(n) handling for FastTuckerPlus (§5.6): recompute per batch on the
-/// matrix unit, or precompute + read rows.
+/// matrix unit, or precompute + read rows.  On the CPU backends the same
+/// knob selects the [`crate::kernel::InvariantPolicy`] of the
+/// storage-scheme kernels.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Strategy {
+    /// Recompute projections per batch — "computation instead of storage".
     Calculation,
+    /// Precompute the C^(n) tables and read rows back per batch.
     Storage,
 }
 
 impl Strategy {
+    /// Parse a CLI value (`calc`/`calculation` or `store`/`storage`).
     pub fn parse(s: &str) -> Option<Strategy> {
         match s {
             "calculation" | "calc" => Some(Strategy::Calculation),
@@ -97,12 +111,16 @@ impl Strategy {
 /// multi-threaded CPU engine (the paper's per-thread FMA path, parallel).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {
+    /// Compiled PJRT/HLO artifacts (the L1/L2 kernels).
     Hlo,
+    /// Single-threaded CPU kernels — the sequential reference.
     CpuRef,
+    /// Multi-threaded Hogwild CPU engine (`--threads K`).
     ParallelCpu,
 }
 
 impl Backend {
+    /// Parse a CLI value (`hlo`, `cpu`, `parallel`, and aliases).
     pub fn parse(s: &str) -> Option<Backend> {
         match s {
             "hlo" => Some(Backend::Hlo),
@@ -114,6 +132,7 @@ impl Backend {
         }
     }
 
+    /// Canonical CLI name.
     pub fn name(self) -> &'static str {
         match self {
             Backend::Hlo => "hlo",
@@ -126,18 +145,31 @@ impl Backend {
 /// Full trainer configuration.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
+    /// Decomposition algorithm (Table-3 sampling strategy follows from it).
     pub algo: Algo,
+    /// L1 kernel variant for the HLO backend (Tensor-Core vs CUDA-Core
+    /// analog).
     pub variant: Variant,
+    /// Calculation-vs-storage handling of the projection tables (§5.6).
     pub strategy: Strategy,
+    /// Execution backend.
     pub backend: Backend,
+    /// Factor rank J (uniform across modes, multiple of 16).
     pub j: usize,
+    /// Kruskal rank R (multiple of 16).
     pub r: usize,
+    /// SGD learning rates and regularization.
     pub hyper: Hyper,
+    /// Run seed (model init, sampling shuffles, splits).
     pub seed: u64,
+    /// Directory holding the compiled HLO artifacts + manifest.
     pub artifact_dir: PathBuf,
     /// Worker threads for the `ParallelCpu` backend's Hogwild block
     /// sharding (0 = auto-detect via `util::pool::default_threads`).
     pub threads: usize,
+    /// CPU step implementation: tiled fixed-width microkernels (default)
+    /// or the scalar oracle (`--cpu-kernel scalar`).
+    pub cpu_kernel: KernelPolicy,
 }
 
 impl TrainConfig {
@@ -163,6 +195,7 @@ impl Default for TrainConfig {
             seed: 42,
             artifact_dir: PathBuf::from("artifacts"),
             threads: 0,
+            cpu_kernel: KernelPolicy::Tiled,
         }
     }
 }
@@ -184,5 +217,6 @@ mod tests {
         for b in [Backend::Hlo, Backend::CpuRef, Backend::ParallelCpu] {
             assert_eq!(Backend::parse(b.name()), Some(b));
         }
+        assert_eq!(TrainConfig::default().cpu_kernel, KernelPolicy::Tiled);
     }
 }

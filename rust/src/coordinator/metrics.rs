@@ -21,12 +21,16 @@ pub struct PhaseStats {
     pub scatter: Duration,
     /// storage-scheme C precompute
     pub precompute: Duration,
+    /// Blocks executed this phase.
     pub blocks: usize,
+    /// Valid (non-padding) samples processed.
     pub samples: usize,
+    /// Padding slots staged but masked out.
     pub padded_slots: usize,
 }
 
 impl PhaseStats {
+    /// Wall time of the whole phase (sum of all stage buckets).
     pub fn total(&self) -> Duration {
         self.sample + self.gather + self.exec + self.scatter + self.precompute
     }
@@ -36,6 +40,7 @@ impl PhaseStats {
         self.gather + self.scatter + self.precompute
     }
 
+    /// Padded slots / total slots — the Table-1 load-imbalance analog.
     pub fn padding_ratio(&self) -> f64 {
         let total = self.samples + self.padded_slots;
         if total == 0 {
@@ -45,6 +50,7 @@ impl PhaseStats {
         }
     }
 
+    /// Add another phase's counters and timings into this one.
     pub fn merge(&mut self, o: &PhaseStats) {
         self.sample += o.sample;
         self.gather += o.gather;
@@ -56,6 +62,7 @@ impl PhaseStats {
         self.padded_slots += o.padded_slots;
     }
 
+    /// Serialize for the `BENCH_JSON` scrape lines.
     pub fn to_json(&self) -> Json {
         json::obj(vec![
             ("sample_s", json::num(self.sample.as_secs_f64())),
@@ -75,11 +82,14 @@ impl PhaseStats {
 /// Both phases of one epoch.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EpochStats {
+    /// Factor-phase stage timings.
     pub factor: PhaseStats,
+    /// Core-phase stage timings.
     pub core: PhaseStats,
 }
 
 impl EpochStats {
+    /// Serialize both phases for the `BENCH_JSON` scrape lines.
     pub fn to_json(&self) -> Json {
         json::obj(vec![
             ("factor", self.factor.to_json()),

@@ -50,12 +50,16 @@ pub fn tensor_fingerprint(t: &SparseTensor) -> u64 {
 
 /// Training driver for one tensor + one configuration.
 pub struct Trainer {
+    /// The run configuration this trainer was built with.
     pub cfg: TrainConfig,
+    /// The decomposition being fit (readable between epochs, e.g. for
+    /// checkpointing or serving).
     pub model: TuckerModel,
     backend: Box<dyn StepBackend>,
     // sampling indexes (built per the algorithm's Table-3 strategy)
     slice_idx: Vec<ModeSliceIndex>,
     fiber_idx: Vec<FiberIndex>,
+    /// Epochs completed so far (drives the per-epoch sampling streams).
     pub epoch_no: u64,
     fingerprint: u64,
 }

@@ -6,12 +6,16 @@
 /// Which algorithm a cost row describes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Algo {
+    /// Algorithm 1 (per-mode convex SGD).
     FastTucker,
+    /// Algorithm 2 (storage scheme, fiber sampling).
     FasterTucker,
+    /// Algorithm 3 (the paper's contribution).
     FastTuckerPlus,
 }
 
 impl Algo {
+    /// Display name used in tables.
     pub fn name(self) -> &'static str {
         match self {
             Algo::FastTucker => "fasttucker",
@@ -25,13 +29,18 @@ impl Algo {
 /// rank R, batch M.
 #[derive(Clone, Copy, Debug)]
 pub struct Shape {
+    /// Tensor order N.
     pub n: usize,
+    /// Factor rank J per mode.
     pub j: usize,
+    /// Kruskal rank R.
     pub r: usize,
+    /// Batch size M (the paper's warp sample count).
     pub m: usize,
 }
 
 impl Shape {
+    /// `Σ_n J_n` (uniform J, so `N * J`).
     pub fn sum_j(&self) -> usize {
         self.n * self.j
     }

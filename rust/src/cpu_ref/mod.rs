@@ -9,8 +9,10 @@
 //!    per-sample updates, no Hogwild batching effects).
 //!
 //! The whole-pass functions below are the *oracles*; the CPU execution
-//! backends run the block-level re-formulation in [`step`] (same per-sample
-//! math, scheduled by `coordinator::phases`, optionally Hogwild-parallel).
+//! backends run the block-level re-formulation (same per-sample math,
+//! scheduled by `coordinator::phases`, optionally Hogwild-parallel)
+//! through the tiled kernels in [`crate::kernel`], with the scalar
+//! versions in [`step`] as the reference path and shape fallback.
 
 pub mod step;
 
@@ -21,9 +23,13 @@ use crate::util::rng::Pcg32;
 /// Hyper-parameters shared by all algorithms.
 #[derive(Clone, Copy, Debug)]
 pub struct Hyper {
+    /// Factor-matrix learning rate.
     pub lr_a: f32,
+    /// Core-matrix learning rate.
     pub lr_b: f32,
+    /// Factor-matrix L2 regularization.
     pub lam_a: f32,
+    /// Core-matrix L2 regularization.
     pub lam_b: f32,
 }
 

@@ -1,10 +1,18 @@
-//! Block-level scalar step kernels, the execution core of the CPU backends.
+//! Block-level *scalar* step kernels — the per-sample oracle the tiled
+//! kernels in [`crate::kernel`] are verified against.
 //!
 //! Each function processes a contiguous `range` of valid slots from a
 //! staged block (`coords` `[S, N]` / `values` `[S]` slabs) and performs the
 //! per-sample math of one algorithm — the same equations as the whole-pass
 //! oracles in the parent module, restructured around blocks so the generic
 //! phase driver (`coordinator::phases`) can schedule them.
+//!
+//! The CPU backends normally dispatch through the tiled kernels
+//! ([`crate::kernel::run_factor_range`] / [`crate::kernel::run_core_range`]);
+//! the `*_scalar` functions here are the runtime-width reference path,
+//! selected by [`crate::kernel::KernelPolicy::Scalar`] (CLI:
+//! `--cpu-kernel scalar`) and used as the fallback for `(J, R)` shapes
+//! without a monomorphized tile.
 //!
 //! All factor access goes through [`SharedFactors`] (relaxed atomic rows):
 //!
@@ -32,20 +40,46 @@ pub struct BlockData<'a> {
     /// Stored projection tables `C^(n)` (`I_n x R`); empty for algorithms
     /// that do not use the storage scheme.
     pub c_store: &'a [Vec<f32>],
-    /// Entry coordinates `[S, N]`, valid slots compacted to the front.
+    /// Entry coordinates `[S, N]`, entry-major, valid slots compacted to
+    /// the front.
     pub coords: &'a [u32],
+    /// The same coordinates laid out `[N, S]` *mode-major* (one contiguous
+    /// lane per mode), as staged by `sampler::stream`.  May be empty when a
+    /// caller only has the entry-major slab; kernels that scan a single
+    /// mode use [`BlockData::coord`], which prefers the lane layout.
+    pub lanes: &'a [u32],
     /// Entry values `[S]`.
     pub values: &'a [f32],
+    /// Tensor order N.
     pub n: usize,
+    /// Factor rank J (columns of each `A^(n)` row).
     pub j: usize,
+    /// Kruskal rank R (columns of each `B^(n)`).
     pub r: usize,
+    /// Learning rates / regularization for the update rules.
     pub hyper: Hyper,
 }
 
 impl BlockData<'_> {
+    /// Coordinates of slot `e`, entry-major (one cache line per sample).
     #[inline]
-    fn entry_coords(&self, e: usize) -> &[u32] {
+    pub fn entry_coords(&self, e: usize) -> &[u32] {
         &self.coords[e * self.n..(e + 1) * self.n]
+    }
+
+    /// Mode-`m` coordinate of slot `e`.  Reads the contiguous mode-major
+    /// lane when the block was staged with one (sequential scans of a
+    /// single mode touch consecutive words), the entry-major slab
+    /// otherwise.
+    #[inline]
+    pub fn coord(&self, e: usize, m: usize) -> u32 {
+        if self.lanes.is_empty() {
+            self.coords[e * self.n + m]
+        } else {
+            // lane stride is the staged slot count S == values.len()
+            debug_assert_eq!(self.lanes.len(), self.n * self.values.len());
+            self.lanes[m * self.values.len() + e]
+        }
     }
 }
 
@@ -132,8 +166,8 @@ fn db_from_core(core: &[f32], d: &[f32], j: usize, r: usize, db: &mut [f32]) {
 }
 
 /// FastTuckerPlus (Alg. 3) factor step: update ALL factor rows of each
-/// sample simultaneously (Eq. 12).
-pub fn plus_factor_range(shared: &SharedFactors<'_>, data: &BlockData, range: Range<usize>) {
+/// sample simultaneously (Eq. 12).  Scalar reference path.
+pub fn plus_factor_scalar(shared: &SharedFactors<'_>, data: &BlockData, range: Range<usize>) {
     let (n, j, r) = (data.n, data.j, data.r);
     let hp = data.hyper;
     let mut s = Scratch::new(n, j, r);
@@ -155,7 +189,8 @@ pub fn plus_factor_range(shared: &SharedFactors<'_>, data: &BlockData, range: Ra
 
 /// FastTuckerPlus (Alg. 3) core step: accumulate `∂B^(n)` for every mode
 /// into `grad` (`[N, J, R]`), applied once per phase by the caller.
-pub fn plus_core_range(
+/// Scalar reference path.
+pub fn plus_core_scalar(
     shared: &SharedFactors<'_>,
     data: &BlockData,
     range: Range<usize>,
@@ -182,8 +217,8 @@ pub fn plus_core_range(
 }
 
 /// FastTucker (Alg. 1) factor step for one mode: full forward, update only
-/// `a^(mode)` (Eq. 8).
-pub fn mode_factor_range(
+/// `a^(mode)` (Eq. 8).  Scalar reference path.
+pub fn mode_factor_scalar(
     shared: &SharedFactors<'_>,
     data: &BlockData,
     mode: usize,
@@ -207,8 +242,8 @@ pub fn mode_factor_range(
 }
 
 /// FastTucker (Alg. 1) core step for one mode: accumulate `∂B^(mode)` into
-/// `grad` (`[J, R]`), applied at pass end (Eq. 9).
-pub fn mode_core_range(
+/// `grad` (`[J, R]`), applied at pass end (Eq. 9).  Scalar reference path.
+pub fn mode_core_scalar(
     shared: &SharedFactors<'_>,
     data: &BlockData,
     mode: usize,
@@ -251,8 +286,9 @@ fn stored_d(data: &BlockData, coords: &[u32], mode: usize, d: &mut [f32]) {
 }
 
 /// FasterTucker (Alg. 2) factor step for one mode (storage scheme): d from
-/// stored C rows, own projection recomputed from the live row.
-pub fn stored_factor_range(
+/// stored C rows, own projection recomputed from the live row.  Scalar
+/// reference path.
+pub fn stored_factor_scalar(
     shared: &SharedFactors<'_>,
     data: &BlockData,
     mode: usize,
@@ -290,7 +326,8 @@ pub fn stored_factor_range(
 
 /// FasterTucker (Alg. 2) core step for one mode (storage scheme):
 /// prediction entirely from stored C rows, gradient into `grad` (`[J, R]`).
-pub fn stored_core_range(
+/// Scalar reference path.
+pub fn stored_core_scalar(
     shared: &SharedFactors<'_>,
     data: &BlockData,
     mode: usize,
@@ -354,13 +391,14 @@ mod tests {
                 cores: &cores,
                 c_store: &[],
                 coords: &coords,
+                lanes: &[],
                 values: &values,
                 n: 3,
                 j: 16,
                 r: 16,
                 hyper: hp,
             };
-            plus_factor_range(&shared, &data, 0..t.nnz());
+            plus_factor_scalar(&shared, &data, 0..t.nnz());
         }
         for m in 0..3 {
             for (x, y) in a.factors[m].iter().zip(&b.factors[m]) {
@@ -388,18 +426,56 @@ mod tests {
                 cores: &cores,
                 c_store: &[],
                 coords: &coords,
+                lanes: &[],
                 values: &values,
                 n: 3,
                 j: 16,
                 r: 16,
                 hyper: hp,
             };
-            plus_core_range(&shared, &data, 0..t.nnz(), &mut grad);
+            plus_core_scalar(&shared, &data, 0..t.nnz(), &mut grad);
         }
         b.apply_core_grad(&grad, t.nnz(), hp.lr_b, hp.lam_b);
         for m in 0..3 {
             for (x, y) in a.cores[m].iter().zip(&b.cores[m]) {
                 assert!((x - y).abs() < 1e-6, "{x} vs {y}");
+            }
+        }
+    }
+
+    /// `coord()` must read identically through the entry-major slab and the
+    /// mode-major lanes.
+    #[test]
+    fn coord_agrees_across_layouts() {
+        let t = generate(&SynthConfig::order_sweep(3, 16, 200, 7));
+        let (coords, values) = staged(&t);
+        let n = t.order();
+        let s = values.len();
+        let mut lanes = vec![0u32; n * s];
+        for m in 0..n {
+            for e in 0..s {
+                lanes[m * s + e] = coords[e * n + m];
+            }
+        }
+        let with_lanes = BlockData {
+            cores: &[],
+            c_store: &[],
+            coords: &coords,
+            lanes: &lanes,
+            values: &values,
+            n,
+            j: 16,
+            r: 16,
+            hyper: Hyper::default(),
+        };
+        let without = BlockData {
+            lanes: &[],
+            ..with_lanes
+        };
+        for e in (0..s).step_by(7) {
+            for m in 0..n {
+                assert_eq!(with_lanes.coord(e, m), without.coord(e, m));
+                assert_eq!(without.coord(e, m), with_lanes.entry_coords(e)[m]);
             }
         }
     }

@@ -1,0 +1,141 @@
+//! Per-block invariant cache — the kernel-level "calculation instead of
+//! storage" knob (§5.6 of the paper, the shared-invariant reuse of
+//! cuFasterTucker).
+//!
+//! The storage-scheme kernels need the exclusion product
+//! `d = Π_{m≠mode} C^(m)[i_m, :]` for every sample.  Consecutive samples in
+//! a fiber-grouped block share all non-target coordinates, so their `d` is
+//! identical.  [`InvariantCache`] either recomputes `d` per sample
+//! ([`InvariantPolicy::Recompute`] — calculation, the default) or keeps the
+//! last fiber's product and reuses it while the fiber key matches
+//! ([`InvariantPolicy::CachePerFiber`] — storage).  Both policies produce
+//! bit-identical results: a cache hit returns the exact f32 product a
+//! recompute would (same inputs, same multiply order), so the knob trades
+//! arithmetic against loads without touching the trajectory — the same
+//! tradeoff the `table9_calc_vs_store` / `fig5_calc_store_sweep` benches
+//! probe on the HLO path.
+
+use crate::cpu_ref::step::BlockData;
+
+use super::InvariantPolicy;
+
+/// Cached exclusion product for the storage-scheme kernels, scoped to one
+/// block range (each worker shard owns its own cache).
+pub struct InvariantCache<const R: usize> {
+    policy: InvariantPolicy,
+    /// Coordinates of the sample the cached `d` was computed for (the slot
+    /// at `mode` is ignored by the fiber comparison).
+    key: Vec<u32>,
+    d: [f32; R],
+    valid: bool,
+    hits: u64,
+    misses: u64,
+}
+
+impl<const R: usize> InvariantCache<R> {
+    /// Empty cache for an order-`n` tensor.
+    pub fn new(policy: InvariantPolicy, n: usize) -> InvariantCache<R> {
+        InvariantCache {
+            policy,
+            key: vec![0; n],
+            d: [1.0; R],
+            valid: false,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Exclusion product `d` for sample `e` of the block, excluding `mode`.
+    ///
+    /// Under [`InvariantPolicy::CachePerFiber`] the cached product is returned
+    /// when sample `e` lies in the same fiber as the previously served
+    /// sample (all coordinates equal except `mode`); otherwise — and always
+    /// under [`InvariantPolicy::Recompute`] — it is rebuilt from the stored
+    /// `C^(m)` rows in ascending mode order, exactly like the scalar oracle.
+    pub fn exclusion(&mut self, data: &BlockData<'_>, e: usize, mode: usize) -> &[f32; R] {
+        if self.valid
+            && self.policy == InvariantPolicy::CachePerFiber
+            && self.same_fiber(data, e, mode)
+        {
+            self.hits += 1;
+            return &self.d;
+        }
+        self.misses += 1;
+        self.d = [1.0; R];
+        for m in 0..data.n {
+            if m == mode {
+                continue;
+            }
+            let row = data.coord(e, m) as usize;
+            let crow = &data.c_store[m][row * R..row * R + R];
+            for rr in 0..R {
+                self.d[rr] *= crow[rr];
+            }
+            self.key[m] = row as u32;
+        }
+        self.valid = true;
+        &self.d
+    }
+
+    fn same_fiber(&self, data: &BlockData<'_>, e: usize, mode: usize) -> bool {
+        (0..data.n).all(|m| m == mode || self.key[m] == data.coord(e, m))
+    }
+
+    /// Number of samples served from the cached fiber product.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Number of samples that recomputed the product.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu_ref::Hyper;
+
+    fn block_data<'a>(
+        c_store: &'a [Vec<f32>],
+        coords: &'a [u32],
+        values: &'a [f32],
+    ) -> BlockData<'a> {
+        BlockData {
+            cores: &[],
+            c_store,
+            coords,
+            lanes: &[],
+            values,
+            n: 3,
+            j: 16,
+            r: 16,
+            hyper: Hyper::default(),
+        }
+    }
+
+    #[test]
+    fn cache_fiber_reuses_within_fiber_only() {
+        // C^(m): 4 rows of R=16 each, distinct per row.
+        let c_store: Vec<Vec<f32>> = (0..3)
+            .map(|m| (0..4 * 16).map(|i| 1.0 + (m * 64 + i) as f32 * 1e-3).collect())
+            .collect();
+        // three samples: first two share the mode-0 fiber (coords 1/2 equal)
+        let coords: Vec<u32> = vec![0, 1, 2, /**/ 1, 1, 2, /**/ 1, 3, 2];
+        let values = vec![0f32; 3];
+        let data = block_data(&c_store, &coords, &values);
+
+        let mut cached = InvariantCache::<16>::new(InvariantPolicy::CachePerFiber, 3);
+        let mut recomputed = InvariantCache::<16>::new(InvariantPolicy::Recompute, 3);
+        for e in 0..3 {
+            let a = *cached.exclusion(&data, e, 0);
+            let b = *recomputed.exclusion(&data, e, 0);
+            assert_eq!(a, b, "policies must agree bit-for-bit at sample {e}");
+        }
+        assert_eq!(cached.hits(), 1);
+        assert_eq!(cached.misses(), 2);
+        assert_eq!(recomputed.hits(), 0);
+        assert_eq!(recomputed.misses(), 3);
+    }
+}

@@ -1,0 +1,144 @@
+//! Fixed-width microkernels — the innermost `J`/`R` loops of every tiled
+//! step, monomorphized per (J, R) shape.
+//!
+//! Each function is the lane-level analog of one L1 Pallas primitive: the
+//! `[S, J] x [J, R]` projection, the `d B^T` matvec, the SGD row update and
+//! the rank-1 core-gradient accumulation.  `J` and `R` are const generics,
+//! so every inner trip count is a compile-time constant: LLVM fully unrolls
+//! the loops, keeps the `[f32; R]` accumulators in vector registers, and
+//! emits packed multiply/add lanes (the CPU analog of the MXU tile; with
+//! FMA contraction enabled by the target the mul+add pairs fuse).
+//!
+//! Arithmetic-order contract: every loop performs the *same operations in
+//! the same order* as the scalar oracle in [`crate::cpu_ref::step`], so the
+//! tiled path is bit-identical to the oracle — the `kernel_parity`
+//! integration test and the oracle-vs-block tests both rely on this.  Do
+//! not reassociate reductions or fuse the mul/add pairs in source.
+
+/// `out = row · core`, the `[1, J] x [J, R]` projection of one factor row
+/// through one core matrix (`core` is `J x R` row-major).
+#[inline(always)]
+pub(crate) fn project<const J: usize, const R: usize>(
+    row: &[f32; J],
+    core: &[f32],
+    out: &mut [f32; R],
+) {
+    debug_assert_eq!(core.len(), J * R);
+    *out = [0.0; R];
+    for (&a, brow) in row.iter().zip(core.chunks_exact(R)) {
+        for rr in 0..R {
+            out[rr] += a * brow[rr];
+        }
+    }
+}
+
+/// `out[j] = d · core[j, :]` for every `j` — the `B d^T` matvec feeding the
+/// factor-row gradient (Eq. 8 / Eq. 12).
+#[inline(always)]
+pub(crate) fn db_rows<const J: usize, const R: usize>(
+    core: &[f32],
+    d: &[f32; R],
+    out: &mut [f32; J],
+) {
+    debug_assert_eq!(core.len(), J * R);
+    for (dst, brow) in out.iter_mut().zip(core.chunks_exact(R)) {
+        let mut acc = 0.0f32;
+        for rr in 0..R {
+            acc += d[rr] * brow[rr];
+        }
+        *dst = acc;
+    }
+}
+
+/// Fixed-width dot product over the Kruskal rank.
+#[inline(always)]
+pub(crate) fn dot<const R: usize>(a: &[f32; R], b: &[f32; R]) -> f32 {
+    let mut acc = 0.0f32;
+    for rr in 0..R {
+        acc += a[rr] * b[rr];
+    }
+    acc
+}
+
+/// SGD row update: `out = row + lr * (err * db - lam * row)`.
+#[inline(always)]
+pub(crate) fn sgd_row<const J: usize>(
+    row: &[f32; J],
+    db: &[f32; J],
+    err: f32,
+    lr: f32,
+    lam: f32,
+    out: &mut [f32; J],
+) {
+    for jj in 0..J {
+        out[jj] = row[jj] + lr * (err * db[jj] - lam * row[jj]);
+    }
+}
+
+/// Rank-1 core-gradient accumulation: `grad[j, :] += (err * row[j]) * d`
+/// (`grad` is `J x R` row-major).
+#[inline(always)]
+pub(crate) fn grad_accum<const J: usize, const R: usize>(
+    grad: &mut [f32],
+    row: &[f32; J],
+    d: &[f32; R],
+    err: f32,
+) {
+    debug_assert_eq!(grad.len(), J * R);
+    for (&a, grow) in row.iter().zip(grad.chunks_exact_mut(R)) {
+        let ea = err * a;
+        for rr in 0..R {
+            grow[rr] += ea * d[rr];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn project_matches_naive() {
+        let row: [f32; 16] = std::array::from_fn(|i| i as f32 * 0.25 - 1.0);
+        let core: Vec<f32> = (0..16 * 16).map(|i| (i % 7) as f32 * 0.1).collect();
+        let mut out = [0f32; 16];
+        project::<16, 16>(&row, &core, &mut out);
+        for rr in 0..16 {
+            let mut want = 0f32;
+            for jj in 0..16 {
+                want += row[jj] * core[jj * 16 + rr];
+            }
+            assert!((out[rr] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn db_rows_matches_naive() {
+        let d: [f32; 16] = std::array::from_fn(|i| 0.5 - i as f32 * 0.05);
+        let core: Vec<f32> = (0..16 * 16).map(|i| (i % 5) as f32 * 0.2).collect();
+        let mut out = [0f32; 16];
+        db_rows::<16, 16>(&core, &d, &mut out);
+        for jj in 0..16 {
+            let mut want = 0f32;
+            for rr in 0..16 {
+                want += d[rr] * core[jj * 16 + rr];
+            }
+            assert!((out[jj] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn sgd_and_grad_shapes() {
+        let row = [1.0f32; 16];
+        let db = [2.0f32; 16];
+        let mut out = [0f32; 16];
+        sgd_row::<16>(&row, &db, 0.5, 0.1, 0.0, &mut out);
+        assert!(out.iter().all(|&v| (v - 1.1).abs() < 1e-6));
+
+        let d = [1.0f32; 16];
+        let mut grad = vec![0f32; 16 * 16];
+        grad_accum::<16, 16>(&mut grad, &row, &d, 2.0);
+        assert!(grad.iter().all(|&v| (v - 2.0).abs() < 1e-6));
+        assert!((dot::<16>(&d, &d) - 16.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,324 @@
+//! Tiled CPU microkernels — the execution core of the CPU backends.
+//!
+//! The paper's speedup comes from re-shaping the per-sample math into
+//! tensor-core-sized `[S, J] x [J, R]` tiles and from "computation instead
+//! of storage": recomputing cheap invariants instead of round-tripping them
+//! through memory.  This module ports both ideas to the CPU path:
+//!
+//! * `micro` — fixed-width `(J, R)` microkernels (const generics, fully
+//!   unrolled inner loops over contiguous chunks) that LLVM autovectorizes;
+//!   the lane-level mirror of the L1 Pallas tiles.
+//! * `tile` — per-(algorithm, phase) drivers that walk a block range
+//!   through the microkernels, bit-identical to the scalar oracle.
+//! * [`invariant`] — [`InvariantCache`], the block-level calc-vs-store knob
+//!   for the storage-scheme kernels (recompute the exclusion product per
+//!   sample, or reuse it across a fiber).
+//!
+//! The public entry points (`*_factor_range` / `*_core_range` and the
+//! algorithm dispatchers [`run_factor_range`] / [`run_core_range`]) mirror
+//! the scalar functions in [`crate::cpu_ref::step`] and take a
+//! [`KernelCfg`]:
+//!
+//! * [`KernelPolicy::Tiled`] (default) selects a monomorphized tiled driver
+//!   when the run's `(J, R)` shape has one (J, R ∈ {16, 32}, plus the
+//!   square 48/64 shapes) and falls back to the scalar path otherwise;
+//! * [`KernelPolicy::Scalar`] forces the scalar oracle (`--cpu-kernel
+//!   scalar` on the CLI) — the baseline the `parallel_scaling` bench and
+//!   the `kernel_parity` test compare against.
+//!
+//! Both paths perform the same operations in the same order, so switching
+//! policies never changes a trajectory — only the wall clock.
+
+pub mod invariant;
+pub(crate) mod micro;
+pub(crate) mod tile;
+
+pub use invariant::InvariantCache;
+
+use std::ops::Range;
+
+use crate::coordinator::config::Algo;
+use crate::cpu_ref::step::{self, BlockData};
+use crate::model::SharedFactors;
+
+/// Which CPU step implementation to run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelPolicy {
+    /// Fixed-width tiled microkernels (scalar fallback for shapes without a
+    /// monomorphized instantiation).
+    #[default]
+    Tiled,
+    /// The scalar reference path — the CpuRef oracle, kept behind this flag
+    /// for parity tests and baseline measurements.
+    Scalar,
+}
+
+impl KernelPolicy {
+    /// Parse a CLI value (`tiled` / `scalar`).
+    pub fn parse(s: &str) -> Option<KernelPolicy> {
+        match s {
+            "tiled" => Some(KernelPolicy::Tiled),
+            "scalar" => Some(KernelPolicy::Scalar),
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelPolicy::Tiled => "tiled",
+            KernelPolicy::Scalar => "scalar",
+        }
+    }
+}
+
+/// How the storage-scheme kernels obtain the per-sample exclusion product
+/// (the paper's calculation-vs-storage tradeoff at block level).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum InvariantPolicy {
+    /// Recompute the Kruskal exclusion product for every sample
+    /// (calculation — the default).
+    #[default]
+    Recompute,
+    /// Cache the product and reuse it while consecutive samples share a
+    /// fiber (storage — wins when blocks are fiber-grouped).
+    CachePerFiber,
+}
+
+/// Kernel configuration threaded from [`crate::coordinator::TrainConfig`]
+/// into every CPU block execution.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KernelCfg {
+    /// Tiled microkernels vs the scalar oracle.
+    pub policy: KernelPolicy,
+    /// Calc-vs-store handling of the storage-scheme invariants.
+    pub invariant: InvariantPolicy,
+}
+
+/// Monomorphized `(J, R)` dispatch: route to a fixed-shape tile driver, or
+/// to the scalar fallback when the shape has no instantiation.
+macro_rules! dispatch_jr {
+    (($j:expr, $r:expr), $f:ident ( $($a:expr),* ), $fallback:expr) => {
+        match ($j, $r) {
+            (16, 16) => tile::$f::<16, 16>($($a),*),
+            (16, 32) => tile::$f::<16, 32>($($a),*),
+            (32, 16) => tile::$f::<32, 16>($($a),*),
+            (32, 32) => tile::$f::<32, 32>($($a),*),
+            (48, 48) => tile::$f::<48, 48>($($a),*),
+            (64, 64) => tile::$f::<64, 64>($($a),*),
+            _ => $fallback,
+        }
+    };
+}
+
+/// FastTuckerPlus factor step over `range` (all factor rows per sample).
+pub fn plus_factor_range(
+    shared: &SharedFactors<'_>,
+    data: &BlockData<'_>,
+    range: Range<usize>,
+    cfg: KernelCfg,
+) {
+    if cfg.policy == KernelPolicy::Scalar {
+        return step::plus_factor_scalar(shared, data, range);
+    }
+    dispatch_jr!(
+        (data.j, data.r),
+        plus_factor(shared, data, range),
+        step::plus_factor_scalar(shared, data, range)
+    );
+}
+
+/// FastTuckerPlus core step over `range`, accumulating into `grad`
+/// (`[N, J, R]`).
+pub fn plus_core_range(
+    shared: &SharedFactors<'_>,
+    data: &BlockData<'_>,
+    range: Range<usize>,
+    grad: &mut [f32],
+    cfg: KernelCfg,
+) {
+    if cfg.policy == KernelPolicy::Scalar {
+        return step::plus_core_scalar(shared, data, range, grad);
+    }
+    dispatch_jr!(
+        (data.j, data.r),
+        plus_core(shared, data, range, grad),
+        step::plus_core_scalar(shared, data, range, grad)
+    );
+}
+
+/// FastTucker factor step for `mode` over `range`.
+pub fn mode_factor_range(
+    shared: &SharedFactors<'_>,
+    data: &BlockData<'_>,
+    mode: usize,
+    range: Range<usize>,
+    cfg: KernelCfg,
+) {
+    if cfg.policy == KernelPolicy::Scalar {
+        return step::mode_factor_scalar(shared, data, mode, range);
+    }
+    dispatch_jr!(
+        (data.j, data.r),
+        mode_factor(shared, data, mode, range),
+        step::mode_factor_scalar(shared, data, mode, range)
+    );
+}
+
+/// FastTucker core step for `mode` over `range`, accumulating into `grad`
+/// (`[J, R]`).
+pub fn mode_core_range(
+    shared: &SharedFactors<'_>,
+    data: &BlockData<'_>,
+    mode: usize,
+    range: Range<usize>,
+    grad: &mut [f32],
+    cfg: KernelCfg,
+) {
+    if cfg.policy == KernelPolicy::Scalar {
+        return step::mode_core_scalar(shared, data, mode, range, grad);
+    }
+    dispatch_jr!(
+        (data.j, data.r),
+        mode_core(shared, data, mode, range, grad),
+        step::mode_core_scalar(shared, data, mode, range, grad)
+    );
+}
+
+/// FasterTucker (storage scheme) factor step for `mode` over `range`.
+pub fn stored_factor_range(
+    shared: &SharedFactors<'_>,
+    data: &BlockData<'_>,
+    mode: usize,
+    range: Range<usize>,
+    cfg: KernelCfg,
+) {
+    if cfg.policy == KernelPolicy::Scalar {
+        return step::stored_factor_scalar(shared, data, mode, range);
+    }
+    dispatch_jr!(
+        (data.j, data.r),
+        stored_factor(shared, data, mode, range, cfg.invariant),
+        step::stored_factor_scalar(shared, data, mode, range)
+    );
+}
+
+/// FasterTucker (storage scheme) core step for `mode` over `range`,
+/// accumulating into `grad` (`[J, R]`).
+pub fn stored_core_range(
+    shared: &SharedFactors<'_>,
+    data: &BlockData<'_>,
+    mode: usize,
+    range: Range<usize>,
+    grad: &mut [f32],
+    cfg: KernelCfg,
+) {
+    if cfg.policy == KernelPolicy::Scalar {
+        return step::stored_core_scalar(shared, data, mode, range, grad);
+    }
+    dispatch_jr!(
+        (data.j, data.r),
+        stored_core(shared, data, mode, range, grad, cfg.invariant),
+        step::stored_core_scalar(shared, data, mode, range, grad)
+    );
+}
+
+/// Dispatch one factor-step range to the algorithm's kernel (the CPU
+/// backends' single entry point for the factor phase).
+pub fn run_factor_range(
+    algo: Algo,
+    mode: Option<usize>,
+    shared: &SharedFactors<'_>,
+    data: &BlockData<'_>,
+    range: Range<usize>,
+    cfg: KernelCfg,
+) {
+    match (algo, mode) {
+        (Algo::Plus, None) => plus_factor_range(shared, data, range, cfg),
+        (Algo::FastTucker, Some(m)) => mode_factor_range(shared, data, m, range, cfg),
+        (Algo::FasterTucker | Algo::FasterTuckerCoo, Some(m)) => {
+            stored_factor_range(shared, data, m, range, cfg)
+        }
+        _ => unreachable!("algo/pass schedule mismatch"),
+    }
+}
+
+/// Dispatch one core-step range to the algorithm's kernel (the CPU
+/// backends' single entry point for the core phase).
+pub fn run_core_range(
+    algo: Algo,
+    mode: Option<usize>,
+    shared: &SharedFactors<'_>,
+    data: &BlockData<'_>,
+    range: Range<usize>,
+    grad: &mut [f32],
+    cfg: KernelCfg,
+) {
+    match (algo, mode) {
+        (Algo::Plus, None) => plus_core_range(shared, data, range, grad, cfg),
+        (Algo::FastTucker, Some(m)) => mode_core_range(shared, data, m, range, grad, cfg),
+        (Algo::FasterTucker | Algo::FasterTuckerCoo, Some(m)) => {
+            stored_core_range(shared, data, m, range, grad, cfg)
+        }
+        _ => unreachable!("algo/pass schedule mismatch"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu_ref::Hyper;
+    use crate::model::TuckerModel;
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [KernelPolicy::Tiled, KernelPolicy::Scalar] {
+            assert_eq!(KernelPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(KernelPolicy::parse("nope"), None);
+        assert_eq!(KernelPolicy::default(), KernelPolicy::Tiled);
+        assert_eq!(InvariantPolicy::default(), InvariantPolicy::Recompute);
+    }
+
+    /// A shape with no monomorphized tile must run through the scalar
+    /// fallback and still produce the scalar trajectory.
+    #[test]
+    fn unsupported_shape_falls_back_to_scalar() {
+        let (j, r) = (48, 16); // not in the dispatch table
+        let mut a = TuckerModel::init(&[8, 8, 8], j, r, 3);
+        let mut b = a.clone();
+        let coords: Vec<u32> = (0..12u32)
+            .flat_map(|e| [e % 8, (e / 2) % 8, (e / 3) % 8])
+            .collect();
+        let values: Vec<f32> = (0..12).map(|e| 1.0 + e as f32 * 0.1).collect();
+        let run = |model: &mut TuckerModel, cfg: KernelCfg| {
+            let cores = model.cores.clone();
+            let shared = SharedFactors::new(&mut model.factors, j);
+            let data = BlockData {
+                cores: &cores,
+                c_store: &[],
+                coords: &coords,
+                lanes: &[],
+                values: &values,
+                n: 3,
+                j,
+                r,
+                hyper: Hyper::default(),
+            };
+            plus_factor_range(&shared, &data, 0..12, cfg);
+        };
+        let tiled = KernelCfg {
+            policy: KernelPolicy::Tiled,
+            ..Default::default()
+        };
+        let scalar = KernelCfg {
+            policy: KernelPolicy::Scalar,
+            ..Default::default()
+        };
+        run(&mut a, tiled);
+        run(&mut b, scalar);
+        for m in 0..3 {
+            assert_eq!(a.factors[m], b.factors[m], "mode {m} diverged");
+        }
+    }
+}

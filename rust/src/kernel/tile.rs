@@ -1,0 +1,229 @@
+//! Tiled step drivers — one per (algorithm, phase), generic over the
+//! compile-time `(J, R)` shape.
+//!
+//! Each driver walks its slot range sample-by-sample (factor phases must:
+//! a later sample may touch a row an earlier sample just updated, and the
+//! serial backend is defined as exactly the sequential trajectory) but
+//! performs *all* per-sample arithmetic through the fixed-width
+//! microkernels in [`super::micro`], whose fully unrolled `J`/`R` loops are
+//! the CPU mirror of the L1 Pallas `[S, J] x [J, R]` tiles.  The
+//! storage-scheme drivers thread an [`InvariantCache`] through the range,
+//! implementing the calc-vs-store knob at the block level.
+//!
+//! Everything here is bit-identical to the scalar oracle in
+//! [`crate::cpu_ref::step`]; the `kernel_parity` integration test pins it.
+
+use std::ops::Range;
+
+use crate::cpu_ref::step::BlockData;
+use crate::model::SharedFactors;
+
+use super::invariant::InvariantCache;
+use super::{micro, InvariantPolicy};
+
+/// Per-range scratch: gathered rows and the forward chain, all fixed-width.
+struct Scratch<const J: usize, const R: usize> {
+    /// Gathered factor rows `a^(m)`, one per mode.
+    rows: Vec<[f32; J]>,
+    /// Projections `c^(m) = a^(m) B^(m)`.
+    c: Vec<[f32; R]>,
+    /// Exclusion products `d^(m)`.
+    d: Vec<[f32; R]>,
+    /// Prefix products of `c` (length `n + 1`).
+    pre: Vec<[f32; R]>,
+    /// Suffix products of `c` (length `n + 1`).
+    suf: Vec<[f32; R]>,
+    db: [f32; J],
+    new_row: [f32; J],
+}
+
+impl<const J: usize, const R: usize> Scratch<J, R> {
+    fn new(n: usize) -> Scratch<J, R> {
+        Scratch {
+            rows: vec![[0.0; J]; n],
+            c: vec![[0.0; R]; n],
+            d: vec![[0.0; R]; n],
+            pre: vec![[0.0; R]; n + 1],
+            suf: vec![[0.0; R]; n + 1],
+            db: [0.0; J],
+            new_row: [0.0; J],
+        }
+    }
+}
+
+/// Projections, exclusion products and the prediction for one sample from
+/// pre-gathered rows — the tiled analog of the oracle's `forward_rows`,
+/// same prefix/suffix multiply order.
+fn forward<const J: usize, const R: usize>(cores: &[Vec<f32>], s: &mut Scratch<J, R>) -> f32 {
+    let n = s.rows.len();
+    for m in 0..n {
+        micro::project::<J, R>(&s.rows[m], &cores[m], &mut s.c[m]);
+    }
+    s.pre[0] = [1.0; R];
+    for m in 0..n {
+        for rr in 0..R {
+            s.pre[m + 1][rr] = s.pre[m][rr] * s.c[m][rr];
+        }
+    }
+    s.suf[n] = [1.0; R];
+    for m in (0..n).rev() {
+        for rr in 0..R {
+            s.suf[m][rr] = s.suf[m + 1][rr] * s.c[m][rr];
+        }
+    }
+    for m in 0..n {
+        for rr in 0..R {
+            s.d[m][rr] = s.pre[m][rr] * s.suf[m + 1][rr];
+        }
+    }
+    s.pre[n].iter().sum()
+}
+
+fn load_all_rows<const J: usize, const R: usize>(
+    shared: &SharedFactors<'_>,
+    data: &BlockData<'_>,
+    coords: &[u32],
+    s: &mut Scratch<J, R>,
+) {
+    for m in 0..data.n {
+        shared.load_row(m, coords[m] as usize, &mut s.rows[m]);
+    }
+}
+
+/// FastTuckerPlus factor step (Eq. 12): update all factor rows per sample.
+pub(crate) fn plus_factor<const J: usize, const R: usize>(
+    shared: &SharedFactors<'_>,
+    data: &BlockData<'_>,
+    range: Range<usize>,
+) {
+    let hp = data.hyper;
+    let mut s = Scratch::<J, R>::new(data.n);
+    for e in range {
+        let coords = data.entry_coords(e);
+        load_all_rows(shared, data, coords, &mut s);
+        let xhat = forward::<J, R>(data.cores, &mut s);
+        let err = data.values[e] - xhat;
+        for m in 0..data.n {
+            micro::db_rows::<J, R>(&data.cores[m], &s.d[m], &mut s.db);
+            micro::sgd_row::<J>(&s.rows[m], &s.db, err, hp.lr_a, hp.lam_a, &mut s.new_row);
+            shared.store_row(m, coords[m] as usize, &s.new_row);
+        }
+    }
+}
+
+/// FastTuckerPlus core step: accumulate `∂B^(m)` for every mode into
+/// `grad` (`[N, J, R]`).
+pub(crate) fn plus_core<const J: usize, const R: usize>(
+    shared: &SharedFactors<'_>,
+    data: &BlockData<'_>,
+    range: Range<usize>,
+    grad: &mut [f32],
+) {
+    let mut s = Scratch::<J, R>::new(data.n);
+    for e in range {
+        let coords = data.entry_coords(e);
+        load_all_rows(shared, data, coords, &mut s);
+        let xhat = forward::<J, R>(data.cores, &mut s);
+        let err = data.values[e] - xhat;
+        for m in 0..data.n {
+            micro::grad_accum::<J, R>(
+                &mut grad[m * J * R..(m + 1) * J * R],
+                &s.rows[m],
+                &s.d[m],
+                err,
+            );
+        }
+    }
+}
+
+/// FastTucker factor step for one mode (Eq. 8): full forward, update only
+/// the target mode's row.
+pub(crate) fn mode_factor<const J: usize, const R: usize>(
+    shared: &SharedFactors<'_>,
+    data: &BlockData<'_>,
+    mode: usize,
+    range: Range<usize>,
+) {
+    let hp = data.hyper;
+    let mut s = Scratch::<J, R>::new(data.n);
+    for e in range {
+        let coords = data.entry_coords(e);
+        load_all_rows(shared, data, coords, &mut s);
+        let xhat = forward::<J, R>(data.cores, &mut s);
+        let err = data.values[e] - xhat;
+        micro::db_rows::<J, R>(&data.cores[mode], &s.d[mode], &mut s.db);
+        micro::sgd_row::<J>(&s.rows[mode], &s.db, err, hp.lr_a, hp.lam_a, &mut s.new_row);
+        shared.store_row(mode, coords[mode] as usize, &s.new_row);
+    }
+}
+
+/// FastTucker core step for one mode (Eq. 9): accumulate `∂B^(mode)` into
+/// `grad` (`[J, R]`).
+pub(crate) fn mode_core<const J: usize, const R: usize>(
+    shared: &SharedFactors<'_>,
+    data: &BlockData<'_>,
+    mode: usize,
+    range: Range<usize>,
+    grad: &mut [f32],
+) {
+    let mut s = Scratch::<J, R>::new(data.n);
+    for e in range {
+        let coords = data.entry_coords(e);
+        load_all_rows(shared, data, coords, &mut s);
+        let xhat = forward::<J, R>(data.cores, &mut s);
+        let err = data.values[e] - xhat;
+        micro::grad_accum::<J, R>(grad, &s.rows[mode], &s.d[mode], err);
+    }
+}
+
+/// FasterTucker factor step for one mode (storage scheme): `d` via the
+/// [`InvariantCache`], own projection recomputed from the live row.
+pub(crate) fn stored_factor<const J: usize, const R: usize>(
+    shared: &SharedFactors<'_>,
+    data: &BlockData<'_>,
+    mode: usize,
+    range: Range<usize>,
+    policy: InvariantPolicy,
+) {
+    let hp = data.hyper;
+    let core = &data.cores[mode];
+    let mut cache = InvariantCache::<R>::new(policy, data.n);
+    let mut row = [0f32; J];
+    let mut new_row = [0f32; J];
+    let mut db = [0f32; J];
+    let mut c_own = [0f32; R];
+    for e in range {
+        let i = data.coord(e, mode) as usize;
+        let d = cache.exclusion(data, e, mode);
+        shared.load_row(mode, i, &mut row);
+        micro::project::<J, R>(&row, core, &mut c_own);
+        let err = data.values[e] - micro::dot::<R>(&c_own, d);
+        micro::db_rows::<J, R>(core, d, &mut db);
+        micro::sgd_row::<J>(&row, &db, err, hp.lr_a, hp.lam_a, &mut new_row);
+        shared.store_row(mode, i, &new_row);
+    }
+}
+
+/// FasterTucker core step for one mode (storage scheme): prediction from
+/// stored `C` rows, gradient into `grad` (`[J, R]`).
+pub(crate) fn stored_core<const J: usize, const R: usize>(
+    shared: &SharedFactors<'_>,
+    data: &BlockData<'_>,
+    mode: usize,
+    range: Range<usize>,
+    grad: &mut [f32],
+    policy: InvariantPolicy,
+) {
+    let mut cache = InvariantCache::<R>::new(policy, data.n);
+    let mut row = [0f32; J];
+    for e in range {
+        let i = data.coord(e, mode) as usize;
+        let d = cache.exclusion(data, e, mode);
+        let crow: &[f32; R] = (&data.c_store[mode][i * R..i * R + R])
+            .try_into()
+            .expect("stored C row width");
+        let err = data.values[e] - micro::dot::<R>(crow, d);
+        shared.load_row(mode, i, &mut row);
+        micro::grad_accum::<J, R>(grad, &row, d, err);
+    }
+}

@@ -13,22 +13,26 @@
 //!   factor/core phase logic) → `sampler::stream` (pipelined block
 //!   scheduler: sample/stage block *k+1* while block *k* executes) →
 //!   `coordinator::backend::StepBackend` (pluggable execution) →
-//!   `runtime::Engine` (PJRT) or `cpu_ref::step` (scalar kernels).
+//!   `runtime::Engine` (PJRT) or [`kernel`] (tiled CPU microkernels, with
+//!   `cpu_ref::step` as the scalar oracle behind `--cpu-kernel scalar`).
 //!
 //! Execution backends (`--backend` on the CLI, [`prelude::Backend`] in
 //! code):
 //!
 //! * `hlo` — compiled PJRT/HLO artifacts, the system under test;
-//! * `cpu` — the sequential scalar oracle;
-//! * `parallel` — Hogwild multi-threaded scalar engine: block slots
+//! * `cpu` — the sequential CPU reference (tiled kernels, scalar oracle
+//!   behind a flag);
+//! * `parallel` — Hogwild multi-threaded CPU engine: block slots
 //!   sharded across workers with lock-free scatter into the factor
 //!   matrices ([`model::SharedFactors`]).
 //!
 //! Supporting modules: sparse tensor substrate ([`tensor`]), the three
 //! Table-3 sampling strategies ([`sampler`]), model state + gather/scatter
-//! ([`model`]), analytic cost models ([`cost`]), the bench harness
-//! ([`bench`]), synthetic datasets ([`synth`]), and utilities ([`util`]).
-//! See `ARCHITECTURE.md` for the full layering diagram.
+//! ([`model`]), the tiled CPU kernels ([`kernel`]), analytic cost models
+//! ([`cost`]), the bench harness ([`bench`]), synthetic datasets
+//! ([`synth`]), and utilities ([`util`]).  See `ARCHITECTURE.md` for the
+//! full layering diagram and `BENCHMARKS.md` for the paper-table bench
+//! suite.
 //!
 //! Python never runs at decomposition time; the binary is self-contained
 //! once `artifacts/` exists, and the CPU backends need no artifacts at all.
@@ -51,10 +55,13 @@
 //! }
 //! ```
 
+#![warn(missing_docs)]
+
 pub mod bench;
 pub mod coordinator;
 pub mod cost;
 pub mod cpu_ref;
+pub mod kernel;
 pub mod model;
 pub mod runtime;
 pub mod sampler;
@@ -62,9 +69,12 @@ pub mod synth;
 pub mod tensor;
 pub mod util;
 
+/// The handful of types most programs need: config enums, the trainer, the
+/// model and the sparse tensor.
 pub mod prelude {
     pub use crate::coordinator::config::{Algo, Backend, Strategy, TrainConfig, Variant};
     pub use crate::coordinator::trainer::Trainer;
+    pub use crate::kernel::KernelPolicy;
     pub use crate::model::TuckerModel;
     pub use crate::tensor::SparseTensor;
 }

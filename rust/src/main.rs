@@ -13,6 +13,7 @@ use anyhow::{bail, Context, Result};
 use fasttucker::coordinator::{Algo, Backend, Strategy, TrainConfig, Variant};
 use fasttucker::coordinator::Trainer;
 use fasttucker::cost;
+use fasttucker::kernel::KernelPolicy;
 use fasttucker::synth::{generate, SynthConfig};
 use fasttucker::tensor::{io, split::train_test_split};
 use fasttucker::util::cli::Args;
@@ -36,8 +37,9 @@ fn usage() -> &'static str {
            [--nnz K] [--seed S]\n\
      train --data FILE [--algo plus|fasttucker|fastertucker] [--variant tc|cc]\n\
            [--strategy calc|storage] [--backend hlo|cpu|parallel] [--threads K]\n\
-           [--epochs T] [--j J] [--r R] [--lr-a F] [--lr-b F] [--lam-a F]\n\
-           [--lam-b F] [--test-frac F] [--seed S] [--artifacts DIR] [--save FILE]\n\
+           [--cpu-kernel tiled|scalar] [--epochs T] [--j J] [--r R] [--lr-a F]\n\
+           [--lr-b F] [--lam-a F] [--lam-b F] [--test-frac F] [--seed S]\n\
+           [--artifacts DIR] [--save FILE]\n\
      cost  [--order N] [--j J] [--r R] [--m M] [--nnz K]\n\
      info  [--artifacts DIR]"
 }
@@ -101,8 +103,9 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     let a = Args::parse(
         argv,
         &[
-            "data", "algo", "variant", "strategy", "backend", "threads", "epochs", "j", "r",
-            "lr-a", "lr-b", "lam-a", "lam-b", "test-frac", "seed", "artifacts", "save", "toy",
+            "data", "algo", "variant", "strategy", "backend", "threads", "cpu-kernel", "epochs",
+            "j", "r", "lr-a", "lr-b", "lam-a", "lam-b", "test-frac", "seed", "artifacts", "save",
+            "toy",
         ],
         &["toy"],
     )
@@ -125,6 +128,10 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     }
     if let Some(s) = a.get("backend") {
         cfg.backend = Backend::parse(s).with_context(|| format!("bad --backend {s}"))?;
+    }
+    if let Some(s) = a.get("cpu-kernel") {
+        cfg.cpu_kernel =
+            KernelPolicy::parse(s).with_context(|| format!("bad --cpu-kernel {s}"))?;
     }
     cfg.threads = a.get_parse("threads", cfg.threads).map_err(anyhow::Error::msg)?;
     cfg.j = a.get_parse("j", cfg.j).map_err(anyhow::Error::msg)?;

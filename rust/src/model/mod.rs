@@ -21,8 +21,11 @@ use crate::util::rng::Pcg32;
 /// The decomposition parameters for one tensor.
 #[derive(Clone, Debug)]
 pub struct TuckerModel {
+    /// Dimension sizes `I_n` of the decomposed tensor.
     pub dims: Vec<u32>,
+    /// Factor rank J (uniform across modes).
     pub j: usize,
+    /// Kruskal rank R of the core.
     pub r: usize,
     /// `factors[n]` is `I_n x J` row-major.
     pub factors: Vec<Vec<f32>>,
@@ -83,11 +86,13 @@ impl TuckerModel {
         model
     }
 
+    /// Tensor order N.
     #[inline]
     pub fn order(&self) -> usize {
         self.dims.len()
     }
 
+    /// Row `i` of mode `mode`'s factor matrix (length J).
     #[inline]
     pub fn factor_row(&self, mode: usize, i: usize) -> &[f32] {
         &self.factors[mode][i * self.j..(i + 1) * self.j]
@@ -254,6 +259,7 @@ impl TuckerModel {
 
     const MAGIC: &'static [u8; 4] = b"FTM1";
 
+    /// Write a binary checkpoint (`FTM1` format).
     pub fn save(&self, path: &Path) -> Result<()> {
         let mut w = BufWriter::new(File::create(path)?);
         w.write_all(Self::MAGIC)?;
@@ -276,6 +282,7 @@ impl TuckerModel {
         Ok(())
     }
 
+    /// Load a binary checkpoint written by [`TuckerModel::save`].
     pub fn load(path: &Path) -> Result<Self> {
         let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
         let mut magic = [0u8; 4];

@@ -45,6 +45,7 @@ impl<'a> SharedFactors<'a> {
         }
     }
 
+    /// Row width J of the viewed factor matrices.
     #[inline]
     pub fn j(&self) -> usize {
         self.j

@@ -30,6 +30,7 @@ pub struct Engine {
 /// the buffers ourselves restores correct Drop semantics and also skips one
 /// host-side literal copy per input.
 pub struct Executable {
+    /// Interface metadata (shapes, block size S) from the manifest.
     pub info: ArtifactInfo,
     exe: xla::PjRtLoadedExecutable,
     client: xla::PjRtClient,
@@ -47,10 +48,12 @@ impl Engine {
         })
     }
 
+    /// PJRT platform name (for logs).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// The loaded artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }

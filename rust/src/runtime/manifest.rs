@@ -13,19 +13,28 @@ use crate::util::json::Json;
 /// One artifact entry.
 #[derive(Clone, Debug)]
 pub struct ArtifactInfo {
+    /// Unique artifact name (`<kernel>_n<N>_j<J>_r<R>_s<S>`).
     pub name: String,
+    /// Logical kernel this artifact implements.
     pub kernel: String,
+    /// Tensor order N the kernel was lowered for.
     pub n: usize,
+    /// Factor rank J.
     pub j: usize,
+    /// Kruskal rank R.
     pub r: usize,
+    /// Block slot count S (the batch shape).
     pub s: usize,
+    /// HLO text file, resolved relative to the manifest directory.
     pub file: PathBuf,
+    /// Input shapes in call order.
     pub inputs: Vec<Vec<usize>>,
 }
 
 /// Parsed manifest with lookup by (kernel, n, j, r).
 #[derive(Debug, Default)]
 pub struct Manifest {
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
     by_name: BTreeMap<String, ArtifactInfo>,
 }
@@ -101,14 +110,17 @@ impl Manifest {
         })
     }
 
+    /// Number of artifacts listed.
     pub fn len(&self) -> usize {
         self.by_name.len()
     }
 
+    /// Whether the manifest lists no artifacts.
     pub fn is_empty(&self) -> bool {
         self.by_name.is_empty()
     }
 
+    /// Look up an artifact by exact name.
     pub fn get(&self, name: &str) -> Option<&ArtifactInfo> {
         self.by_name.get(name)
     }
@@ -135,6 +147,7 @@ impl Manifest {
             .with_context(|| format!("no artifact for kernel={kernel} j={j} r={r}"))
     }
 
+    /// Iterate over all artifact entries.
     pub fn iter(&self) -> impl Iterator<Item = &ArtifactInfo> {
         self.by_name.values()
     }

@@ -17,7 +17,11 @@
 //!
 //! Staged slabs are full-size: `coords` is `[S, N]` with padded slots
 //! carrying defined (zero) coordinates and `values` is `[S]` zero-padded,
-//! so every downstream consumer sees a complete rectangular batch.
+//! so every downstream consumer sees a complete rectangular batch.  Each
+//! block also carries the transposed `lanes` slab (`[N, S]`, mode-major):
+//! one contiguous coordinate lane per mode, the layout the tiled CPU
+//! kernels scan when they touch a single mode per sample (ALTO-style
+//! linearized access — consecutive samples read consecutive words).
 
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::thread::{Scope, ScopedJoinHandle};
@@ -33,6 +37,10 @@ pub struct StagedBlock {
     /// Entry coordinates, `[S, N]` entry-major; padded slots are all-zero
     /// (defined, inert — padded rows are masked by `valid` downstream).
     pub coords: Vec<u32>,
+    /// The same coordinates transposed to `[N, S]` mode-major: lane `m` is
+    /// `lanes[m * s..(m + 1) * s]`, contiguous per mode for the tiled CPU
+    /// kernels.  Zero-padded past `valid` like `coords`.
+    pub lanes: Vec<u32>,
     /// Entry values, `[S]`, zero-padded.
     pub values: Vec<f32>,
     /// Number of valid (non-padding) slots, compacted to the front.
@@ -46,10 +54,14 @@ pub struct StagedBlock {
 /// only pad at warp tails, so group order is preserved), and both slabs
 /// are padded to their full `[S, N]` / `[S]` shapes.
 ///
-/// Allocates fresh slabs per block: ~S·(N+1) words, microseconds against
+/// Allocates fresh slabs per block: ~S·(2N+1) words, microseconds against
 /// the milliseconds of per-block compute, and ownership then transfers
 /// cleanly through the channel (a recycling return-path would complicate
-/// the consumer for no measurable win at current block sizes).
+/// the consumer for no measurable win at current block sizes).  The lane
+/// transpose is built unconditionally — only the storage-scheme CPU
+/// kernels read it, but it runs on the producer thread where the double
+/// buffer hides it, and a conditional would leak backend knowledge into
+/// the scheduler.
 pub fn stage(t: &SparseTensor, block: &Block) -> StagedBlock {
     let n = t.order();
     let s = block.ids.len();
@@ -65,8 +77,17 @@ pub fn stage(t: &SparseTensor, block: &Block) -> StagedBlock {
         slot += 1;
     }
     debug_assert_eq!(slot, block.valid);
+    // transpose to mode-major lanes (one contiguous coordinate run per mode)
+    let mut lanes = vec![0u32; n * s];
+    for m in 0..n {
+        let lane = &mut lanes[m * s..(m + 1) * s];
+        for (e, dst) in lane.iter_mut().enumerate().take(slot) {
+            *dst = coords[e * n + m];
+        }
+    }
     StagedBlock {
         coords,
+        lanes,
         values,
         valid: slot,
         s,
@@ -335,6 +356,7 @@ mod tests {
         while let Some(b) = it.next_block() {
             let staged = stage(&t, &b);
             assert_eq!(staged.coords.len(), 256 * t.order());
+            assert_eq!(staged.lanes.len(), 256 * t.order());
             assert_eq!(staged.values.len(), 256);
             assert_eq!(staged.s, 256);
             // padded slots carry defined (zero) coordinates
@@ -343,6 +365,16 @@ mod tests {
                     .iter()
                     .all(|&c| c == 0));
                 assert_eq!(staged.values[e], 0.0);
+            }
+            // lanes are the exact transpose of the entry-major slab
+            for m in 0..t.order() {
+                for e in 0..staged.s {
+                    assert_eq!(
+                        staged.lanes[m * staged.s + e],
+                        staged.coords[e * t.order() + m],
+                        "lane transpose mismatch at e={e} m={m}"
+                    );
+                }
             }
         }
     }

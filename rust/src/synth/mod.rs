@@ -13,7 +13,9 @@ use crate::util::rng::{Pcg32, Zipf};
 /// Generator configuration.
 #[derive(Clone, Debug)]
 pub struct SynthConfig {
+    /// Dimension sizes of the generated tensor.
     pub dims: Vec<u32>,
+    /// Entries to draw (realized nnz may be slightly lower after dedup).
     pub nnz: usize,
     /// Planted Kruskal rank of the ground-truth core.
     pub rank: usize,
@@ -23,8 +25,9 @@ pub struct SynthConfig {
     pub noise: f32,
     /// Zipf exponent for coordinate skew (0 => uniform).
     pub zipf: f64,
-    /// Clamp values into [min,max] (rating scale), if set.
+    /// Clamp values into `[min, max]` (rating scale), if set.
     pub clamp: Option<(f32, f32)>,
+    /// Generator seed (fully deterministic output).
     pub seed: u64,
 }
 

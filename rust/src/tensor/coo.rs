@@ -18,6 +18,7 @@ pub struct SparseTensor {
 }
 
 impl SparseTensor {
+    /// Empty tensor with the given dimension sizes (order ≥ 2).
     pub fn new(dims: Vec<u32>) -> Self {
         assert!(dims.len() >= 2, "need at least a 2-order tensor");
         Self {
@@ -27,11 +28,13 @@ impl SparseTensor {
         }
     }
 
+    /// Tensor order N.
     #[inline]
     pub fn order(&self) -> usize {
         self.dims.len()
     }
 
+    /// Number of stored (observed) entries.
     #[inline]
     pub fn nnz(&self) -> usize {
         self.values.len()
@@ -44,6 +47,7 @@ impl SparseTensor {
         &self.indices[e * n..(e + 1) * n]
     }
 
+    /// Append one entry (coordinates must have length N).
     pub fn push(&mut self, coords: &[u32], value: f32) {
         debug_assert_eq!(coords.len(), self.order());
         self.indices.extend_from_slice(coords);

@@ -14,6 +14,7 @@ use super::coo::SparseTensor;
 /// mode-`n` coordinate equals `i`.
 #[derive(Clone, Debug)]
 pub struct ModeSliceIndex {
+    /// The mode this index groups by.
     pub mode: usize,
     /// offsets.len() == dims[mode] + 1
     pub offsets: Vec<u32>,
@@ -22,6 +23,7 @@ pub struct ModeSliceIndex {
 }
 
 impl ModeSliceIndex {
+    /// Build the index for `mode` in O(nnz) (counting sort by slice).
     pub fn build(t: &SparseTensor, mode: usize) -> Self {
         let dim = t.dims[mode] as usize;
         let n = t.order();
@@ -87,6 +89,7 @@ impl ModeSliceIndex {
 /// coordinates; collisions are resolved by exact comparison during build.
 #[derive(Clone, Debug)]
 pub struct FiberIndex {
+    /// The excluded mode (fibers run along this mode).
     pub mode: usize,
     /// offsets into `entries`, one per fiber (+1).
     pub offsets: Vec<u32>,
@@ -95,6 +98,8 @@ pub struct FiberIndex {
 }
 
 impl FiberIndex {
+    /// Build the index for `mode` by sorting entry ids on the remaining
+    /// coordinates.
     pub fn build(t: &SparseTensor, mode: usize) -> Self {
         let n = t.order();
         let nnz = t.nnz();
@@ -128,10 +133,12 @@ impl FiberIndex {
         }
     }
 
+    /// Number of distinct fibers.
     pub fn num_fibers(&self) -> usize {
         self.offsets.len() - 1
     }
 
+    /// Entry ids of fiber `f`.
     pub fn fiber(&self, f: usize) -> &[u32] {
         let lo = self.offsets[f] as usize;
         let hi = self.offsets[f + 1] as usize;

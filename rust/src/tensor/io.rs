@@ -17,6 +17,7 @@ pub fn read_text(path: &Path) -> Result<SparseTensor> {
     parse_text(BufReader::new(f))
 }
 
+/// Parse the text COO format from any reader (see [`read_text`]).
 pub fn parse_text<R: BufRead>(r: R) -> Result<SparseTensor> {
     let mut tensor: Option<SparseTensor> = None;
     for (lineno, line) in r.lines().enumerate() {
@@ -69,6 +70,7 @@ pub fn parse_text<R: BufRead>(r: R) -> Result<SparseTensor> {
     Ok(t)
 }
 
+/// Write the text COO format (`dims` header + one entry per line).
 pub fn write_text(t: &SparseTensor, path: &Path) -> Result<()> {
     let mut w = BufWriter::new(File::create(path)?);
     write!(w, "dims")?;
@@ -103,6 +105,7 @@ pub fn write_binary(t: &SparseTensor, path: &Path) -> Result<()> {
     Ok(())
 }
 
+/// Read a binary `FTB1` file written by [`write_binary`].
 pub fn read_binary(path: &Path) -> Result<SparseTensor> {
     let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
     let mut magic = [0u8; 4];

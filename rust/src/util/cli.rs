@@ -5,6 +5,7 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command-line flags and positionals.
 #[derive(Debug, Default)]
 pub struct Args {
     flags: BTreeMap<String, String>,
@@ -49,15 +50,18 @@ impl Args {
         Ok(out)
     }
 
+    /// Raw value of `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         debug_assert!(self.allowed.iter().any(|k| k == key), "undeclared flag {key}");
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// Value of `--key`, or `default` when absent.
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// Parse `--key` into `T`, or return `default` when absent.
     pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
         match self.get(key) {
             None => Ok(default),
@@ -67,10 +71,12 @@ impl Args {
         }
     }
 
+    /// Whether boolean `--key` was given (or set to a truthy value).
     pub fn get_bool(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
 
+    /// Positional (non-flag) arguments in order.
     pub fn positional(&self) -> &[String] {
         &self.positional
     }

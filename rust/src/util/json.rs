@@ -7,17 +7,25 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// Any number (stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document.
     pub fn parse(s: &str) -> Result<Json, String> {
         let mut p = Parser {
             b: s.as_bytes(),
@@ -32,6 +40,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Object field access (`None` for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -39,6 +48,7 @@ impl Json {
         }
     }
 
+    /// The contained string, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -46,6 +56,7 @@ impl Json {
         }
     }
 
+    /// The contained number, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -53,6 +64,7 @@ impl Json {
         }
     }
 
+    /// The contained number as usize, if it round-trips exactly.
     pub fn as_usize(&self) -> Option<usize> {
         match self {
             Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as usize),
@@ -60,6 +72,7 @@ impl Json {
         }
     }
 
+    /// The contained array, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -67,6 +80,7 @@ impl Json {
         }
     }
 
+    /// The contained bool, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -137,19 +151,22 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
-/// Convenience builders.
+/// Convenience builder: object from (key, value) pairs.
 pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Convenience builder: number.
 pub fn num(n: f64) -> Json {
     Json::Num(n)
 }
 
+/// Convenience builder: string.
 pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
 }
 
+/// Convenience builder: array.
 pub fn arr(v: Vec<Json>) -> Json {
     Json::Arr(v)
 }

@@ -13,10 +13,12 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Seed the sequence.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
+    /// Next 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
         let mut z = self.state;
@@ -46,6 +48,7 @@ impl Pcg32 {
         rng
     }
 
+    /// Next 32-bit output.
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
@@ -57,6 +60,7 @@ impl Pcg32 {
         xorshifted.rotate_right(rot)
     }
 
+    /// Next 64-bit output (two 32-bit draws).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64
@@ -131,6 +135,7 @@ pub struct Zipf {
 }
 
 impl Zipf {
+    /// Sampler over `[0, n)` with exponent `s`.
     pub fn new(n: usize, s: f64) -> Self {
         assert!(n >= 1);
         let n = n as f64;

@@ -1,0 +1,268 @@
+//! Parity of the tiled CPU microkernels (`fasttucker::kernel`) against the
+//! scalar oracle (`cpu_ref::step::*_scalar`), across all three algorithms
+//! and both phases, including ragged (non-tile-multiple, offset) ranges
+//! and both invariant policies.  The tiled kernels are written to perform
+//! the same operations in the same order as the oracle, so the 1e-5
+//! tolerance required here is expected to hold exactly.
+
+use fasttucker::coordinator::{Algo, Backend, TrainConfig, Trainer};
+use fasttucker::cpu_ref::step::BlockData;
+use fasttucker::cpu_ref::{self, step, Hyper};
+use fasttucker::kernel::{self, InvariantPolicy, KernelCfg, KernelPolicy};
+use fasttucker::model::{SharedFactors, TuckerModel};
+use fasttucker::synth::{generate, SynthConfig};
+use fasttucker::tensor::{FiberIndex, SparseTensor};
+
+const TOL: f32 = 1e-5;
+
+/// Stage a whole tensor as one block: entry-major coords, mode-major lanes,
+/// values — in `order` order.
+fn staged(t: &SparseTensor, order: &[u32]) -> (Vec<u32>, Vec<u32>, Vec<f32>) {
+    let n = t.order();
+    let s = order.len();
+    let mut coords = vec![0u32; s * n];
+    let mut values = vec![0f32; s];
+    for (slot, &e) in order.iter().enumerate() {
+        coords[slot * n..(slot + 1) * n].copy_from_slice(t.coords(e as usize));
+        values[slot] = t.values[e as usize];
+    }
+    let mut lanes = vec![0u32; n * s];
+    for m in 0..n {
+        for e in 0..s {
+            lanes[m * s + e] = coords[e * n + m];
+        }
+    }
+    (coords, lanes, values)
+}
+
+fn assert_close(a: &[f32], b: &[f32], what: &str) {
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!((x - y).abs() < TOL, "{what}[{i}]: tiled {x} vs scalar {y}");
+    }
+}
+
+struct Setup {
+    tensor: SparseTensor,
+    model: TuckerModel,
+    hyper: Hyper,
+}
+
+fn setup(j: usize, r: usize, seed: u64) -> Setup {
+    // 3 modes, dims small enough that factor-row collisions occur within a
+    // block — the case that forces sequential tile semantics.
+    let tensor = generate(&SynthConfig::order_sweep(3, 24, 900, seed));
+    let model = TuckerModel::init(&tensor.dims, j, r, seed ^ 0x5EED);
+    Setup {
+        tensor,
+        model,
+        hyper: Hyper::default(),
+    }
+}
+
+/// Ragged ranges: a full range plus an offset sub-range that is not a
+/// multiple of the 16-slot tile.
+fn ranges(nnz: usize) -> Vec<std::ops::Range<usize>> {
+    vec![0..nnz, 3..nnz - 5, 0..7]
+}
+
+fn tiled_cfg(invariant: InvariantPolicy) -> KernelCfg {
+    KernelCfg {
+        policy: KernelPolicy::Tiled,
+        invariant,
+    }
+}
+
+#[test]
+fn plus_factor_parity() {
+    for (j, r) in [(16, 16), (32, 16), (16, 32)] {
+        let s = setup(j, r, 3);
+        let ids: Vec<u32> = (0..s.tensor.nnz() as u32).collect();
+        let (coords, lanes, values) = staged(&s.tensor, &ids);
+        for range in ranges(s.tensor.nnz()) {
+            let mut a = s.model.clone();
+            let mut b = s.model.clone();
+            let cores = s.model.cores.clone();
+            let data = BlockData {
+                cores: &cores,
+                c_store: &[],
+                coords: &coords,
+                lanes: &lanes,
+                values: &values,
+                n: 3,
+                j,
+                r,
+                hyper: s.hyper,
+            };
+            {
+                let shared = SharedFactors::new(&mut a.factors, j);
+                let cfg = tiled_cfg(InvariantPolicy::Recompute);
+                kernel::plus_factor_range(&shared, &data, range.clone(), cfg);
+            }
+            {
+                let shared = SharedFactors::new(&mut b.factors, j);
+                step::plus_factor_scalar(&shared, &data, range.clone());
+            }
+            for m in 0..3 {
+                assert_close(&a.factors[m], &b.factors[m], "plus factors");
+            }
+        }
+    }
+}
+
+#[test]
+fn plus_core_parity() {
+    let (j, r) = (16, 16);
+    let s = setup(j, r, 5);
+    let ids: Vec<u32> = (0..s.tensor.nnz() as u32).collect();
+    let (coords, lanes, values) = staged(&s.tensor, &ids);
+    for range in ranges(s.tensor.nnz()) {
+        let mut a = s.model.clone();
+        let mut b = s.model.clone();
+        let cores = s.model.cores.clone();
+        let data = BlockData {
+            cores: &cores,
+            c_store: &[],
+            coords: &coords,
+            lanes: &lanes,
+            values: &values,
+            n: 3,
+            j,
+            r,
+            hyper: s.hyper,
+        };
+        let mut ga = vec![0f32; 3 * j * r];
+        let mut gb = vec![0f32; 3 * j * r];
+        {
+            let shared = SharedFactors::new(&mut a.factors, j);
+            let cfg = tiled_cfg(InvariantPolicy::Recompute);
+            kernel::plus_core_range(&shared, &data, range.clone(), &mut ga, cfg);
+        }
+        {
+            let shared = SharedFactors::new(&mut b.factors, j);
+            step::plus_core_scalar(&shared, &data, range.clone(), &mut gb);
+        }
+        assert_close(&ga, &gb, "plus core grad");
+    }
+}
+
+#[test]
+fn fasttucker_parity_both_phases() {
+    let (j, r) = (16, 16);
+    let s = setup(j, r, 7);
+    let ids: Vec<u32> = (0..s.tensor.nnz() as u32).collect();
+    let (coords, lanes, values) = staged(&s.tensor, &ids);
+    for mode in 0..3 {
+        for range in ranges(s.tensor.nnz()) {
+            let mut a = s.model.clone();
+            let mut b = s.model.clone();
+            let cores = s.model.cores.clone();
+            let data = BlockData {
+                cores: &cores,
+                c_store: &[],
+                coords: &coords,
+                lanes: &lanes,
+                values: &values,
+                n: 3,
+                j,
+                r,
+                hyper: s.hyper,
+            };
+            let mut ga = vec![0f32; j * r];
+            let mut gb = vec![0f32; j * r];
+            {
+                let shared = SharedFactors::new(&mut a.factors, j);
+                let cfg = tiled_cfg(InvariantPolicy::Recompute);
+                kernel::mode_factor_range(&shared, &data, mode, range.clone(), cfg);
+                kernel::mode_core_range(&shared, &data, mode, range.clone(), &mut ga, cfg);
+            }
+            {
+                let shared = SharedFactors::new(&mut b.factors, j);
+                step::mode_factor_scalar(&shared, &data, mode, range.clone());
+                step::mode_core_scalar(&shared, &data, mode, range.clone(), &mut gb);
+            }
+            assert_close(&a.factors[mode], &b.factors[mode], "fasttucker factors");
+            assert_close(&ga, &gb, "fasttucker core grad");
+        }
+    }
+}
+
+/// FasterTucker parity, with the block staged in *fiber order* so the
+/// per-fiber invariant cache actually gets hits, under both policies.
+#[test]
+fn fastertucker_parity_both_policies() {
+    let (j, r) = (16, 16);
+    let s = setup(j, r, 9);
+    let mode = 1usize;
+    let fibers = FiberIndex::build(&s.tensor, mode);
+    let order: Vec<u32> = (0..fibers.num_fibers())
+        .flat_map(|f| fibers.fiber(f).to_vec())
+        .collect();
+    let (coords, lanes, values) = staged(&s.tensor, &order);
+    let c_store: Vec<Vec<f32>> = (0..3)
+        .map(|m| cpu_ref::compute_c_full(&s.model, m))
+        .collect();
+    for invariant in [InvariantPolicy::Recompute, InvariantPolicy::CachePerFiber] {
+        for range in ranges(order.len()) {
+            let mut a = s.model.clone();
+            let mut b = s.model.clone();
+            let cores = s.model.cores.clone();
+            let data = BlockData {
+                cores: &cores,
+                c_store: &c_store,
+                coords: &coords,
+                lanes: &lanes,
+                values: &values,
+                n: 3,
+                j,
+                r,
+                hyper: s.hyper,
+            };
+            let mut ga = vec![0f32; j * r];
+            let mut gb = vec![0f32; j * r];
+            {
+                let shared = SharedFactors::new(&mut a.factors, j);
+                let cfg = tiled_cfg(invariant);
+                kernel::stored_factor_range(&shared, &data, mode, range.clone(), cfg);
+                kernel::stored_core_range(&shared, &data, mode, range.clone(), &mut ga, cfg);
+            }
+            {
+                let shared = SharedFactors::new(&mut b.factors, j);
+                step::stored_factor_scalar(&shared, &data, mode, range.clone());
+                step::stored_core_scalar(&shared, &data, mode, range.clone(), &mut gb);
+            }
+            assert_close(&a.factors[mode], &b.factors[mode], "fastertucker factors");
+            assert_close(&ga, &gb, "fastertucker core grad");
+        }
+    }
+}
+
+/// End-to-end: a CpuRef trainer with tiled kernels must reproduce the
+/// scalar trainer's RMSE trajectory for every algorithm.
+#[test]
+fn trainer_trajectories_match_across_kernel_policies() {
+    let tensor = generate(&SynthConfig::order_sweep(3, 32, 3_000, 21));
+    let (train, test) = fasttucker::tensor::split::train_test_split(&tensor, 0.2, 1);
+    for algo in [Algo::Plus, Algo::FastTucker, Algo::FasterTucker, Algo::FasterTuckerCoo] {
+        let mut curves: Vec<Vec<f64>> = Vec::new();
+        for policy in [KernelPolicy::Tiled, KernelPolicy::Scalar] {
+            let mut cfg = TrainConfig::default();
+            cfg.backend = Backend::CpuRef;
+            cfg.algo = algo;
+            cfg.cpu_kernel = policy;
+            let mut tr = Trainer::new(&train, cfg).unwrap();
+            let mut curve = Vec::new();
+            for _ in 0..3 {
+                tr.epoch(&train).unwrap();
+                let (rmse, _) = tr.evaluate(&test).unwrap();
+                curve.push(rmse);
+            }
+            curves.push(curve);
+        }
+        for (a, b) in curves[0].iter().zip(&curves[1]) {
+            assert!(
+                (a - b).abs() < 1e-5 * (1.0 + a.abs()),
+                "{algo:?}: tiled {a} vs scalar {b}"
+            );
+        }
+    }
+}
