@@ -1,95 +1,111 @@
-//! Tensor-completion service: train a model, then serve prediction queries
-//! over a line-oriented TCP protocol (std-only; tokio is not in the offline
-//! crate set).  Demonstrates the "decomposed once, queried forever" usage
-//! the paper motivates for recommender backends.
+//! Train-and-serve concurrently: the tensor-completion service rebuilt on
+//! the serving subsystem.  A [`Server`] opens on the epoch-0 snapshot and
+//! keeps answering batched predict / top-K queries from concurrent client
+//! threads while the trainer runs more epochs and hot-swaps fresh
+//! snapshots in via `Trainer::publish` — in-flight queries always see one
+//! consistent model, and clients observe the epoch tag advancing.
 //!
-//! Protocol:  client sends `i1 i2 ... iN\n`, server replies `<prediction>\n`;
-//! `quit` closes the connection.
+//! Everything is in-process and offline (no sockets: a network front-end
+//! would sit on top of the same [`ServerHandle`]).  CI runs this on every
+//! PR.
 //!
-//! Run: `cargo run --release --example completion_server` (serves a few
-//! self-issued queries, then exits — set `SERVE_FOREVER=1` to keep serving).
+//! Run: `cargo run --release --example completion_server`
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
 use fasttucker::coordinator::{Backend, Trainer, TrainConfig};
-use fasttucker::model::TuckerModel;
+use fasttucker::serve::Server;
 use fasttucker::synth::{generate, SynthConfig};
-
-fn serve(model: &TuckerModel, stream: TcpStream) -> anyhow::Result<()> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut stream = stream;
-    let mut line = String::new();
-    loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 || line.trim() == "quit" {
-            return Ok(());
-        }
-        let coords: Result<Vec<u32>, _> =
-            line.split_whitespace().map(|t| t.parse::<u32>()).collect();
-        let reply = match coords {
-            Ok(c) if c.len() == model.order()
-                && c.iter().zip(&model.dims).all(|(&i, &d)| i < d) =>
-            {
-                format!("{:.4}\n", model.predict_one(&c))
-            }
-            _ => "ERR expected N in-bounds indices\n".to_string(),
-        };
-        stream.write_all(reply.as_bytes())?;
-    }
-}
+use fasttucker::util::rng::Pcg32;
 
 fn main() -> anyhow::Result<()> {
-    // Train a small model first (or load one with --model).
-    let args: Vec<String> = std::env::args().collect();
-    let model = if let Some(pos) = args.iter().position(|a| a == "--model") {
-        TuckerModel::load(std::path::Path::new(&args[pos + 1]))?
-    } else {
-        let tensor = generate(&SynthConfig::order_sweep(3, 256, 50_000, 5));
-        let mut cfg = TrainConfig::default();
-        if !cfg.hlo_available() {
-            eprintln!("note: no artifacts; using --backend parallel");
-            cfg.backend = Backend::ParallelCpu;
-        }
-        let mut trainer = Trainer::new(&tensor, cfg)?;
-        for _ in 0..8 {
-            trainer.epoch(&tensor)?;
-        }
-        trainer.model
-    };
+    let tensor = generate(&SynthConfig::order_sweep(3, 256, 40_000, 5));
+    let mut cfg = TrainConfig::default();
+    if !cfg.hlo_available() {
+        eprintln!("note: no artifacts; using --backend parallel");
+        cfg.backend = Backend::ParallelCpu;
+    }
+    let mut trainer = Trainer::new(&tensor, cfg)?;
+    let dims = tensor.dims.clone();
 
-    let listener = TcpListener::bind("127.0.0.1:0")?;
-    let addr = listener.local_addr()?;
-    println!("completion server on {addr} (order {}, dims {:?})", model.order(), model.dims);
+    let server = Server::start(trainer.snapshot(), 2, 16);
+    println!(
+        "serving order-{} model over dims {:?} (snapshot epoch {})",
+        trainer.model.order(),
+        dims,
+        server.epoch()
+    );
 
-    if std::env::var("SERVE_FOREVER").is_ok() {
-        for stream in listener.incoming() {
-            let model = model.clone();
-            std::thread::spawn(move || {
-                let _ = serve(&model, stream.expect("accept"));
+    // Client threads hammer the server while the main thread trains.
+    let stop = AtomicBool::new(false);
+    let max_epoch_seen = AtomicU64::new(0);
+    let queries_ok = AtomicU64::new(0);
+    std::thread::scope(|scope| -> anyhow::Result<()> {
+        for c in 0..3u64 {
+            let handle = server.handle();
+            let stop = &stop;
+            let max_epoch_seen = &max_epoch_seen;
+            let queries_ok = &queries_ok;
+            let dims = &dims;
+            scope.spawn(move || {
+                let mut rng = Pcg32::new(77, c);
+                while !stop.load(Ordering::Relaxed) {
+                    let coords: Vec<u32> = dims.iter().map(|&d| rng.gen_range(d)).collect();
+                    let v = match c % 3 {
+                        // mix predicts, top-K completions and epoch probes
+                        0 => handle.predict(coords).expect("predict"),
+                        1 => {
+                            let top = handle.topk(coords, 2, 3).expect("topk");
+                            top[0].score
+                        }
+                        _ => {
+                            let e = handle.epoch().expect("epoch");
+                            max_epoch_seen.fetch_max(e, Ordering::Relaxed);
+                            e as f32
+                        }
+                    };
+                    assert!(v.is_finite(), "query returned a non-finite value");
+                    queries_ok.fetch_add(1, Ordering::Relaxed);
+                }
             });
         }
-        return Ok(());
-    }
 
-    // Self-test: issue a few queries from a client thread and print replies.
-    let server_model = model.clone();
-    let handle = std::thread::spawn(move || {
-        let (stream, _) = listener.accept().expect("accept");
-        serve(&server_model, stream).expect("serve");
-    });
-    let mut client = TcpStream::connect(addr)?;
-    let mut reader = BufReader::new(client.try_clone()?);
-    for query in ["1 2 3", "10 20 30", "bad input", "9999 0 0", "quit"] {
-        client.write_all(format!("{query}\n").as_bytes())?;
-        if query == "quit" {
-            break;
-        }
-        let mut reply = String::new();
-        reader.read_line(&mut reply)?;
-        println!("  {query:>12} -> {}", reply.trim());
-    }
-    handle.join().unwrap();
+        // Train 6 epochs, publishing after each — every publish is a
+        // hot-swap under live traffic.  Always release the clients, even
+        // if an epoch errors, so the scope can join.
+        let trained = (|| -> anyhow::Result<()> {
+            for epoch in 1..=6 {
+                trainer.epoch(&tensor)?;
+                trainer.publish(&server);
+                println!(
+                    "epoch {epoch}: published (server now at snapshot epoch {}, {} queries answered so far)",
+                    server.epoch(),
+                    queries_ok.load(Ordering::Relaxed)
+                );
+            }
+            Ok(())
+        })();
+        stop.store(true, Ordering::Relaxed);
+        trained
+    })?;
+
+    let seen = max_epoch_seen.load(Ordering::Relaxed);
+    let ok = queries_ok.load(Ordering::Relaxed);
+    let stats = server.shutdown();
+    println!(
+        "\nclients completed {ok} queries against live-swapped snapshots; \
+         newest epoch observed mid-traffic: {seen}"
+    );
+    println!(
+        "server: {} requests in {} batches (mean batch {:.1}), {} publishes",
+        stats.served,
+        stats.batches,
+        stats.served as f64 / stats.batches.max(1) as f64,
+        stats.swaps
+    );
+    anyhow::ensure!(ok > 0, "clients made no progress");
+    anyhow::ensure!(seen >= 1, "hot-swapped snapshots never became visible");
+    anyhow::ensure!(stats.swaps == 6);
     println!("server exited cleanly");
     Ok(())
 }

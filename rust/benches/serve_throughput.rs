@@ -1,0 +1,148 @@
+//! Serving-path throughput and latency over the Netflix-like surrogate —
+//! the production-side counterpart to the training benches.
+//!
+//! Rows (all `BENCH_JSON`-scraped, see BENCHMARKS.md):
+//!
+//! * `predict_1t` — single-thread point-prediction throughput straight
+//!   through [`Engine::predict`] (no server), with per-query p50/p99
+//!   latency extras.
+//! * `server_tK` — end-to-end QPS through the batched threaded [`Server`]
+//!   at K workers with K concurrent blocking clients (queue + batch +
+//!   snapshot-read overhead included), plus p50/p99 call latency.
+//! * `complete_cold` vs `complete_cached` — the serving analog of the
+//!   paper's calc-vs-store knob: score every item of one user fiber via
+//!   per-item full-chain predicts (cold — the exclusion product is
+//!   effectively recomputed per candidate) vs one [`Engine::complete_mode`]
+//!   sweep (the fiber invariant computed once, then one R-wide dot per
+//!   candidate).  The `items_per_s` extras give the shared-invariant win.
+//!
+//! Run: `cargo bench --bench serve_throughput` (BENCH_QUICK=1 shrinks it).
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use fasttucker::bench::{measure, percentile, report, Row};
+use fasttucker::coordinator::{Backend, Trainer, TrainConfig};
+use fasttucker::serve::{Engine, Server};
+use fasttucker::synth::{generate, SynthConfig};
+use fasttucker::util::rng::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let (nnz, epochs, queries) = if quick {
+        (30_000, 2, 2_000)
+    } else {
+        (120_000, 4, 20_000)
+    };
+    let train = generate(&SynthConfig::netflix_like(nnz, 7));
+    let mut cfg = TrainConfig::default();
+    cfg.backend = Backend::ParallelCpu;
+    let mut trainer = Trainer::new(&train, cfg)?;
+    for _ in 0..epochs {
+        trainer.epoch(&train)?;
+    }
+    let snap = trainer.snapshot();
+    let dims = snap.dims().to_vec();
+    let n = dims.len();
+
+    // fixed query set, shared by every configuration
+    let mut rng = Pcg32::new(13, 0xBE);
+    let coords: Vec<u32> = (0..queries)
+        .flat_map(|_| dims.iter().map(|&d| rng.gen_range(d)).collect::<Vec<u32>>())
+        .collect();
+
+    let mut rows: Vec<Row> = Vec::new();
+
+    // --- single-thread engine throughput + latency ------------------------
+    let engine = Engine::new(snap.clone());
+    let mut lat: Vec<f64> = Vec::with_capacity(queries);
+    let mut row = measure("predict_1t", 1, 5, || {
+        lat.clear();
+        let mut sink = 0f64;
+        for q in coords.chunks_exact(n) {
+            let t = Instant::now();
+            sink += engine.predict(q) as f64;
+            lat.push(t.elapsed().as_secs_f64());
+        }
+        sink
+    });
+    row.extra.push(("qps".into(), queries as f64 / row.median_s));
+    row.extra.push(("p50_us".into(), percentile(&mut lat, 50.0) * 1e6));
+    row.extra.push(("p99_us".into(), percentile(&mut lat, 99.0) * 1e6));
+    rows.push(row);
+
+    // --- threaded server QPS + call latency -------------------------------
+    for workers in [1usize, 2, 4] {
+        let server = Server::start(snap.clone(), workers, 32);
+        let latencies = Mutex::new(Vec::with_capacity(queries));
+        let label = format!("server_t{workers}");
+        let mut row = measure(&label, 1, 3, || {
+            latencies.lock().unwrap().clear();
+            std::thread::scope(|scope| {
+                for c in 0..workers {
+                    let handle = server.handle();
+                    let latencies = &latencies;
+                    let coords = &coords;
+                    scope.spawn(move || {
+                        let mut local = Vec::with_capacity(queries / workers + 1);
+                        for q in coords.chunks_exact(n).skip(c).step_by(workers) {
+                            let t = Instant::now();
+                            handle.predict(q.to_vec()).expect("predict");
+                            local.push(t.elapsed().as_secs_f64());
+                        }
+                        latencies.lock().unwrap().extend(local);
+                    });
+                }
+            });
+            0.0
+        });
+        let stats = server.shutdown();
+        let mut lat = latencies.into_inner().unwrap();
+        row.extra.push(("qps".into(), queries as f64 / row.median_s));
+        row.extra.push(("p50_us".into(), percentile(&mut lat, 50.0) * 1e6));
+        row.extra.push(("p99_us".into(), percentile(&mut lat, 99.0) * 1e6));
+        row.extra.push((
+            "mean_batch".into(),
+            stats.served as f64 / stats.batches.max(1) as f64,
+        ));
+        rows.push(row);
+    }
+
+    // --- cold vs fiber-cached mode completion -----------------------------
+    // one user fiber, every item scored (the per-user recommender sweep)
+    let items = dims[1] as usize;
+    let user_coords = [coords[0], 0, coords[2]];
+    let mut engine = Engine::new(snap.clone());
+    let mut row = measure("complete_cold", 1, 5, || {
+        let mut sink = 0f64;
+        let mut q = user_coords;
+        for item in 0..items as u32 {
+            q[1] = item;
+            sink += engine.predict(&q) as f64;
+        }
+        sink
+    });
+    row.extra.push(("items_per_s".into(), items as f64 / row.median_s));
+    rows.push(row);
+
+    let mut scores = Vec::with_capacity(items);
+    let mut row = measure("complete_cached", 1, 5, || {
+        scores.clear();
+        engine.complete_mode(&user_coords, 1, &mut scores);
+        scores.iter().map(|&s| s as f64).sum()
+    });
+    row.extra.push(("items_per_s".into(), items as f64 / row.median_s));
+    let cold = rows
+        .iter()
+        .find(|r| r.label == "complete_cold")
+        .map(|r| r.median_s)
+        .unwrap_or(f64::NAN);
+    row.extra.push(("speedup_vs_cold".into(), cold / row.median_s));
+    rows.push(row);
+
+    report(
+        &format!("Serve throughput — netflix-like, {nnz} nnz, {queries} queries"),
+        &rows,
+    );
+    Ok(())
+}

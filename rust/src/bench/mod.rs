@@ -74,6 +74,15 @@ pub fn measure<F: FnMut() -> f64>(label: &str, warmup: usize, reps: usize, mut f
     }
 }
 
+/// `p`-th percentile (0–100) of a sample, nearest-rank on the sorted data
+/// (sorts in place).  Used for the serving-latency p50/p99 rows.
+pub fn percentile(xs: &mut [f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p.clamp(0.0, 100.0) / 100.0 * (xs.len() - 1) as f64).round() as usize;
+    xs[rank]
+}
+
 /// Median and MAD of a sample (sorts in place).
 pub fn median_mad(xs: &mut [f64]) -> (f64, f64) {
     assert!(!xs.is_empty());
@@ -191,6 +200,16 @@ mod tests {
         let (m, d) = median_mad(&mut xs);
         assert_eq!(m, 3.0);
         assert_eq!(d, 2.0);
+    }
+
+    #[test]
+    fn percentile_ranks() {
+        let mut xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&mut xs, 0.0), 1.0);
+        assert_eq!(percentile(&mut xs, 100.0), 100.0);
+        assert_eq!(percentile(&mut xs, 50.0), 51.0); // nearest-rank on 0..=99
+        let mut one = vec![7.0];
+        assert_eq!(percentile(&mut one, 99.0), 7.0);
     }
 
     #[test]

@@ -44,6 +44,28 @@ impl Algo {
         }
     }
 
+    /// Stable numeric code for on-disk headers (the serve checkpoint
+    /// format).  Append-only: never renumber published codes.
+    pub fn code(self) -> u32 {
+        match self {
+            Algo::FastTucker => 0,
+            Algo::FasterTucker => 1,
+            Algo::FasterTuckerCoo => 2,
+            Algo::Plus => 3,
+        }
+    }
+
+    /// Inverse of [`Algo::code`].
+    pub fn from_code(code: u32) -> Option<Algo> {
+        match code {
+            0 => Some(Algo::FastTucker),
+            1 => Some(Algo::FasterTucker),
+            2 => Some(Algo::FasterTuckerCoo),
+            3 => Some(Algo::Plus),
+            _ => None,
+        }
+    }
+
     /// The corresponding row of the Table-4 analytic cost model.
     pub fn cost_algo(self) -> crate::cost::Algo {
         match self {
@@ -217,6 +239,16 @@ mod tests {
         for b in [Backend::Hlo, Backend::CpuRef, Backend::ParallelCpu] {
             assert_eq!(Backend::parse(b.name()), Some(b));
         }
+        // code() round-trips through from_code()
+        for a in [
+            Algo::FastTucker,
+            Algo::FasterTucker,
+            Algo::FasterTuckerCoo,
+            Algo::Plus,
+        ] {
+            assert_eq!(Algo::from_code(a.code()), Some(a));
+        }
+        assert_eq!(Algo::from_code(99), None);
         assert_eq!(TrainConfig::default().cpu_kernel, KernelPolicy::Tiled);
     }
 }

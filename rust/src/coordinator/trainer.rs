@@ -18,6 +18,7 @@ use crate::coordinator::metrics::{EpochStats, PhaseStats};
 use crate::coordinator::phases;
 use crate::cpu_ref;
 use crate::model::TuckerModel;
+use crate::serve::{ModelSnapshot, Server};
 use crate::tensor::{FiberIndex, ModeSliceIndex, SparseTensor};
 
 /// Cheap structural fingerprint of a tensor: dims + nnz + first/last entry
@@ -146,5 +147,18 @@ impl Trainer {
     /// Platform string of the runtime (for logs).
     pub fn platform(&self) -> String {
         self.backend.platform()
+    }
+
+    /// Freeze the current model into an immutable, epoch-tagged serving
+    /// snapshot (factors, cores and precomputed projection tables).
+    pub fn snapshot(&self) -> ModelSnapshot {
+        ModelSnapshot::from_model(&self.model, self.cfg.algo, self.epoch_no)
+    }
+
+    /// Publish the current model to a running serve loop: hot-swaps the
+    /// server's snapshot while in-flight queries keep reading the old one,
+    /// so training and serving proceed concurrently.
+    pub fn publish(&self, server: &Server) {
+        server.publish(self.snapshot());
     }
 }

@@ -26,6 +26,13 @@
 //!   sharded across workers with lock-free scatter into the factor
 //!   matrices ([`model::SharedFactors`]).
 //!
+//! On top of training sits the **serving subsystem** ([`serve`]):
+//! immutable published snapshots with a versioned on-disk checkpoint
+//! format, a batched query engine whose predictions are bit-identical to
+//! the trainer's evaluation path, mode-completion top-K scoring (the
+//! recommender query), and a threaded request loop with batching and
+//! snapshot hot-swap so training and serving run concurrently.
+//!
 //! Supporting modules: sparse tensor substrate ([`tensor`]), the three
 //! Table-3 sampling strategies ([`sampler`]), model state + gather/scatter
 //! ([`model`]), the tiled CPU kernels ([`kernel`]), analytic cost models
@@ -65,16 +72,18 @@ pub mod kernel;
 pub mod model;
 pub mod runtime;
 pub mod sampler;
+pub mod serve;
 pub mod synth;
 pub mod tensor;
 pub mod util;
 
 /// The handful of types most programs need: config enums, the trainer, the
-/// model and the sparse tensor.
+/// model, the sparse tensor and the serving snapshot.
 pub mod prelude {
     pub use crate::coordinator::config::{Algo, Backend, Strategy, TrainConfig, Variant};
     pub use crate::coordinator::trainer::Trainer;
     pub use crate::kernel::KernelPolicy;
     pub use crate::model::TuckerModel;
+    pub use crate::serve::ModelSnapshot;
     pub use crate::tensor::SparseTensor;
 }

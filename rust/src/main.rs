@@ -1,22 +1,30 @@
 //! `fasttucker` CLI — the leader entrypoint.
 //!
 //! Subcommands:
-//!   synth  — generate a synthetic sparse tensor (presets or custom)
-//!   train  — run a decomposition and report per-epoch RMSE/MAE + timings
-//!   cost   — print the Table-4 analytic cost model for a configuration
-//!   info   — runtime / artifact inventory
+//!   synth      — generate a synthetic sparse tensor (presets or custom)
+//!   train      — run a decomposition and report per-epoch RMSE/MAE + timings
+//!   serve      — train-or-load a checkpoint and answer batched queries
+//!   query      — one-shot predict / top-K against a checkpoint
+//!   checkpoint — convert / inspect serve checkpoints (FTCK format)
+//!   cost       — print the Table-4 analytic cost model for a configuration
+//!   info       — runtime / artifact inventory
 
 use std::path::{Path, PathBuf};
+use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
+use fasttucker::bench::percentile;
 use fasttucker::coordinator::{Algo, Backend, Strategy, TrainConfig, Variant};
 use fasttucker::coordinator::Trainer;
 use fasttucker::cost;
 use fasttucker::kernel::KernelPolicy;
+use fasttucker::model::TuckerModel;
+use fasttucker::serve::{check_coords, mode_topk, Engine, ModelSnapshot, Server};
 use fasttucker::synth::{generate, SynthConfig};
 use fasttucker::tensor::{io, split::train_test_split};
-use fasttucker::util::cli::Args;
+use fasttucker::util::cli::{parse_u32_list, Args};
+use fasttucker::util::rng::Pcg32;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -31,7 +39,7 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: fasttucker <synth|train|cost|info> [flags]\n\
+    "usage: fasttucker <synth|train|serve|query|checkpoint|cost|info> [flags]\n\
      \n\
      synth --out FILE [--preset netflix|yahoo|order] [--order N] [--dim I]\n\
            [--nnz K] [--seed S]\n\
@@ -39,7 +47,16 @@ fn usage() -> &'static str {
            [--strategy calc|storage] [--backend hlo|cpu|parallel] [--threads K]\n\
            [--cpu-kernel tiled|scalar] [--epochs T] [--j J] [--r R] [--lr-a F]\n\
            [--lr-b F] [--lam-a F] [--lam-b F] [--test-frac F] [--seed S]\n\
-           [--artifacts DIR] [--save FILE]\n\
+           [--artifacts DIR] [--save FILE] [--checkpoint FILE]\n\
+     serve [--checkpoint FILE] [--data FILE|--toy] [--epochs T] [--nnz K]\n\
+           [--algo A] [--backend hlo|cpu|parallel] [--threads K] [--j J]\n\
+           [--r R] [--seed S]\n\
+           [--serve-threads K] [--batch B] [--queries Q] [--topk K] [--mode M]\n\
+           (loads FILE if it exists; otherwise trains in this invocation and,\n\
+            when FILE is given, checkpoints to it before serving)\n\
+     query --checkpoint FILE --coords I1,I2,...,IN [--mode M] [--topk K]\n\
+     checkpoint save --model FILE --out FILE [--algo A] [--epoch E]\n\
+     checkpoint load --file FILE [--model-out FILE]\n\
      cost  [--order N] [--j J] [--r R] [--m M] [--nnz K]\n\
      info  [--artifacts DIR]"
 }
@@ -51,6 +68,9 @@ fn run(argv: Vec<String>) -> Result<()> {
     match cmd.as_str() {
         "synth" => cmd_synth(rest.to_vec()),
         "train" => cmd_train(rest.to_vec()),
+        "serve" => cmd_serve(rest.to_vec()),
+        "query" => cmd_query(rest.to_vec()),
+        "checkpoint" => cmd_checkpoint(rest.to_vec()),
         "cost" => cmd_cost(rest.to_vec()),
         "info" => cmd_info(rest.to_vec()),
         "profile" => cmd_profile(rest.to_vec()),
@@ -105,7 +125,7 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         &[
             "data", "algo", "variant", "strategy", "backend", "threads", "cpu-kernel", "epochs",
             "j", "r", "lr-a", "lr-b", "lam-a", "lam-b", "test-frac", "seed", "artifacts", "save",
-            "toy",
+            "checkpoint", "toy",
         ],
         &["toy"],
     )
@@ -172,6 +192,255 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     if let Some(path) = a.get("save") {
         trainer.model.save(Path::new(path))?;
         println!("saved model to {path}");
+    }
+    if let Some(path) = a.get("checkpoint") {
+        trainer.snapshot().save(Path::new(path))?;
+        println!(
+            "saved serve checkpoint to {path} (epoch {}, algo {})",
+            trainer.epoch_no,
+            trainer.cfg.algo.name()
+        );
+    }
+    Ok(())
+}
+
+/// Train-or-load a serving checkpoint, then answer a burst of batched
+/// queries through the threaded serve loop (self-issued — runs offline).
+/// With `--checkpoint FILE`: loads it if it exists, otherwise trains and
+/// checkpoints to it first, then serves from the durable copy.
+fn cmd_serve(argv: Vec<String>) -> Result<()> {
+    let a = Args::parse(
+        argv,
+        &[
+            "checkpoint", "data", "toy", "epochs", "nnz", "algo", "backend", "threads", "j", "r",
+            "seed", "serve-threads", "batch", "queries", "topk", "mode",
+        ],
+        &["toy"],
+    )
+    .map_err(anyhow::Error::msg)?;
+    let ckpt = a.get("checkpoint").map(PathBuf::from);
+    let snap = match &ckpt {
+        Some(p) if p.exists() => {
+            let s = ModelSnapshot::load(p)?;
+            println!(
+                "loaded checkpoint {p:?}: dims {:?} J {} R {} algo {} epoch {}",
+                s.dims(),
+                s.j(),
+                s.r(),
+                s.algo().name(),
+                s.epoch()
+            );
+            s
+        }
+        _ => {
+            let tensor = if a.get_bool("toy") {
+                io::toy_dataset()
+            } else if let Some(d) = a.get("data") {
+                io::read_auto(Path::new(d))?
+            } else {
+                let nnz = a.get_parse("nnz", 60_000usize).map_err(anyhow::Error::msg)?;
+                let seed = a.get_parse("seed", 42u64).map_err(anyhow::Error::msg)?;
+                generate(&SynthConfig::netflix_like(nnz, seed))
+            };
+            let mut cfg = TrainConfig::default();
+            cfg.backend = Backend::ParallelCpu; // serving path needs no artifacts
+            if let Some(s) = a.get("algo") {
+                cfg.algo = Algo::parse(s).with_context(|| format!("bad --algo {s}"))?;
+            }
+            if let Some(s) = a.get("backend") {
+                cfg.backend = Backend::parse(s).with_context(|| format!("bad --backend {s}"))?;
+            }
+            cfg.threads = a.get_parse("threads", cfg.threads).map_err(anyhow::Error::msg)?;
+            cfg.j = a.get_parse("j", cfg.j).map_err(anyhow::Error::msg)?;
+            cfg.r = a.get_parse("r", cfg.r).map_err(anyhow::Error::msg)?;
+            cfg.seed = a.get_parse("seed", cfg.seed).map_err(anyhow::Error::msg)?;
+            let epochs: usize = a.get_parse("epochs", 5).map_err(anyhow::Error::msg)?;
+            println!(
+                "training {} epochs of {} on dims {:?} ({} nnz) before serving",
+                epochs,
+                cfg.algo.name(),
+                tensor.dims,
+                tensor.nnz()
+            );
+            let mut trainer = Trainer::new(&tensor, cfg)?;
+            for _ in 0..epochs {
+                trainer.epoch(&tensor)?;
+            }
+            let snap = trainer.snapshot();
+            match &ckpt {
+                Some(p) => {
+                    snap.save(p)?;
+                    println!("checkpointed to {p:?}; serving from the durable copy");
+                    ModelSnapshot::load(p)?
+                }
+                None => snap,
+            }
+        }
+    };
+
+    let workers: usize = a.get_parse("serve-threads", 2).map_err(anyhow::Error::msg)?;
+    let batch: usize = a.get_parse("batch", 32).map_err(anyhow::Error::msg)?;
+    let queries: usize = a.get_parse("queries", 1000).map_err(anyhow::Error::msg)?;
+    let k: usize = a.get_parse("topk", 5).map_err(anyhow::Error::msg)?;
+    let mode: usize = a
+        .get_parse("mode", 1usize.min(snap.order() - 1))
+        .map_err(anyhow::Error::msg)?;
+    ensure!(mode < snap.order(), "--mode {mode} out of range");
+    let seed: u64 = a.get_parse("seed", 42).map_err(anyhow::Error::msg)?;
+
+    let dims = snap.dims().to_vec();
+    let server = Server::start(snap, workers, batch);
+    let handle = server.handle();
+
+    // a few demonstration top-K answers first
+    let mut rng = Pcg32::new(seed, 0x5E);
+    println!("\nsample top-{k} completions over mode {mode}:");
+    for _ in 0..3 {
+        let coords: Vec<u32> = dims.iter().map(|&d| rng.gen_range(d)).collect();
+        let top = handle.topk(coords.clone(), mode, k).map_err(anyhow::Error::msg)?;
+        let ranked: Vec<String> = top
+            .iter()
+            .map(|s| format!("{}:{:.3}", s.index, s.score))
+            .collect();
+        println!("  fixed {coords:?} -> {}", ranked.join(" "));
+    }
+
+    // query burst from concurrent clients (1 top-K per 8 predicts)
+    let clients = workers.max(2);
+    let per_client = queries.div_ceil(clients);
+    let latencies = std::sync::Mutex::new(Vec::with_capacity(clients * per_client));
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let handle = handle.clone();
+            let dims = &dims;
+            let latencies = &latencies;
+            scope.spawn(move || {
+                let mut rng = Pcg32::new(seed, 0x100 + c as u64);
+                let mut local = Vec::with_capacity(per_client);
+                for q in 0..per_client {
+                    let coords: Vec<u32> = dims.iter().map(|&d| rng.gen_range(d)).collect();
+                    let t = Instant::now();
+                    let ok = if q % 8 == 7 {
+                        handle.topk(coords, mode, k).is_ok()
+                    } else {
+                        handle.predict(coords).is_ok()
+                    };
+                    assert!(ok, "query failed");
+                    local.push(t.elapsed().as_secs_f64());
+                }
+                latencies.lock().unwrap().extend(local);
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let mut lat = latencies.into_inner().unwrap();
+    let stats = server.shutdown();
+    // qps counts only the timed burst (the demo top-Ks above predate t0)
+    println!(
+        "\nburst: {} requests in {:.3} s ({:.0} qps); server total {} requests, \
+         {} batches (mean batch {:.1})",
+        lat.len(),
+        wall,
+        lat.len() as f64 / wall,
+        stats.served,
+        stats.batches,
+        stats.served as f64 / stats.batches.max(1) as f64
+    );
+    if !lat.is_empty() {
+        println!(
+            "latency p50 {:.1} µs  p99 {:.1} µs",
+            percentile(&mut lat, 50.0) * 1e6,
+            percentile(&mut lat, 99.0) * 1e6
+        );
+    }
+    Ok(())
+}
+
+/// One-shot query against a checkpoint: predict an entry, or top-K
+/// completion over `--mode` when given.
+fn cmd_query(argv: Vec<String>) -> Result<()> {
+    let a = Args::parse(argv, &["checkpoint", "coords", "mode", "topk"], &[])
+        .map_err(anyhow::Error::msg)?;
+    let path = PathBuf::from(a.get("checkpoint").context("--checkpoint FILE required")?);
+    let snap = ModelSnapshot::load(&path)?;
+    let coords = parse_u32_list(a.get("coords").context("--coords I1,I2,... required")?)
+        .map_err(anyhow::Error::msg)?;
+    let free_mode = match a.get("mode") {
+        Some(_) => {
+            let mode: usize = a.get_parse("mode", 0).map_err(anyhow::Error::msg)?;
+            ensure!(mode < snap.order(), "--mode {mode} out of range");
+            Some(mode)
+        }
+        None => None,
+    };
+    // same validation the serving workers apply (arity + bounds, free
+    // mode exempt)
+    check_coords(&snap, &coords, free_mode).map_err(anyhow::Error::msg)?;
+    let mut engine = Engine::new(snap);
+    match free_mode {
+        Some(mode) => {
+            let k: usize = a.get_parse("topk", 10).map_err(anyhow::Error::msg)?;
+            for s in mode_topk(&mut engine, &coords, mode, k) {
+                println!("{:>8}  {:.6}", s.index, s.score);
+            }
+        }
+        None => println!("{:.6}", engine.predict(&coords)),
+    }
+    Ok(())
+}
+
+/// Convert an FTM1 model into a serve checkpoint (`save`), or validate and
+/// describe an existing checkpoint (`load`).
+fn cmd_checkpoint(argv: Vec<String>) -> Result<()> {
+    let Some((sub, rest)) = argv.split_first() else {
+        bail!("usage: checkpoint <save|load> [flags]");
+    };
+    match sub.as_str() {
+        "save" => {
+            let a = Args::parse(rest.to_vec(), &["model", "out", "algo", "epoch"], &[])
+                .map_err(anyhow::Error::msg)?;
+            let model = TuckerModel::load(Path::new(
+                a.get("model").context("--model FILE (FTM1) required")?,
+            ))?;
+            let out = PathBuf::from(a.get("out").context("--out FILE required")?);
+            let algo = match a.get("algo") {
+                Some(s) => Algo::parse(s).with_context(|| format!("bad --algo {s}"))?,
+                None => Algo::Plus,
+            };
+            let epoch: u64 = a.get_parse("epoch", 0).map_err(anyhow::Error::msg)?;
+            let snap = ModelSnapshot::from_model(&model, algo, epoch);
+            snap.save(&out)?;
+            println!(
+                "wrote {out:?}: dims {:?} J {} R {} algo {} epoch {} ({} params)",
+                snap.dims(),
+                snap.j(),
+                snap.r(),
+                algo.name(),
+                epoch,
+                snap.param_count()
+            );
+        }
+        "load" => {
+            let a = Args::parse(rest.to_vec(), &["file", "model-out"], &[])
+                .map_err(anyhow::Error::msg)?;
+            let path = PathBuf::from(a.get("file").context("--file FILE required")?);
+            let snap = ModelSnapshot::load(&path)?;
+            println!(
+                "{path:?}: checksum ok; dims {:?} J {} R {} algo {} epoch {} ({} params)",
+                snap.dims(),
+                snap.j(),
+                snap.r(),
+                snap.algo().name(),
+                snap.epoch(),
+                snap.param_count()
+            );
+            if let Some(out) = a.get("model-out") {
+                snap.to_model().save(Path::new(out))?;
+                println!("wrote FTM1 model to {out}");
+            }
+        }
+        other => bail!("unknown checkpoint subcommand {other:?} (save|load)"),
     }
     Ok(())
 }

@@ -1,0 +1,244 @@
+//! Batched prediction engine over a published [`ModelSnapshot`].
+//!
+//! Two scoring paths, mirroring the trainer's calc-vs-store split:
+//!
+//! * [`Engine::predict`] — the *full product chain*: for each Kruskal rank
+//!   `r`, multiply the stored projection rows `C^(m)[i_m, r]` in ascending
+//!   mode order and sum over `r`.  This is exactly the arithmetic sequence
+//!   of the scalar oracle's `forward` (projection rows are built by the
+//!   same `kernel::micro::project` order, the chain is the oracle's prefix
+//!   product, the sum is ascending), so serve predictions are
+//!   **bit-identical** to the trainer's evaluation path — pinned by
+//!   `tests/serve.rs`.
+//! * [`Engine::complete_mode`] — the *mode-completion* (recommender)
+//!   workload: given all-but-one coordinates, compute the exclusion
+//!   product `d = Π_{m≠mode} C^(m)[i_m, :]` **once** (the
+//!   `InvariantCache`-style fiber invariant: a batch of queries sharing a
+//!   user fiber shares this product), then score every candidate index of
+//!   the free mode with one R-wide dot against its stored row — the same
+//!   per-sample math as the storage-scheme training kernels.
+//!
+//! The engine owns only scratch (one R-wide product) on top of the
+//! snapshot handle, so serving workers build one per batch and swap
+//! snapshots in O(1) on hot-swap.
+
+use crate::kernel::micro;
+use crate::tensor::SparseTensor;
+
+use super::snapshot::ModelSnapshot;
+
+/// Widest Kruskal rank served by the stack-allocated accumulator in
+/// [`Engine::predict`] (covers every monomorphized kernel shape).
+const MAX_STACK_R: usize = 64;
+
+/// Stateless-per-query scorer bound to one immutable snapshot.
+pub struct Engine {
+    snap: ModelSnapshot,
+    /// Scratch for the fiber-shared exclusion product (length R).
+    d: Vec<f32>,
+}
+
+impl Engine {
+    /// Bind an engine to a snapshot (allocates only the R-wide scratch).
+    pub fn new(snap: ModelSnapshot) -> Engine {
+        let r = snap.r();
+        Engine {
+            snap,
+            d: vec![0f32; r],
+        }
+    }
+
+    /// The snapshot this engine currently scores against.
+    pub fn snapshot(&self) -> &ModelSnapshot {
+        &self.snap
+    }
+
+    /// Swap in a newer snapshot (O(1): an `Arc` move; scratch is resized
+    /// only if R changed).
+    pub fn swap(&mut self, snap: ModelSnapshot) {
+        self.d.resize(snap.r(), 0.0);
+        self.snap = snap;
+    }
+
+    /// Predict one entry: `Σ_r Π_m C^(m)[i_m, r]`, ascending mode order,
+    /// ascending rank sum — bit-identical to the trainer's scalar
+    /// evaluation (`cpu_ref::forward`) and to [`crate::model::TuckerModel::predict_one`].
+    ///
+    /// Mode-outer with an R-wide accumulator (one contiguous row read per
+    /// mode); per rank the multiply chain and the final sum are the exact
+    /// sequences of the rank-outer formulation, so the layouts are
+    /// interchangeable bit-for-bit and this one vectorizes.
+    pub fn predict(&self, coords: &[u32]) -> f32 {
+        let n = self.snap.order();
+        let r = self.snap.r();
+        debug_assert_eq!(coords.len(), n);
+        if r <= MAX_STACK_R {
+            let mut acc = [1.0f32; MAX_STACK_R];
+            for (m, &c) in coords.iter().enumerate() {
+                let row = self.snap.c_row(m, c as usize);
+                for (a, &v) in acc[..r].iter_mut().zip(row) {
+                    *a *= v;
+                }
+            }
+            acc[..r].iter().sum()
+        } else {
+            // rank-outer fallback for ranks past the stack accumulator
+            let mut acc = 0f32;
+            for rr in 0..r {
+                let mut p = 1f32;
+                for m in 0..n {
+                    p *= self.snap.c_row(m, coords[m] as usize)[rr];
+                }
+                acc += p;
+            }
+            acc
+        }
+    }
+
+    /// Predict a flat batch (`[Q, N]` entry-major coordinates), appending
+    /// into `out`.
+    pub fn predict_batch(&self, coords: &[u32], out: &mut Vec<f32>) {
+        let n = self.snap.order();
+        debug_assert_eq!(coords.len() % n, 0);
+        out.reserve(coords.len() / n);
+        for q in coords.chunks_exact(n) {
+            out.push(self.predict(q));
+        }
+    }
+
+    /// Compute the fiber-shared exclusion product
+    /// `d = Π_{m≠mode} C^(m)[i_m, :]` into the engine scratch (ascending
+    /// mode order, exactly like the storage-scheme training kernels and
+    /// [`crate::kernel::InvariantCache`]), and return it.
+    pub fn exclusion(&mut self, coords: &[u32], mode: usize) -> &[f32] {
+        let n = self.snap.order();
+        self.d.fill(1.0);
+        for m in 0..n {
+            if m == mode {
+                continue;
+            }
+            let crow = self.snap.c_row(m, coords[m] as usize);
+            for (dv, &cv) in self.d.iter_mut().zip(crow) {
+                *dv *= cv;
+            }
+        }
+        &self.d
+    }
+
+    /// Mode-completion scoring: with every coordinate fixed except `mode`
+    /// (the slot at `mode` is ignored), score **all** `I_mode` candidate
+    /// indices.  The exclusion product is computed once for the whole
+    /// candidate sweep — the shared-invariant reuse that makes batched
+    /// per-user recommendation cheap.  Scores are appended to `scores`.
+    pub fn complete_mode(&mut self, coords: &[u32], mode: usize, scores: &mut Vec<f32>) {
+        let r = self.snap.r();
+        let rows = self.snap.dims()[mode] as usize;
+        self.exclusion(coords, mode);
+        scores.reserve(rows);
+        let table = self.snap.c_table(mode);
+        for crow in table.chunks_exact(r) {
+            scores.push(dot_r(crow, &self.d));
+        }
+    }
+
+    /// RMSE / MAE over a test tensor, accumulated in the same entry order
+    /// and f64 arithmetic as `cpu_ref::evaluate` — exact-equality
+    /// comparable against `Trainer::evaluate` on a CPU backend.
+    pub fn rmse_mae(&self, test: &SparseTensor) -> (f64, f64) {
+        let mut sse = 0f64;
+        let mut sae = 0f64;
+        for e in 0..test.nnz() {
+            let xhat = self.predict(test.coords(e));
+            let err = (test.values[e] - xhat) as f64;
+            sse += err * err;
+            sae += err.abs();
+        }
+        let n = test.nnz().max(1) as f64;
+        ((sse / n).sqrt(), sae / n)
+    }
+}
+
+/// R-wide dot product through the fixed-width microkernel when R has a
+/// monomorphized width, the scalar order (identical arithmetic) otherwise.
+fn dot_r(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match a.len() {
+        16 => micro::dot::<16>(a.try_into().unwrap(), b.try_into().unwrap()),
+        32 => micro::dot::<32>(a.try_into().unwrap(), b.try_into().unwrap()),
+        48 => micro::dot::<48>(a.try_into().unwrap(), b.try_into().unwrap()),
+        64 => micro::dot::<64>(a.try_into().unwrap(), b.try_into().unwrap()),
+        _ => {
+            let mut acc = 0f32;
+            for (&x, &y) in a.iter().zip(b) {
+                acc += x * y;
+            }
+            acc
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::Algo;
+    use crate::model::TuckerModel;
+
+    fn engine() -> (TuckerModel, Engine) {
+        let m = TuckerModel::init(&[9, 11, 13], 16, 16, 77);
+        let snap = ModelSnapshot::from_model(&m, Algo::Plus, 0);
+        (m, Engine::new(snap))
+    }
+
+    #[test]
+    fn predict_matches_model_predict_one() {
+        let (m, eng) = engine();
+        for coords in [[0u32, 0, 0], [8, 10, 12], [3, 7, 5], [1, 2, 3]] {
+            assert_eq!(eng.predict(&coords), m.predict_one(&coords));
+        }
+    }
+
+    #[test]
+    fn predict_batch_matches_singles() {
+        let (_, eng) = engine();
+        let coords: Vec<u32> = vec![0, 1, 2, 3, 4, 5, 8, 10, 12];
+        let mut out = Vec::new();
+        eng.predict_batch(&coords, &mut out);
+        assert_eq!(out.len(), 3);
+        for (q, &got) in coords.chunks_exact(3).zip(&out) {
+            assert_eq!(got, eng.predict(q));
+        }
+    }
+
+    #[test]
+    fn completion_scores_match_stored_scheme_prediction() {
+        let (_, mut eng) = engine();
+        let coords = [4u32, 0, 6]; // slot 1 is the free mode, value ignored
+        let mut scores = Vec::new();
+        eng.complete_mode(&coords, 1, &mut scores);
+        assert_eq!(scores.len(), 11);
+        // independent scalar scorer: d recomputed per candidate
+        let snap = eng.snapshot().clone();
+        let r = snap.r();
+        for (i, &got) in scores.iter().enumerate() {
+            let mut d = vec![1f32; r];
+            for m in [0usize, 2] {
+                let crow = snap.c_row(m, coords[m] as usize);
+                for rr in 0..r {
+                    d[rr] *= crow[rr];
+                }
+            }
+            let want = dot_r(snap.c_row(1, i), &d);
+            assert_eq!(got, want, "candidate {i}");
+        }
+    }
+
+    #[test]
+    fn swap_rebinds_snapshot() {
+        let (_, mut eng) = engine();
+        let before = eng.predict(&[1, 1, 1]);
+        let other = TuckerModel::init(&[9, 11, 13], 16, 16, 78);
+        eng.swap(ModelSnapshot::from_model(&other, Algo::Plus, 5));
+        assert_eq!(eng.snapshot().epoch(), 5);
+        assert_ne!(eng.predict(&[1, 1, 1]), before);
+    }
+}

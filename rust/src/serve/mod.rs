@@ -1,0 +1,38 @@
+//! Model serving: published snapshots, durable checkpoints, and a batched
+//! top-K query engine over the trained decomposition.
+//!
+//! The training stack decomposes tensors; this subsystem is the other half
+//! of the ROADMAP's production story — *answering queries* from the
+//! decomposed model, the recommender workload the paper motivates
+//! (§1: rating prediction and per-user ranking from the learned factors).
+//! Four layers, bottom-up:
+//!
+//! * [`snapshot`] — [`ModelSnapshot`]: immutable, epoch-tagged, cheaply
+//!   clonable published models carrying precomputed `C^(n) = A^(n) B^(n)`
+//!   projection tables, plus the versioned `FTCK` on-disk checkpoint
+//!   format (atomic save, lossless f32 roundtrip, checksum).
+//! * [`engine`] — [`Engine`]: per-query scoring.  `predict` is
+//!   bit-identical to the trainer's evaluation path; `complete_mode`
+//!   computes the fiber-shared exclusion product once per query and scores
+//!   every candidate of the free mode with one R-wide dot (the
+//!   `InvariantCache` trick applied to serving).
+//! * [`topk`] — deterministic top-K selection over completion scores.
+//! * [`server`] — [`Server`]: a threaded request loop with request
+//!   batching and snapshot hot-swap, so `Trainer::publish` can push a
+//!   fresh model mid-training while in-flight queries keep reading the
+//!   old one.
+//!
+//! Lifecycle: `Trainer::snapshot()` freezes the live model →
+//! `Server::publish` swaps it in (or `ModelSnapshot::save` persists it) →
+//! `ModelSnapshot::load` revives it in a later process → [`Engine`] /
+//! [`Server`] answer queries.  See ARCHITECTURE.md §Serving layer.
+
+pub mod engine;
+pub mod server;
+pub mod snapshot;
+pub mod topk;
+
+pub use engine::Engine;
+pub use server::{check_coords, Request, Response, ServeStats, Server, ServerHandle};
+pub use snapshot::ModelSnapshot;
+pub use topk::{mode_topk, top_k, Scored};

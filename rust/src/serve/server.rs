@@ -1,0 +1,354 @@
+//! Threaded serving loop: request batching + snapshot hot-swap.
+//!
+//! A [`Server`] owns a pool of worker threads draining one shared request
+//! queue.  Workers pull *batches* (up to `max_batch` requests per wakeup),
+//! re-read the published snapshot once per batch and answer every request
+//! in the batch against that one model — so a batch is internally
+//! consistent by construction, and the per-request overhead (lock, queue
+//! pop, snapshot read) is amortized the same way the trainer amortizes
+//! per-block scheduling.
+//!
+//! Hot-swap: [`Server::publish`] (or `Trainer::publish`) replaces the
+//! published [`ModelSnapshot`] under a write lock.  Because a snapshot is
+//! one `Arc`, the swap is a pointer replace: batches already in flight
+//! keep scoring against the snapshot they cloned, new batches pick up the
+//! fresh one, and no request can ever observe a half-updated model
+//! (pinned by the torn-read test in `tests/serve.rs`).  This is what lets
+//! a trainer publish mid-training while the server keeps answering.
+//!
+//! Transport is out of scope on purpose: [`ServerHandle::call`] is a
+//! blocking in-process request — examples and the CLI drive it directly,
+//! and a network front-end would sit on top of the same handle.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::thread::JoinHandle;
+
+use super::engine::Engine;
+use super::snapshot::ModelSnapshot;
+use super::topk::{mode_topk, Scored};
+
+/// One serving request.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Predict the entry at `coords` (full coordinates, one per mode).
+    Predict {
+        /// Entry coordinates, length N.
+        coords: Vec<u32>,
+    },
+    /// Mode-completion top-K: all coordinates fixed except `mode` (that
+    /// slot of `coords` is ignored), return the K best candidate indices.
+    TopK {
+        /// Fixed coordinates, length N (slot `mode` ignored).
+        coords: Vec<u32>,
+        /// The free mode to complete over.
+        mode: usize,
+        /// How many candidates to return.
+        k: usize,
+    },
+    /// Report the epoch tag of the snapshot answering this batch (lets
+    /// clients observe hot-swaps).
+    Epoch,
+}
+
+/// The answer to one [`Request`].
+#[derive(Clone, Debug)]
+pub enum Response {
+    /// Predicted entry value.
+    Predict(f32),
+    /// Ranked top-K candidates.
+    TopK(Vec<Scored>),
+    /// Epoch tag of the answering snapshot.
+    Epoch(u64),
+    /// The request was malformed or the server is stopping.
+    Error(String),
+}
+
+/// Serving counters (monotonic since start).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeStats {
+    /// Requests answered.
+    pub served: u64,
+    /// Worker batch wakeups (served / batches = mean batch size).
+    pub batches: u64,
+    /// Snapshots published over the server's lifetime.
+    pub swaps: u64,
+}
+
+type Job = (Request, mpsc::Sender<Response>);
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    ready: Condvar,
+    snapshot: RwLock<ModelSnapshot>,
+    stop: AtomicBool,
+    served: AtomicU64,
+    batches: AtomicU64,
+    swaps: AtomicU64,
+}
+
+/// A running serving loop; dropping it without [`Server::shutdown`] leaks
+/// the worker threads until process exit, so shut it down explicitly.
+pub struct Server {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+/// Cheap, clonable client handle onto a [`Server`]'s queue.
+#[derive(Clone)]
+pub struct ServerHandle {
+    shared: Arc<Shared>,
+}
+
+impl Server {
+    /// Start `workers` threads serving `snapshot`, batching up to
+    /// `max_batch` queued requests per worker wakeup.
+    pub fn start(snapshot: ModelSnapshot, workers: usize, max_batch: usize) -> Server {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+            snapshot: RwLock::new(snapshot),
+            stop: AtomicBool::new(false),
+            served: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            swaps: AtomicU64::new(0),
+        });
+        let max_batch = max_batch.max(1);
+        let workers = (0..workers.max(1))
+            .map(|_| {
+                let shared = shared.clone();
+                std::thread::spawn(move || worker_loop(&shared, max_batch))
+            })
+            .collect();
+        Server { shared, workers }
+    }
+
+    /// A client handle (clone freely across threads).
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle {
+            shared: self.shared.clone(),
+        }
+    }
+
+    /// Publish a new snapshot: atomic pointer swap under a write lock.
+    /// In-flight batches finish on the snapshot they started with.
+    pub fn publish(&self, snapshot: ModelSnapshot) {
+        *self.shared.snapshot.write().unwrap() = snapshot;
+        self.shared.swaps.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Epoch tag of the currently published snapshot.
+    pub fn epoch(&self) -> u64 {
+        self.shared.snapshot.read().unwrap().epoch()
+    }
+
+    /// Current serving counters.
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            served: self.shared.served.load(Ordering::SeqCst),
+            batches: self.shared.batches.load(Ordering::SeqCst),
+            swaps: self.shared.swaps.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Stop accepting work, drain queued requests, join the workers and
+    /// fail any request that raced past the drain.  Returns final stats.
+    pub fn shutdown(self) -> ServeStats {
+        {
+            // set stop under the queue lock: after this critical section no
+            // handle can enqueue (call() checks stop under the same lock)
+            let _q = self.shared.queue.lock().unwrap();
+            self.shared.stop.store(true, Ordering::SeqCst);
+        }
+        self.shared.ready.notify_all();
+        for w in self.workers {
+            let _ = w.join();
+        }
+        // workers only exit on an empty queue, but fail anything that
+        // slipped in between their last check and the join
+        for (_, reply) in self.shared.queue.lock().unwrap().drain(..) {
+            let _ = reply.send(Response::Error("server stopped".to_string()));
+        }
+        ServeStats {
+            served: self.shared.served.load(Ordering::SeqCst),
+            batches: self.shared.batches.load(Ordering::SeqCst),
+            swaps: self.shared.swaps.load(Ordering::SeqCst),
+        }
+    }
+}
+
+impl ServerHandle {
+    /// Submit one request and block for its response.
+    pub fn call(&self, req: Request) -> Response {
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            if self.shared.stop.load(Ordering::SeqCst) {
+                return Response::Error("server stopped".to_string());
+            }
+            q.push_back((req, tx));
+        }
+        self.shared.ready.notify_one();
+        rx.recv()
+            .unwrap_or_else(|_| Response::Error("server stopped".to_string()))
+    }
+
+    /// Convenience: blocking predict.
+    pub fn predict(&self, coords: Vec<u32>) -> Result<f32, String> {
+        match self.call(Request::Predict { coords }) {
+            Response::Predict(v) => Ok(v),
+            Response::Error(e) => Err(e),
+            other => Err(format!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Convenience: blocking top-K completion.
+    pub fn topk(&self, coords: Vec<u32>, mode: usize, k: usize) -> Result<Vec<Scored>, String> {
+        match self.call(Request::TopK { coords, mode, k }) {
+            Response::TopK(v) => Ok(v),
+            Response::Error(e) => Err(e),
+            other => Err(format!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Convenience: epoch tag of the snapshot that answers next.
+    pub fn epoch(&self) -> Result<u64, String> {
+        match self.call(Request::Epoch) {
+            Response::Epoch(e) => Ok(e),
+            Response::Error(e) => Err(e),
+            other => Err(format!("unexpected response {other:?}")),
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, max_batch: usize) {
+    let mut engine = Engine::new(shared.snapshot.read().unwrap().clone());
+    let mut batch: Vec<Job> = Vec::with_capacity(max_batch);
+    loop {
+        batch.clear();
+        {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if !q.is_empty() {
+                    break;
+                }
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = shared.ready.wait(q).unwrap();
+            }
+            let take = q.len().min(max_batch);
+            batch.extend(q.drain(..take));
+        }
+        // one snapshot per batch: internally consistent, O(1) refresh
+        let current = shared.snapshot.read().unwrap().clone();
+        if !ModelSnapshot::ptr_eq(engine.snapshot(), &current) {
+            engine.swap(current);
+        }
+        shared.batches.fetch_add(1, Ordering::SeqCst);
+        for (req, reply) in batch.drain(..) {
+            let resp = process(&mut engine, &req);
+            shared.served.fetch_add(1, Ordering::SeqCst);
+            // a client that gave up on the call just drops its receiver
+            let _ = reply.send(resp);
+        }
+    }
+}
+
+/// Validate `coords` against the snapshot shape; `free_mode` exempts one
+/// slot from the bounds check (top-K ignores it).  Shared by the serving
+/// workers and the CLI `query` path so validation can't drift.
+pub fn check_coords(
+    snap: &ModelSnapshot,
+    coords: &[u32],
+    free_mode: Option<usize>,
+) -> Result<(), String> {
+    if coords.len() != snap.order() {
+        return Err(format!(
+            "expected {} coordinates, got {}",
+            snap.order(),
+            coords.len()
+        ));
+    }
+    for (m, (&c, &d)) in coords.iter().zip(snap.dims()).enumerate() {
+        if Some(m) != free_mode && c >= d {
+            return Err(format!(
+                "coordinate {c} out of bounds for mode {m} (dim {d})"
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn process(engine: &mut Engine, req: &Request) -> Response {
+    match req {
+        Request::Predict { coords } => match check_coords(engine.snapshot(), coords, None) {
+            Ok(()) => Response::Predict(engine.predict(coords)),
+            Err(e) => Response::Error(e),
+        },
+        Request::TopK { coords, mode, k } => {
+            if *mode >= engine.snapshot().order() {
+                return Response::Error(format!("mode {mode} out of range"));
+            }
+            match check_coords(engine.snapshot(), coords, Some(*mode)) {
+                Ok(()) => Response::TopK(mode_topk(engine, coords, *mode, *k)),
+                Err(e) => Response::Error(e),
+            }
+        }
+        Request::Epoch => Response::Epoch(engine.snapshot().epoch()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::Algo;
+    use crate::model::TuckerModel;
+
+    fn snapshot(seed: u64, epoch: u64) -> ModelSnapshot {
+        let m = TuckerModel::init(&[8, 10, 12], 16, 16, seed);
+        ModelSnapshot::from_model(&m, Algo::Plus, epoch)
+    }
+
+    #[test]
+    fn serves_and_validates() {
+        let snap = snapshot(1, 0);
+        let eng = Engine::new(snap.clone());
+        let server = Server::start(snap, 2, 4);
+        let h = server.handle();
+        assert_eq!(h.predict(vec![1, 2, 3]).unwrap(), eng.predict(&[1, 2, 3]));
+        assert!(h.predict(vec![1, 2]).is_err()); // wrong arity
+        assert!(h.predict(vec![1, 99, 3]).is_err()); // out of bounds
+        assert!(h.topk(vec![1, 0, 3], 7, 5).is_err()); // bad mode
+        let top = h.topk(vec![1, 0, 3], 1, 5).unwrap();
+        assert_eq!(top.len(), 5);
+        assert_eq!(h.epoch().unwrap(), 0);
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 6);
+        assert!(stats.batches >= 1);
+    }
+
+    #[test]
+    fn publish_is_visible_to_later_calls() {
+        let server = Server::start(snapshot(1, 0), 1, 8);
+        let h = server.handle();
+        assert_eq!(h.epoch().unwrap(), 0);
+        server.publish(snapshot(2, 7));
+        assert_eq!(h.epoch().unwrap(), 7);
+        assert_eq!(server.epoch(), 7);
+        let stats = server.shutdown();
+        assert_eq!(stats.swaps, 1);
+    }
+
+    #[test]
+    fn calls_after_shutdown_fail_cleanly() {
+        let server = Server::start(snapshot(3, 0), 2, 4);
+        let h = server.handle();
+        assert!(h.predict(vec![0, 0, 0]).is_ok());
+        server.shutdown();
+        assert!(h.predict(vec![0, 0, 0]).is_err());
+        assert!(h.epoch().is_err());
+    }
+}

@@ -1,0 +1,440 @@
+//! Published model snapshots and the versioned `FTCK` checkpoint format.
+//!
+//! A [`ModelSnapshot`] is the *serving* representation of a trained
+//! decomposition: immutable, cheaply clonable (the payload sits behind one
+//! `Arc`), tagged with the epoch and algorithm that produced it, and
+//! carrying the precomputed projection tables `C^(n) = A^(n) B^(n)`
+//! (`I_n x R` each) that make per-query scoring a pure product chain over
+//! R-wide rows — the SGD_Tucker "compact serving representation" of the
+//! Tucker factors.  The tables are built through the same
+//! `kernel::micro::project` tiles the trainer uses, in the same operation
+//! order as the scalar oracle's projection, so every value a snapshot
+//! serves is bit-identical to what the trainer's evaluation path computes.
+//!
+//! The on-disk checkpoint (`FTCK` version 1) is the durable form of a
+//! snapshot: a little-endian header (algo, epoch, order, J, R, dims),
+//! the factor and core payload as lossless f32 bits, and a trailing
+//! FNV-1a checksum over everything before it.  Serialization is a pure
+//! function of the model, so save → load → save produces identical bytes
+//! (pinned by `tests/serve.rs`).  [`ModelSnapshot::save`] writes to a
+//! sibling `*.tmp` file and renames it into place, so a crash mid-write
+//! never leaves a truncated checkpoint at the published path, and a
+//! concurrent reader sees either the old file or the new one.
+
+use std::fs;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::config::Algo;
+use crate::kernel::micro;
+use crate::model::TuckerModel;
+
+/// Magic bytes of the serve checkpoint format.
+const MAGIC: &[u8; 4] = b"FTCK";
+/// Current checkpoint format version.
+const VERSION: u32 = 1;
+
+/// Immutable, epoch-tagged, cheaply-clonable published model.
+///
+/// Cloning copies one `Arc`, so a server hot-swap is a pointer replace and
+/// every in-flight batch keeps (and finishes on) the snapshot it started
+/// with.
+#[derive(Clone)]
+pub struct ModelSnapshot {
+    inner: Arc<Inner>,
+}
+
+struct Inner {
+    dims: Vec<u32>,
+    j: usize,
+    r: usize,
+    algo: Algo,
+    epoch: u64,
+    factors: Vec<Vec<f32>>,
+    cores: Vec<Vec<f32>>,
+    /// Projection tables `C^(n) = A^(n) B^(n)`, `I_n x R` row-major.
+    c_tables: Vec<Vec<f32>>,
+}
+
+impl ModelSnapshot {
+    /// Freeze a trained model into a snapshot, tagged with the algorithm
+    /// and epoch that produced it.  Builds the `C^(n)` projection tables
+    /// through the tiled microkernels (scalar fallback for shapes without
+    /// an instantiation — both orders are bit-identical).
+    pub fn from_model(model: &TuckerModel, algo: Algo, epoch: u64) -> ModelSnapshot {
+        let c_tables = (0..model.order()).map(|m| project_table(model, m)).collect();
+        ModelSnapshot {
+            inner: Arc::new(Inner {
+                dims: model.dims.clone(),
+                j: model.j,
+                r: model.r,
+                algo,
+                epoch,
+                factors: model.factors.clone(),
+                cores: model.cores.clone(),
+                c_tables,
+            }),
+        }
+    }
+
+    /// Reconstruct a mutable [`TuckerModel`] (e.g. to resume training from
+    /// a checkpoint).
+    pub fn to_model(&self) -> TuckerModel {
+        TuckerModel {
+            dims: self.inner.dims.clone(),
+            j: self.inner.j,
+            r: self.inner.r,
+            factors: self.inner.factors.clone(),
+            cores: self.inner.cores.clone(),
+        }
+    }
+
+    /// Dimension sizes `I_n` of the decomposed tensor.
+    pub fn dims(&self) -> &[u32] {
+        &self.inner.dims
+    }
+
+    /// Tensor order N.
+    pub fn order(&self) -> usize {
+        self.inner.dims.len()
+    }
+
+    /// Factor rank J.
+    pub fn j(&self) -> usize {
+        self.inner.j
+    }
+
+    /// Kruskal rank R.
+    pub fn r(&self) -> usize {
+        self.inner.r
+    }
+
+    /// Algorithm that trained this model.
+    pub fn algo(&self) -> Algo {
+        self.inner.algo
+    }
+
+    /// Training epoch this snapshot was published at.
+    pub fn epoch(&self) -> u64 {
+        self.inner.epoch
+    }
+
+    /// Row `i` of the projection table `C^(mode)` (length R).
+    #[inline]
+    pub fn c_row(&self, mode: usize, i: usize) -> &[f32] {
+        let r = self.inner.r;
+        &self.inner.c_tables[mode][i * r..(i + 1) * r]
+    }
+
+    /// The full projection table `C^(mode)` (`I_mode x R` row-major).
+    pub fn c_table(&self, mode: usize) -> &[f32] {
+        &self.inner.c_tables[mode]
+    }
+
+    /// Total parameter count (factors + cores), for logs.
+    pub fn param_count(&self) -> usize {
+        let f: usize = self.inner.factors.iter().map(Vec::len).sum();
+        let c: usize = self.inner.cores.iter().map(Vec::len).sum();
+        f + c
+    }
+
+    /// Whether two handles point at the same published snapshot (used by
+    /// serving workers to skip redundant engine swaps).
+    pub fn ptr_eq(a: &ModelSnapshot, b: &ModelSnapshot) -> bool {
+        Arc::ptr_eq(&a.inner, &b.inner)
+    }
+
+    // --- checkpoint I/O ---------------------------------------------------
+
+    /// Serialize to the `FTCK` v1 byte format (header + f32 payload +
+    /// trailing FNV-1a checksum).  Deterministic: the same model always
+    /// produces the same bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let inner = &self.inner;
+        let payload: usize = inner.factors.iter().map(Vec::len).sum::<usize>()
+            + inner.cores.iter().map(Vec::len).sum::<usize>();
+        let mut out = Vec::with_capacity(36 + 4 * inner.dims.len() + 4 * payload + 8);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&self.algo().code().to_le_bytes());
+        out.extend_from_slice(&inner.epoch.to_le_bytes());
+        out.extend_from_slice(&(inner.dims.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(inner.j as u32).to_le_bytes());
+        out.extend_from_slice(&(inner.r as u32).to_le_bytes());
+        for &d in &inner.dims {
+            out.extend_from_slice(&d.to_le_bytes());
+        }
+        for v in inner.factors.iter().flatten().chain(inner.cores.iter().flatten()) {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        let sum = fnv1a(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Parse the `FTCK` byte format (with checksum verification).
+    pub fn from_bytes(bytes: &[u8]) -> Result<ModelSnapshot> {
+        ensure!(bytes.len() >= 36 + 8, "checkpoint truncated ({} bytes)", bytes.len());
+        let (body, tail) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(tail.try_into().unwrap());
+        ensure!(
+            fnv1a(body) == stored,
+            "checkpoint corrupt: checksum mismatch"
+        );
+        let mut cur = Cursor { buf: body, pos: 0 };
+        let magic = cur.take(4)?;
+        ensure!(magic == MAGIC, "not an FTCK checkpoint");
+        let version = cur.u32()?;
+        ensure!(version == VERSION, "unsupported checkpoint version {version}");
+        let algo = Algo::from_code(cur.u32()?).context("unknown algorithm code")?;
+        let epoch = cur.u64()?;
+        let order = cur.u32()? as usize;
+        let j = cur.u32()? as usize;
+        let r = cur.u32()? as usize;
+        ensure!((1..=64).contains(&order), "implausible order {order}");
+        // keep load() a total, error-returning parser: zero ranks would
+        // panic downstream (division / zero-size chunks), huge ones would
+        // abort on allocation before the payload-size check can reject
+        ensure!((1..=4096).contains(&j), "implausible J {j}");
+        ensure!((1..=4096).contains(&r), "implausible R {r}");
+        let mut dims = Vec::with_capacity(order);
+        for _ in 0..order {
+            dims.push(cur.u32()?);
+        }
+        let payload: usize =
+            dims.iter().map(|&d| d as usize * j).sum::<usize>() + order * j * r;
+        ensure!(
+            cur.remaining() == payload * 4,
+            "checkpoint corrupt: payload is {} bytes, header implies {}",
+            cur.remaining(),
+            payload * 4
+        );
+        let mut factors = Vec::with_capacity(order);
+        for &d in &dims {
+            factors.push(cur.f32s(d as usize * j)?);
+        }
+        let mut cores = Vec::with_capacity(order);
+        for _ in 0..order {
+            cores.push(cur.f32s(j * r)?);
+        }
+        let model = TuckerModel {
+            dims,
+            j,
+            r,
+            factors,
+            cores,
+        };
+        Ok(ModelSnapshot::from_model(&model, algo, epoch))
+    }
+
+    /// Atomically write the checkpoint: serialize, write a sibling
+    /// `<name>.tmp`, fsync it, then rename into place.  The fsync before
+    /// the rename is what makes the swap durable — without it a power
+    /// loss can journal the rename ahead of the data and replace a good
+    /// checkpoint with a truncated one.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        use std::io::Write;
+        let name = path
+            .file_name()
+            .with_context(|| format!("checkpoint path {path:?} has no file name"))?;
+        let tmp = path.with_file_name(format!("{}.tmp", name.to_string_lossy()));
+        {
+            let mut f = fs::File::create(&tmp).with_context(|| format!("create {tmp:?}"))?;
+            f.write_all(&self.to_bytes())
+                .with_context(|| format!("write {tmp:?}"))?;
+            f.sync_all().with_context(|| format!("fsync {tmp:?}"))?;
+        }
+        fs::rename(&tmp, path).with_context(|| format!("rename {tmp:?} -> {path:?}"))?;
+        Ok(())
+    }
+
+    /// Load and verify a checkpoint written by [`ModelSnapshot::save`].
+    pub fn load(path: &Path) -> Result<ModelSnapshot> {
+        let bytes = fs::read(path).with_context(|| format!("open {path:?}"))?;
+        ModelSnapshot::from_bytes(&bytes).with_context(|| format!("load {path:?}"))
+    }
+}
+
+impl std::fmt::Debug for ModelSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ModelSnapshot")
+            .field("dims", &self.inner.dims)
+            .field("j", &self.inner.j)
+            .field("r", &self.inner.r)
+            .field("algo", &self.inner.algo)
+            .field("epoch", &self.inner.epoch)
+            .finish()
+    }
+}
+
+/// FNV-1a over a byte slice (the corruption tripwire; not cryptographic).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Little-endian reader over a checkpoint body.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("checkpoint truncated at byte {}", self.pos);
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let bytes = self.take(n * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+/// Project every row of mode `mode`'s factor matrix through its core:
+/// `C[i, :] = A[i, :] B` — the tiled path for known `(J, R)` shapes,
+/// delegating to the scalar oracle (`cpu_ref::compute_c_full`, the same
+/// arithmetic sequence) otherwise so the bit-identity contract has one
+/// scalar implementation, not two.
+fn project_table(model: &TuckerModel, mode: usize) -> Vec<f32> {
+    let (j, r) = (model.j, model.r);
+    let factor = &model.factors[mode];
+    let core = &model.cores[mode];
+    let mut out = vec![0f32; (factor.len() / j) * r];
+    match (j, r) {
+        (16, 16) => project_rows::<16, 16>(factor, core, &mut out),
+        (16, 32) => project_rows::<16, 32>(factor, core, &mut out),
+        (32, 16) => project_rows::<32, 16>(factor, core, &mut out),
+        (32, 32) => project_rows::<32, 32>(factor, core, &mut out),
+        (48, 48) => project_rows::<48, 48>(factor, core, &mut out),
+        (64, 64) => project_rows::<64, 64>(factor, core, &mut out),
+        _ => return crate::cpu_ref::compute_c_full(model, mode),
+    }
+    out
+}
+
+fn project_rows<const J: usize, const R: usize>(factor: &[f32], core: &[f32], out: &mut [f32]) {
+    for (row, dst) in factor.chunks_exact(J).zip(out.chunks_exact_mut(R)) {
+        let row: &[f32; J] = row.try_into().unwrap();
+        let dst: &mut [f32; R] = dst.try_into().unwrap();
+        micro::project::<J, R>(row, core, dst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu_ref;
+
+    fn model() -> TuckerModel {
+        TuckerModel::init(&[10, 12, 14], 16, 16, 42)
+    }
+
+    #[test]
+    fn snapshot_tables_match_oracle_projection() {
+        let m = model();
+        let snap = ModelSnapshot::from_model(&m, Algo::Plus, 3);
+        for mode in 0..3 {
+            let want = cpu_ref::compute_c_full(&m, mode);
+            assert_eq!(snap.c_table(mode), &want[..], "mode {mode} C table diverged");
+        }
+    }
+
+    #[test]
+    fn odd_shapes_use_scalar_projection() {
+        // (48, 16) has no monomorphized tile; the fallback must agree with
+        // the oracle bit-for-bit.
+        let m = TuckerModel::init(&[6, 7], 48, 16, 9);
+        let snap = ModelSnapshot::from_model(&m, Algo::FastTucker, 0);
+        for mode in 0..2 {
+            let want = cpu_ref::compute_c_full(&m, mode);
+            assert_eq!(snap.c_table(mode), &want[..]);
+        }
+    }
+
+    #[test]
+    fn bytes_roundtrip_exactly() {
+        let m = model();
+        let snap = ModelSnapshot::from_model(&m, Algo::FasterTucker, 17);
+        let bytes = snap.to_bytes();
+        let back = ModelSnapshot::from_bytes(&bytes).unwrap();
+        assert_eq!(back.algo(), Algo::FasterTucker);
+        assert_eq!(back.epoch(), 17);
+        assert_eq!(back.to_model().factors, m.factors);
+        assert_eq!(back.to_model().cores, m.cores);
+        // save -> load -> save is byte-identical
+        assert_eq!(back.to_bytes(), bytes);
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let snap = ModelSnapshot::from_model(&model(), Algo::Plus, 1);
+        let good = snap.to_bytes();
+        for &at in &[5usize, 20, good.len() / 2, good.len() - 1] {
+            let mut bad = good.clone();
+            bad[at] ^= 0x40;
+            assert!(
+                ModelSnapshot::from_bytes(&bad).is_err(),
+                "flip at {at} went undetected"
+            );
+        }
+        assert!(ModelSnapshot::from_bytes(&good[..good.len() - 9]).is_err());
+        assert!(ModelSnapshot::from_bytes(&good[..10]).is_err());
+    }
+
+    #[test]
+    fn hostile_header_ranks_are_rejected_not_panicked() {
+        // a crafted checkpoint can carry a *valid* checksum over a hostile
+        // header — zero or absurd J/R must come back as Err, not a panic
+        let good = ModelSnapshot::from_model(&model(), Algo::Plus, 1).to_bytes();
+        for (offset, value) in [(24usize, 0u32), (24, u32::MAX), (28, 0), (28, u32::MAX)] {
+            let mut bad = good[..good.len() - 8].to_vec();
+            bad[offset..offset + 4].copy_from_slice(&value.to_le_bytes());
+            let sum = fnv1a(&bad);
+            bad.extend_from_slice(&sum.to_le_bytes());
+            assert!(
+                ModelSnapshot::from_bytes(&bad).is_err(),
+                "rank {value} at offset {offset} was accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn atomic_save_leaves_no_tmp() {
+        let dir = std::env::temp_dir().join("ft_serve_snap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.ftc");
+        let snap = ModelSnapshot::from_model(&model(), Algo::Plus, 2);
+        snap.save(&path).unwrap();
+        assert!(!path.with_file_name("m.ftc.tmp").exists());
+        let back = ModelSnapshot::load(&path).unwrap();
+        assert_eq!(back.epoch(), 2);
+        assert!(ModelSnapshot::ptr_eq(&snap, &snap.clone()));
+        assert!(!ModelSnapshot::ptr_eq(&snap, &back));
+    }
+}

@@ -1,0 +1,104 @@
+//! Top-K selection over mode-completion scores — the recommender query.
+//!
+//! Selection is deterministic: candidates are ranked by score descending
+//! with ties broken by index ascending (`f32::total_cmp`, so the order is
+//! total even for pathological scores).  [`top_k`] uses an O(I) average
+//! partial selection (`select_nth_unstable_by`) and only sorts the K
+//! survivors, so scoring the free mode dominates the query cost, not the
+//! selection.
+
+use super::engine::Engine;
+
+/// One ranked candidate of a top-K query.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Scored {
+    /// Candidate index along the completed mode.
+    pub index: u32,
+    /// Completion score (higher is better).
+    pub score: f32,
+}
+
+/// The K best indices of `scores`, ranked score-descending with
+/// index-ascending tie-breaks.  Returns fewer than `k` only when the
+/// candidate set is smaller than `k`.
+pub fn top_k(scores: &[f32], k: usize) -> Vec<Scored> {
+    let k = k.min(scores.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<u32> = (0..scores.len() as u32).collect();
+    let rank = |a: &u32, b: &u32| {
+        scores[*b as usize]
+            .total_cmp(&scores[*a as usize])
+            .then_with(|| a.cmp(b))
+    };
+    if k < idx.len() {
+        idx.select_nth_unstable_by(k - 1, rank);
+        idx.truncate(k);
+    }
+    idx.sort_unstable_by(rank);
+    idx.into_iter()
+        .map(|i| Scored {
+            index: i,
+            score: scores[i as usize],
+        })
+        .collect()
+}
+
+/// Mode-completion top-K: score every index of `mode` (all other
+/// coordinates fixed by `coords`; the slot at `mode` is ignored) and
+/// return the K best.  The fiber invariant is computed once for the whole
+/// sweep (see [`Engine::complete_mode`]).
+pub fn mode_topk(engine: &mut Engine, coords: &[u32], mode: usize, k: usize) -> Vec<Scored> {
+    let mut scores = Vec::new();
+    engine.complete_mode(coords, mode, &mut scores);
+    top_k(&scores, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selects_and_orders() {
+        let scores = [0.5f32, 2.0, -1.0, 2.0, 0.0, 1.5];
+        let top = top_k(&scores, 3);
+        // ties (indices 1 and 3 at 2.0) break toward the lower index
+        assert_eq!(
+            top.iter().map(|s| s.index).collect::<Vec<_>>(),
+            vec![1, 3, 5]
+        );
+        assert_eq!(top[0].score, 2.0);
+    }
+
+    #[test]
+    fn k_larger_than_candidates() {
+        let scores = [1.0f32, 3.0];
+        let top = top_k(&scores, 10);
+        assert_eq!(
+            top.iter().map(|s| s.index).collect::<Vec<_>>(),
+            vec![1, 0]
+        );
+        assert!(top_k(&scores, 0).is_empty());
+        assert!(top_k(&[], 5).is_empty());
+    }
+
+    #[test]
+    fn matches_full_sort() {
+        // pseudo-random scores; compare against the brute-force full sort
+        let scores: Vec<f32> = (0..257u32)
+            .map(|i| ((i.wrapping_mul(2654435761) >> 7) % 1000) as f32 * 0.01 - 5.0)
+            .collect();
+        let mut brute: Vec<u32> = (0..scores.len() as u32).collect();
+        brute.sort_by(|a, b| {
+            scores[*b as usize]
+                .total_cmp(&scores[*a as usize])
+                .then_with(|| a.cmp(b))
+        });
+        let top = top_k(&scores, 17);
+        assert_eq!(
+            top.iter().map(|s| s.index).collect::<Vec<_>>(),
+            brute[..17].to_vec()
+        );
+    }
+}

@@ -82,6 +82,22 @@ impl Args {
     }
 }
 
+/// Parse a coordinate list: comma- and/or whitespace-separated `u32`s
+/// (`"1,2,3"`, `"1 2 3"`, `"1, 2, 3"` all work — the forms query tools
+/// paste).  Rejects empty input and non-numeric tokens.
+pub fn parse_u32_list(s: &str) -> Result<Vec<u32>, String> {
+    let out: Result<Vec<u32>, String> = s
+        .split(|c: char| c == ',' || c.is_whitespace())
+        .filter(|t| !t.is_empty())
+        .map(|t| t.parse::<u32>().map_err(|_| format!("bad coordinate {t:?}")))
+        .collect();
+    let out = out?;
+    if out.is_empty() {
+        return Err("empty coordinate list".to_string());
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,6 +124,16 @@ mod tests {
     fn rejects_unknown_and_missing_value() {
         assert!(Args::parse(argv(&["--nope"]), &["n"], &[]).is_err());
         assert!(Args::parse(argv(&["--n"]), &["n"], &[]).is_err());
+    }
+
+    #[test]
+    fn u32_list_forms() {
+        assert_eq!(parse_u32_list("1,2,3").unwrap(), vec![1, 2, 3]);
+        assert_eq!(parse_u32_list("1 2 3").unwrap(), vec![1, 2, 3]);
+        assert_eq!(parse_u32_list("1, 2,  3").unwrap(), vec![1, 2, 3]);
+        assert!(parse_u32_list("").is_err());
+        assert!(parse_u32_list("1,x,3").is_err());
+        assert!(parse_u32_list("-1").is_err());
     }
 
     #[test]

@@ -1,0 +1,348 @@
+//! Serving-subsystem acceptance suite.
+//!
+//! Pins the four load-bearing guarantees of `serve::`:
+//!
+//! 1. checkpoints roundtrip losslessly (bit-identical model, byte-identical
+//!    re-save) across random shapes, and corruption is detected;
+//! 2. `Engine::predict` is bit-identical to the trainer's evaluation path
+//!    on the same snapshot (exact f64 equality of RMSE/MAE);
+//! 3. top-K mode completion agrees with a brute-force scalar scorer;
+//! 4. hot-swapping snapshots under live queries never exposes a torn
+//!    model, and the batched server answers exactly what a direct engine
+//!    would.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use fasttucker::coordinator::{Algo, Backend, Trainer, TrainConfig};
+use fasttucker::kernel::KernelPolicy;
+use fasttucker::model::TuckerModel;
+use fasttucker::serve::{mode_topk, Engine, ModelSnapshot, Server};
+use fasttucker::synth::{generate, SynthConfig};
+use fasttucker::tensor::split::train_test_split;
+use fasttucker::util::rng::Pcg32;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("ft_serve_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Property: over random (order, dims, J, R, algo, epoch), a checkpoint
+/// save → load roundtrip is bit-identical, and save → load → save produces
+/// identical bytes.
+#[test]
+fn checkpoint_roundtrip_property() {
+    let algos = [
+        Algo::FastTucker,
+        Algo::FasterTucker,
+        Algo::FasterTuckerCoo,
+        Algo::Plus,
+    ];
+    let mut rng = Pcg32::new(2024, 0xC4E);
+    for case in 0..12u64 {
+        let order = 2 + rng.gen_index(3); // 2..=4
+        let dims: Vec<u32> = (0..order).map(|_| 3 + rng.gen_range(30)).collect();
+        let j = 16 * (1 + rng.gen_index(2)); // 16 or 32
+        let r = 16 * (1 + rng.gen_index(2));
+        let algo = algos[rng.gen_index(algos.len())];
+        let epoch = rng.next_u64() % 1000;
+        let model = TuckerModel::init(&dims, j, r, 0xF00D + case);
+        let snap = ModelSnapshot::from_model(&model, algo, epoch);
+
+        let p1 = tmp(&format!("prop_{case}_a.ftc"));
+        let p2 = tmp(&format!("prop_{case}_b.ftc"));
+        snap.save(&p1).unwrap();
+        let back = ModelSnapshot::load(&p1).unwrap();
+
+        // bit-identical payload and header
+        assert_eq!(back.dims(), &dims[..], "case {case}");
+        assert_eq!(back.j(), j);
+        assert_eq!(back.r(), r);
+        assert_eq!(back.algo(), algo);
+        assert_eq!(back.epoch(), epoch);
+        let m2 = back.to_model();
+        assert_eq!(m2.factors, model.factors, "case {case} factors diverged");
+        assert_eq!(m2.cores, model.cores, "case {case} cores diverged");
+
+        // save -> load -> save: identical bytes
+        back.save(&p2).unwrap();
+        assert_eq!(
+            std::fs::read(&p1).unwrap(),
+            std::fs::read(&p2).unwrap(),
+            "case {case} re-save not byte-identical"
+        );
+    }
+}
+
+#[test]
+fn checkpoint_corruption_detected_on_disk() {
+    let model = TuckerModel::init(&[12, 9, 7], 16, 16, 5);
+    let snap = ModelSnapshot::from_model(&model, Algo::Plus, 3);
+    let p = tmp("corrupt.ftc");
+    snap.save(&p).unwrap();
+    let good = std::fs::read(&p).unwrap();
+    // flip one byte at a stride of positions across header and payload
+    for at in (0..good.len()).step_by(good.len() / 7) {
+        let mut bad = good.clone();
+        bad[at] ^= 0x10;
+        std::fs::write(&p, &bad).unwrap();
+        assert!(
+            ModelSnapshot::load(&p).is_err(),
+            "byte flip at {at} loaded successfully"
+        );
+    }
+    // truncation
+    std::fs::write(&p, &good[..good.len() / 2]).unwrap();
+    assert!(ModelSnapshot::load(&p).is_err());
+    // restore and confirm the detector passes clean data
+    std::fs::write(&p, &good).unwrap();
+    assert!(ModelSnapshot::load(&p).is_ok());
+}
+
+/// `Engine::predict` must be bit-identical to the trainer's evaluation
+/// path on the same snapshot: exact f64 equality of (RMSE, MAE) implies
+/// exact f32 equality of every per-entry prediction (the sums are order-
+/// and bit-sensitive), and per-entry spot checks pin it directly.
+#[test]
+fn engine_predict_bit_identical_to_trainer() {
+    let t = generate(&SynthConfig::order_sweep(3, 40, 4000, 17));
+    let (train, test) = train_test_split(&t, 0.25, 3);
+    for kernel in [KernelPolicy::Tiled, KernelPolicy::Scalar] {
+        let mut cfg = TrainConfig::default();
+        cfg.backend = Backend::CpuRef;
+        cfg.cpu_kernel = kernel;
+        let mut trainer = Trainer::new(&train, cfg).unwrap();
+        for _ in 0..3 {
+            trainer.epoch(&train).unwrap();
+        }
+        let (rmse, mae) = trainer.evaluate(&test).unwrap();
+        let engine = Engine::new(trainer.snapshot());
+        let (srmse, smae) = engine.rmse_mae(&test);
+        assert_eq!(rmse, srmse, "serve RMSE diverged from trainer ({kernel:?})");
+        assert_eq!(mae, smae, "serve MAE diverged from trainer ({kernel:?})");
+        for e in (0..test.nnz()).step_by(97) {
+            let c = test.coords(e);
+            assert_eq!(
+                engine.predict(c),
+                trainer.model.predict_one(c),
+                "entry {e} prediction diverged"
+            );
+        }
+    }
+}
+
+/// Checkpoints preserve serving behavior exactly: predictions from a
+/// revived snapshot equal predictions from the live one.
+#[test]
+fn revived_checkpoint_serves_identically() {
+    let t = generate(&SynthConfig::netflix_like(8_000, 9));
+    let mut cfg = TrainConfig::default();
+    cfg.backend = Backend::ParallelCpu;
+    cfg.threads = 2;
+    let mut trainer = Trainer::new(&t, cfg).unwrap();
+    for _ in 0..2 {
+        trainer.epoch(&t).unwrap();
+    }
+    let live = Engine::new(trainer.snapshot());
+    let p = tmp("revive.ftc");
+    trainer.snapshot().save(&p).unwrap();
+    let revived = Engine::new(ModelSnapshot::load(&p).unwrap());
+    for e in (0..t.nnz()).step_by(131) {
+        let c = t.coords(e);
+        assert_eq!(live.predict(c), revived.predict(c));
+    }
+}
+
+/// Top-K mode completion agrees with a brute-force scalar scorer that
+/// recomputes the exclusion product per candidate from the raw factors.
+#[test]
+fn topk_matches_bruteforce_scalar_scorer() {
+    let model = TuckerModel::init(&[23, 57, 11], 16, 16, 99);
+    let snap = ModelSnapshot::from_model(&model, Algo::Plus, 0);
+    let mut engine = Engine::new(snap.clone());
+    let (n, r) = (3usize, 16usize);
+    for (coords, mode) in [
+        ([5u32, 0, 3], 1usize),
+        ([0, 12, 9], 0),
+        ([22, 56, 0], 2),
+        ([7, 7, 7], 1),
+    ] {
+        let k = 9;
+        let got = mode_topk(&mut engine, &coords, mode, k);
+
+        // brute force: score every candidate independently, full sort
+        let cands = model.dims[mode] as usize;
+        let mut scores = Vec::with_capacity(cands);
+        for i in 0..cands {
+            // exclusion product from stored projections, ascending modes
+            let mut d = vec![1f32; r];
+            for m in 0..n {
+                if m == mode {
+                    continue;
+                }
+                let crow = snap.c_row(m, coords[m] as usize);
+                for rr in 0..r {
+                    d[rr] *= crow[rr];
+                }
+            }
+            let crow = snap.c_row(mode, i);
+            let mut s = 0f32;
+            for rr in 0..r {
+                s += crow[rr] * d[rr];
+            }
+            scores.push(s);
+        }
+        let mut order: Vec<u32> = (0..cands as u32).collect();
+        order.sort_by(|a, b| {
+            scores[*b as usize]
+                .total_cmp(&scores[*a as usize])
+                .then_with(|| a.cmp(b))
+        });
+        assert_eq!(got.len(), k);
+        for (rank, s) in got.iter().enumerate() {
+            assert_eq!(s.index, order[rank], "rank {rank} index (mode {mode})");
+            assert_eq!(
+                s.score,
+                scores[s.index as usize],
+                "rank {rank} score bits (mode {mode})"
+            );
+        }
+    }
+}
+
+/// Constant-valued model whose prediction is the same for every coordinate
+/// — lets the torn-read test distinguish snapshots by a single scalar.
+fn constant_snapshot(a: f32, b: f32, epoch: u64) -> ModelSnapshot {
+    let (j, r) = (16usize, 16usize);
+    let dims = vec![6u32, 6];
+    let model = TuckerModel {
+        dims: dims.clone(),
+        j,
+        r,
+        factors: dims.iter().map(|&d| vec![a; d as usize * j]).collect(),
+        cores: dims.iter().map(|_| vec![b; j * r]).collect(),
+    };
+    ModelSnapshot::from_model(&model, Algo::Plus, epoch)
+}
+
+/// Queries racing a stream of publishes must only ever see whole models:
+/// every response equals exactly one of the two snapshots' predictions.
+#[test]
+fn hot_swap_never_serves_torn_model() {
+    let snap_a = constant_snapshot(0.1, 0.1, 0);
+    let snap_b = constant_snapshot(0.2, 0.1, 1);
+    let pred_a = Engine::new(snap_a.clone()).predict(&[0, 0]);
+    let pred_b = Engine::new(snap_b.clone()).predict(&[0, 0]);
+    assert_ne!(pred_a, pred_b);
+
+    let server = Server::start(snap_a.clone(), 3, 4);
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        // publisher: flip between the two snapshots as fast as possible
+        {
+            let server = &server;
+            let stop = &stop;
+            let (snap_a, snap_b) = (snap_a.clone(), snap_b.clone());
+            scope.spawn(move || {
+                let mut flip = false;
+                while !stop.load(Ordering::Relaxed) {
+                    server.publish(if flip { snap_a.clone() } else { snap_b.clone() });
+                    flip = !flip;
+                    // let reader batches interleave with the write storm
+                    std::thread::yield_now();
+                }
+            });
+        }
+        // clients: every answer must be exactly pred_a or pred_b
+        let mut clients = Vec::new();
+        for c in 0..4u32 {
+            let handle = server.handle();
+            clients.push(scope.spawn(move || {
+                let mut seen_a = 0u32;
+                let mut seen_b = 0u32;
+                for i in 0..500u32 {
+                    let coords = vec![(i + c) % 6, i % 6];
+                    let v = handle.predict(coords).expect("predict");
+                    if v == pred_a {
+                        seen_a += 1;
+                    } else if v == pred_b {
+                        seen_b += 1;
+                    } else {
+                        panic!("torn model: got {v}, expected {pred_a} or {pred_b}");
+                    }
+                }
+                (seen_a, seen_b)
+            }));
+        }
+        let mut total = (0u32, 0u32);
+        for cjoin in clients {
+            let (a, b) = cjoin.join().unwrap();
+            total.0 += a;
+            total.1 += b;
+        }
+        stop.store(true, Ordering::Relaxed);
+        assert_eq!(total.0 + total.1, 2000);
+    });
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 2000);
+    assert!(stats.swaps > 0);
+}
+
+/// The batched server answers exactly what a direct engine query on the
+/// same snapshot answers, across concurrent clients and mixed request
+/// types.
+#[test]
+fn server_batching_matches_direct_engine() {
+    let model = TuckerModel::init(&[31, 29, 13], 16, 16, 4242);
+    let snap = ModelSnapshot::from_model(&model, Algo::Plus, 8);
+    let server = Server::start(snap.clone(), 3, 8);
+    std::thread::scope(|scope| {
+        for c in 0..4u64 {
+            let handle = server.handle();
+            let snap = snap.clone();
+            scope.spawn(move || {
+                let mut engine = Engine::new(snap);
+                let dims = engine.snapshot().dims().to_vec();
+                let mut rng = Pcg32::new(555, c);
+                for i in 0..60 {
+                    let coords: Vec<u32> = dims.iter().map(|&d| rng.gen_range(d)).collect();
+                    if i % 4 == 3 {
+                        let mode = rng.gen_index(3);
+                        let got = handle.topk(coords.clone(), mode, 6).expect("topk");
+                        let want = mode_topk(&mut engine, &coords, mode, 6);
+                        assert_eq!(got, want);
+                    } else {
+                        let got = handle.predict(coords.clone()).expect("predict");
+                        assert_eq!(got, engine.predict(&coords));
+                    }
+                }
+            });
+        }
+    });
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 240);
+    assert_eq!(stats.swaps, 0);
+}
+
+/// Publish-before-query ordering: after `Trainer::publish` returns, every
+/// subsequent call observes the new epoch.
+#[test]
+fn publish_is_immediately_visible() {
+    let t = generate(&SynthConfig::order_sweep(3, 24, 1500, 5));
+    let mut cfg = TrainConfig::default();
+    cfg.backend = Backend::CpuRef;
+    let mut trainer = Trainer::new(&t, cfg).unwrap();
+    let server = Server::start(trainer.snapshot(), 2, 4);
+    let h = server.handle();
+    assert_eq!(h.epoch().unwrap(), 0);
+    for want in 1..=3u64 {
+        trainer.epoch(&t).unwrap();
+        trainer.publish(&server);
+        assert_eq!(h.epoch().unwrap(), want);
+        // and the served predictions now match the freshly trained model
+        let c = t.coords(0);
+        assert_eq!(h.predict(c.to_vec()).unwrap(), trainer.model.predict_one(c));
+    }
+    server.shutdown();
+}
