@@ -1,37 +1,71 @@
-//! Train-and-serve concurrently: the tensor-completion service rebuilt on
-//! the serving subsystem.  A [`Server`] opens on the epoch-0 snapshot and
-//! keeps answering batched predict / top-K queries from concurrent client
-//! threads while the trainer runs more epochs and hot-swaps fresh
-//! snapshots in via `Trainer::publish` — in-flight queries always see one
-//! consistent model, and clients observe the epoch tag advancing.
+//! Train-and-serve concurrently: the tensor-completion service on the
+//! session + serving subsystems.  A [`Server`] opens on the epoch-0
+//! snapshot and keeps answering batched predict / top-K queries from
+//! concurrent client threads while a scheduled [`Session`] run
+//! (`publish_every: 1`) trains more epochs and hot-swaps fresh snapshots
+//! in — in-flight queries always see one consistent model, and clients
+//! observe the epoch tag advancing.
 //!
 //! Everything is in-process and offline (no sockets: a network front-end
 //! would sit on top of the same [`ServerHandle`]).  CI runs this on every
 //! PR.
 //!
 //! Run: `cargo run --release --example completion_server`
+//!
+//! [`ServerHandle`]: fasttucker::serve::ServerHandle
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
-use fasttucker::coordinator::{Backend, Trainer, TrainConfig};
+use fasttucker::prelude::*;
 use fasttucker::serve::Server;
+use fasttucker::session::EpochEvent;
 use fasttucker::synth::{generate, SynthConfig};
 use fasttucker::util::rng::Pcg32;
 
+/// Narrates each hot-swap publish with the live query count — an
+/// [`Observer`] over the session's epoch events.
+struct PublishNarrator<'a> {
+    server: &'a Server,
+    queries_ok: &'a AtomicU64,
+}
+
+impl Observer for PublishNarrator<'_> {
+    fn on_epoch(&mut self, ev: &EpochEvent) {
+        if ev.published {
+            println!(
+                "epoch {}: published (server now at snapshot epoch {}, {} queries answered so far)",
+                ev.epoch,
+                self.server.epoch(),
+                self.queries_ok.load(Ordering::Relaxed)
+            );
+        }
+    }
+}
+
 fn main() -> anyhow::Result<()> {
     let tensor = generate(&SynthConfig::order_sweep(3, 256, 40_000, 5));
-    let mut cfg = TrainConfig::default();
-    if !cfg.hlo_available() {
+    let cfg = TrainConfig::default();
+    let backend = cfg.auto_backend();
+    if backend != Backend::Hlo {
         eprintln!("note: no artifacts; using --backend parallel");
-        cfg.backend = Backend::ParallelCpu;
     }
-    let mut trainer = Trainer::new(&tensor, cfg)?;
+    // 6 epochs, publish after every one, no held-out split — the
+    // completion service trains on every observed entry.
+    let schedule = Schedule {
+        epochs: 6,
+        eval_every: 0,
+        test_frac: 0.0,
+        publish_every: 1,
+        ..Schedule::default()
+    };
     let dims = tensor.dims.clone();
+    let cfg = TrainConfig { backend, ..cfg };
+    let mut session = Session::with_owned_tensor(tensor, cfg, schedule)?;
 
-    let server = Server::start(trainer.snapshot(), 2, 16);
+    let server = Server::start(session.snapshot(), 2, 16);
     println!(
         "serving order-{} model over dims {:?} (snapshot epoch {})",
-        trainer.model.order(),
+        dims.len(),
         dims,
         server.epoch()
     );
@@ -70,21 +104,14 @@ fn main() -> anyhow::Result<()> {
             });
         }
 
-        // Train 6 epochs, publishing after each — every publish is a
-        // hot-swap under live traffic.  Always release the clients, even
-        // if an epoch errors, so the scope can join.
-        let trained = (|| -> anyhow::Result<()> {
-            for epoch in 1..=6 {
-                trainer.epoch(&tensor)?;
-                trainer.publish(&server);
-                println!(
-                    "epoch {epoch}: published (server now at snapshot epoch {}, {} queries answered so far)",
-                    server.epoch(),
-                    queries_ok.load(Ordering::Relaxed)
-                );
-            }
-            Ok(())
-        })();
+        // The session publishes after every epoch — each one a hot-swap
+        // under live traffic.  Always release the clients, even if the
+        // run errors, so the scope can join.
+        let mut narrator = PublishNarrator {
+            server: &server,
+            queries_ok: &queries_ok,
+        };
+        let trained = session.run_with_server(&server, &mut narrator).map(|_| ());
         stop.store(true, Ordering::Relaxed);
         trained
     })?;

@@ -10,12 +10,10 @@ use fasttucker::coordinator::{Algo, Backend, Trainer, TrainConfig};
 use fasttucker::synth::{generate, SynthConfig};
 
 fn main() -> anyhow::Result<()> {
-    let backend = if TrainConfig::default().hlo_available() {
-        Backend::Hlo
-    } else {
+    let backend = TrainConfig::default().auto_backend();
+    if backend != Backend::Hlo {
         eprintln!("note: no artifacts; using --backend parallel");
-        Backend::ParallelCpu
-    };
+    }
     println!(
         "{:<6} {:>10} {:>12} {:>12} {:>10} {:>8}",
         "order", "nnz", "factor", "core", "memory", "pad%"

@@ -1,17 +1,18 @@
-//! Quickstart + end-to-end validation driver.
+//! Quickstart + end-to-end validation driver, on the session API.
 //!
-//! Generates a Netflix-like synthetic rating tensor (the laptop-scale
-//! surrogate for the paper's real datasets — DESIGN.md §3), trains a
-//! FastTuckerPlus decomposition through the full three-layer stack
-//! (Pallas-lowered HLO executed on the PJRT CPU client from the Rust
-//! coordinator), and logs the RMSE/MAE convergence curve plus per-phase
-//! timings.  The numbers recorded in EXPERIMENTS.md §E2E come from this.
+//! Describes the whole run declaratively — a Netflix-like synthetic
+//! rating tensor (the laptop-scale surrogate for the paper's real
+//! datasets, DESIGN.md §3), a FastTuckerPlus configuration with the
+//! backend auto-selected for this checkout, and a fixed-epoch schedule
+//! with per-epoch RMSE/MAE evaluation — then hands the [`RunSpec`] to a
+//! [`Session`] and lets it drive.  The printed spec JSON is exactly what
+//! `fasttucker train --dump-spec` emits, so this run is reproducible from
+//! a file.  The numbers recorded in EXPERIMENTS.md §E2E come from this.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use fasttucker::coordinator::{Backend, Trainer, TrainConfig};
-use fasttucker::synth::{generate, SynthConfig};
-use fasttucker::tensor::split::train_test_split;
+use fasttucker::prelude::*;
+use fasttucker::session::{DataSource, SynthPreset, SynthSpec};
 
 fn main() -> anyhow::Result<()> {
     let nnz = std::env::var("QS_NNZ")
@@ -23,48 +24,46 @@ fn main() -> anyhow::Result<()> {
         .and_then(|v| v.parse().ok())
         .unwrap_or(15);
 
-    println!("generating netflix-like surrogate ({nnz} nnz)...");
-    let tensor = generate(&SynthConfig::netflix_like(nnz, 7));
-    let (train, test) = train_test_split(&tensor, 0.2, 7);
-    println!(
-        "dims {:?}, train {} / test {} entries, density {:.2e}",
-        tensor.dims,
-        train.nnz(),
-        test.nnz(),
-        tensor.density()
-    );
-
-    let mut cfg = TrainConfig::default(); // plus / tc / calculation
-    if !cfg.hlo_available() {
+    let spec = RunSpec {
+        data: DataSource::Synth(SynthSpec {
+            preset: SynthPreset::Netflix,
+            nnz,
+            seed: 7,
+            ..SynthSpec::default()
+        }),
+        schedule: Schedule {
+            epochs,
+            ..Schedule::default()
+        },
+        ..RunSpec::default()
+    };
+    if spec.train.backend != Backend::Hlo {
         eprintln!("note: no artifacts (run `make artifacts` for the HLO backend); using --backend parallel");
-        cfg.backend = Backend::ParallelCpu;
     }
-    let mut trainer = Trainer::new(&train, cfg)?;
-    println!("runtime: {}", trainer.platform());
+    println!("spec: {}", spec.dump());
 
-    let (rmse, mae) = trainer.evaluate(&test)?;
-    println!("epoch  0: rmse {rmse:.4} mae {mae:.4} (random init)");
-    let t0 = std::time::Instant::now();
-    let mut best = rmse;
-    for epoch in 1..=epochs {
-        let st = trainer.epoch(&train)?;
-        let (rmse, mae) = trainer.evaluate(&test)?;
-        best = best.min(rmse);
-        println!(
-            "epoch {epoch:>2}: rmse {rmse:.4} mae {mae:.4} | factor {:.3}s (exec {:.3}s, mem {:.3}s) core {:.3}s | pad {:.1}%",
-            st.factor.total().as_secs_f64(),
-            st.factor.exec.as_secs_f64(),
-            st.factor.memory().as_secs_f64(),
-            st.core.total().as_secs_f64(),
-            100.0 * st.factor.padding_ratio()
-        );
-    }
+    let mut session = Session::from_spec(&spec)?;
     println!(
-        "done in {:.1}s; best test RMSE {best:.4} (init was {rmse0:.4})",
-        t0.elapsed().as_secs_f64(),
-        rmse0 = rmse
+        "dims {:?}, train {} / test {} entries",
+        session.train_tensor().dims,
+        session.train_tensor().nnz(),
+        session.test_tensor().nnz(),
     );
-    anyhow::ensure!(best < 0.9 * rmse, "training failed to converge");
+    println!("runtime: {}", session.platform());
+
+    let report = session.run(&mut ProgressPrinter)?;
+
+    let init = report
+        .history
+        .first()
+        .and_then(|e| e.rmse)
+        .expect("schedule evaluates the init");
+    let best = report.best_rmse.expect("schedule evaluates epochs");
+    println!(
+        "done in {:.1}s; best test RMSE {best:.4} (init was {init:.4})",
+        report.wall_s
+    );
+    anyhow::ensure!(best < 0.9 * init, "training failed to converge");
     println!("CONVERGED ✓");
     Ok(())
 }

@@ -1,54 +1,59 @@
 //! Recommender-system scenario (the paper's motivating §1 workload) on the
-//! serving subsystem: decompose a user x item x time rating tensor, publish
-//! the trained model through the full snapshot lifecycle
-//! (train → checkpoint → load → serve), and answer the two production
-//! queries — point predictions ("what would user u rate item i at time
-//! t?") and per-user top-K recommendation via mode completion.
+//! session + serving subsystems: decompose a user x item x time rating
+//! tensor through a scheduled [`Session`] run that publishes snapshots to
+//! a live [`Server`] every few epochs, persist the trained model through
+//! the full snapshot lifecycle (train → checkpoint → load → serve), and
+//! answer the two production queries — point predictions ("what would
+//! user u rate item i at time t?") and per-user top-K recommendation via
+//! mode completion.
 //!
 //! Everything runs offline from a clean checkout (synthetic data, CPU
 //! backend, temp-dir checkpoint).  CI runs this end-to-end on every PR.
 //!
 //! Run: `cargo run --release --example recommender`
 
-use fasttucker::coordinator::{Backend, Trainer, TrainConfig};
+use fasttucker::prelude::*;
 use fasttucker::serve::{mode_topk, Engine, Server};
 use fasttucker::synth::{generate, SynthConfig};
-use fasttucker::tensor::split::train_test_split;
 
 fn main() -> anyhow::Result<()> {
     // Small MovieLens-scale tensor: 2000 users x 800 items x 24 periods.
     let mut cfg_t = SynthConfig::netflix_like(90_000, 11);
     cfg_t.dims = vec![2000, 800, 24];
     let tensor = generate(&cfg_t);
-    let (train, test) = train_test_split(&tensor, 0.2, 11);
+
+    let cfg = TrainConfig::default();
+    let backend = cfg.auto_backend();
+    if backend != Backend::Hlo {
+        eprintln!("note: no artifacts; using --backend parallel");
+    }
+    // The schedule drives everything the old hand-rolled loop did:
+    // evaluate + publish every 3rd epoch, for 9 epochs.
+    let schedule = Schedule {
+        epochs: 9,
+        eval_every: 3,
+        test_frac: 0.2,
+        publish_every: 3,
+        ..Schedule::default()
+    };
+    let mut session = Session::with_tensor(&tensor, TrainConfig { backend, ..cfg }, schedule)?;
     println!(
         "ratings: {} train / {} test over {:?}",
-        train.nnz(),
-        test.nnz(),
+        session.train_tensor().nnz(),
+        session.test_tensor().nnz(),
         tensor.dims
     );
 
-    let mut cfg = TrainConfig::default();
-    if !cfg.hlo_available() {
-        eprintln!("note: no artifacts; using --backend parallel");
-        cfg.backend = Backend::ParallelCpu;
-    }
-    let mut trainer = Trainer::new(&train, cfg)?;
-
     // Serve while training: the server opens on the (untrained) epoch-0
     // snapshot and every publish hot-swaps in a better model.
-    let server = Server::start(trainer.snapshot(), 2, 32);
-    for epoch in 1..=9 {
-        trainer.epoch(&train)?;
-        if epoch % 3 == 0 {
-            trainer.publish(&server);
-            let (rmse, mae) = trainer.evaluate(&test)?;
-            println!(
-                "epoch {epoch:>2}: test rmse {rmse:.4} mae {mae:.4}  (published snapshot epoch {})",
-                server.epoch()
-            );
-        }
-    }
+    let server = Server::start(session.snapshot(), 2, 32);
+    let report = session.run_with_server(&server, &mut ProgressPrinter)?;
+    println!(
+        "trained {} epochs; final test rmse {:.4} (published snapshot epoch {})",
+        report.epochs_run,
+        report.final_rmse.unwrap_or(f64::NAN),
+        server.epoch()
+    );
 
     // --- checkpoint lifecycle ----------------------------------------------
     // Persist the final model and serve from the durable copy — the
@@ -56,20 +61,21 @@ fn main() -> anyhow::Result<()> {
     let dir = std::env::temp_dir().join("ft_recommender_example");
     std::fs::create_dir_all(&dir)?;
     let ckpt = dir.join("model.ftc");
-    trainer.snapshot().save(&ckpt)?;
-    let revived = fasttucker::serve::ModelSnapshot::load(&ckpt)?;
+    session.snapshot().save(&ckpt)?;
+    let revived = ModelSnapshot::load(&ckpt)?;
     println!(
         "\ncheckpoint roundtrip: {:?} (epoch {}, {} params, checksum ok)",
         ckpt,
         revived.epoch(),
         revived.param_count()
     );
-    anyhow::ensure!(revived.epoch() == trainer.epoch_no);
+    anyhow::ensure!(revived.epoch() == session.trainer().epoch_no);
     server.publish(revived.clone());
 
     // --- completion queries (batched through the server) -------------------
     println!("\nsample completions (user, item, t) -> predicted rating:");
     let handle = server.handle();
+    let test = session.test_tensor();
     for e in (0..test.nnz()).step_by(test.nnz() / 5) {
         let c = test.coords(e);
         let pred = handle.predict(c.to_vec()).map_err(anyhow::Error::msg)?;

@@ -22,8 +22,9 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use fasttucker::bench::{measure, percentile, report, Row};
-use fasttucker::coordinator::{Backend, Trainer, TrainConfig};
+use fasttucker::coordinator::{Backend, TrainConfig};
 use fasttucker::serve::{Engine, Server};
+use fasttucker::session::{NullObserver, Schedule, Session};
 use fasttucker::synth::{generate, SynthConfig};
 use fasttucker::util::rng::Pcg32;
 
@@ -35,13 +36,21 @@ fn main() -> anyhow::Result<()> {
         (120_000, 4, 20_000)
     };
     let train = generate(&SynthConfig::netflix_like(nnz, 7));
-    let mut cfg = TrainConfig::default();
-    cfg.backend = Backend::ParallelCpu;
-    let mut trainer = Trainer::new(&train, cfg)?;
-    for _ in 0..epochs {
-        trainer.epoch(&train)?;
-    }
-    let snap = trainer.snapshot();
+    let cfg = TrainConfig {
+        backend: Backend::ParallelCpu,
+        ..TrainConfig::default()
+    };
+    // train the serving model through a scheduled session (no held-out
+    // split — the bench serves, it doesn't evaluate)
+    let schedule = Schedule {
+        epochs,
+        eval_every: 0,
+        test_frac: 0.0,
+        ..Schedule::default()
+    };
+    let mut session = Session::with_owned_tensor(train, cfg, schedule)?;
+    session.run(&mut NullObserver)?;
+    let snap = session.snapshot();
     let dims = snap.dims().to_vec();
     let n = dims.len();
 

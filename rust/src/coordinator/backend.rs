@@ -129,6 +129,12 @@ pub trait StepBackend {
         model: &TuckerModel,
         test: &SparseTensor,
     ) -> Result<Option<(f64, f64)>>;
+
+    /// Replace the SGD hyper-parameters for subsequent blocks.  Backends
+    /// capture a copy of [`Hyper`] at construction; the session layer's
+    /// learning-rate decay calls this (through [`super::Trainer::set_hyper`])
+    /// so mid-run changes actually reach the kernels.
+    fn set_hyper(&mut self, hyper: Hyper);
 }
 
 /// Build the backend selected by `cfg.backend`.
@@ -540,6 +546,12 @@ impl StepBackend for HloBackend {
         let cnt = test.nnz().max(1) as f64;
         Ok(Some(((sse / cnt).sqrt(), sae / cnt)))
     }
+
+    fn set_hyper(&mut self, hyper: Hyper) {
+        // the HLO kernels take lr/lam as runtime inputs read from the
+        // config at block launch, so updating the captured copy is enough
+        self.cfg.hyper = hyper;
+    }
 }
 
 // ======================================================================
@@ -722,5 +734,9 @@ impl StepBackend for CpuBackend {
         _test: &SparseTensor,
     ) -> Result<Option<(f64, f64)>> {
         Ok(None) // scalar evaluator handles it
+    }
+
+    fn set_hyper(&mut self, hyper: Hyper) {
+        self.hyper = hyper;
     }
 }

@@ -103,6 +103,11 @@ impl Variant {
             Variant::Cc => "cc",
         }
     }
+
+    /// Canonical CLI name (`parse(name()) == Some(self)`).
+    pub fn name(self) -> &'static str {
+        self.suffix()
+    }
 }
 
 /// C^(n) handling for FastTuckerPlus (§5.6): recompute per batch on the
@@ -124,6 +129,14 @@ impl Strategy {
             "calculation" | "calc" => Some(Strategy::Calculation),
             "storage" | "store" => Some(Strategy::Storage),
             _ => None,
+        }
+    }
+
+    /// Canonical CLI name (`parse(name()) == Some(self)`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::Calculation => "calculation",
+            Strategy::Storage => "storage",
         }
     }
 }
@@ -165,7 +178,7 @@ impl Backend {
 }
 
 /// Full trainer configuration.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct TrainConfig {
     /// Decomposition algorithm (Table-3 sampling strategy follows from it).
     pub algo: Algo,
@@ -202,6 +215,22 @@ impl TrainConfig {
     pub fn hlo_available(&self) -> bool {
         self.artifact_dir.join("manifest.json").exists()
     }
+
+    /// The best backend this checkout can actually run: [`Backend::Hlo`]
+    /// when the compiled artifacts are present under
+    /// [`TrainConfig::artifact_dir`], [`Backend::ParallelCpu`] otherwise.
+    ///
+    /// This fixes the clean-checkout footgun where `TrainConfig::default()`
+    /// selects the HLO backend and `Trainer::new` then fails without
+    /// `artifacts/`.  [`crate::session::RunSpec`] defaults, the examples
+    /// and the CLI's no-flag paths all route through this.
+    pub fn auto_backend(&self) -> Backend {
+        if self.hlo_available() {
+            Backend::Hlo
+        } else {
+            Backend::ParallelCpu
+        }
+    }
 }
 
 impl Default for TrainConfig {
@@ -235,7 +264,21 @@ mod tests {
         assert_eq!(Strategy::parse("storage"), Some(Strategy::Storage));
         assert_eq!(Backend::parse("cpu"), Some(Backend::CpuRef));
         assert_eq!(Backend::parse("parallel"), Some(Backend::ParallelCpu));
-        // name() round-trips through parse()
+        // name() round-trips through parse() for every config enum
+        for a in [
+            Algo::FastTucker,
+            Algo::FasterTucker,
+            Algo::FasterTuckerCoo,
+            Algo::Plus,
+        ] {
+            assert_eq!(Algo::parse(a.name()), Some(a));
+        }
+        for v in [Variant::Tc, Variant::Cc] {
+            assert_eq!(Variant::parse(v.name()), Some(v));
+        }
+        for s in [Strategy::Calculation, Strategy::Storage] {
+            assert_eq!(Strategy::parse(s.name()), Some(s));
+        }
         for b in [Backend::Hlo, Backend::CpuRef, Backend::ParallelCpu] {
             assert_eq!(Backend::parse(b.name()), Some(b));
         }
@@ -250,5 +293,20 @@ mod tests {
         }
         assert_eq!(Algo::from_code(99), None);
         assert_eq!(TrainConfig::default().cpu_kernel, KernelPolicy::Tiled);
+    }
+
+    #[test]
+    fn auto_backend_follows_artifacts() {
+        let dir = std::env::temp_dir().join("ft_auto_backend_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = TrainConfig {
+            artifact_dir: dir.clone(),
+            ..TrainConfig::default()
+        };
+        assert_eq!(cfg.auto_backend(), Backend::ParallelCpu);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), b"{}").unwrap();
+        assert_eq!(cfg.auto_backend(), Backend::Hlo);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -149,6 +149,15 @@ impl Trainer {
         self.backend.platform()
     }
 
+    /// Replace the SGD hyper-parameters for subsequent epochs.  Backends
+    /// capture a copy of the hypers at construction, so the session
+    /// layer's learning-rate decay must go through this (rather than
+    /// mutating `cfg.hyper` directly) for the change to reach the kernels.
+    pub fn set_hyper(&mut self, hyper: cpu_ref::Hyper) {
+        self.cfg.hyper = hyper;
+        self.backend.set_hyper(hyper);
+    }
+
     /// Freeze the current model into an immutable, epoch-tagged serving
     /// snapshot (factors, cores and precomputed projection tables).
     pub fn snapshot(&self) -> ModelSnapshot {

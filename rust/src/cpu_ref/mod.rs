@@ -21,7 +21,7 @@ use crate::tensor::{FiberIndex, ModeSliceIndex, SparseTensor};
 use crate::util::rng::Pcg32;
 
 /// Hyper-parameters shared by all algorithms.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Hyper {
     /// Factor-matrix learning rate.
     pub lr_a: f32,

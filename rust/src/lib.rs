@@ -26,12 +26,21 @@
 //!   sharded across workers with lock-free scatter into the factor
 //!   matrices ([`model::SharedFactors`]).
 //!
-//! On top of training sits the **serving subsystem** ([`serve`]):
-//! immutable published snapshots with a versioned on-disk checkpoint
-//! format, a batched query engine whose predictions are bit-identical to
-//! the trainer's evaluation path, mode-completion top-K scoring (the
-//! recommender query), and a threaded request loop with batching and
-//! snapshot hot-swap so training and serving run concurrently.
+//! On top of training sit two subsystems:
+//!
+//! * the **session layer** ([`session`]) — the public entry point: a
+//!   declarative, validated, JSON-serializable [`prelude::RunSpec`]
+//!   (data source + config + schedule) executed by a
+//!   [`prelude::Session`], which owns the train/test split and the
+//!   epoch loop (evaluation cadence, early stopping, learning-rate
+//!   decay, checkpoints, serve publishes) and emits
+//!   [`session::EpochEvent`]s to pluggable [`session::Observer`]s;
+//! * the **serving subsystem** ([`serve`]) — immutable published
+//!   snapshots with a versioned on-disk checkpoint format, a batched
+//!   query engine whose predictions are bit-identical to the trainer's
+//!   evaluation path, mode-completion top-K scoring (the recommender
+//!   query), and a threaded request loop with batching and snapshot
+//!   hot-swap so training and serving run concurrently.
 //!
 //! Supporting modules: sparse tensor substrate ([`tensor`]), the three
 //! Table-3 sampling strategies ([`sampler`]), model state + gather/scatter
@@ -48,19 +57,28 @@
 //!
 //! ```no_run
 //! use fasttucker::prelude::*;
+//! use fasttucker::session::{DataSource, SynthPreset, SynthSpec};
 //!
-//! let tensor = fasttucker::synth::generate(
-//!     &fasttucker::synth::SynthConfig::order_sweep(3, 64, 10_000, 1));
-//! let (train, test) = fasttucker::tensor::split::train_test_split(&tensor, 0.2, 1);
-//! let mut cfg = TrainConfig::default();
-//! cfg.backend = Backend::ParallelCpu; // no artifacts needed
-//! let mut trainer = Trainer::new(&train, cfg).unwrap();
-//! for epoch in 0..10 {
-//!     let stats = trainer.epoch(&train).unwrap();
-//!     let (rmse, mae) = trainer.evaluate(&test).unwrap();
-//!     println!("epoch {epoch}: rmse {rmse:.4} mae {mae:.4} ({stats:?})");
-//! }
+//! // describe the run declaratively (this spec round-trips to JSON —
+//! // the CLI's `--dump-spec` / `--spec FILE` use the same type)
+//! let mut spec = RunSpec::default(); // toy data, auto backend
+//! spec.data = DataSource::Synth(SynthSpec {
+//!     preset: SynthPreset::Order,
+//!     order: 3,
+//!     dim: 64,
+//!     nnz: 10_000,
+//!     seed: 1,
+//! });
+//! spec.schedule.epochs = 10;
+//!
+//! // validate + split + build the trainer, then execute the schedule
+//! let mut session = Session::from_spec(&spec).unwrap();
+//! let report = session.run(&mut ProgressPrinter).unwrap();
+//! println!("best RMSE {:?} in {} epochs", report.best_rmse, report.epochs_run);
 //! ```
+//!
+//! The [`prelude::Trainer`] remains available underneath for callers
+//! that need epoch-level control ([`session::Session::trainer_mut`]).
 
 #![warn(missing_docs)]
 
@@ -73,17 +91,20 @@ pub mod model;
 pub mod runtime;
 pub mod sampler;
 pub mod serve;
+pub mod session;
 pub mod synth;
 pub mod tensor;
 pub mod util;
 
-/// The handful of types most programs need: config enums, the trainer, the
-/// model, the sparse tensor and the serving snapshot.
+/// The handful of types most programs need: the session entry point
+/// (spec + driver + observers), config enums, the trainer, the model,
+/// the sparse tensor and the serving snapshot.
 pub mod prelude {
     pub use crate::coordinator::config::{Algo, Backend, Strategy, TrainConfig, Variant};
     pub use crate::coordinator::trainer::Trainer;
     pub use crate::kernel::KernelPolicy;
     pub use crate::model::TuckerModel;
     pub use crate::serve::ModelSnapshot;
+    pub use crate::session::{Observer, ProgressPrinter, RunSpec, Schedule, Session};
     pub use crate::tensor::SparseTensor;
 }

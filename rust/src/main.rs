@@ -8,6 +8,11 @@
 //!   checkpoint — convert / inspect serve checkpoints (FTCK format)
 //!   cost       — print the Table-4 analytic cost model for a configuration
 //!   info       — runtime / artifact inventory
+//!
+//! `train` and `serve` are thin shells over the session layer: every flag
+//! path constructs a [`RunSpec`] and executes it through a [`Session`],
+//! and `--dump-spec` / `--spec FILE` serialize and replay that spec, so a
+//! flag-driven run and its dumped spec file are bit-identical.
 
 use std::path::{Path, PathBuf};
 use std::time::Instant;
@@ -16,13 +21,16 @@ use anyhow::{bail, ensure, Context, Result};
 
 use fasttucker::bench::percentile;
 use fasttucker::coordinator::{Algo, Backend, Strategy, TrainConfig, Variant};
-use fasttucker::coordinator::Trainer;
 use fasttucker::cost;
 use fasttucker::kernel::KernelPolicy;
 use fasttucker::model::TuckerModel;
 use fasttucker::serve::{check_coords, mode_topk, Engine, ModelSnapshot, Server};
+use fasttucker::session::{
+    DataSource, EarlyStop, NullObserver, ProgressPrinter, RunSpec, Schedule, Session, SynthPreset,
+    SynthSpec,
+};
 use fasttucker::synth::{generate, SynthConfig};
-use fasttucker::tensor::{io, split::train_test_split};
+use fasttucker::tensor::io;
 use fasttucker::util::cli::{parse_u32_list, Args};
 use fasttucker::util::rng::Pcg32;
 
@@ -43,17 +51,24 @@ fn usage() -> &'static str {
      \n\
      synth --out FILE [--preset netflix|yahoo|order] [--order N] [--dim I]\n\
            [--nnz K] [--seed S]\n\
-     train --data FILE [--algo plus|fasttucker|fastertucker] [--variant tc|cc]\n\
-           [--strategy calc|storage] [--backend hlo|cpu|parallel] [--threads K]\n\
+     train --data FILE|--toy [--algo plus|fasttucker|fastertucker]\n\
+           [--variant tc|cc] [--strategy calc|storage]\n\
+           [--backend hlo|cpu|parallel] [--threads K]\n\
            [--cpu-kernel tiled|scalar] [--epochs T] [--j J] [--r R] [--lr-a F]\n\
            [--lr-b F] [--lam-a F] [--lam-b F] [--test-frac F] [--seed S]\n\
-           [--artifacts DIR] [--save FILE] [--checkpoint FILE]\n\
+           [--eval-every N] [--early-stop PATIENCE] [--min-delta F]\n\
+           [--lr-decay F] [--artifacts DIR] [--save FILE]\n\
+           [--checkpoint FILE] [--checkpoint-every N]\n\
+           [--spec FILE] [--dump-spec]\n\
+           (flags build a validated RunSpec executed by the session layer;\n\
+            --dump-spec prints that spec as JSON and exits, --spec FILE\n\
+            replays a dumped spec bit-identically, ignoring config flags)\n\
      serve [--checkpoint FILE] [--data FILE|--toy] [--epochs T] [--nnz K]\n\
-           [--algo A] [--backend hlo|cpu|parallel] [--threads K] [--j J]\n\
-           [--r R] [--seed S]\n\
+           [--spec FILE] [--dump-spec] [train's config flags: --algo,\n\
+            --backend, --threads, --j, --r, --seed, --artifacts, ...]\n\
            [--serve-threads K] [--batch B] [--queries Q] [--topk K] [--mode M]\n\
-           (loads FILE if it exists; otherwise trains in this invocation and,\n\
-            when FILE is given, checkpoints to it before serving)\n\
+           (loads FILE if it exists; otherwise trains through the session\n\
+            layer and, when FILE is given, checkpoints to it before serving)\n\
      query --checkpoint FILE --coords I1,I2,...,IN [--mode M] [--topk K]\n\
      checkpoint save --model FILE --out FILE [--algo A] [--epoch E]\n\
      checkpoint load --file FILE [--model-out FILE]\n\
@@ -119,23 +134,11 @@ fn cmd_synth(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
-fn cmd_train(argv: Vec<String>) -> Result<()> {
-    let a = Args::parse(
-        argv,
-        &[
-            "data", "algo", "variant", "strategy", "backend", "threads", "cpu-kernel", "epochs",
-            "j", "r", "lr-a", "lr-b", "lam-a", "lam-b", "test-frac", "seed", "artifacts", "save",
-            "checkpoint", "toy",
-        ],
-        &["toy"],
-    )
-    .map_err(anyhow::Error::msg)?;
-    let tensor = if a.get_bool("toy") {
-        io::toy_dataset()
-    } else {
-        let data = a.get("data").context("--data FILE (or --toy) required")?;
-        io::read_auto(Path::new(data))?
-    };
+/// Trainer configuration from the shared config flags (`--algo`,
+/// `--backend`, ranks, hypers...).  With no `--backend` flag the backend
+/// is auto-selected for this checkout ([`TrainConfig::auto_backend`]), so
+/// a clean checkout without `artifacts/` trains out of the box.
+fn train_config_from_flags(a: &Args) -> Result<TrainConfig> {
     let mut cfg = TrainConfig::default();
     if let Some(s) = a.get("algo") {
         cfg.algo = Algo::parse(s).with_context(|| format!("bad --algo {s}"))?;
@@ -146,14 +149,19 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     if let Some(s) = a.get("strategy") {
         cfg.strategy = Strategy::parse(s).with_context(|| format!("bad --strategy {s}"))?;
     }
-    if let Some(s) = a.get("backend") {
-        cfg.backend = Backend::parse(s).with_context(|| format!("bad --backend {s}"))?;
-    }
     if let Some(s) = a.get("cpu-kernel") {
         cfg.cpu_kernel =
             KernelPolicy::parse(s).with_context(|| format!("bad --cpu-kernel {s}"))?;
     }
+    cfg.artifact_dir = PathBuf::from(a.get_or("artifacts", "artifacts"));
     cfg.threads = a.get_parse("threads", cfg.threads).map_err(anyhow::Error::msg)?;
+    cfg.backend = match a.get("backend") {
+        Some(s) => Backend::parse(s).with_context(|| format!("bad --backend {s}"))?,
+        // --threads only means something on the Hogwild engine, so it
+        // overrides the artifact-based auto-selection
+        None if cfg.threads > 0 => Backend::ParallelCpu,
+        None => cfg.auto_backend(),
+    };
     cfg.j = a.get_parse("j", cfg.j).map_err(anyhow::Error::msg)?;
     cfg.r = a.get_parse("r", cfg.r).map_err(anyhow::Error::msg)?;
     cfg.seed = a.get_parse("seed", cfg.seed).map_err(anyhow::Error::msg)?;
@@ -161,64 +169,173 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     cfg.hyper.lr_b = a.get_parse("lr-b", cfg.hyper.lr_b).map_err(anyhow::Error::msg)?;
     cfg.hyper.lam_a = a.get_parse("lam-a", cfg.hyper.lam_a).map_err(anyhow::Error::msg)?;
     cfg.hyper.lam_b = a.get_parse("lam-b", cfg.hyper.lam_b).map_err(anyhow::Error::msg)?;
-    cfg.artifact_dir = PathBuf::from(a.get_or("artifacts", "artifacts"));
-    let epochs: usize = a.get_parse("epochs", 10).map_err(anyhow::Error::msg)?;
-    let test_frac: f64 = a.get_parse("test-frac", 0.2).map_err(anyhow::Error::msg)?;
+    Ok(cfg)
+}
 
-    let (train, test) = train_test_split(&tensor, test_frac, cfg.seed);
+/// The full `train` spec from flags: data source + config + schedule.
+fn train_spec_from_flags(a: &Args) -> Result<RunSpec> {
+    let data = if a.get_bool("toy") {
+        DataSource::Toy
+    } else {
+        let path = a.get("data").context("--data FILE (or --toy) required")?;
+        DataSource::File(PathBuf::from(path))
+    };
+    let early_stop = match a.get("early-stop") {
+        None => None,
+        Some(_) => Some(EarlyStop {
+            patience: a.get_parse("early-stop", 3).map_err(anyhow::Error::msg)?,
+            min_delta: a.get_parse("min-delta", 1e-4).map_err(anyhow::Error::msg)?,
+        }),
+    };
+    let lr_decay = match a.get("lr-decay") {
+        None => None,
+        Some(_) => Some(a.get_parse("lr-decay", 1.0f32).map_err(anyhow::Error::msg)?),
+    };
+    let test_frac: f64 = a.get_parse("test-frac", 0.2).map_err(anyhow::Error::msg)?;
+    // --test-frac 0 means "train on everything": without a held-out
+    // split there is nothing to evaluate, so the cadence defaults off
+    let eval_default = if test_frac == 0.0 { 0 } else { 1 };
+    let schedule = Schedule {
+        epochs: a.get_parse("epochs", 10).map_err(anyhow::Error::msg)?,
+        eval_every: a.get_parse("eval-every", eval_default).map_err(anyhow::Error::msg)?,
+        test_frac,
+        early_stop,
+        lr_decay,
+        checkpoint_every: a.get_parse("checkpoint-every", 0).map_err(anyhow::Error::msg)?,
+        checkpoint: a.get("checkpoint").map(PathBuf::from),
+        publish_every: 0,
+    };
+    Ok(RunSpec {
+        data,
+        train: train_config_from_flags(a)?,
+        schedule,
+    })
+}
+
+fn cmd_train(argv: Vec<String>) -> Result<()> {
+    let a = Args::parse(
+        argv,
+        &[
+            "data", "algo", "variant", "strategy", "backend", "threads", "cpu-kernel", "epochs",
+            "j", "r", "lr-a", "lr-b", "lam-a", "lam-b", "test-frac", "seed", "artifacts", "save",
+            "checkpoint", "checkpoint-every", "eval-every", "early-stop", "min-delta", "lr-decay",
+            "toy", "spec", "dump-spec",
+        ],
+        &["toy", "dump-spec"],
+    )
+    .map_err(anyhow::Error::msg)?;
+    let spec = match a.get("spec") {
+        Some(path) => RunSpec::load(Path::new(path))?,
+        None => train_spec_from_flags(&a)?,
+    };
+    if a.get_bool("dump-spec") {
+        println!("{}", spec.dump());
+        return Ok(());
+    }
+
+    let mut session = Session::from_spec(&spec)?;
     println!(
-        "train nnz {} / test nnz {} | algo {} variant {} backend {:?}",
-        train.nnz(),
-        test.nnz(),
-        cfg.algo.name(),
-        cfg.variant.suffix(),
-        cfg.backend
+        "data {} | train nnz {} / test nnz {} | algo {} variant {} backend {}",
+        spec.data.describe(),
+        session.train_tensor().nnz(),
+        session.test_tensor().nnz(),
+        spec.train.algo.name(),
+        spec.train.variant.name(),
+        spec.train.backend.name()
     );
-    let mut trainer = Trainer::new(&train, cfg.clone())?;
-    println!("runtime platform: {}", trainer.platform());
-    let (rmse0, mae0) = trainer.evaluate(&test)?;
-    println!("epoch  0: rmse {rmse0:.4}  mae {mae0:.4}  (init)");
-    for epoch in 1..=epochs {
-        let stats = trainer.epoch(&train)?;
-        let (rmse, mae) = trainer.evaluate(&test)?;
+    println!("runtime platform: {}", session.platform());
+    let report = session.run(&mut ProgressPrinter)?;
+    if report.stopped_early {
         println!(
-            "epoch {epoch:>2}: rmse {rmse:.4}  mae {mae:.4}  factor {:.3}s core {:.3}s (mem {:.3}s, pad {:.1}%)",
-            stats.factor.total().as_secs_f64(),
-            stats.core.total().as_secs_f64(),
-            (stats.factor.memory() + stats.core.memory()).as_secs_f64(),
-            100.0 * stats.factor.padding_ratio(),
+            "early stop: test RMSE plateaued after {} epochs (best {:.4})",
+            report.epochs_run,
+            report.best_rmse.unwrap_or(f64::NAN)
         );
     }
     if let Some(path) = a.get("save") {
-        trainer.model.save(Path::new(path))?;
+        session.trainer().model.save(Path::new(path))?;
         println!("saved model to {path}");
     }
-    if let Some(path) = a.get("checkpoint") {
-        trainer.snapshot().save(Path::new(path))?;
+    if let Some(path) = &spec.schedule.checkpoint {
         println!(
-            "saved serve checkpoint to {path} (epoch {}, algo {})",
-            trainer.epoch_no,
-            trainer.cfg.algo.name()
+            "saved serve checkpoint to {} (epoch {}, algo {})",
+            path.display(),
+            session.trainer().epoch_no,
+            spec.train.algo.name()
         );
     }
     Ok(())
 }
 
+/// The `serve` training-path spec from flags: synthetic Netflix-like data
+/// unless `--data`/`--toy` is given, no held-out split (serving trains on
+/// everything), and the checkpoint destination folded into the schedule
+/// so the session writes the durable copy itself.  The trainer config
+/// comes from the same flag resolver `train` uses.
+fn serve_spec_from_flags(a: &Args) -> Result<RunSpec> {
+    let data = if a.get_bool("toy") {
+        DataSource::Toy
+    } else if let Some(d) = a.get("data") {
+        DataSource::File(PathBuf::from(d))
+    } else {
+        DataSource::Synth(SynthSpec {
+            preset: SynthPreset::Netflix,
+            nnz: a.get_parse("nnz", 60_000).map_err(anyhow::Error::msg)?,
+            seed: a.get_parse("seed", 42).map_err(anyhow::Error::msg)?,
+            ..SynthSpec::default()
+        })
+    };
+    let schedule = Schedule {
+        epochs: a.get_parse("epochs", 5).map_err(anyhow::Error::msg)?,
+        eval_every: 0,
+        test_frac: 0.0,
+        early_stop: None,
+        lr_decay: None,
+        checkpoint_every: 0,
+        checkpoint: a.get("checkpoint").map(PathBuf::from),
+        publish_every: 0,
+    };
+    Ok(RunSpec {
+        data,
+        train: train_config_from_flags(a)?,
+        schedule,
+    })
+}
+
 /// Train-or-load a serving checkpoint, then answer a burst of batched
 /// queries through the threaded serve loop (self-issued — runs offline).
-/// With `--checkpoint FILE`: loads it if it exists, otherwise trains and
-/// checkpoints to it first, then serves from the durable copy.
+/// With `--checkpoint FILE`: loads it if it exists, otherwise trains
+/// (through the session layer) and checkpoints to it first, then serves
+/// from the durable copy.
 fn cmd_serve(argv: Vec<String>) -> Result<()> {
     let a = Args::parse(
         argv,
         &[
-            "checkpoint", "data", "toy", "epochs", "nnz", "algo", "backend", "threads", "j", "r",
-            "seed", "serve-threads", "batch", "queries", "topk", "mode",
+            "checkpoint", "data", "toy", "epochs", "nnz", "algo", "variant", "strategy",
+            "backend", "threads", "cpu-kernel", "j", "r", "lr-a", "lr-b", "lam-a", "lam-b",
+            "seed", "artifacts", "serve-threads", "batch", "queries", "topk", "mode", "spec",
+            "dump-spec",
         ],
-        &["toy"],
+        &["toy", "dump-spec"],
     )
     .map_err(anyhow::Error::msg)?;
-    let ckpt = a.get("checkpoint").map(PathBuf::from);
+    let spec = match a.get("spec") {
+        Some(path) => {
+            let mut s = RunSpec::load(Path::new(path))?;
+            // --checkpoint decides load-vs-train for serve, so the flag
+            // still applies on top of a spec file
+            if let Some(p) = a.get("checkpoint") {
+                s.schedule.checkpoint = Some(PathBuf::from(p));
+            }
+            s
+        }
+        None => serve_spec_from_flags(&a)?,
+    };
+    if a.get_bool("dump-spec") {
+        println!("{}", spec.dump());
+        return Ok(());
+    }
+    let ckpt = spec.schedule.checkpoint.clone();
     let snap = match &ckpt {
         Some(p) if p.exists() => {
             let s = ModelSnapshot::load(p)?;
@@ -233,47 +350,22 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             s
         }
         _ => {
-            let tensor = if a.get_bool("toy") {
-                io::toy_dataset()
-            } else if let Some(d) = a.get("data") {
-                io::read_auto(Path::new(d))?
-            } else {
-                let nnz = a.get_parse("nnz", 60_000usize).map_err(anyhow::Error::msg)?;
-                let seed = a.get_parse("seed", 42u64).map_err(anyhow::Error::msg)?;
-                generate(&SynthConfig::netflix_like(nnz, seed))
-            };
-            let mut cfg = TrainConfig::default();
-            cfg.backend = Backend::ParallelCpu; // serving path needs no artifacts
-            if let Some(s) = a.get("algo") {
-                cfg.algo = Algo::parse(s).with_context(|| format!("bad --algo {s}"))?;
-            }
-            if let Some(s) = a.get("backend") {
-                cfg.backend = Backend::parse(s).with_context(|| format!("bad --backend {s}"))?;
-            }
-            cfg.threads = a.get_parse("threads", cfg.threads).map_err(anyhow::Error::msg)?;
-            cfg.j = a.get_parse("j", cfg.j).map_err(anyhow::Error::msg)?;
-            cfg.r = a.get_parse("r", cfg.r).map_err(anyhow::Error::msg)?;
-            cfg.seed = a.get_parse("seed", cfg.seed).map_err(anyhow::Error::msg)?;
-            let epochs: usize = a.get_parse("epochs", 5).map_err(anyhow::Error::msg)?;
             println!(
-                "training {} epochs of {} on dims {:?} ({} nnz) before serving",
-                epochs,
-                cfg.algo.name(),
-                tensor.dims,
-                tensor.nnz()
+                "training {} epochs of {} on {} before serving",
+                spec.schedule.epochs,
+                spec.train.algo.name(),
+                spec.data.describe()
             );
-            let mut trainer = Trainer::new(&tensor, cfg)?;
-            for _ in 0..epochs {
-                trainer.epoch(&tensor)?;
-            }
-            let snap = trainer.snapshot();
+            let mut session = Session::from_spec(&spec)?;
+            session.run(&mut NullObserver)?;
             match &ckpt {
+                // the session wrote the final checkpoint; serve the
+                // durable copy so a restart sees the same model
                 Some(p) => {
-                    snap.save(p)?;
                     println!("checkpointed to {p:?}; serving from the durable copy");
                     ModelSnapshot::load(p)?
                 }
-                None => snap,
+                None => session.snapshot(),
             }
         }
     };

@@ -1,0 +1,40 @@
+//! The session layer: one validated, declarative entry point for
+//! train → evaluate → checkpoint → serve.
+//!
+//! The paper's experiments are all *schedules* — run the Table-6
+//! iteration for N epochs, evaluate RMSE/MAE periodically, stop at a
+//! convergence cutoff (Fig. 1), sweep parameters (Table 10).  Before
+//! this layer existed, every consumer (CLI subcommands, examples,
+//! benches) hand-assembled a `TrainConfig` and wrote its own
+//! `for epoch in 0..` loop, duplicating split / eval / checkpoint logic
+//! and validating nothing.  The session layer replaces all of that:
+//!
+//! * [`RunSpec`] ([`spec`]) — data source + trainer config +
+//!   [`Schedule`], with [`RunSpec::validate`] returning a typed
+//!   [`SpecError`] taxonomy and a lossless JSON round-trip
+//!   ([`RunSpec::dump`] / [`RunSpec::parse_str`]) so every run is a
+//!   reproducible file (`fasttucker train --dump-spec` / `--spec FILE`).
+//! * [`Session`] ([`run`]) — the builder-constructed driver that owns
+//!   the train/test split and the [`crate::coordinator::Trainer`] and
+//!   executes the schedule: evaluation cadence, RMSE-plateau early
+//!   stopping, learning-rate decay, periodic FTCK checkpoints, and
+//!   mid-run [`crate::serve::Server`] publishes
+//!   ([`Session::run_with_server`]).
+//! * [`Observer`] ([`observer`]) — pluggable progress sinks fed one
+//!   [`EpochEvent`] per epoch: [`ProgressPrinter`] (the CLI's classic
+//!   lines), [`JsonLogger`] (scrape-friendly JSON lines), [`Recorder`]
+//!   (in-memory, for benches and tests), or anything user-defined.
+//!
+//! The session sits between the CLI and the trainer (see
+//! ARCHITECTURE.md §Session layer); sharding, sweep runners and
+//! multi-tenant serving build on this surface.
+
+pub mod observer;
+pub mod run;
+pub mod spec;
+
+pub use observer::{
+    EpochEvent, JsonLogger, NullObserver, Observer, ProgressPrinter, Recorder, RunReport,
+};
+pub use run::Session;
+pub use spec::{DataSource, EarlyStop, RunSpec, Schedule, SpecError, SynthPreset, SynthSpec};

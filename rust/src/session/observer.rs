@@ -1,0 +1,248 @@
+//! Epoch events, run reports, and the pluggable [`Observer`] trait the
+//! [`super::Session`] emits to — a progress printer for the CLI, a JSON
+//! line logger for tooling, and a recorder for benches and tests.
+
+use std::io::Write;
+use std::path::PathBuf;
+
+use crate::coordinator::EpochStats;
+use crate::util::json::{self, Json};
+
+/// One completed step of a session run.  The first event of a run (when
+/// the schedule evaluates at all) is the pre-training evaluation — on a
+/// fresh session that is the epoch-0 random init; every later event
+/// follows one full training epoch.
+#[derive(Clone, Debug)]
+pub struct EpochEvent {
+    /// The trainer's absolute epoch counter when the event fired (0 =
+    /// random init; a continued `run()` keeps counting, matching the
+    /// epoch tags on published snapshots and checkpoints).
+    pub epoch: usize,
+    /// Phase timings of the epoch just run (`None` for the init event).
+    pub stats: Option<EpochStats>,
+    /// Test RMSE, when this epoch was evaluated.
+    pub rmse: Option<f64>,
+    /// Test MAE, when this epoch was evaluated.
+    pub mae: Option<f64>,
+    /// Factor learning rate in effect during this epoch (visible decay).
+    pub lr_a: f32,
+    /// Checkpoint written after this epoch, if the schedule asked for one.
+    pub checkpoint: Option<PathBuf>,
+    /// Whether a snapshot was published to the attached serve server.
+    pub published: bool,
+}
+
+impl EpochEvent {
+    /// Serialize for JSON-line logs (`EPOCH_JSON` scrape lines).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![("epoch", json::num(self.epoch as f64))];
+        if let Some(rmse) = self.rmse {
+            fields.push(("rmse", json::num(rmse)));
+        }
+        if let Some(mae) = self.mae {
+            fields.push(("mae", json::num(mae)));
+        }
+        fields.push(("lr_a", json::num(self.lr_a as f64)));
+        if let Some(st) = &self.stats {
+            fields.push(("stats", st.to_json()));
+        }
+        if let Some(p) = &self.checkpoint {
+            fields.push(("checkpoint", json::s(&p.to_string_lossy())));
+        }
+        if self.published {
+            fields.push(("published", Json::Bool(true)));
+        }
+        json::obj(fields)
+    }
+}
+
+/// Summary of a finished run, with the full event history.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// Training epochs actually executed (≤ the schedule's maximum).
+    pub epochs_run: usize,
+    /// Whether the early-stopping policy cut the run short.
+    pub stopped_early: bool,
+    /// RMSE of the last evaluation, if the schedule evaluated at all.
+    pub final_rmse: Option<f64>,
+    /// MAE of the last evaluation.
+    pub final_mae: Option<f64>,
+    /// Best (lowest) RMSE seen across all evaluations.
+    pub best_rmse: Option<f64>,
+    /// Wall-clock seconds for the whole run.
+    pub wall_s: f64,
+    /// Every emitted [`EpochEvent`], in order (init eval first, when any).
+    pub history: Vec<EpochEvent>,
+}
+
+impl RunReport {
+    /// Serialize the summary (without the per-epoch history).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("epochs_run", json::num(self.epochs_run as f64)),
+            ("stopped_early", Json::Bool(self.stopped_early)),
+            ("wall_s", json::num(self.wall_s)),
+        ];
+        if let Some(v) = self.final_rmse {
+            fields.push(("final_rmse", json::num(v)));
+        }
+        if let Some(v) = self.final_mae {
+            fields.push(("final_mae", json::num(v)));
+        }
+        if let Some(v) = self.best_rmse {
+            fields.push(("best_rmse", json::num(v)));
+        }
+        json::obj(fields)
+    }
+}
+
+/// Receives the session's progress as it runs.  All methods have empty
+/// defaults, so implementors override only what they need.
+pub trait Observer {
+    /// Called after every emitted event (init eval and each epoch).
+    fn on_epoch(&mut self, _event: &EpochEvent) {}
+
+    /// Called once when the run finishes (normally or by early stop).
+    fn on_finish(&mut self, _report: &RunReport) {}
+}
+
+/// Ignores everything — for callers that only want the [`RunReport`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullObserver;
+
+impl Observer for NullObserver {}
+
+/// Prints the CLI's classic per-epoch progress lines to stdout:
+///
+/// ```text
+/// epoch  0: rmse 1.2345  mae 0.9876  (init)
+/// epoch  3: rmse 0.9123  mae 0.7012  factor 0.412s core 0.198s (mem 0.051s, pad 2.1%)
+/// ```
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ProgressPrinter;
+
+impl Observer for ProgressPrinter {
+    fn on_epoch(&mut self, ev: &EpochEvent) {
+        let mut line = format!("epoch {:>2}:", ev.epoch);
+        if let (Some(rmse), Some(mae)) = (ev.rmse, ev.mae) {
+            line.push_str(&format!(" rmse {rmse:.4}  mae {mae:.4} "));
+        }
+        match &ev.stats {
+            None => line.push_str(" (init)"),
+            Some(st) => line.push_str(&format!(
+                " factor {:.3}s core {:.3}s (mem {:.3}s, pad {:.1}%)",
+                st.factor.total().as_secs_f64(),
+                st.core.total().as_secs_f64(),
+                (st.factor.memory() + st.core.memory()).as_secs_f64(),
+                100.0 * st.factor.padding_ratio(),
+            )),
+        }
+        if let Some(p) = &ev.checkpoint {
+            line.push_str(&format!("  [checkpoint {}]", p.display()));
+        }
+        if ev.published {
+            line.push_str("  [published]");
+        }
+        println!("{line}");
+    }
+}
+
+/// Writes one `EPOCH_JSON {...}` line per event and a final
+/// `RUN_JSON {...}` summary to any [`Write`] sink — the machine-readable
+/// twin of [`ProgressPrinter`], in the same scrape-line style as the
+/// bench suite's `BENCH_JSON`.
+#[derive(Debug)]
+pub struct JsonLogger<W: Write> {
+    sink: W,
+}
+
+impl<W: Write> JsonLogger<W> {
+    /// Log to `sink` (e.g. `std::io::stdout()` or a `Vec<u8>`).
+    pub fn new(sink: W) -> Self {
+        Self { sink }
+    }
+
+    /// Recover the sink (e.g. to inspect a `Vec<u8>` in tests).
+    pub fn into_inner(self) -> W {
+        self.sink
+    }
+}
+
+impl<W: Write> Observer for JsonLogger<W> {
+    fn on_epoch(&mut self, ev: &EpochEvent) {
+        // logging must never abort a run; drop the line on sink errors
+        let _ = writeln!(self.sink, "EPOCH_JSON {}", ev.to_json().dump());
+    }
+
+    fn on_finish(&mut self, report: &RunReport) {
+        let _ = writeln!(self.sink, "RUN_JSON {}", report.to_json().dump());
+    }
+}
+
+/// Collects every event (and the final report) in memory — what benches
+/// and tests use to assert on trajectories without printing.
+#[derive(Clone, Debug, Default)]
+pub struct Recorder {
+    /// Every event seen so far, in emission order.
+    pub events: Vec<EpochEvent>,
+    /// The final report, once the run finished.
+    pub report: Option<RunReport>,
+}
+
+impl Observer for Recorder {
+    fn on_epoch(&mut self, ev: &EpochEvent) {
+        self.events.push(ev.clone());
+    }
+
+    fn on_finish(&mut self, report: &RunReport) {
+        self.report = Some(report.clone());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(epoch: usize, rmse: Option<f64>) -> EpochEvent {
+        EpochEvent {
+            epoch,
+            stats: None,
+            rmse,
+            mae: rmse,
+            lr_a: 0.01,
+            checkpoint: None,
+            published: false,
+        }
+    }
+
+    #[test]
+    fn recorder_collects() {
+        let mut r = Recorder::default();
+        r.on_epoch(&ev(0, Some(1.0)));
+        r.on_epoch(&ev(1, None));
+        assert_eq!(r.events.len(), 2);
+        assert_eq!(r.events[1].epoch, 1);
+        assert!(r.report.is_none());
+    }
+
+    #[test]
+    fn json_logger_emits_lines() {
+        let mut log = JsonLogger::new(Vec::new());
+        log.on_epoch(&ev(1, Some(0.5)));
+        log.on_finish(&RunReport {
+            epochs_run: 1,
+            stopped_early: false,
+            final_rmse: Some(0.5),
+            final_mae: Some(0.4),
+            best_rmse: Some(0.5),
+            wall_s: 0.1,
+            history: vec![],
+        });
+        let text = String::from_utf8(log.into_inner()).unwrap();
+        assert!(text.starts_with("EPOCH_JSON {"));
+        assert!(text.contains("\nRUN_JSON {"));
+        let line = text.lines().next().unwrap().strip_prefix("EPOCH_JSON ").unwrap();
+        let parsed = Json::parse(line).unwrap();
+        assert_eq!(parsed.get("epoch").unwrap().as_usize(), Some(1));
+    }
+}

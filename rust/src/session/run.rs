@@ -1,0 +1,302 @@
+//! The [`Session`] facade: owns the train/test split and the [`Trainer`],
+//! and drives the epoch loop a [`RunSpec`]'s schedule describes —
+//! evaluation cadence, early stopping, learning-rate decay, periodic
+//! checkpoints and mid-run publishes to a serve [`Server`].
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{TrainConfig, Trainer};
+use crate::serve::{ModelSnapshot, Server};
+use crate::session::observer::{EpochEvent, Observer, RunReport};
+use crate::session::spec::{RunSpec, Schedule};
+use crate::tensor::{split::train_test_split, SparseTensor};
+
+/// The builder-constructed run driver — one validated spec, executed.
+///
+/// A session owns its train/test split and trainer, so the epoch loop,
+/// evaluation, early stopping, learning-rate decay, checkpointing and
+/// serving publishes live in exactly one place instead of being re-rolled
+/// by every CLI subcommand, example and bench:
+///
+/// ```no_run
+/// use fasttucker::session::{ProgressPrinter, RunSpec, Session};
+///
+/// let spec = RunSpec::default(); // toy data, auto backend, 10 epochs
+/// let mut session = Session::from_spec(&spec).unwrap();
+/// let report = session.run(&mut ProgressPrinter).unwrap();
+/// println!("best RMSE {:?} after {} epochs", report.best_rmse, report.epochs_run);
+/// ```
+pub struct Session {
+    schedule: Schedule,
+    trainer: Trainer,
+    train: SparseTensor,
+    test: SparseTensor,
+}
+
+impl Session {
+    /// Validate `spec`, resolve its data source, split, and build the
+    /// trainer.  The one entry point the CLI's `--spec` path, the flag
+    /// path, the examples and the benches all share.
+    pub fn from_spec(spec: &RunSpec) -> Result<Session> {
+        spec.validate().context("invalid run spec")?;
+        let tensor = spec.data.resolve()?;
+        Session::with_owned_tensor(tensor, spec.train.clone(), spec.schedule.clone())
+    }
+
+    /// Build a session over an already-loaded tensor (what benches and
+    /// examples with bespoke tensors use).  Splits per
+    /// `schedule.test_frac` with the config seed; `test_frac == 0` trains
+    /// on everything (the caller's tensor is copied — prefer
+    /// [`Session::with_owned_tensor`] when the tensor can be moved) and
+    /// disables evaluation.
+    pub fn with_tensor(
+        tensor: &SparseTensor,
+        cfg: TrainConfig,
+        schedule: Schedule,
+    ) -> Result<Session> {
+        if schedule.test_frac > 0.0 {
+            let (train, test) = train_test_split(tensor, schedule.test_frac, cfg.seed);
+            Session::parts(train, test, cfg, schedule)
+        } else {
+            Session::with_owned_tensor(tensor.clone(), cfg, schedule)
+        }
+    }
+
+    /// Like [`Session::with_tensor`], taking ownership: the no-split
+    /// path keeps the tensor instead of copying it (`from_spec` resolves
+    /// an owned tensor, so serve-style runs never hold two copies).
+    pub fn with_owned_tensor(
+        tensor: SparseTensor,
+        cfg: TrainConfig,
+        schedule: Schedule,
+    ) -> Result<Session> {
+        if schedule.test_frac > 0.0 {
+            let (train, test) = train_test_split(&tensor, schedule.test_frac, cfg.seed);
+            Session::parts(train, test, cfg, schedule)
+        } else {
+            let empty = SparseTensor::new(tensor.dims.clone());
+            Session::parts(tensor, empty, cfg, schedule)
+        }
+    }
+
+    fn parts(
+        train: SparseTensor,
+        test: SparseTensor,
+        cfg: TrainConfig,
+        schedule: Schedule,
+    ) -> Result<Session> {
+        let trainer = Trainer::new(&train, cfg)?;
+        Ok(Session {
+            schedule,
+            trainer,
+            train,
+            test,
+        })
+    }
+
+    /// The schedule this session executes.
+    pub fn schedule(&self) -> &Schedule {
+        &self.schedule
+    }
+
+    /// The underlying trainer (model, config, epoch counter).
+    pub fn trainer(&self) -> &Trainer {
+        &self.trainer
+    }
+
+    /// Mutable access to the trainer (e.g. saving the FTM1 model after a
+    /// run, or adjusting hypers between [`Session::run`] calls).
+    pub fn trainer_mut(&mut self) -> &mut Trainer {
+        &mut self.trainer
+    }
+
+    /// The training split.
+    pub fn train_tensor(&self) -> &SparseTensor {
+        &self.train
+    }
+
+    /// The held-out split (empty when `test_frac == 0`).
+    pub fn test_tensor(&self) -> &SparseTensor {
+        &self.test
+    }
+
+    /// Platform string of the trainer's execution backend (for banners).
+    pub fn platform(&self) -> String {
+        self.trainer.platform()
+    }
+
+    /// Freeze the current model into a serving snapshot.
+    pub fn snapshot(&self) -> ModelSnapshot {
+        self.trainer.snapshot()
+    }
+
+    /// Evaluate test RMSE/MAE now (`None` without a held-out split).
+    pub fn evaluate(&mut self) -> Result<Option<(f64, f64)>> {
+        if self.test.nnz() == 0 {
+            return Ok(None);
+        }
+        self.trainer.evaluate(&self.test).map(Some)
+    }
+
+    /// Execute the schedule, emitting events to `observer`.
+    ///
+    /// Runs up to `schedule.epochs` training epochs (fewer if early
+    /// stopping triggers), evaluating every `eval_every` epochs, decaying
+    /// learning rates, and writing checkpoints per the schedule — a final
+    /// checkpoint is always written when a checkpoint path is set.
+    /// Calling `run` again continues training for another round of the
+    /// schedule.
+    pub fn run(&mut self, observer: &mut dyn Observer) -> Result<RunReport> {
+        self.drive(None, observer)
+    }
+
+    /// Like [`Session::run`], but publishes a model snapshot to `server`
+    /// every `schedule.publish_every` epochs (hot-swap under live
+    /// traffic) — the train-and-serve-concurrently loop.
+    pub fn run_with_server(
+        &mut self,
+        server: &Server,
+        observer: &mut dyn Observer,
+    ) -> Result<RunReport> {
+        self.drive(Some(server), observer)
+    }
+
+    fn drive(
+        &mut self,
+        server: Option<&Server>,
+        observer: &mut dyn Observer,
+    ) -> Result<RunReport> {
+        let t0 = Instant::now();
+        let sched = self.schedule.clone();
+        let can_eval = sched.eval_every > 0 && self.test.nnz() > 0;
+        // a second run() continues training, so event numbering follows
+        // the trainer's absolute epoch counter (matching checkpoint tags)
+        let base_epoch = self.trainer.epoch_no as usize;
+
+        let mut history: Vec<EpochEvent> = Vec::new();
+        let mut best_rmse: Option<f64> = None;
+        let mut final_eval: Option<(f64, f64)> = None;
+        let mut strikes = 0usize;
+        let mut stopped_early = false;
+        let mut last_epoch_checkpointed = false;
+
+        // before any training this round: evaluate the current model so
+        // convergence curves start from the same origin the paper's
+        // Fig. 1 plots do (the random init on a fresh session)
+        if can_eval {
+            let (rmse, mae) = self.trainer.evaluate(&self.test)?;
+            best_rmse = Some(rmse);
+            final_eval = Some((rmse, mae));
+            let ev = EpochEvent {
+                epoch: base_epoch,
+                stats: None,
+                rmse: Some(rmse),
+                mae: Some(mae),
+                lr_a: self.trainer.cfg.hyper.lr_a,
+                checkpoint: None,
+                published: false,
+            };
+            observer.on_epoch(&ev);
+            history.push(ev);
+        }
+
+        let mut epochs_run = 0usize;
+        for epoch in 1..=sched.epochs {
+            let lr_a = self.trainer.cfg.hyper.lr_a;
+            let stats = self.trainer.epoch(&self.train)?;
+            epochs_run = epoch;
+
+            let eval = if can_eval && epoch % sched.eval_every == 0 {
+                let (rmse, mae) = self.trainer.evaluate(&self.test)?;
+                final_eval = Some((rmse, mae));
+                Some((rmse, mae))
+            } else {
+                None
+            };
+
+            let published = match server {
+                Some(srv) if sched.publish_every > 0 && epoch % sched.publish_every == 0 => {
+                    srv.publish(self.trainer.snapshot());
+                    true
+                }
+                _ => false,
+            };
+
+            let checkpoint = match &sched.checkpoint {
+                Some(path)
+                    if sched.checkpoint_every > 0 && epoch % sched.checkpoint_every == 0 =>
+                {
+                    self.trainer.snapshot().save(path)?;
+                    Some(path.clone())
+                }
+                _ => None,
+            };
+            last_epoch_checkpointed = checkpoint.is_some();
+
+            // early stopping: a strike per evaluation that fails to beat
+            // the best RMSE by min_delta; stop after `patience` strikes
+            if let (Some(es), Some((rmse, _))) = (&sched.early_stop, eval) {
+                let improved = match best_rmse {
+                    Some(best) => rmse < best - es.min_delta,
+                    None => true,
+                };
+                if improved {
+                    strikes = 0;
+                } else {
+                    strikes += 1;
+                    if strikes >= es.patience {
+                        stopped_early = true;
+                    }
+                }
+            }
+            if let Some((rmse, _)) = eval {
+                best_rmse = Some(best_rmse.map_or(rmse, |b| b.min(rmse)));
+            }
+
+            let ev = EpochEvent {
+                epoch: base_epoch + epoch,
+                stats: Some(stats),
+                rmse: eval.map(|e| e.0),
+                mae: eval.map(|e| e.1),
+                lr_a,
+                checkpoint,
+                published,
+            };
+            observer.on_epoch(&ev);
+            history.push(ev);
+
+            if stopped_early {
+                break;
+            }
+
+            if let Some(decay) = sched.lr_decay {
+                let mut hyper = self.trainer.cfg.hyper;
+                hyper.lr_a *= decay;
+                hyper.lr_b *= decay;
+                self.trainer.set_hyper(hyper);
+            }
+        }
+
+        // a set checkpoint path always gets the final model, unless the
+        // cadence already wrote it after the very last epoch
+        if let Some(path) = &sched.checkpoint {
+            if !last_epoch_checkpointed {
+                self.trainer.snapshot().save(path)?;
+            }
+        }
+
+        let report = RunReport {
+            epochs_run,
+            stopped_early,
+            final_rmse: final_eval.map(|e| e.0),
+            final_mae: final_eval.map(|e| e.1),
+            best_rmse,
+            wall_s: t0.elapsed().as_secs_f64(),
+            history,
+        };
+        observer.on_finish(&report);
+        Ok(report)
+    }
+}

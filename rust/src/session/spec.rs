@@ -1,0 +1,709 @@
+//! The declarative run description: [`RunSpec`] = data source + trainer
+//! configuration + [`Schedule`], with typed validation ([`SpecError`]) and
+//! a lossless JSON round-trip so every run is a reproducible file.
+//!
+//! The paper's experiments are all *schedules* — N epochs of the Table-6
+//! iteration with periodic RMSE/MAE evaluation, convergence cutoffs
+//! (Fig. 1) and parameter sweeps (Table 10).  A `RunSpec` captures one
+//! such schedule declaratively; [`super::Session`] executes it.  The CLI's
+//! `--dump-spec` / `--spec FILE` flags serialize and replay specs through
+//! exactly this representation, so a flag-driven run and its dumped spec
+//! produce bit-identical trajectories.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Algo, Backend, Strategy, TrainConfig, Variant};
+use crate::cpu_ref::Hyper;
+use crate::kernel::KernelPolicy;
+use crate::synth::{self, SynthConfig};
+use crate::tensor::{io, SparseTensor};
+use crate::util::json::{self, Json};
+
+/// Current spec-file format version (the `"version"` field).
+pub const SPEC_VERSION: u64 = 1;
+
+// ======================================================================
+// Data source
+// ======================================================================
+
+/// Synthetic-dataset preset family (mirrors `fasttucker synth --preset`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SynthPreset {
+    /// Netflix-like 3-order surrogate (Zipf-skewed rating tensor).
+    Netflix,
+    /// Yahoo!Music-like 3-order surrogate.
+    Yahoo,
+    /// Paper §5.1 order-sweep family: order-N cubic tensor.
+    Order,
+}
+
+impl SynthPreset {
+    /// Parse a CLI / spec-file value (`netflix`, `yahoo`, `order`).
+    pub fn parse(s: &str) -> Option<SynthPreset> {
+        match s {
+            "netflix" => Some(SynthPreset::Netflix),
+            "yahoo" => Some(SynthPreset::Yahoo),
+            "order" => Some(SynthPreset::Order),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (`parse(name()) == Some(self)`).
+    pub fn name(self) -> &'static str {
+        match self {
+            SynthPreset::Netflix => "netflix",
+            SynthPreset::Yahoo => "yahoo",
+            SynthPreset::Order => "order",
+        }
+    }
+}
+
+/// A serializable synthetic-tensor recipe (preset + its parameters).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SynthSpec {
+    /// Which generator family.
+    pub preset: SynthPreset,
+    /// Tensor order (used by the `order` preset only).
+    pub order: usize,
+    /// Per-mode dimension (used by the `order` preset only).
+    pub dim: u32,
+    /// Entries to draw.
+    pub nnz: usize,
+    /// Generator seed.
+    pub seed: u64,
+}
+
+impl Default for SynthSpec {
+    fn default() -> Self {
+        Self {
+            preset: SynthPreset::Order,
+            order: 3,
+            dim: 1000,
+            nnz: 200_000,
+            seed: 1,
+        }
+    }
+}
+
+impl SynthSpec {
+    /// Expand into the generator configuration.
+    pub fn config(&self) -> SynthConfig {
+        match self.preset {
+            SynthPreset::Netflix => SynthConfig::netflix_like(self.nnz, self.seed),
+            SynthPreset::Yahoo => SynthConfig::yahoo_like(self.nnz, self.seed),
+            SynthPreset::Order => {
+                SynthConfig::order_sweep(self.order, self.dim, self.nnz, self.seed)
+            }
+        }
+    }
+}
+
+/// Where the run's tensor comes from.  Everything here is serializable, so
+/// a spec file fully determines its input data.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DataSource {
+    /// The deterministic 8x8x8 toy dataset shipped with the repo.
+    Toy,
+    /// A tensor file on disk (text or `.ftb` binary, auto-detected).
+    File(PathBuf),
+    /// A synthetic tensor generated in-process from a preset recipe.
+    Synth(SynthSpec),
+}
+
+impl DataSource {
+    /// Load or generate the tensor this source describes.
+    pub fn resolve(&self) -> Result<SparseTensor> {
+        match self {
+            DataSource::Toy => Ok(io::toy_dataset()),
+            DataSource::File(path) => {
+                io::read_auto(path).with_context(|| format!("reading {path:?}"))
+            }
+            DataSource::Synth(s) => Ok(synth::generate(&s.config())),
+        }
+    }
+
+    /// Short human-readable description (for banners and logs).
+    pub fn describe(&self) -> String {
+        match self {
+            DataSource::Toy => "toy dataset".to_string(),
+            DataSource::File(p) => p.display().to_string(),
+            DataSource::Synth(s) => format!("synth preset {} ({} nnz)", s.preset.name(), s.nnz),
+        }
+    }
+}
+
+// ======================================================================
+// Schedule
+// ======================================================================
+
+/// RMSE-plateau early-stopping policy: stop after `patience` consecutive
+/// evaluations that fail to improve the best test RMSE by `min_delta`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EarlyStop {
+    /// Non-improving evaluations tolerated before stopping (≥ 1).
+    pub patience: usize,
+    /// Minimum RMSE improvement that counts as progress.
+    pub min_delta: f64,
+}
+
+impl Default for EarlyStop {
+    fn default() -> Self {
+        Self {
+            patience: 3,
+            min_delta: 1e-4,
+        }
+    }
+}
+
+/// What the epoch loop does and for how long: epochs, evaluation cadence,
+/// early stopping, learning-rate decay, checkpointing and mid-run serving
+/// publishes.  The [`super::Session`] honors every field.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Schedule {
+    /// Maximum epochs to run (≥ 1).
+    pub epochs: usize,
+    /// Evaluate test RMSE/MAE every this many epochs (0 = never; an
+    /// epoch-0 evaluation of the random init is also emitted when > 0).
+    pub eval_every: usize,
+    /// Held-out fraction for the train/test split, in `[0, 1)`
+    /// (0 = train on everything, no evaluation possible).
+    pub test_frac: f64,
+    /// Stop on an RMSE plateau (requires an evaluation cadence).
+    pub early_stop: Option<EarlyStop>,
+    /// Per-epoch multiplicative decay applied to both learning rates
+    /// after each epoch (e.g. `0.95`; `None` = constant rates).
+    pub lr_decay: Option<f32>,
+    /// Write an FTCK serve checkpoint every this many epochs (0 = only a
+    /// final checkpoint, when [`Schedule::checkpoint`] is set).
+    pub checkpoint_every: usize,
+    /// Checkpoint destination.  When set, the session always writes a
+    /// final checkpoint at run end (in addition to any cadence above).
+    pub checkpoint: Option<PathBuf>,
+    /// Publish a snapshot to an attached serve [`crate::serve::Server`]
+    /// every this many epochs (0 = never; only meaningful through
+    /// [`super::Session::run_with_server`]).
+    pub publish_every: usize,
+}
+
+impl Default for Schedule {
+    fn default() -> Self {
+        Self {
+            epochs: 10,
+            eval_every: 1,
+            test_frac: 0.2,
+            early_stop: None,
+            lr_decay: None,
+            checkpoint_every: 0,
+            checkpoint: None,
+            publish_every: 0,
+        }
+    }
+}
+
+// ======================================================================
+// Validation
+// ======================================================================
+
+/// Everything `RunSpec::validate` can reject, as a typed taxonomy so
+/// callers (CLI, tests, sweep runners) can match on the failure class
+/// instead of parsing prose.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SpecError {
+    /// Factor rank J is not a non-zero multiple of 16 (the paper's
+    /// WMMA/MXU tile width; every compiled kernel shape assumes it).
+    JNotTileable {
+        /// The offending J.
+        j: usize,
+    },
+    /// Kruskal rank R is not a non-zero multiple of 16.
+    RNotTileable {
+        /// The offending R.
+        r: usize,
+    },
+    /// `--threads` was set on a backend that cannot use worker threads.
+    ThreadsOnSerialBackend {
+        /// The configured backend.
+        backend: Backend,
+        /// The requested thread count.
+        threads: usize,
+    },
+    /// The HLO backend was selected but no compiled artifacts exist.
+    HloWithoutArtifacts {
+        /// The artifact directory that is missing `manifest.json`.
+        dir: PathBuf,
+    },
+    /// A file data source points at a path that does not exist.
+    MissingData {
+        /// The missing path.
+        path: PathBuf,
+    },
+    /// A synthetic data source would generate an empty tensor.
+    EmptySynth,
+    /// A hyper-parameter is NaN or infinite.
+    NonFiniteHyper {
+        /// Which hyper-parameter (`lr_a`, `lr_b`, `lam_a`, `lam_b`).
+        name: &'static str,
+    },
+    /// `schedule.epochs` is zero.
+    ZeroEpochs,
+    /// `schedule.test_frac` is outside `[0, 1)` (or not finite).
+    BadTestFrac {
+        /// The offending fraction.
+        frac: f64,
+    },
+    /// An evaluation cadence was requested with no held-out split to
+    /// evaluate on (`eval_every > 0` but `test_frac == 0`).
+    EvalWithoutSplit,
+    /// Early stopping needs RMSE evaluations, but `eval_every == 0`.
+    EarlyStopWithoutEval,
+    /// Early stopping with zero patience (would stop immediately) or a
+    /// negative / non-finite `min_delta`.
+    BadEarlyStop {
+        /// The offending patience.
+        patience: usize,
+        /// The offending minimum delta.
+        min_delta: f64,
+    },
+    /// A learning-rate decay that is zero, negative or non-finite.
+    BadLrDecay {
+        /// The offending decay factor.
+        decay: f32,
+    },
+    /// A checkpoint cadence (`checkpoint_every > 0`) with no checkpoint
+    /// path to write to.
+    CheckpointCadenceWithoutPath,
+}
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpecError::JNotTileable { j } => write!(
+                f,
+                "J = {j} must be a non-zero multiple of 16 (WMMA/MXU tile width)"
+            ),
+            SpecError::RNotTileable { r } => write!(
+                f,
+                "R = {r} must be a non-zero multiple of 16 (WMMA/MXU tile width)"
+            ),
+            SpecError::ThreadsOnSerialBackend { backend, threads } => write!(
+                f,
+                "--threads {threads} has no effect on backend {} \
+                 (only parallel_cpu uses worker threads)",
+                backend.name()
+            ),
+            SpecError::HloWithoutArtifacts { dir } => write!(
+                f,
+                "backend hlo needs compiled artifacts, but {dir:?} has no manifest.json \
+                 (run `make artifacts`, or use --backend parallel)"
+            ),
+            SpecError::MissingData { path } => {
+                write!(f, "data file {path:?} does not exist")
+            }
+            SpecError::EmptySynth => write!(f, "synthetic data source with nnz = 0"),
+            SpecError::NonFiniteHyper { name } => {
+                write!(f, "hyper-parameter {name} is not finite")
+            }
+            SpecError::ZeroEpochs => write!(f, "schedule.epochs must be >= 1"),
+            SpecError::BadTestFrac { frac } => write!(
+                f,
+                "schedule.test_frac = {frac} must lie in [0, 1) (0 disables the held-out split)"
+            ),
+            SpecError::EvalWithoutSplit => write!(
+                f,
+                "schedule.eval_every > 0 needs a held-out split (test_frac > 0)"
+            ),
+            SpecError::EarlyStopWithoutEval => write!(
+                f,
+                "early stopping watches test RMSE, so schedule.eval_every must be > 0"
+            ),
+            SpecError::BadEarlyStop {
+                patience,
+                min_delta,
+            } => write!(
+                f,
+                "early_stop needs patience >= 1 and a finite, non-negative min_delta \
+                 (got patience {patience}, min_delta {min_delta})"
+            ),
+            SpecError::BadLrDecay { decay } => write!(
+                f,
+                "lr_decay = {decay} must be finite and > 0 (1.0 keeps rates constant)"
+            ),
+            SpecError::CheckpointCadenceWithoutPath => write!(
+                f,
+                "schedule.checkpoint_every > 0 needs schedule.checkpoint to name a path"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+// ======================================================================
+// RunSpec
+// ======================================================================
+
+/// One complete, validated, serializable description of a run:
+/// data source + trainer configuration + schedule.
+///
+/// `RunSpec` is the single entry point every consumer shares — the CLI
+/// (`train --spec FILE` / `--dump-spec`), the examples, the convergence
+/// benches and library users all construct one and hand it to
+/// [`super::Session`].  The JSON round-trip is lossless
+/// (`parse_str(dump()) == spec`), so a dumped spec file reproduces the
+/// run bit-identically.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunSpec {
+    /// Where the tensor comes from.
+    pub data: DataSource,
+    /// The trainer configuration (algorithm, backend, ranks, hypers).
+    pub train: TrainConfig,
+    /// The epoch loop: duration, evaluation, stopping, checkpointing.
+    pub schedule: Schedule,
+}
+
+impl Default for RunSpec {
+    /// Toy data, default trainer config with the backend auto-selected
+    /// for this checkout ([`TrainConfig::auto_backend`] — HLO when the
+    /// artifacts exist, the parallel CPU engine otherwise), default
+    /// schedule.
+    fn default() -> Self {
+        let base = TrainConfig::default();
+        let backend = base.auto_backend();
+        Self {
+            data: DataSource::Toy,
+            train: TrainConfig { backend, ..base },
+            schedule: Schedule::default(),
+        }
+    }
+}
+
+impl RunSpec {
+    /// Check the spec against the typed rejection taxonomy, returning the
+    /// first violation.  [`super::Session::from_spec`] calls this, so an
+    /// invalid spec never reaches the trainer.
+    pub fn validate(&self) -> Result<(), SpecError> {
+        // --- data ------------------------------------------------------
+        match &self.data {
+            DataSource::Toy => {}
+            DataSource::File(path) => {
+                if !path.exists() {
+                    return Err(SpecError::MissingData { path: path.clone() });
+                }
+            }
+            DataSource::Synth(s) => {
+                if s.nnz == 0 {
+                    return Err(SpecError::EmptySynth);
+                }
+            }
+        }
+        // --- trainer config -------------------------------------------
+        let t = &self.train;
+        if t.j == 0 || t.j % 16 != 0 {
+            return Err(SpecError::JNotTileable { j: t.j });
+        }
+        if t.r == 0 || t.r % 16 != 0 {
+            return Err(SpecError::RNotTileable { r: t.r });
+        }
+        if t.threads > 0 && t.backend != Backend::ParallelCpu {
+            return Err(SpecError::ThreadsOnSerialBackend {
+                backend: t.backend,
+                threads: t.threads,
+            });
+        }
+        if t.backend == Backend::Hlo && !t.hlo_available() {
+            return Err(SpecError::HloWithoutArtifacts {
+                dir: t.artifact_dir.clone(),
+            });
+        }
+        for (name, v) in [
+            ("lr_a", t.hyper.lr_a),
+            ("lr_b", t.hyper.lr_b),
+            ("lam_a", t.hyper.lam_a),
+            ("lam_b", t.hyper.lam_b),
+        ] {
+            if !v.is_finite() {
+                return Err(SpecError::NonFiniteHyper { name });
+            }
+        }
+        // --- schedule --------------------------------------------------
+        let s = &self.schedule;
+        if s.epochs == 0 {
+            return Err(SpecError::ZeroEpochs);
+        }
+        if !s.test_frac.is_finite() || !(0.0..1.0).contains(&s.test_frac) {
+            return Err(SpecError::BadTestFrac { frac: s.test_frac });
+        }
+        if s.eval_every > 0 && s.test_frac == 0.0 {
+            return Err(SpecError::EvalWithoutSplit);
+        }
+        if let Some(es) = &s.early_stop {
+            if s.eval_every == 0 {
+                return Err(SpecError::EarlyStopWithoutEval);
+            }
+            if es.patience == 0 || !es.min_delta.is_finite() || es.min_delta < 0.0 {
+                return Err(SpecError::BadEarlyStop {
+                    patience: es.patience,
+                    min_delta: es.min_delta,
+                });
+            }
+        }
+        if let Some(d) = s.lr_decay {
+            if !d.is_finite() || d <= 0.0 {
+                return Err(SpecError::BadLrDecay { decay: d });
+            }
+        }
+        if s.checkpoint_every > 0 && s.checkpoint.is_none() {
+            return Err(SpecError::CheckpointCadenceWithoutPath);
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // JSON round-trip
+    // ------------------------------------------------------------------
+
+    /// Serialize to a JSON value (the `--dump-spec` representation).
+    pub fn to_json(&self) -> Json {
+        let data = match &self.data {
+            DataSource::Toy => json::obj(vec![("kind", json::s("toy"))]),
+            DataSource::File(p) => json::obj(vec![
+                ("kind", json::s("file")),
+                ("path", json::s(&p.to_string_lossy())),
+            ]),
+            DataSource::Synth(s) => json::obj(vec![
+                ("kind", json::s("synth")),
+                ("preset", json::s(s.preset.name())),
+                ("order", json::num(s.order as f64)),
+                ("dim", json::num(s.dim as f64)),
+                ("nnz", json::num(s.nnz as f64)),
+                ("seed", num_u64(s.seed)),
+            ]),
+        };
+        let t = &self.train;
+        let train = json::obj(vec![
+            ("algo", json::s(t.algo.name())),
+            ("variant", json::s(t.variant.name())),
+            ("strategy", json::s(t.strategy.name())),
+            ("backend", json::s(t.backend.name())),
+            ("j", json::num(t.j as f64)),
+            ("r", json::num(t.r as f64)),
+            ("seed", num_u64(t.seed)),
+            ("threads", json::num(t.threads as f64)),
+            ("cpu_kernel", json::s(t.cpu_kernel.name())),
+            ("artifacts", json::s(&t.artifact_dir.to_string_lossy())),
+            ("lr_a", num_f32(t.hyper.lr_a)),
+            ("lr_b", num_f32(t.hyper.lr_b)),
+            ("lam_a", num_f32(t.hyper.lam_a)),
+            ("lam_b", num_f32(t.hyper.lam_b)),
+        ]);
+        let s = &self.schedule;
+        let schedule = json::obj(vec![
+            ("epochs", json::num(s.epochs as f64)),
+            ("eval_every", json::num(s.eval_every as f64)),
+            ("test_frac", json::num(s.test_frac)),
+            (
+                "early_stop",
+                match &s.early_stop {
+                    None => Json::Null,
+                    Some(es) => json::obj(vec![
+                        ("patience", json::num(es.patience as f64)),
+                        ("min_delta", json::num(es.min_delta)),
+                    ]),
+                },
+            ),
+            (
+                "lr_decay",
+                match s.lr_decay {
+                    None => Json::Null,
+                    Some(d) => num_f32(d),
+                },
+            ),
+            ("checkpoint_every", json::num(s.checkpoint_every as f64)),
+            (
+                "checkpoint",
+                match &s.checkpoint {
+                    None => Json::Null,
+                    Some(p) => json::s(&p.to_string_lossy()),
+                },
+            ),
+            ("publish_every", json::num(s.publish_every as f64)),
+        ]);
+        json::obj(vec![
+            ("version", json::num(SPEC_VERSION as f64)),
+            ("data", data),
+            ("train", train),
+            ("schedule", schedule),
+        ])
+    }
+
+    /// Serialize to a compact JSON string.
+    pub fn dump(&self) -> String {
+        self.to_json().dump()
+    }
+
+    /// Parse a spec from a JSON value (inverse of [`RunSpec::to_json`]).
+    pub fn from_json(v: &Json) -> Result<RunSpec, String> {
+        let version = get_u64(v, "version")?;
+        if version != SPEC_VERSION {
+            return Err(format!(
+                "unsupported spec version {version} (this build reads version {SPEC_VERSION})"
+            ));
+        }
+        // --- data ------------------------------------------------------
+        let d = v.get("data").ok_or("missing field \"data\"")?;
+        let data = match get_str(d, "kind")? {
+            "toy" => DataSource::Toy,
+            "file" => DataSource::File(PathBuf::from(get_str(d, "path")?)),
+            "synth" => DataSource::Synth(SynthSpec {
+                preset: parse_field(d, "preset", SynthPreset::parse)?,
+                order: get_usize(d, "order")?,
+                dim: get_usize(d, "dim")? as u32,
+                nnz: get_usize(d, "nnz")?,
+                seed: get_u64(d, "seed")?,
+            }),
+            other => return Err(format!("unknown data kind {other:?}")),
+        };
+        // --- trainer config -------------------------------------------
+        let t = v.get("train").ok_or("missing field \"train\"")?;
+        let train = TrainConfig {
+            algo: parse_field(t, "algo", Algo::parse)?,
+            variant: parse_field(t, "variant", Variant::parse)?,
+            strategy: parse_field(t, "strategy", Strategy::parse)?,
+            backend: parse_field(t, "backend", Backend::parse)?,
+            j: get_usize(t, "j")?,
+            r: get_usize(t, "r")?,
+            seed: get_u64(t, "seed")?,
+            threads: get_usize(t, "threads")?,
+            cpu_kernel: parse_field(t, "cpu_kernel", KernelPolicy::parse)?,
+            artifact_dir: PathBuf::from(get_str(t, "artifacts")?),
+            hyper: Hyper {
+                lr_a: get_f64(t, "lr_a")? as f32,
+                lr_b: get_f64(t, "lr_b")? as f32,
+                lam_a: get_f64(t, "lam_a")? as f32,
+                lam_b: get_f64(t, "lam_b")? as f32,
+            },
+        };
+        // --- schedule --------------------------------------------------
+        let s = v.get("schedule").ok_or("missing field \"schedule\"")?;
+        let early_stop = match s.get("early_stop") {
+            None | Some(Json::Null) => None,
+            Some(es) => Some(EarlyStop {
+                patience: get_usize(es, "patience")?,
+                min_delta: get_f64(es, "min_delta")?,
+            }),
+        };
+        let lr_decay = match s.get("lr_decay") {
+            None | Some(Json::Null) => None,
+            Some(d) => Some(
+                d.as_f64()
+                    .ok_or_else(|| format!("schedule.lr_decay: expected a number, got {d:?}"))?
+                    as f32,
+            ),
+        };
+        let checkpoint = match s.get("checkpoint") {
+            None | Some(Json::Null) => None,
+            Some(c) => Some(PathBuf::from(c.as_str().ok_or_else(|| {
+                format!("schedule.checkpoint: expected a string, got {c:?}")
+            })?)),
+        };
+        let schedule = Schedule {
+            epochs: get_usize(s, "epochs")?,
+            eval_every: get_usize(s, "eval_every")?,
+            test_frac: get_f64(s, "test_frac")?,
+            early_stop,
+            lr_decay,
+            checkpoint_every: get_usize(s, "checkpoint_every")?,
+            checkpoint,
+            publish_every: get_usize(s, "publish_every")?,
+        };
+        Ok(RunSpec {
+            data,
+            train,
+            schedule,
+        })
+    }
+
+    /// Parse a spec from its JSON text (inverse of [`RunSpec::dump`]).
+    pub fn parse_str(text: &str) -> Result<RunSpec, String> {
+        RunSpec::from_json(&Json::parse(text)?)
+    }
+
+    /// Write the spec to a file (the artifact `--dump-spec` produces).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.dump() + "\n").with_context(|| format!("writing {path:?}"))?;
+        Ok(())
+    }
+
+    /// Read a spec file written by [`RunSpec::save`] / `--dump-spec`.
+    pub fn load(path: &Path) -> Result<RunSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading spec {path:?}"))?;
+        RunSpec::parse_str(&text)
+            .map_err(anyhow::Error::msg)
+            .with_context(|| format!("parsing spec {path:?}"))
+    }
+}
+
+// ======================================================================
+// JSON field helpers
+// ======================================================================
+
+/// Exactly-representable u64s are emitted as JSON numbers; larger values
+/// fall back to a decimal string so the round-trip stays lossless (the
+/// in-tree JSON parser stores numbers as f64).
+fn num_u64(v: u64) -> Json {
+    if v <= (1u64 << 53) {
+        Json::Num(v as f64)
+    } else {
+        Json::Str(v.to_string())
+    }
+}
+
+/// Emit an f32 as the f64 nearest its shortest decimal representation:
+/// `0.01f32` dumps as `0.01` (not `0.010000000707805157`), and parsing
+/// that back through f64 then narrowing recovers the exact f32.
+fn num_f32(v: f32) -> Json {
+    Json::Num(v.to_string().parse::<f64>().unwrap_or(v as f64))
+}
+
+fn field<'a>(v: &'a Json, key: &str) -> Result<&'a Json, String> {
+    v.get(key).ok_or_else(|| format!("missing field {key:?}"))
+}
+
+fn parse_field<T>(v: &Json, key: &str, parse: impl Fn(&str) -> Option<T>) -> Result<T, String> {
+    let s = get_str(v, key)?;
+    parse(s).ok_or_else(|| format!("field {key:?}: bad value {s:?}"))
+}
+
+fn get_str<'a>(v: &'a Json, key: &str) -> Result<&'a str, String> {
+    field(v, key)?
+        .as_str()
+        .ok_or_else(|| format!("field {key:?}: expected a string"))
+}
+
+fn get_usize(v: &Json, key: &str) -> Result<usize, String> {
+    field(v, key)?
+        .as_usize()
+        .ok_or_else(|| format!("field {key:?}: expected a non-negative integer"))
+}
+
+fn get_f64(v: &Json, key: &str) -> Result<f64, String> {
+    field(v, key)?
+        .as_f64()
+        .ok_or_else(|| format!("field {key:?}: expected a number"))
+}
+
+fn get_u64(v: &Json, key: &str) -> Result<u64, String> {
+    match field(v, key)? {
+        Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= (1u64 << 53) as f64 => {
+            Ok(*n as u64)
+        }
+        Json::Str(s) => s
+            .parse::<u64>()
+            .map_err(|_| format!("field {key:?}: bad u64 string {s:?}")),
+        other => Err(format!("field {key:?}: expected a u64, got {other:?}")),
+    }
+}

@@ -16,11 +16,20 @@ pub struct Args {
 impl Args {
     /// Parse `argv` (without the program name).  `allowed` lists valid flag
     /// names; boolean flags get the value `"true"`.
+    ///
+    /// Every entry of `bools` must also appear in `allowed` — a mismatch
+    /// is a declaration bug in the caller and surfaces as an `Err` here
+    /// rather than as a flag that can never be set.
     pub fn parse(
         argv: impl IntoIterator<Item = String>,
         allowed: &[&str],
         bools: &[&str],
     ) -> Result<Args, String> {
+        if let Some(b) = bools.iter().find(|b| !allowed.contains(*b)) {
+            return Err(format!(
+                "internal: boolean flag --{b} is not in the allowed list"
+            ));
+        }
         let mut out = Args {
             allowed: allowed.iter().map(|s| s.to_string()).collect(),
             ..Default::default()
@@ -50,20 +59,44 @@ impl Args {
         Ok(out)
     }
 
+    /// Check that `key` was declared in the `allowed` list handed to
+    /// [`Args::parse`].  A failure here is a programmer typo in a lookup
+    /// key, not user input — release builds used to silently return
+    /// `None` for these, hiding the bug.
+    fn declared(&self, key: &str) -> Result<(), String> {
+        if self.allowed.iter().any(|k| k == key) {
+            Ok(())
+        } else {
+            Err(format!(
+                "internal: lookup of undeclared flag --{key} (not in the Args::parse allowed list)"
+            ))
+        }
+    }
+
     /// Raw value of `--key`, if present.
+    ///
+    /// # Panics
+    /// If `key` was never declared to [`Args::parse`] — that is a bug in
+    /// the calling command, in every build profile.  Use
+    /// [`Args::get_parse`] for the `Err`-returning variant.
     pub fn get(&self, key: &str) -> Option<&str> {
-        debug_assert!(self.allowed.iter().any(|k| k == key), "undeclared flag {key}");
+        if let Err(e) = self.declared(key) {
+            panic!("{e}");
+        }
         self.flags.get(key).map(|s| s.as_str())
     }
 
-    /// Value of `--key`, or `default` when absent.
+    /// Value of `--key`, or `default` when absent.  Panics like
+    /// [`Args::get`] on an undeclared key.
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
-    /// Parse `--key` into `T`, or return `default` when absent.
+    /// Parse `--key` into `T`, or return `default` when absent.  An
+    /// undeclared lookup key is an `Err` (not a silent `None`-as-default).
     pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
-        match self.get(key) {
+        self.declared(key)?;
+        match self.flags.get(key).map(|s| s.as_str()) {
             None => Ok(default),
             Some(v) => v
                 .parse()
@@ -124,6 +157,24 @@ mod tests {
     fn rejects_unknown_and_missing_value() {
         assert!(Args::parse(argv(&["--nope"]), &["n"], &[]).is_err());
         assert!(Args::parse(argv(&["--n"]), &["n"], &[]).is_err());
+    }
+
+    #[test]
+    fn rejects_bool_outside_allowed() {
+        assert!(Args::parse(argv(&[]), &["n"], &["verbose"]).is_err());
+    }
+
+    #[test]
+    fn undeclared_lookup_is_an_error() {
+        let a = Args::parse(argv(&["--n", "3"]), &["n"], &[]).unwrap();
+        assert!(a.get_parse("typo", 0usize).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "undeclared flag --typo")]
+    fn undeclared_get_panics() {
+        let a = Args::parse(argv(&[]), &["n"], &[]).unwrap();
+        let _ = a.get("typo");
     }
 
     #[test]

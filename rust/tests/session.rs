@@ -1,0 +1,475 @@
+//! Session-layer tests: the RunSpec JSON round-trip (property-style over
+//! random specs), the typed validation rejection table (every `SpecError`
+//! variant triggered), early stopping on a plateaued run, and exact
+//! parity between a scheduled `Session` run and the hand-rolled trainer
+//! loop it replaced.
+
+use std::path::PathBuf;
+
+use fasttucker::coordinator::{Algo, Backend, Strategy, TrainConfig, Trainer, Variant};
+use fasttucker::cpu_ref::Hyper;
+use fasttucker::kernel::KernelPolicy;
+use fasttucker::session::{
+    DataSource, EarlyStop, NullObserver, Recorder, RunSpec, Schedule, Session, SpecError,
+    SynthPreset, SynthSpec,
+};
+use fasttucker::synth::{generate, SynthConfig};
+use fasttucker::tensor::split::train_test_split;
+use fasttucker::util::rng::Pcg32;
+
+// ======================================================================
+// helpers
+// ======================================================================
+
+/// A spec that passes validation from a clean checkout: toy data, CPU
+/// backend, default schedule.
+fn valid_spec() -> RunSpec {
+    RunSpec {
+        data: DataSource::Toy,
+        train: TrainConfig {
+            backend: Backend::ParallelCpu,
+            ..TrainConfig::default()
+        },
+        schedule: Schedule::default(),
+    }
+}
+
+fn random_u64(rng: &mut Pcg32) -> u64 {
+    rng.next_u64()
+}
+
+/// A random but finite hyper-parameter value (small rational).
+fn random_hyper(rng: &mut Pcg32) -> f32 {
+    (rng.gen_range(10_000) as f32) / 997.0
+}
+
+fn random_spec(rng: &mut Pcg32) -> RunSpec {
+    let data = match rng.gen_range(3) {
+        0 => DataSource::Toy,
+        1 => DataSource::File(PathBuf::from(format!(
+            "/tmp/tensor_{}.ftb",
+            rng.gen_range(1000)
+        ))),
+        _ => DataSource::Synth(SynthSpec {
+            preset: [SynthPreset::Netflix, SynthPreset::Yahoo, SynthPreset::Order]
+                [rng.gen_index(3)],
+            order: 3 + rng.gen_index(5),
+            dim: 8 + rng.gen_range(1000),
+            nnz: rng.gen_index(1 << 20),
+            // exercise the > 2^53 string fallback in roughly half the draws
+            seed: if rng.gen_range(2) == 0 {
+                random_u64(rng)
+            } else {
+                rng.gen_range(1 << 20) as u64
+            },
+        }),
+    };
+    let train = TrainConfig {
+        algo: [
+            Algo::FastTucker,
+            Algo::FasterTucker,
+            Algo::FasterTuckerCoo,
+            Algo::Plus,
+        ][rng.gen_index(4)],
+        variant: [Variant::Tc, Variant::Cc][rng.gen_index(2)],
+        strategy: [Strategy::Calculation, Strategy::Storage][rng.gen_index(2)],
+        backend: [Backend::Hlo, Backend::CpuRef, Backend::ParallelCpu][rng.gen_index(3)],
+        // round-tripping must work for *any* value, valid or not
+        j: rng.gen_index(100),
+        r: rng.gen_index(100),
+        hyper: Hyper {
+            lr_a: random_hyper(rng),
+            lr_b: random_hyper(rng),
+            lam_a: random_hyper(rng),
+            lam_b: random_hyper(rng),
+        },
+        seed: random_u64(rng),
+        artifact_dir: PathBuf::from(format!("artifacts_{}", rng.gen_range(100))),
+        threads: rng.gen_index(64),
+        cpu_kernel: [KernelPolicy::Tiled, KernelPolicy::Scalar][rng.gen_index(2)],
+    };
+    let schedule = Schedule {
+        epochs: rng.gen_index(1000),
+        eval_every: rng.gen_index(10),
+        test_frac: (rng.gen_range(1000) as f64) / 1000.0,
+        early_stop: if rng.gen_range(2) == 0 {
+            None
+        } else {
+            Some(EarlyStop {
+                patience: rng.gen_index(10),
+                min_delta: (rng.gen_range(1000) as f64) / 1e6,
+            })
+        },
+        lr_decay: if rng.gen_range(2) == 0 {
+            None
+        } else {
+            Some((1 + rng.gen_range(1000)) as f32 / 1000.0)
+        },
+        checkpoint_every: rng.gen_index(10),
+        checkpoint: if rng.gen_range(2) == 0 {
+            None
+        } else {
+            Some(PathBuf::from(format!("/tmp/ckpt_{}.ftc", rng.gen_range(1000))))
+        },
+        publish_every: rng.gen_index(10),
+    };
+    RunSpec {
+        data,
+        train,
+        schedule,
+    }
+}
+
+// ======================================================================
+// JSON round-trip
+// ======================================================================
+
+#[test]
+fn spec_json_roundtrip_property() {
+    let mut rng = Pcg32::new(0x5EC5, 0x11);
+    for i in 0..300 {
+        let spec = random_spec(&mut rng);
+        let text = spec.dump();
+        let back = RunSpec::parse_str(&text)
+            .unwrap_or_else(|e| panic!("case {i}: parse failed: {e}\nspec: {text}"));
+        assert_eq!(back, spec, "case {i} did not round-trip: {text}");
+    }
+}
+
+#[test]
+fn spec_default_roundtrips_and_validates() {
+    let spec = RunSpec::default();
+    assert_eq!(RunSpec::parse_str(&spec.dump()).unwrap(), spec);
+    // default = toy data + auto backend: valid from a clean checkout AND
+    // from a checkout with artifacts
+    spec.validate().unwrap();
+}
+
+#[test]
+fn spec_file_roundtrip() {
+    let dir = std::env::temp_dir().join("ft_session_spec_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("run.spec.json");
+    let spec = valid_spec();
+    spec.save(&path).unwrap();
+    assert_eq!(RunSpec::load(&path).unwrap(), spec);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn spec_parse_rejects_garbage() {
+    assert!(RunSpec::parse_str("").is_err());
+    assert!(RunSpec::parse_str("{}").is_err());
+    assert!(RunSpec::parse_str(r#"{"version":99}"#).is_err());
+    // a valid envelope with a bad enum value
+    let mut spec_text = valid_spec().dump();
+    spec_text = spec_text.replace("\"plus\"", "\"nonsense\"");
+    assert!(RunSpec::parse_str(&spec_text).is_err());
+}
+
+// ======================================================================
+// validation rejection table
+// ======================================================================
+
+#[test]
+fn validate_accepts_the_base_spec() {
+    valid_spec().validate().unwrap();
+}
+
+type Mutation = Box<dyn Fn(&mut RunSpec)>;
+type Expectation = fn(&SpecError) -> bool;
+
+#[test]
+fn validate_rejection_table() {
+    // each row mutates the valid base spec to trigger exactly one variant
+    let cases: Vec<(&str, Mutation, Expectation)> = vec![
+        (
+            "j not multiple of 16",
+            Box::new(|s| s.train.j = 8),
+            |e| matches!(e, SpecError::JNotTileable { j: 8 }),
+        ),
+        (
+            "j zero",
+            Box::new(|s| s.train.j = 0),
+            |e| matches!(e, SpecError::JNotTileable { j: 0 }),
+        ),
+        (
+            "r not multiple of 16",
+            Box::new(|s| s.train.r = 24),
+            |e| matches!(e, SpecError::RNotTileable { r: 24 }),
+        ),
+        (
+            "threads on serial backend",
+            Box::new(|s| {
+                s.train.backend = Backend::CpuRef;
+                s.train.threads = 4;
+            }),
+            |e| {
+                matches!(
+                    e,
+                    SpecError::ThreadsOnSerialBackend {
+                        backend: Backend::CpuRef,
+                        threads: 4
+                    }
+                )
+            },
+        ),
+        (
+            "hlo without artifacts",
+            Box::new(|s| {
+                s.train.backend = Backend::Hlo;
+                s.train.artifact_dir = PathBuf::from("/nonexistent/ft_artifacts");
+            }),
+            |e| matches!(e, SpecError::HloWithoutArtifacts { .. }),
+        ),
+        (
+            "missing data file",
+            Box::new(|s| s.data = DataSource::File(PathBuf::from("/nonexistent/t.ftb"))),
+            |e| matches!(e, SpecError::MissingData { .. }),
+        ),
+        (
+            "empty synth",
+            Box::new(|s| {
+                s.data = DataSource::Synth(SynthSpec {
+                    nnz: 0,
+                    ..SynthSpec::default()
+                })
+            }),
+            |e| matches!(e, SpecError::EmptySynth),
+        ),
+        (
+            "non-finite hyper",
+            Box::new(|s| s.train.hyper.lr_b = f32::NAN),
+            |e| matches!(e, SpecError::NonFiniteHyper { name: "lr_b" }),
+        ),
+        (
+            "zero epochs",
+            Box::new(|s| s.schedule.epochs = 0),
+            |e| matches!(e, SpecError::ZeroEpochs),
+        ),
+        (
+            "bad test frac",
+            Box::new(|s| s.schedule.test_frac = 1.5),
+            |e| matches!(e, SpecError::BadTestFrac { .. }),
+        ),
+        (
+            "eval without split",
+            Box::new(|s| s.schedule.test_frac = 0.0),
+            |e| matches!(e, SpecError::EvalWithoutSplit),
+        ),
+        (
+            "early stop without eval",
+            Box::new(|s| {
+                s.schedule.eval_every = 0;
+                s.schedule.test_frac = 0.0;
+                s.schedule.early_stop = Some(EarlyStop::default());
+            }),
+            |e| matches!(e, SpecError::EarlyStopWithoutEval),
+        ),
+        (
+            "early stop zero patience",
+            Box::new(|s| {
+                s.schedule.early_stop = Some(EarlyStop {
+                    patience: 0,
+                    min_delta: 1e-4,
+                })
+            }),
+            |e| matches!(e, SpecError::BadEarlyStop { patience: 0, .. }),
+        ),
+        (
+            "bad lr decay",
+            Box::new(|s| s.schedule.lr_decay = Some(0.0)),
+            |e| matches!(e, SpecError::BadLrDecay { .. }),
+        ),
+        (
+            "checkpoint cadence without path",
+            Box::new(|s| s.schedule.checkpoint_every = 2),
+            |e| matches!(e, SpecError::CheckpointCadenceWithoutPath),
+        ),
+    ];
+    for (label, mutate, expect) in cases {
+        let mut spec = valid_spec();
+        mutate(&mut spec);
+        let err = spec
+            .validate()
+            .expect_err(&format!("case {label:?} should fail validation"));
+        assert!(
+            expect(&err),
+            "case {label:?} produced the wrong variant: {err:?}"
+        );
+        // every error formats to something human-readable
+        assert!(!err.to_string().is_empty());
+    }
+}
+
+// ======================================================================
+// session runs
+// ======================================================================
+
+fn small_tensor() -> fasttucker::tensor::SparseTensor {
+    generate(&SynthConfig::order_sweep(3, 32, 3_000, 9))
+}
+
+fn cpu_cfg() -> TrainConfig {
+    TrainConfig {
+        backend: Backend::CpuRef,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn early_stopping_on_plateau() {
+    // zero learning rates => the model never changes => RMSE is constant
+    // from epoch 1 on, so the plateau policy must cut the run short
+    let cfg = TrainConfig {
+        hyper: Hyper {
+            lr_a: 0.0,
+            lr_b: 0.0,
+            ..Hyper::default()
+        },
+        ..cpu_cfg()
+    };
+    let schedule = Schedule {
+        epochs: 30,
+        eval_every: 1,
+        test_frac: 0.25,
+        early_stop: Some(EarlyStop {
+            patience: 2,
+            min_delta: 0.0,
+        }),
+        ..Schedule::default()
+    };
+    let mut session = Session::with_tensor(&small_tensor(), cfg, schedule).unwrap();
+    let mut rec = Recorder::default();
+    let report = session.run(&mut rec).unwrap();
+    assert!(report.stopped_early, "plateaued run must stop early");
+    assert_eq!(report.epochs_run, 2, "patience 2 => exactly 2 strikes");
+    assert!(report.epochs_run < 30);
+    // recorder saw init eval + one event per epoch
+    assert_eq!(rec.events.len(), report.epochs_run + 1);
+    assert_eq!(rec.events[0].epoch, 0);
+    assert!(rec.report.is_some());
+}
+
+#[test]
+fn improving_run_does_not_stop_early() {
+    let schedule = Schedule {
+        epochs: 4,
+        eval_every: 1,
+        test_frac: 0.25,
+        early_stop: Some(EarlyStop {
+            patience: 3,
+            min_delta: 0.0,
+        }),
+        ..Schedule::default()
+    };
+    let mut session = Session::with_tensor(&small_tensor(), cpu_cfg(), schedule).unwrap();
+    let report = session.run(&mut NullObserver).unwrap();
+    assert_eq!(report.epochs_run, 4);
+    assert!(!report.stopped_early);
+    // SGD on the planted low-rank signal must actually improve
+    let init = report.history[0].rmse.unwrap();
+    assert!(report.best_rmse.unwrap() < init);
+}
+
+#[test]
+fn session_matches_manual_trainer_loop_exactly() {
+    // the acceptance bar for the session layer: the scheduled run is
+    // bit-identical to the hand-rolled loop it replaced
+    let tensor = small_tensor();
+    let cfg = cpu_cfg();
+    let epochs = 3;
+
+    let schedule = Schedule {
+        epochs,
+        eval_every: 1,
+        test_frac: 0.2,
+        ..Schedule::default()
+    };
+    let mut session = Session::with_tensor(&tensor, cfg.clone(), schedule).unwrap();
+    let report = session.run(&mut NullObserver).unwrap();
+
+    let (train, test) = train_test_split(&tensor, 0.2, cfg.seed);
+    let mut trainer = Trainer::new(&train, cfg).unwrap();
+    let mut manual_rmse = f64::NAN;
+    let mut manual_mae = f64::NAN;
+    for _ in 1..=epochs {
+        trainer.epoch(&train).unwrap();
+        let (rmse, mae) = trainer.evaluate(&test).unwrap();
+        manual_rmse = rmse;
+        manual_mae = mae;
+    }
+    assert_eq!(report.final_rmse, Some(manual_rmse));
+    assert_eq!(report.final_mae, Some(manual_mae));
+    assert_eq!(report.epochs_run, epochs);
+}
+
+#[test]
+fn session_writes_scheduled_checkpoints() {
+    let dir = std::env::temp_dir().join("ft_session_ckpt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.ftc");
+    let schedule = Schedule {
+        epochs: 3,
+        eval_every: 0,
+        test_frac: 0.0,
+        checkpoint_every: 2,
+        checkpoint: Some(path.clone()),
+        ..Schedule::default()
+    };
+    let mut session = Session::with_tensor(&small_tensor(), cpu_cfg(), schedule).unwrap();
+    let mut rec = Recorder::default();
+    session.run(&mut rec).unwrap();
+    // cadence fired at epoch 2, final checkpoint written after epoch 3
+    assert!(rec.events.iter().any(|e| e.epoch == 2 && e.checkpoint.is_some()));
+    let snap = fasttucker::serve::ModelSnapshot::load(&path).unwrap();
+    assert_eq!(snap.epoch(), 3);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn lr_decay_reaches_the_kernels() {
+    // with decay d over e epochs the trainer's live rate is lr * d^e, and
+    // the recorded per-epoch rates are the ones in effect before decay
+    let decay = 0.5f32;
+    let schedule = Schedule {
+        epochs: 3,
+        eval_every: 0,
+        test_frac: 0.0,
+        lr_decay: Some(decay),
+        ..Schedule::default()
+    };
+    let cfg = cpu_cfg();
+    let lr0 = cfg.hyper.lr_a;
+    let mut session = Session::with_tensor(&small_tensor(), cfg, schedule).unwrap();
+    let mut rec = Recorder::default();
+    session.run(&mut rec).unwrap();
+    let rates: Vec<f32> = rec.events.iter().map(|e| e.lr_a).collect();
+    assert_eq!(rates, vec![lr0, lr0 * decay, lr0 * decay * decay]);
+    assert_eq!(
+        session.trainer().cfg.hyper.lr_a,
+        lr0 * decay * decay * decay
+    );
+}
+
+#[test]
+fn from_spec_runs_toy_end_to_end() {
+    let spec = RunSpec {
+        schedule: Schedule {
+            epochs: 2,
+            ..Schedule::default()
+        },
+        ..valid_spec()
+    };
+    let mut session = Session::from_spec(&spec).unwrap();
+    let report = session.run(&mut NullObserver).unwrap();
+    assert_eq!(report.epochs_run, 2);
+    assert!(report.final_rmse.unwrap().is_finite());
+}
+
+#[test]
+fn from_spec_rejects_invalid() {
+    let mut spec = valid_spec();
+    spec.train.j = 12;
+    assert!(Session::from_spec(&spec).is_err());
+}
