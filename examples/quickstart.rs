@@ -24,13 +24,21 @@ fn main() -> anyhow::Result<()> {
         .and_then(|v| v.parse().ok())
         .unwrap_or(15);
 
-    let spec = RunSpec {
-        data: DataSource::Synth(SynthSpec {
+    // QS_DATA points the run at a tensor file instead of the synthetic
+    // surrogate — any supported format, including an ingested `.ftb2`
+    // store (materialized here; `fasttucker train --store` keeps it
+    // out of core).
+    let data = match std::env::var("QS_DATA") {
+        Ok(path) => DataSource::File(path.into()),
+        Err(_) => DataSource::Synth(SynthSpec {
             preset: SynthPreset::Netflix,
             nnz,
             seed: 7,
             ..SynthSpec::default()
         }),
+    };
+    let spec = RunSpec {
+        data,
         schedule: Schedule {
             epochs,
             ..Schedule::default()
@@ -45,8 +53,8 @@ fn main() -> anyhow::Result<()> {
     let mut session = Session::from_spec(&spec)?;
     println!(
         "dims {:?}, train {} / test {} entries",
-        session.train_tensor().dims,
-        session.train_tensor().nnz(),
+        session.train_dims(),
+        session.train_nnz(),
         session.test_tensor().nnz(),
     );
     println!("runtime: {}", session.platform());

@@ -39,7 +39,7 @@ fn main() -> anyhow::Result<()> {
     let mut session = Session::with_tensor(&tensor, TrainConfig { backend, ..cfg }, schedule)?;
     println!(
         "ratings: {} train / {} test over {:?}",
-        session.train_tensor().nnz(),
+        session.train_nnz(),
         session.test_tensor().nnz(),
         tensor.dims
     );

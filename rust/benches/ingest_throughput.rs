@@ -1,0 +1,77 @@
+//! Ingest + paged-read throughput of the out-of-core data layer.
+//!
+//! Rows:
+//! * `ingest_text` / `ingest_ftb1` — streaming conversion into the FTB2
+//!   store (constant memory; the `mentries_per_s` extra is the headline
+//!   number, `mb_per_s` the disk-side view).
+//! * `paged_scan` vs `ram_scan` — a full sequential gather through the
+//!   [`fasttucker::data::PagedTensor`] LRU page cache vs the same gather
+//!   from RAM: the price of staying out of core on the staging path
+//!   (the training pipeline hides it behind the double buffer).
+//!
+//! Run: `cargo bench --bench ingest_throughput` (BENCH_QUICK=1 shrinks it).
+//! No artifacts needed.  Record results in BENCHMARKS.md conventions.
+
+use fasttucker::bench::{measure, report, Row};
+use fasttucker::data::{ingest_file, PagedTensor, TensorView};
+use fasttucker::synth::{generate, SynthConfig};
+use fasttucker::tensor::io;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let (warmup, reps, nnz) = if quick { (1, 3, 50_000) } else { (1, 5, 500_000) };
+    let dir = std::env::temp_dir().join("ft_ingest_bench");
+    std::fs::create_dir_all(&dir)?;
+
+    let tensor = generate(&SynthConfig::netflix_like(nnz, 7));
+    let text = dir.join("in.coo");
+    let ftb1 = dir.join("in.ftb");
+    io::write_text(&tensor, &text)?;
+    io::write_binary(&tensor, &ftb1)?;
+
+    let mut rows: Vec<Row> = Vec::new();
+    for (label, input) in [("ingest_text", &text), ("ingest_ftb1", &ftb1)] {
+        let out = dir.join(format!("{label}.ftb2"));
+        let mut bytes = 0u64;
+        let mut row = measure(label, warmup, reps, || {
+            let stats = ingest_file(input, &out, 8192).expect("ingest");
+            bytes = stats.out_bytes;
+            stats.nnz as f64
+        });
+        row.extra.push(("mentries_per_s".into(), nnz as f64 / row.median_s / 1e6));
+        row.extra.push(("mb_per_s".into(), bytes as f64 / row.median_s / 1e6));
+        rows.push(row);
+    }
+
+    let store = dir.join("ingest_text.ftb2");
+    let paged = PagedTensor::open(&store)?;
+    let order = tensor.order();
+    let mut coords = vec![0u32; order];
+    let mut row = measure("paged_scan", warmup, reps, || {
+        let mut acc = 0f64;
+        for e in 0..TensorView::nnz(&paged) {
+            acc += paged.load_entry(e, &mut coords) as f64;
+        }
+        acc
+    });
+    row.extra.push(("mentries_per_s".into(), nnz as f64 / row.median_s / 1e6));
+    rows.push(row);
+
+    let mut row = measure("ram_scan", warmup, reps, || {
+        let mut acc = 0f64;
+        for e in 0..tensor.nnz() {
+            acc += tensor.load_entry(e, &mut coords) as f64;
+        }
+        acc
+    });
+    row.extra.push(("mentries_per_s".into(), nnz as f64 / row.median_s / 1e6));
+    rows.push(row);
+
+    let (hits, loads) = paged.cache_stats();
+    println!("page cache after scans: {hits} hits / {loads} loads");
+    report(
+        &format!("Ingest + paged-read throughput — netflix-like, {nnz} nnz"),
+        &rows,
+    );
+    Ok(())
+}

@@ -137,10 +137,13 @@ pub trait StepBackend {
     fn set_hyper(&mut self, hyper: Hyper);
 }
 
-/// Build the backend selected by `cfg.backend`.
-pub fn make_backend(train: &SparseTensor, cfg: &TrainConfig) -> Result<Box<dyn StepBackend>> {
+/// Build the backend selected by `cfg.backend`.  Backends only need the
+/// tensor *shape* (`dims`) — entry data reaches them as staged blocks —
+/// so out-of-core sources construct backends without materializing
+/// anything.
+pub fn make_backend(dims: &[u32], cfg: &TrainConfig) -> Result<Box<dyn StepBackend>> {
     match cfg.backend {
-        Backend::Hlo => Ok(Box::new(HloBackend::new(train, cfg)?)),
+        Backend::Hlo => Ok(Box::new(HloBackend::new(dims, cfg)?)),
         Backend::CpuRef => Ok(Box::new(CpuBackend::new(cfg, 1))),
         Backend::ParallelCpu => {
             let workers = if cfg.threads == 0 {
@@ -202,9 +205,9 @@ pub struct HloBackend {
 
 impl HloBackend {
     /// Load and compile the artifacts for the configured
-    /// (algo, variant, strategy).
-    pub fn new(train: &SparseTensor, cfg: &TrainConfig) -> Result<HloBackend> {
-        let n = train.order();
+    /// (algo, variant, strategy), for a tensor of shape `dims`.
+    pub fn new(dims: &[u32], cfg: &TrainConfig) -> Result<HloBackend> {
+        let n = dims.len();
         let v = cfg.variant.suffix();
         let engine = Engine::new(&cfg.artifact_dir)?;
         let (fk, ck) = match (cfg.algo, cfg.strategy) {
@@ -234,8 +237,7 @@ impl HloBackend {
         } else {
             None
         };
-        let c_store = train
-            .dims
+        let c_store = dims
             .iter()
             .map(|&d| vec![0f32; d as usize * cfg.r])
             .collect();

@@ -20,9 +20,10 @@ use anyhow::Result;
 use crate::coordinator::backend::{CoreAccum, Phase, StepBackend};
 use crate::coordinator::config::{Algo, TrainConfig};
 use crate::coordinator::metrics::{time_into, PhaseStats};
+use crate::data::TensorView;
 use crate::model::TuckerModel;
 use crate::sampler::{BlockIter, StagedStream};
-use crate::tensor::{FiberIndex, ModeSliceIndex, SparseTensor};
+use crate::tensor::{FiberIndex, ModeSliceIndex};
 
 /// Seed salt separating the core phase's sample stream from the factor
 /// phase's (kept from the pre-refactor trainer for continuity).
@@ -39,11 +40,14 @@ fn schedule(algo: Algo, order: usize) -> Vec<Option<usize>> {
     }
 }
 
-/// Block source for one pass of one algorithm.
+/// Block source for one pass of one algorithm.  Generic over the data
+/// view: the uniform (Plus) schedule needs only the entry count, so it
+/// streams from an out-of-core store; the grouped schedules read the
+/// prebuilt in-RAM indexes.
 #[allow(clippy::too_many_arguments)]
-fn block_iter<'a>(
+fn block_iter<'a, T: TensorView + ?Sized>(
     algo: Algo,
-    train: &'a SparseTensor,
+    train: &'a T,
     slice_idx: &'a [ModeSliceIndex],
     fiber_idx: &'a [FiberIndex],
     mode: Option<usize>,
@@ -62,12 +66,12 @@ fn block_iter<'a>(
 
 /// Run one phase (factor or core) of one epoch.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn run_phase(
+pub(crate) fn run_phase<T: TensorView + ?Sized>(
     phase: Phase,
     cfg: &TrainConfig,
     backend: &mut dyn StepBackend,
     model: &mut TuckerModel,
-    train: &SparseTensor,
+    train: &T,
     slice_idx: &[ModeSliceIndex],
     fiber_idx: &[FiberIndex],
     epoch_no: u64,

@@ -10,41 +10,48 @@
 //! driver.  The per-epoch [`EpochStats`] remain the Table 6/7 and
 //! Fig. 2/3 measurements.
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::coordinator::backend::{self, Phase, StepBackend};
 use crate::coordinator::config::{Algo, TrainConfig};
 use crate::coordinator::metrics::{EpochStats, PhaseStats};
 use crate::coordinator::phases;
 use crate::cpu_ref;
+use crate::data::TensorView;
 use crate::model::TuckerModel;
 use crate::serve::{ModelSnapshot, Server};
 use crate::tensor::{FiberIndex, ModeSliceIndex, SparseTensor};
+use crate::util::fnv::{FNV_OFFSET, FNV_PRIME};
 
 /// Cheap structural fingerprint of a tensor: dims + nnz + first/last entry
 /// (coords and value bits), FNV-1a mixed.  `epoch()` uses it to reject a
 /// *different* tensor of the same size — the nnz-only check it replaces
-/// accepted any same-cardinality impostor.
-pub fn tensor_fingerprint(t: &SparseTensor) -> u64 {
+/// accepted any same-cardinality impostor.  Generic over [`TensorView`]:
+/// the in-RAM tensor and the paged store view of the same data fingerprint
+/// identically (a paged view reads at most two pages here).
+pub fn tensor_fingerprint<T: TensorView + ?Sized>(t: &T) -> u64 {
     fn mix(h: &mut u64, x: u64) {
         *h ^= x;
-        *h = h.wrapping_mul(0x100_0000_01b3);
+        *h = h.wrapping_mul(FNV_PRIME);
     }
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut h = FNV_OFFSET;
     mix(&mut h, t.order() as u64);
-    for &d in &t.dims {
+    for &d in t.dims() {
         mix(&mut h, d as u64);
     }
     mix(&mut h, t.nnz() as u64);
     if t.nnz() > 0 {
-        for &c in t.coords(0) {
+        let mut coords = vec![0u32; t.order()];
+        let first = t.load_entry(0, &mut coords);
+        for &c in &coords {
             mix(&mut h, c as u64);
         }
-        for &c in t.coords(t.nnz() - 1) {
+        let last = t.load_entry(t.nnz() - 1, &mut coords);
+        for &c in &coords {
             mix(&mut h, c as u64);
         }
-        mix(&mut h, t.values[0].to_bits() as u64);
-        mix(&mut h, t.values[t.nnz() - 1].to_bits() as u64);
+        mix(&mut h, first.to_bits() as u64);
+        mix(&mut h, last.to_bits() as u64);
     }
     h
 }
@@ -69,18 +76,46 @@ impl Trainer {
     /// Build a trainer for `train`.  For the HLO backend this loads and
     /// compiles the artifacts for the configured algorithm; the CPU
     /// backends need no artifacts.
-    pub fn new(train: &SparseTensor, cfg: TrainConfig) -> Result<Trainer> {
-        let n = train.order();
-        let model =
-            TuckerModel::init_with_mean(&train.dims, cfg.j, cfg.r, cfg.seed, train.mean_value());
-        let backend = backend::make_backend(train, &cfg)?;
+    ///
+    /// Generic over [`TensorView`]: an in-RAM [`crate::tensor::SparseTensor`]
+    /// works for every algorithm; an out-of-core view (e.g.
+    /// [`crate::data::PagedTensor`]) works for [`Algo::Plus`], whose
+    /// uniform sampling needs no per-mode index — the baseline algorithms'
+    /// mode-slice/fiber indexes hold O(nnz) entry lists in RAM, which is
+    /// exactly what an out-of-core run avoids, so those reject paged
+    /// sources with an error.
+    pub fn new<T: TensorView + ?Sized>(train: &T, cfg: TrainConfig) -> Result<Trainer> {
+        // block ids are u32 with u32::MAX as the PAD sentinel; reject
+        // larger tensors here so the samplers never silently wrap (an
+        // FTB2 store can carry a u64 nnz)
+        ensure!(
+            train.nnz() < u32::MAX as usize,
+            "tensor has {} entries; the block samplers address at most 2^32 - 2 \
+             (shard the store first)",
+            train.nnz()
+        );
+        let dims = train.dims().to_vec();
+        let n = dims.len();
+        let mean = train.mean_value();
+        let model = TuckerModel::init_with_mean(&dims, cfg.j, cfg.r, cfg.seed, mean);
+        let backend = backend::make_backend(&dims, &cfg)?;
+        let sparse = train.as_sparse();
+        if cfg.algo != Algo::Plus && sparse.is_none() {
+            bail!(
+                "algorithm {} samples through per-mode indexes, which need the tensor \
+                 in RAM; out-of-core stores support the 'plus' algorithm",
+                cfg.algo.name()
+            );
+        }
         let slice_idx = if cfg.algo == Algo::FastTucker {
-            (0..n).map(|m| ModeSliceIndex::build(train, m)).collect()
+            let t = sparse.expect("checked above");
+            (0..n).map(|m| ModeSliceIndex::build(t, m)).collect()
         } else {
             Vec::new()
         };
         let fiber_idx = if matches!(cfg.algo, Algo::FasterTucker | Algo::FasterTuckerCoo) {
-            (0..n).map(|m| FiberIndex::build(train, m)).collect()
+            let t = sparse.expect("checked above");
+            (0..n).map(|m| FiberIndex::build(t, m)).collect()
         } else {
             Vec::new()
         };
@@ -96,7 +131,7 @@ impl Trainer {
     }
 
     /// Run one full iteration (factor phase + core phase) over `train`.
-    pub fn epoch(&mut self, train: &SparseTensor) -> Result<EpochStats> {
+    pub fn epoch<T: TensorView + ?Sized>(&mut self, train: &T) -> Result<EpochStats> {
         ensure!(
             tensor_fingerprint(train) == self.fingerprint,
             "epoch() must receive the tensor the trainer was built for"
@@ -108,7 +143,7 @@ impl Trainer {
     }
 
     /// Factor-matrix update phase only (Table 6a measures this in isolation).
-    pub fn factor_phase(&mut self, train: &SparseTensor) -> Result<PhaseStats> {
+    pub fn factor_phase<T: TensorView + ?Sized>(&mut self, train: &T) -> Result<PhaseStats> {
         phases::run_phase(
             Phase::Factor,
             &self.cfg,
@@ -122,7 +157,7 @@ impl Trainer {
     }
 
     /// Core-matrix update phase only (Table 6b).
-    pub fn core_phase(&mut self, train: &SparseTensor) -> Result<PhaseStats> {
+    pub fn core_phase<T: TensorView + ?Sized>(&mut self, train: &T) -> Result<PhaseStats> {
         phases::run_phase(
             Phase::Core,
             &self.cfg,

@@ -1,0 +1,199 @@
+//! Streaming ingest: text COO or `FTB1` binary → `FTB2` paged store, in
+//! constant memory.
+//!
+//! Raw HOHDST tensors "are impractical due to significant memory
+//! overhead" (the paper's motivation) — so the converter never
+//! materializes the tensor.  Text input is parsed line by line through
+//! [`io::parse_text_into`] straight into a [`StoreWriter`]; `FTB1` input
+//! (whose layout is all-coords-then-all-values) is zipped entry by entry
+//! from two cursors over the same file.  In both cases the resident set
+//! is one section buffer: `peak_buffered` in the returned stats is the
+//! high-water mark the memory-bound tests assert on.
+//!
+//! The writer re-validates every entry (coordinate bounds, finite
+//! values), so a hostile or corrupt input fails with a located error and
+//! a bad store is never produced.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, Read, Seek, SeekFrom};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::store::{StoreMeta, StoreWriter};
+use crate::tensor::io::{self, EntrySink};
+
+/// What one ingest run did.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IngestStats {
+    /// Entries written.
+    pub nnz: u64,
+    /// Sections written.
+    pub pages: u64,
+    /// Bytes of the finished store.
+    pub out_bytes: u64,
+    /// High-water mark of entries buffered in RAM (≤ the page size, by
+    /// construction).
+    pub peak_buffered: usize,
+}
+
+/// Convert `input` (text COO or `FTB1`, sniffed by magic) into an `FTB2`
+/// store at `output` with `page_entries` entries per section.
+pub fn ingest(input: &Path, output: &Path, page_entries: usize) -> Result<IngestStats> {
+    let mut f = File::open(input).with_context(|| format!("open {input:?}"))?;
+    let mut magic = [0u8; 4];
+    let sniffed = match f.read_exact(&mut magic) {
+        Ok(()) => &magic,
+        // shorter than 4 bytes: not a binary format, let the text parser
+        // produce its located error
+        Err(_) => b"\0\0\0\0",
+    };
+    match sniffed {
+        b"FTB1" => ingest_ftb1(input, output, page_entries)
+            .with_context(|| format!("ingesting FTB1 {input:?}")),
+        b"FTB2" => bail!("{input:?} is already an FTB2 store"),
+        _ => {
+            f.seek(SeekFrom::Start(0))?;
+            ingest_text(BufReader::new(f), output, page_entries)
+                .with_context(|| format!("ingesting text {input:?}"))
+        }
+    }
+}
+
+/// Sink adapter: create the store when the `dims` header arrives, then
+/// stream every entry into it.
+struct WriterSink<'a> {
+    output: &'a Path,
+    page_entries: usize,
+    writer: Option<StoreWriter>,
+}
+
+impl EntrySink for WriterSink<'_> {
+    fn on_dims(&mut self, dims: &[u32]) -> Result<()> {
+        self.writer = Some(StoreWriter::create(self.output, dims, self.page_entries)?);
+        Ok(())
+    }
+
+    fn on_entry(&mut self, coords: &[u32], value: f32) -> Result<()> {
+        self.writer
+            .as_mut()
+            .expect("on_dims precedes entries")
+            .push(coords, value)
+    }
+}
+
+/// Stream a text COO reader into a new store (see [`ingest`]).
+pub fn ingest_text<R: BufRead>(
+    reader: R,
+    output: &Path,
+    page_entries: usize,
+) -> Result<IngestStats> {
+    let mut sink = WriterSink {
+        output,
+        page_entries,
+        writer: None,
+    };
+    io::parse_text_into(reader, &mut sink)?;
+    let writer = sink.writer.expect("parse_text_into guarantees a dims header");
+    finish(writer)
+}
+
+fn ingest_ftb1(input: &Path, output: &Path, page_entries: usize) -> Result<IngestStats> {
+    let f = File::open(input)?;
+    let file_len = f.metadata()?.len();
+    let mut coords_r = BufReader::new(f);
+    let header = io::read_ftb1_header(&mut coords_r)?;
+    header.check_len(file_len)?;
+    let n = header.dims.len();
+    // second cursor over the same file, positioned at the values block
+    // (FTB1 is coords-then-values, so a constant-memory conversion zips
+    // two sequential streams instead of loading either side)
+    let mut values_r = BufReader::new(File::open(input)?);
+    values_r.seek(SeekFrom::Start(header.values_offset()))?;
+    let mut writer = StoreWriter::create(output, &header.dims, page_entries)?;
+    let mut cbuf = vec![0u8; n * 4];
+    let mut coords = vec![0u32; n];
+    let mut vbuf = [0u8; 4];
+    for e in 0..header.nnz {
+        coords_r
+            .read_exact(&mut cbuf)
+            .with_context(|| format!("entry {e}: coords"))?;
+        for (c, b) in coords.iter_mut().zip(cbuf.chunks_exact(4)) {
+            *c = u32::from_le_bytes(b.try_into().unwrap());
+        }
+        values_r
+            .read_exact(&mut vbuf)
+            .with_context(|| format!("entry {e}: value"))?;
+        writer.push(&coords, f32::from_le_bytes(vbuf))?;
+    }
+    finish(writer)
+}
+
+fn finish(writer: StoreWriter) -> Result<IngestStats> {
+    let peak_buffered = writer.peak_buffered();
+    let meta: StoreMeta = writer.finish()?;
+    Ok(IngestStats {
+        nnz: meta.nnz,
+        pages: meta.num_pages(),
+        out_bytes: meta.file_len()?,
+        peak_buffered,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::store::read_store;
+    use crate::tensor::io::{toy_dataset, write_binary, write_text};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("ft_ingest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn text_and_ftb1_ingest_agree_bitwise() {
+        let t = toy_dataset();
+        let text = tmp("toy.coo");
+        let ftb1 = tmp("toy.ftb");
+        write_text(&t, &text).unwrap();
+        write_binary(&t, &ftb1).unwrap();
+        let s1 = ingest(&text, &tmp("from_text.ftb2"), 7).unwrap();
+        let s2 = ingest(&ftb1, &tmp("from_ftb1.ftb2"), 7).unwrap();
+        assert_eq!(s1.nnz, t.nnz() as u64);
+        assert_eq!(s1, s2);
+        let a = read_store(&tmp("from_text.ftb2")).unwrap();
+        let b = read_store(&tmp("from_ftb1.ftb2")).unwrap();
+        assert_eq!(a.indices, b.indices);
+        assert_eq!(a.values, b.values);
+        assert_eq!(a.indices, t.indices);
+        assert_eq!(a.values, t.values); // text round-trip is value-exact
+    }
+
+    #[test]
+    fn ingest_rejects_bad_inputs() {
+        let bad = tmp("bad.coo");
+        std::fs::write(&bad, "dims 4 4\n0 0 not_a_number\n").unwrap();
+        let err = ingest(&bad, &tmp("bad.ftb2"), 8).unwrap_err();
+        assert!(format!("{err:#}").contains("line 2"), "{err:#}");
+        // a failed ingest must not leave anything at the destination —
+        // the writer works on a .tmp sibling until finish() renames it
+        assert!(!tmp("bad.ftb2").exists(), "failed ingest left a store behind");
+        // re-ingesting a store is an error, not a silent copy
+        let t = toy_dataset();
+        let store = tmp("already.ftb2");
+        crate::data::store::write_store(&t, &store, 8).unwrap();
+        assert!(ingest(&store, &tmp("twice.ftb2"), 8).is_err());
+    }
+
+    #[test]
+    fn memory_is_bounded_by_the_page() {
+        let t = toy_dataset(); // 64 entries
+        let text = tmp("bound.coo");
+        write_text(&t, &text).unwrap();
+        let stats = ingest(&text, &tmp("bound.ftb2"), 5).unwrap();
+        assert!(stats.peak_buffered <= 5, "peak {}", stats.peak_buffered);
+        assert_eq!(stats.pages, (t.nnz() as u64).div_ceil(5));
+    }
+}

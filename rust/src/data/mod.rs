@@ -1,0 +1,30 @@
+//! The out-of-core data layer: how tensors too large for RAM reach the
+//! trainer.
+//!
+//! Three pieces (ARCHITECTURE.md §The data layer has the diagram):
+//!
+//! * [`store`] — the `FTB2` on-disk format: a checksummed header plus
+//!   fixed-size sections of entry-major coordinates + values, sized so
+//!   one section lines up with the sampler's block size.  Includes the
+//!   constant-memory [`store::StoreWriter`] and whole-file verify /
+//!   materialize helpers.
+//! * [`ingest`] — streaming converters (text COO and `FTB1` → `FTB2`)
+//!   whose resident set is one section, by construction.
+//! * [`view`] / [`paged`] — the [`TensorView`] trait the staging pipeline
+//!   gathers through, with the in-RAM [`crate::tensor::SparseTensor`]
+//!   and the LRU-paged [`PagedTensor`] as its two implementations.
+//!
+//! End to end: `fasttucker ingest --input big.coo --out big.ftb2` then
+//! `fasttucker train --store big.ftb2` trains FastTuckerPlus without ever
+//! holding the tensor in RAM, on a block stream bit-identical to the
+//! in-RAM run's (pinned by `tests/data_pipeline.rs`).
+
+pub mod ingest;
+pub mod paged;
+pub mod store;
+pub mod view;
+
+pub use ingest::{ingest as ingest_file, IngestStats};
+pub use paged::PagedTensor;
+pub use store::{StoreMeta, StoreWriter};
+pub use view::TensorView;

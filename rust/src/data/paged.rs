@@ -1,0 +1,277 @@
+//! [`PagedTensor`]: an out-of-core [`TensorView`] over an FTB2 store.
+//!
+//! The training loop's access pattern is random *within an epoch* (the
+//! sampler shuffles entry ids) but strongly block-local: one staged block
+//! gathers `S` consecutive slots of the shuffled id list, and with the
+//! store's default page size equal to the CPU block size the working set
+//! at any instant is a handful of sections.  So the reader keeps a small
+//! LRU of decoded-on-demand page buffers (recycled through
+//! [`BufferPool`]) and serves every gather with positioned reads
+//! (`read_at`-style, no seek state), which also makes it safe to share
+//! across the staging producer thread.
+//!
+//! Memory is bounded by `cache_pages * page_bytes` regardless of tensor
+//! size — the whole point of the store.  [`PagedTensor::open`] verifies
+//! every section checksum up front (one sequential constant-memory pass),
+//! so the infallible [`TensorView::load_entry`] hot path only re-checks
+//! the checksum of each page it faults in; a mismatch there means the
+//! file changed underneath a live run and panics with a clear message.
+
+use std::fs::File;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::data::store::{self, StoreMeta};
+use crate::data::view::TensorView;
+use crate::util::fnv::fnv1a;
+use crate::util::pool::BufferPool;
+
+/// Default number of cached pages (× the default page size ≈ a few MB).
+pub const DEFAULT_CACHE_PAGES: usize = 8;
+
+/// Out-of-core sparse tensor backed by a verified FTB2 store.
+pub struct PagedTensor {
+    file: File,
+    path: PathBuf,
+    meta: StoreMeta,
+    cache: Mutex<PageCache>,
+}
+
+struct PageCache {
+    cap: usize,
+    clock: u64,
+    slots: Vec<Slot>,
+    pool: BufferPool,
+    hits: u64,
+    loads: u64,
+}
+
+struct Slot {
+    page: u64,
+    last_use: u64,
+    /// Raw section bytes (payload + trailing checksum), decoded per access.
+    bytes: Vec<u8>,
+}
+
+impl PagedTensor {
+    /// Open `path`, verifying the header, the exact file length and every
+    /// section checksum, with the default cache size.
+    pub fn open(path: &Path) -> Result<PagedTensor> {
+        PagedTensor::open_with_cache(path, DEFAULT_CACHE_PAGES)
+    }
+
+    /// Like [`PagedTensor::open`] with an explicit page-cache capacity
+    /// (≥ 1).  Tests use tiny capacities to force eviction traffic.
+    pub fn open_with_cache(path: &Path, cache_pages: usize) -> Result<PagedTensor> {
+        let (file, meta) = store::verify_store(path)?;
+        Ok(PagedTensor {
+            file,
+            path: path.to_path_buf(),
+            meta,
+            cache: Mutex::new(PageCache {
+                cap: cache_pages.max(1),
+                clock: 0,
+                slots: Vec::new(),
+                pool: BufferPool::new(),
+                hits: 0,
+                loads: 0,
+            }),
+        })
+    }
+
+    /// The store's parsed header.
+    pub fn meta(&self) -> &StoreMeta {
+        &self.meta
+    }
+
+    /// The path this tensor pages from.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Page-cache counters since open: `(hits, loads)`.  A sequential
+    /// scan shows ~one load per page; the shuffled training stream shows
+    /// the locality the block/page alignment buys.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        let c = self.cache.lock().unwrap();
+        (c.hits, c.loads)
+    }
+}
+
+impl TensorView for PagedTensor {
+    fn dims(&self) -> &[u32] {
+        &self.meta.dims
+    }
+
+    fn nnz(&self) -> usize {
+        self.meta.nnz as usize
+    }
+
+    fn load_entry(&self, e: usize, out: &mut [u32]) -> f32 {
+        assert!(
+            e < self.meta.nnz as usize,
+            "entry {e} out of range (nnz {})",
+            self.meta.nnz
+        );
+        let n = self.meta.order();
+        debug_assert_eq!(out.len(), n);
+        let page = e as u64 / self.meta.page_entries as u64;
+        let slot = e % self.meta.page_entries;
+        let mut cache = self.cache.lock().unwrap();
+        let bytes = cache.fetch(page, &self.file, &self.path, &self.meta);
+        let base = slot * n * 4;
+        for (m, c) in out.iter_mut().enumerate() {
+            let at = base + m * 4;
+            *c = u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap());
+        }
+        let vat = self.meta.page_len(page) * n * 4 + slot * 4;
+        f32::from_le_bytes(bytes[vat..vat + 4].try_into().unwrap())
+    }
+
+    fn mean_value(&self) -> f32 {
+        self.meta.mean_value()
+    }
+}
+
+impl std::fmt::Debug for PagedTensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PagedTensor")
+            .field("path", &self.path)
+            .field("dims", &self.meta.dims)
+            .field("nnz", &self.meta.nnz)
+            .field("page_entries", &self.meta.page_entries)
+            .finish()
+    }
+}
+
+impl PageCache {
+    /// Return the cached bytes of `page`, faulting it in (and evicting
+    /// the least-recently-used slot) on a miss.
+    fn fetch(&mut self, page: u64, file: &File, path: &Path, meta: &StoreMeta) -> &[u8] {
+        self.clock += 1;
+        if let Some(i) = self.slots.iter().position(|s| s.page == page) {
+            self.slots[i].last_use = self.clock;
+            self.hits += 1;
+            return &self.slots[i].bytes;
+        }
+        self.loads += 1;
+        let len = meta.page_payload_bytes(page);
+        let mut bytes = self.pool.take(len + 8);
+        read_exact_at(file, &mut bytes, meta.page_offset(page)).unwrap_or_else(|e| {
+            panic!("{path:?}: reading FTB2 section {page} failed mid-run: {e}")
+        });
+        let stored = u64::from_le_bytes(bytes[len..].try_into().unwrap());
+        assert_eq!(
+            fnv1a(&bytes[..len]),
+            stored,
+            "{path:?}: FTB2 section {page} checksum mismatch \
+             (store modified while mapped?)"
+        );
+        let slot = Slot {
+            page,
+            last_use: self.clock,
+            bytes,
+        };
+        if self.slots.len() >= self.cap {
+            let (i, _) = self
+                .slots
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, s)| s.last_use)
+                .expect("cache capacity is >= 1");
+            let old = std::mem::replace(&mut self.slots[i], slot);
+            self.pool.put(old.bytes);
+            &self.slots[i].bytes
+        } else {
+            self.slots.push(slot);
+            &self.slots.last().expect("just pushed").bytes
+        }
+    }
+}
+
+/// Positioned read that leaves no shared seek state (safe under the
+/// staging producer thread and any concurrent readers).
+#[cfg(unix)]
+fn read_exact_at(file: &File, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
+    use std::os::unix::fs::FileExt;
+    file.read_exact_at(buf, offset)
+}
+
+/// Positioned read via `seek_read` (Windows moves the cursor, which is
+/// fine: every access goes through this helper with absolute offsets).
+#[cfg(windows)]
+fn read_exact_at(file: &File, mut buf: &mut [u8], mut offset: u64) -> std::io::Result<()> {
+    use std::os::windows::fs::FileExt;
+    while !buf.is_empty() {
+        match file.seek_read(buf, offset) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "unexpected end of store",
+                ))
+            }
+            Ok(k) => {
+                buf = &mut buf[k..];
+                offset += k as u64;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::store::write_store;
+    use crate::tensor::io::toy_dataset;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("ft_paged_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn paged_matches_ram_under_eviction_pressure() {
+        let t = toy_dataset();
+        let p = tmp("toy.ftb2");
+        write_store(&t, &p, 5).unwrap();
+        // capacity 2 over ceil(64/5) = 13 pages: plenty of eviction
+        let paged = PagedTensor::open_with_cache(&p, 2).unwrap();
+        assert_eq!(paged.dims(), &t.dims[..]);
+        assert_eq!(TensorView::nnz(&paged), t.nnz());
+        let n = t.order();
+        let mut c = vec![0u32; n];
+        // a deliberately cache-hostile access order
+        for round in 0..3 {
+            for e in (0..t.nnz()).rev().chain(0..t.nnz()) {
+                let v = paged.load_entry(e, &mut c);
+                assert_eq!(&c[..], t.coords(e), "round {round} entry {e}");
+                assert_eq!(v.to_bits(), t.values[e].to_bits());
+            }
+        }
+        let (hits, loads) = paged.cache_stats();
+        assert!(loads > 13, "eviction never happened (loads {loads})");
+        assert!(hits > 0);
+        assert_eq!(paged.mean_value().to_bits(), t.mean_value().to_bits());
+        assert!(TensorView::as_sparse(&paged).is_none());
+    }
+
+    #[test]
+    fn sequential_scan_loads_each_page_once() {
+        let t = toy_dataset();
+        let p = tmp("seq.ftb2");
+        let meta = write_store(&t, &p, 16).unwrap();
+        let paged = PagedTensor::open(&p).unwrap();
+        let mut c = vec![0u32; t.order()];
+        for e in 0..t.nnz() {
+            paged.load_entry(e, &mut c);
+        }
+        let (_, loads) = paged.cache_stats();
+        assert_eq!(loads, meta.num_pages());
+    }
+}

@@ -1,0 +1,525 @@
+//! The `FTB2` on-disk tensor store: a paged, checksummed binary layout for
+//! HOHDST tensors too large to hold in RAM.
+//!
+//! ## Layout (all integers little-endian)
+//!
+//! ```text
+//! offset            field
+//! 0                 magic  b"FTB2"
+//! 4                 version        u32 (currently 1)
+//! 8                 order N        u32 (2..=16)
+//! 12                page entries P u32 (entries per section, 1..=2^22)
+//! 16                nnz            u64
+//! 24                value sum      f64 bit pattern (sum of values as f64,
+//!                                  accumulated in entry order)
+//! 32                dims           u32 x N
+//! 32 + 4N           header checksum  u64 FNV-1a over bytes [0, 32 + 4N)
+//! --- then ceil(nnz / P) sections, section p holding the L_p = min(P,
+//!     nnz - pP) entries [pP, pP + L_p):
+//! ...               coords         u32 x (L_p * N), entry-major
+//! ...               values         f32 x L_p
+//! ...               section checksum u64 FNV-1a over the section payload
+//! ```
+//!
+//! Every section before the last is full, so section offsets are pure
+//! arithmetic — the paged reader seeks straight to a section with one
+//! `read_at`, no index required.  The default page size equals the CPU
+//! backend's sampler block size `S`
+//! ([`crate::coordinator::backend::CPU_BLOCK_S`]), so one page fault per
+//! uniformly-sampled block is the expected steady state.
+//!
+//! Every byte of the file is covered by a checksum (header bytes by the
+//! header checksum, payload bytes by their section checksum, and the
+//! checksum fields by their own mismatch), and the header additionally
+//! pins the exact file length — so truncation, trailing garbage and any
+//! single-bit flip are all detected by [`open_store`] / [`verify_store`]
+//! (pinned by a bit-flip sweep test over a golden fixture).
+
+use std::fs::File;
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::tensor::SparseTensor;
+use crate::util::fnv::fnv1a;
+
+/// Magic bytes of the paged store format.
+pub const MAGIC: &[u8; 4] = b"FTB2";
+
+/// Current store format version.
+pub const VERSION: u32 = 1;
+
+/// Default entries per section — the CPU backend's sampler block size, so
+/// a staged block touches one page in the sequential limit.
+pub const DEFAULT_PAGE_ENTRIES: usize = crate::coordinator::backend::CPU_BLOCK_S;
+
+/// Largest accepted entries-per-section (keeps one page buffer small
+/// enough to be "a chunk", not "the dataset").
+pub const MAX_PAGE_ENTRIES: usize = 1 << 22;
+
+/// Parsed FTB2 header: everything needed to address and verify sections.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StoreMeta {
+    /// Dimension sizes `I_n`, length N.
+    pub dims: Vec<u32>,
+    /// Entries per section (all sections except the last hold exactly
+    /// this many).
+    pub page_entries: usize,
+    /// Total stored entries.
+    pub nnz: u64,
+    /// Sum of all values, accumulated as `f64` in entry order (the
+    /// constant-memory analog of [`SparseTensor::mean_value`]'s sum).
+    pub value_sum: f64,
+}
+
+impl StoreMeta {
+    /// Tensor order N.
+    pub fn order(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Header length in bytes (magic through header checksum).
+    pub fn header_len(&self) -> u64 {
+        40 + 4 * self.dims.len() as u64
+    }
+
+    /// Number of sections.
+    pub fn num_pages(&self) -> u64 {
+        self.nnz.div_ceil(self.page_entries as u64)
+    }
+
+    /// Entries held by section `page` (full except possibly the last).
+    pub fn page_len(&self, page: u64) -> usize {
+        let lo = page * self.page_entries as u64;
+        debug_assert!(lo < self.nnz || (self.nnz == 0 && page == 0));
+        (self.nnz - lo).min(self.page_entries as u64) as usize
+    }
+
+    /// Payload bytes of section `page` (coords + values, no checksum).
+    pub fn page_payload_bytes(&self, page: u64) -> usize {
+        self.page_len(page) * (self.order() + 1) * 4
+    }
+
+    /// Absolute file offset of section `page`.
+    pub fn page_offset(&self, page: u64) -> u64 {
+        let full = (self.page_entries * (self.order() + 1) * 4 + 8) as u64;
+        self.header_len() + page * full
+    }
+
+    /// Exact file length this header implies, with overflow-checked
+    /// arithmetic so a hostile `nnz` cannot wrap into a plausible size.
+    pub fn file_len(&self) -> Result<u64> {
+        let per_entry = (self.order() as u64 + 1) * 4;
+        let payload = self
+            .nnz
+            .checked_mul(per_entry)
+            .ok_or_else(|| anyhow!("nnz {} overflows the addressable payload", self.nnz))?;
+        self.header_len()
+            .checked_add(payload)
+            .and_then(|x| x.checked_add(self.num_pages() * 8))
+            .ok_or_else(|| anyhow!("store length overflows u64"))
+    }
+
+    /// Mean of the stored values — bit-identical to
+    /// [`SparseTensor::mean_value`] on the same data because both divide
+    /// the same in-order `f64` sum.
+    pub fn mean_value(&self) -> f32 {
+        if self.nnz == 0 {
+            return 0.0;
+        }
+        (self.value_sum / self.nnz as f64) as f32
+    }
+
+    /// Serialize the header, including its trailing checksum.
+    pub fn header_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.header_len() as usize);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.order() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.page_entries as u32).to_le_bytes());
+        out.extend_from_slice(&self.nnz.to_le_bytes());
+        out.extend_from_slice(&self.value_sum.to_bits().to_le_bytes());
+        for &d in &self.dims {
+            out.extend_from_slice(&d.to_le_bytes());
+        }
+        let sum = fnv1a(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+}
+
+fn read_exact<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<()> {
+    match r.read_exact(buf) {
+        Ok(()) => Ok(()),
+        Err(e) => Err(anyhow!("store truncated: {e}")),
+    }
+}
+
+/// Read and verify an FTB2 header from `r` (checksum + sanity ranges; the
+/// caller checks the file length against [`StoreMeta::file_len`]).
+pub fn read_header<R: Read>(r: &mut R) -> Result<StoreMeta> {
+    let mut fixed = [0u8; 16];
+    read_exact(r, &mut fixed)?;
+    ensure!(&fixed[0..4] == MAGIC, "not an FTB2 store (bad magic)");
+    let version = u32::from_le_bytes(fixed[4..8].try_into().unwrap());
+    ensure!(version == VERSION, "unsupported FTB2 version {version}");
+    let order = u32::from_le_bytes(fixed[8..12].try_into().unwrap()) as usize;
+    ensure!((2..=16).contains(&order), "implausible order {order}");
+    let page_entries = u32::from_le_bytes(fixed[12..16].try_into().unwrap()) as usize;
+    ensure!(
+        (1..=MAX_PAGE_ENTRIES).contains(&page_entries),
+        "implausible page size {page_entries}"
+    );
+    let mut rest = vec![0u8; 16 + 4 * order + 8];
+    read_exact(r, &mut rest)?;
+    let (body, tail) = rest.split_at(16 + 4 * order);
+    let nnz = u64::from_le_bytes(body[0..8].try_into().unwrap());
+    let value_sum = f64::from_bits(u64::from_le_bytes(body[8..16].try_into().unwrap()));
+    let dims: Vec<u32> = body[16..]
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let stored = u64::from_le_bytes(tail.try_into().unwrap());
+    let mut header = fixed.to_vec();
+    header.extend_from_slice(body);
+    ensure!(
+        fnv1a(&header) == stored,
+        "FTB2 header checksum mismatch (corrupt or truncated store)"
+    );
+    ensure!(
+        nnz == 0 || value_sum.is_finite(),
+        "FTB2 header carries a non-finite value sum"
+    );
+    Ok(StoreMeta {
+        dims,
+        page_entries,
+        nnz,
+        value_sum,
+    })
+}
+
+/// Open a store and verify its header and exact file length.  Section
+/// payloads are *not* scanned — [`verify_store`] does that.
+pub fn open_store(path: &Path) -> Result<(File, StoreMeta)> {
+    let mut f = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let meta = read_header(&mut f).with_context(|| format!("{path:?}"))?;
+    let want = meta.file_len()?;
+    let stat = f.metadata().with_context(|| format!("stat {path:?}"))?;
+    let have = stat.len();
+    ensure!(
+        have == want,
+        "{path:?}: header implies {want} bytes but the file has {have} \
+         (truncated or corrupt store)"
+    );
+    Ok((f, meta))
+}
+
+/// Open a store and verify every section checksum with one sequential,
+/// constant-memory pass (one page buffer).  This is what
+/// [`crate::data::PagedTensor::open`] runs, so any store that reaches the
+/// training loop is known-good end to end.
+pub fn verify_store(path: &Path) -> Result<(File, StoreMeta)> {
+    let (mut f, meta) = open_store(path)?;
+    let mut payload = vec![0u8; meta.page_payload_bytes(0).max(1)];
+    let mut tail = [0u8; 8];
+    for page in 0..meta.num_pages() {
+        let len = meta.page_payload_bytes(page);
+        read_exact(&mut f, &mut payload[..len])
+            .with_context(|| format!("{path:?}: section {page}"))?;
+        read_exact(&mut f, &mut tail).with_context(|| format!("{path:?}: section {page}"))?;
+        ensure!(
+            fnv1a(&payload[..len]) == u64::from_le_bytes(tail),
+            "{path:?}: section {page} checksum mismatch (corrupt store)"
+        );
+    }
+    Ok((f, meta))
+}
+
+/// Materialize a whole store into RAM (checksums verified).  This is the
+/// `read_auto` path for small `.ftb2` files; large tensors should stay
+/// paged through [`crate::data::PagedTensor`] instead.
+pub fn read_store(path: &Path) -> Result<SparseTensor> {
+    let (mut f, meta) = open_store(path)?;
+    let n = meta.order();
+    let mut t = SparseTensor::new(meta.dims.clone());
+    t.indices.reserve(meta.nnz as usize * n);
+    t.values.reserve(meta.nnz as usize);
+    let mut payload = vec![0u8; meta.page_payload_bytes(0).max(1)];
+    let mut tail = [0u8; 8];
+    for page in 0..meta.num_pages() {
+        let len = meta.page_payload_bytes(page);
+        read_exact(&mut f, &mut payload[..len])
+            .with_context(|| format!("{path:?}: section {page}"))?;
+        read_exact(&mut f, &mut tail).with_context(|| format!("{path:?}: section {page}"))?;
+        ensure!(
+            fnv1a(&payload[..len]) == u64::from_le_bytes(tail),
+            "{path:?}: section {page} checksum mismatch (corrupt store)"
+        );
+        let entries = meta.page_len(page);
+        let (coords, values) = payload[..len].split_at(entries * n * 4);
+        for c in coords.chunks_exact(4) {
+            t.indices.push(u32::from_le_bytes(c.try_into().unwrap()));
+        }
+        for v in values.chunks_exact(4) {
+            t.values.push(f32::from_le_bytes(v.try_into().unwrap()));
+        }
+    }
+    t.validate().with_context(|| format!("{path:?}"))?;
+    Ok(t)
+}
+
+/// Streaming FTB2 writer with memory bounded by one section.
+///
+/// `push` buffers at most `page_entries` entries before flushing a
+/// checksummed section to disk, so ingesting an arbitrarily large tensor
+/// holds O(page) memory by construction (the ingest tests assert the
+/// tracked [`StoreWriter::peak_buffered`] never exceeds the page size).
+/// The header is written as a placeholder at create time and patched with
+/// the final `nnz` / value sum / checksum in [`StoreWriter::finish`].
+///
+/// Like the FTCK checkpoint writer, all bytes go to a sibling `*.tmp`
+/// file that [`StoreWriter::finish`] fsyncs and renames into place — an
+/// ingest that errors out (or a crash mid-write) never leaves a
+/// plausible-looking store at the destination path, only a `.tmp`.
+pub struct StoreWriter {
+    w: BufWriter<File>,
+    path: std::path::PathBuf,
+    tmp: std::path::PathBuf,
+    dims: Vec<u32>,
+    page_entries: usize,
+    coords: Vec<u32>,
+    values: Vec<f32>,
+    scratch: Vec<u8>,
+    nnz: u64,
+    value_sum: f64,
+    pages: u64,
+    peak_buffered: usize,
+}
+
+impl StoreWriter {
+    /// Create `path` and write a placeholder header.  `dims` must have
+    /// 2..=16 modes; `page_entries` must be in `1..=MAX_PAGE_ENTRIES`.
+    pub fn create(path: &Path, dims: &[u32], page_entries: usize) -> Result<StoreWriter> {
+        ensure!(
+            (2..=16).contains(&dims.len()),
+            "FTB2 stores hold tensors of order 2..=16, got {}",
+            dims.len()
+        );
+        ensure!(
+            (1..=MAX_PAGE_ENTRIES).contains(&page_entries),
+            "page size {page_entries} out of range 1..={MAX_PAGE_ENTRIES}"
+        );
+        let name = path
+            .file_name()
+            .with_context(|| format!("store path {path:?} has no file name"))?;
+        let tmp = path.with_file_name(format!("{}.tmp", name.to_string_lossy()));
+        let file = File::create(&tmp).with_context(|| format!("create {tmp:?}"))?;
+        let mut w = BufWriter::new(file);
+        let placeholder = StoreMeta {
+            dims: dims.to_vec(),
+            page_entries,
+            nnz: 0,
+            value_sum: 0.0,
+        };
+        w.write_all(&placeholder.header_bytes())
+            .with_context(|| format!("write {tmp:?}"))?;
+        let n = dims.len();
+        Ok(StoreWriter {
+            w,
+            path: path.to_path_buf(),
+            tmp,
+            dims: dims.to_vec(),
+            page_entries,
+            coords: Vec::with_capacity(page_entries * n),
+            values: Vec::with_capacity(page_entries),
+            scratch: Vec::with_capacity(page_entries * (n + 1) * 4),
+            nnz: 0,
+            value_sum: 0.0,
+            pages: 0,
+            peak_buffered: 0,
+        })
+    }
+
+    /// Append one entry.  Coordinates are bounds-checked against the dims
+    /// and the value must be finite, so every store on disk satisfies the
+    /// [`SparseTensor::validate`] invariants by construction.
+    pub fn push(&mut self, coords: &[u32], value: f32) -> Result<()> {
+        ensure!(
+            coords.len() == self.dims.len(),
+            "entry {}: expected {} coordinates, got {}",
+            self.nnz,
+            self.dims.len(),
+            coords.len()
+        );
+        for (m, (&c, &d)) in coords.iter().zip(&self.dims).enumerate() {
+            ensure!(
+                c < d,
+                "entry {}: mode-{m} index {c} out of bounds (dim {d})",
+                self.nnz
+            );
+        }
+        ensure!(
+            value.is_finite(),
+            "entry {}: non-finite value {value}",
+            self.nnz
+        );
+        self.coords.extend_from_slice(coords);
+        self.values.push(value);
+        self.nnz += 1;
+        self.value_sum += value as f64;
+        self.peak_buffered = self.peak_buffered.max(self.values.len());
+        if self.values.len() == self.page_entries {
+            self.flush_page()?;
+        }
+        Ok(())
+    }
+
+    fn flush_page(&mut self) -> Result<()> {
+        if self.values.is_empty() {
+            return Ok(());
+        }
+        self.scratch.clear();
+        for &c in &self.coords {
+            self.scratch.extend_from_slice(&c.to_le_bytes());
+        }
+        for &v in &self.values {
+            self.scratch.extend_from_slice(&v.to_le_bytes());
+        }
+        let sum = fnv1a(&self.scratch);
+        self.w.write_all(&self.scratch)?;
+        self.w.write_all(&sum.to_le_bytes())?;
+        self.pages += 1;
+        self.coords.clear();
+        self.values.clear();
+        Ok(())
+    }
+
+    /// Largest number of entries ever buffered in RAM (tests assert this
+    /// never exceeds the page size — the constant-memory contract).
+    pub fn peak_buffered(&self) -> usize {
+        self.peak_buffered
+    }
+
+    /// Entries pushed so far.
+    pub fn nnz(&self) -> u64 {
+        self.nnz
+    }
+
+    /// Sections flushed so far (a partial tail section flushes in
+    /// [`StoreWriter::finish`]).
+    pub fn pages(&self) -> u64 {
+        self.pages
+    }
+
+    /// Flush the tail section, patch the header with the final counts and
+    /// checksum, fsync, and rename the `.tmp` file into place.  Returns
+    /// the finished store's metadata.
+    pub fn finish(mut self) -> Result<StoreMeta> {
+        self.flush_page()?;
+        self.w.flush()?;
+        let mut f = self
+            .w
+            .into_inner()
+            .map_err(|e| anyhow!("finalize store: {}", e.error()))?;
+        let meta = StoreMeta {
+            dims: self.dims,
+            page_entries: self.page_entries,
+            nnz: self.nnz,
+            value_sum: self.value_sum,
+        };
+        f.seek(SeekFrom::Start(0))?;
+        f.write_all(&meta.header_bytes())?;
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&self.tmp, &self.path)
+            .with_context(|| format!("rename {:?} -> {:?}", self.tmp, self.path))?;
+        Ok(meta)
+    }
+}
+
+/// Write an in-RAM tensor as an FTB2 store (entry order preserved).
+pub fn write_store(t: &SparseTensor, path: &Path, page_entries: usize) -> Result<StoreMeta> {
+    let mut w = StoreWriter::create(path, &t.dims, page_entries)?;
+    for e in 0..t.nnz() {
+        w.push(t.coords(e), t.values[e])?;
+    }
+    w.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::io::toy_dataset;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("ft_store_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_exact_across_page_sizes() {
+        let t = toy_dataset();
+        for page in [1usize, 3, 16, 64, 4096] {
+            let p = tmp(&format!("toy_{page}.ftb2"));
+            let meta = write_store(&t, &p, page).unwrap();
+            assert_eq!(meta.nnz, t.nnz() as u64);
+            assert_eq!(meta.num_pages(), (t.nnz() as u64).div_ceil(page as u64));
+            assert_eq!(meta.file_len().unwrap(), std::fs::metadata(&p).unwrap().len());
+            verify_store(&p).unwrap();
+            let u = read_store(&p).unwrap();
+            assert_eq!(u.dims, t.dims);
+            assert_eq!(u.indices, t.indices);
+            assert_eq!(u.values, t.values);
+        }
+    }
+
+    #[test]
+    fn mean_matches_in_ram_bitwise() {
+        let t = toy_dataset();
+        let p = tmp("mean.ftb2");
+        let meta = write_store(&t, &p, 7).unwrap();
+        assert_eq!(meta.mean_value().to_bits(), t.mean_value().to_bits());
+    }
+
+    #[test]
+    fn writer_rejects_invalid_entries() {
+        let p = tmp("invalid.ftb2");
+        let mut w = StoreWriter::create(&p, &[4, 4], 8).unwrap();
+        assert!(w.push(&[0, 4], 1.0).is_err()); // out of bounds
+        assert!(w.push(&[0], 1.0).is_err()); // arity
+        assert!(w.push(&[0, 0], f32::NAN).is_err()); // non-finite
+        w.push(&[0, 0], 1.0).unwrap();
+        w.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_and_garbage_detected() {
+        let t = toy_dataset();
+        let p = tmp("trunc.ftb2");
+        write_store(&t, &p, 16).unwrap();
+        let good = std::fs::read(&p).unwrap();
+        let bad = tmp("trunc_bad.ftb2");
+        std::fs::write(&bad, &good[..good.len() - 3]).unwrap();
+        assert!(open_store(&bad).is_err());
+        let mut trailing = good.clone();
+        trailing.extend_from_slice(b"junk");
+        std::fs::write(&bad, &trailing).unwrap();
+        assert!(open_store(&bad).is_err());
+        std::fs::write(&bad, b"FTB2").unwrap();
+        assert!(open_store(&bad).is_err());
+    }
+
+    #[test]
+    fn empty_store_roundtrips() {
+        let p = tmp("empty.ftb2");
+        let w = StoreWriter::create(&p, &[3, 3, 3], 8).unwrap();
+        let meta = w.finish().unwrap();
+        assert_eq!(meta.nnz, 0);
+        assert_eq!(meta.num_pages(), 0);
+        let u = read_store(&p).unwrap();
+        assert_eq!(u.nnz(), 0);
+        assert_eq!(u.dims, vec![3, 3, 3]);
+    }
+}

@@ -1,0 +1,93 @@
+//! [`TensorView`]: the read abstraction the sampling/staging pipeline
+//! consumes, implemented by both the in-RAM [`SparseTensor`] and the paged
+//! out-of-core [`crate::data::PagedTensor`].
+//!
+//! The training hot path only ever needs three things from the data: the
+//! shape, the entry count, and random-access gathers of `(coords, value)`
+//! by entry id (the ids come from the sampler's shuffled schedule).  This
+//! trait captures exactly that surface, so
+//! [`crate::sampler::stream::stage`], the phase driver and the
+//! [`crate::coordinator::Trainer`] are generic over where the entries
+//! live — RAM or a checksummed on-disk store paged in on demand.
+
+use crate::tensor::SparseTensor;
+
+/// Read-only view of a sparse COO tensor, addressable by entry id.
+///
+/// `Sync` is a supertrait because the staging producer
+/// ([`crate::sampler::StagedStream`]) gathers entries from a scoped
+/// thread while the consumer executes the previous block.
+pub trait TensorView: Sync {
+    /// Dimension sizes `I_n`, length N.
+    fn dims(&self) -> &[u32];
+
+    /// Number of stored (observed) entries.
+    fn nnz(&self) -> usize;
+
+    /// Copy entry `e`'s coordinates into `out` (length N) and return its
+    /// value.  `e` must be `< nnz()`; `out` must have length `order()`.
+    fn load_entry(&self, e: usize, out: &mut [u32]) -> f32;
+
+    /// Mean of the stored values.  Implementations must accumulate in
+    /// `f64` over entries in id order, so the in-RAM and out-of-core
+    /// views of the same data agree bit-for-bit (the model init consumes
+    /// this, and trajectory parity depends on it).
+    fn mean_value(&self) -> f32;
+
+    /// Tensor order N.
+    fn order(&self) -> usize {
+        self.dims().len()
+    }
+
+    /// The in-RAM tensor behind this view, when there is one.  The
+    /// per-mode sampling indexes (mode-slice and fiber grouping) hold
+    /// O(nnz) entry lists and are only built from RAM; callers that need
+    /// them use this to reject out-of-core sources with a clear error.
+    fn as_sparse(&self) -> Option<&SparseTensor> {
+        None
+    }
+}
+
+impl TensorView for SparseTensor {
+    fn dims(&self) -> &[u32] {
+        &self.dims
+    }
+
+    fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    fn load_entry(&self, e: usize, out: &mut [u32]) -> f32 {
+        out.copy_from_slice(self.coords(e));
+        self.values[e]
+    }
+
+    fn mean_value(&self) -> f32 {
+        SparseTensor::mean_value(self)
+    }
+
+    fn as_sparse(&self) -> Option<&SparseTensor> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_tensor_view_matches_inherent_accessors() {
+        let mut t = SparseTensor::new(vec![4, 5]);
+        t.push(&[1, 2], 1.5);
+        t.push(&[3, 4], -2.5);
+        let v: &dyn TensorView = &t;
+        assert_eq!(v.dims(), &[4, 5]);
+        assert_eq!(v.order(), 2);
+        assert_eq!(v.nnz(), 2);
+        let mut c = [0u32; 2];
+        assert_eq!(v.load_entry(1, &mut c), -2.5);
+        assert_eq!(c, [3, 4]);
+        assert_eq!(v.mean_value(), t.mean_value());
+        assert!(v.as_sparse().is_some());
+    }
+}

@@ -42,6 +42,13 @@
 //!   query), and a threaded request loop with batching and snapshot
 //!   hot-swap so training and serving run concurrently.
 //!
+//! Underneath both sits the **data layer** ([`data`]): the checksummed
+//! `FTB2` paged tensor store, a constant-memory streaming ingester
+//! (`fasttucker ingest`), and the [`data::TensorView`] abstraction that
+//! lets the sampling/staging pipeline gather from RAM or straight from
+//! disk ([`data::PagedTensor`]) — the out-of-core path the paper's
+//! HOHDST motivation calls for, bit-identical to the in-RAM path.
+//!
 //! Supporting modules: sparse tensor substrate ([`tensor`]), the three
 //! Table-3 sampling strategies ([`sampler`]), model state + gather/scatter
 //! ([`model`]), the tiled CPU kernels ([`kernel`]), analytic cost models
@@ -86,6 +93,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod cost;
 pub mod cpu_ref;
+pub mod data;
 pub mod kernel;
 pub mod model;
 pub mod runtime;
@@ -102,6 +110,7 @@ pub mod util;
 pub mod prelude {
     pub use crate::coordinator::config::{Algo, Backend, Strategy, TrainConfig, Variant};
     pub use crate::coordinator::trainer::Trainer;
+    pub use crate::data::{PagedTensor, TensorView};
     pub use crate::kernel::KernelPolicy;
     pub use crate::model::TuckerModel;
     pub use crate::serve::ModelSnapshot;

@@ -2,7 +2,10 @@
 //!
 //! Subcommands:
 //!   synth      — generate a synthetic sparse tensor (presets or custom)
+//!   ingest     — convert text/FTB1 tensors to the paged FTB2 store, in
+//!                constant memory
 //!   train      — run a decomposition and report per-epoch RMSE/MAE + timings
+//!                (`--store FILE.ftb2` trains out of core)
 //!   serve      — train-or-load a checkpoint and answer batched queries
 //!   query      — one-shot predict / top-K against a checkpoint
 //!   checkpoint — convert / inspect serve checkpoints (FTCK format)
@@ -22,6 +25,7 @@ use anyhow::{bail, ensure, Context, Result};
 use fasttucker::bench::percentile;
 use fasttucker::coordinator::{Algo, Backend, Strategy, TrainConfig, Variant};
 use fasttucker::cost;
+use fasttucker::data;
 use fasttucker::kernel::KernelPolicy;
 use fasttucker::model::TuckerModel;
 use fasttucker::serve::{check_coords, mode_topk, Engine, ModelSnapshot, Server};
@@ -47,11 +51,17 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: fasttucker <synth|train|serve|query|checkpoint|cost|info> [flags]\n\
+    "usage: fasttucker <synth|ingest|train|serve|query|checkpoint|cost|info> [flags]\n\
      \n\
      synth --out FILE [--preset netflix|yahoo|order] [--order N] [--dim I]\n\
            [--nnz K] [--seed S]\n\
-     train --data FILE|--toy [--algo plus|fasttucker|fastertucker]\n\
+           (extension picks the format: .ftb binary, .ftb2 paged store,\n\
+            anything else text)\n\
+     ingest --input FILE --out FILE.ftb2 [--page-entries N]\n\
+           (streaming text/FTB1 -> FTB2 conversion in constant memory;\n\
+            train from the result with train --store)\n\
+     train --data FILE|--store FILE.ftb2|--toy\n\
+           [--algo plus|fasttucker|fastertucker]\n\
            [--variant tc|cc] [--strategy calc|storage]\n\
            [--backend hlo|cpu|parallel] [--threads K]\n\
            [--cpu-kernel tiled|scalar] [--epochs T] [--j J] [--r R] [--lr-a F]\n\
@@ -82,6 +92,7 @@ fn run(argv: Vec<String>) -> Result<()> {
     };
     match cmd.as_str() {
         "synth" => cmd_synth(rest.to_vec()),
+        "ingest" => cmd_ingest(rest.to_vec()),
         "train" => cmd_train(rest.to_vec()),
         "serve" => cmd_serve(rest.to_vec()),
         "query" => cmd_query(rest.to_vec()),
@@ -118,10 +129,12 @@ fn cmd_synth(argv: Vec<String>) -> Result<()> {
         p => bail!("unknown preset {p:?}"),
     };
     let t = generate(&cfg);
-    if out.extension().map(|e| e == "ftb").unwrap_or(false) {
-        io::write_binary(&t, &out)?;
-    } else {
-        io::write_text(&t, &out)?;
+    match out.extension().and_then(|e| e.to_str()) {
+        Some("ftb") => io::write_binary(&t, &out)?,
+        Some("ftb2") => {
+            data::store::write_store(&t, &out, data::store::DEFAULT_PAGE_ENTRIES)?;
+        }
+        _ => io::write_text(&t, &out)?,
     }
     println!(
         "wrote {:?}: order {} dims {:?} nnz {} density {:.2e}",
@@ -130,6 +143,40 @@ fn cmd_synth(argv: Vec<String>) -> Result<()> {
         t.dims,
         t.nnz(),
         t.density()
+    );
+    Ok(())
+}
+
+/// Streaming text/FTB1 → FTB2 conversion (constant memory: the resident
+/// set is one section buffer regardless of tensor size).
+fn cmd_ingest(argv: Vec<String>) -> Result<()> {
+    let a = Args::parse(argv, &["input", "out", "page-entries"], &[]).map_err(anyhow::Error::msg)?;
+    let input = PathBuf::from(a.get("input").context("--input FILE required")?);
+    let out = PathBuf::from(a.get("out").context("--out FILE.ftb2 required")?);
+    if out.extension().and_then(|e| e.to_str()) != Some("ftb2") {
+        eprintln!(
+            "note: {out:?} does not end in .ftb2 — train auto-detection keys on the \
+             extension (use train --store to force the paged path)"
+        );
+    }
+    let page: usize = a
+        .get_parse("page-entries", data::store::DEFAULT_PAGE_ENTRIES)
+        .map_err(anyhow::Error::msg)?;
+    let t0 = Instant::now();
+    let stats = data::ingest_file(&input, &out, page)?;
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "ingested {input:?} -> {out:?}: {} entries in {} sections of {page}, \
+         {:.2} MB on disk",
+        stats.nnz,
+        stats.pages,
+        stats.out_bytes as f64 / 1e6
+    );
+    println!(
+        "  {secs:.2} s ({:.2} Mentries/s); peak {} entries buffered (bounded by \
+         --page-entries)",
+        stats.nnz as f64 / secs.max(1e-9) / 1e6,
+        stats.peak_buffered
     );
     Ok(())
 }
@@ -173,11 +220,24 @@ fn train_config_from_flags(a: &Args) -> Result<TrainConfig> {
 }
 
 /// The full `train` spec from flags: data source + config + schedule.
+/// `--store FILE.ftb2` selects the out-of-core paged path (no held-out
+/// split, so `--test-frac` defaults to 0 there).
 fn train_spec_from_flags(a: &Args) -> Result<RunSpec> {
+    ensure!(
+        usize::from(a.get_bool("toy"))
+            + usize::from(a.get("data").is_some())
+            + usize::from(a.get("store").is_some())
+            <= 1,
+        "--toy, --data and --store are mutually exclusive ways to pick the tensor"
+    );
     let data = if a.get_bool("toy") {
         DataSource::Toy
+    } else if let Some(path) = a.get("store") {
+        DataSource::Store(PathBuf::from(path))
     } else {
-        let path = a.get("data").context("--data FILE (or --toy) required")?;
+        let path = a
+            .get("data")
+            .context("--data FILE, --store FILE.ftb2 or --toy required")?;
         DataSource::File(PathBuf::from(path))
     };
     let early_stop = match a.get("early-stop") {
@@ -191,7 +251,11 @@ fn train_spec_from_flags(a: &Args) -> Result<RunSpec> {
         None => None,
         Some(_) => Some(a.get_parse("lr-decay", 1.0f32).map_err(anyhow::Error::msg)?),
     };
-    let test_frac: f64 = a.get_parse("test-frac", 0.2).map_err(anyhow::Error::msg)?;
+    // paged stores have no in-RAM split, so their split defaults off
+    let frac_default = if matches!(data, DataSource::Store(_)) { 0.0 } else { 0.2 };
+    let test_frac: f64 = a
+        .get_parse("test-frac", frac_default)
+        .map_err(anyhow::Error::msg)?;
     // --test-frac 0 means "train on everything": without a held-out
     // split there is nothing to evaluate, so the cadence defaults off
     let eval_default = if test_frac == 0.0 { 0 } else { 1 };
@@ -216,10 +280,10 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     let a = Args::parse(
         argv,
         &[
-            "data", "algo", "variant", "strategy", "backend", "threads", "cpu-kernel", "epochs",
-            "j", "r", "lr-a", "lr-b", "lam-a", "lam-b", "test-frac", "seed", "artifacts", "save",
-            "checkpoint", "checkpoint-every", "eval-every", "early-stop", "min-delta", "lr-decay",
-            "toy", "spec", "dump-spec",
+            "data", "store", "algo", "variant", "strategy", "backend", "threads", "cpu-kernel",
+            "epochs", "j", "r", "lr-a", "lr-b", "lam-a", "lam-b", "test-frac", "seed", "artifacts",
+            "save", "checkpoint", "checkpoint-every", "eval-every", "early-stop", "min-delta",
+            "lr-decay", "toy", "spec", "dump-spec",
         ],
         &["toy", "dump-spec"],
     )
@@ -237,7 +301,7 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     println!(
         "data {} | train nnz {} / test nnz {} | algo {} variant {} backend {}",
         spec.data.describe(),
-        session.train_tensor().nnz(),
+        session.train_nnz(),
         session.test_tensor().nnz(),
         spec.train.algo.name(),
         spec.train.variant.name(),

@@ -25,7 +25,8 @@ pub mod stream;
 
 pub use stream::{stage, BlockIter, StagedBlock, StagedStream};
 
-use crate::tensor::{FiberIndex, ModeSliceIndex, SparseTensor};
+use crate::data::TensorView;
+use crate::tensor::{FiberIndex, ModeSliceIndex};
 
 /// Padding slot marker.
 pub const PAD: u32 = u32::MAX;
@@ -61,7 +62,12 @@ impl Block {
 /// FastTuckerPlus sampling: shuffled full pass over Ω in blocks of `s`.
 /// (Eager wrapper over [`BlockIter::uniform`] — benches and tests use it;
 /// the trainer streams through [`StagedStream`] instead.)
-pub fn uniform_blocks(t: &SparseTensor, s: usize, seed: u64, epoch: u64) -> Vec<Block> {
+pub fn uniform_blocks<T: TensorView + ?Sized>(
+    t: &T,
+    s: usize,
+    seed: u64,
+    epoch: u64,
+) -> Vec<Block> {
     BlockIter::uniform(t, s, seed, epoch).collect_blocks()
 }
 
@@ -99,6 +105,7 @@ pub fn padding_ratio(blocks: &[Block]) -> f64 {
 mod tests {
     use super::*;
     use crate::synth::{generate, SynthConfig};
+    use crate::tensor::SparseTensor;
 
     fn tensor() -> SparseTensor {
         generate(&SynthConfig::order_sweep(3, 32, 1500, 11))

@@ -26,7 +26,8 @@
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::thread::{Scope, ScopedJoinHandle};
 
-use crate::tensor::{FiberIndex, ModeSliceIndex, SparseTensor};
+use crate::data::TensorView;
+use crate::tensor::{FiberIndex, ModeSliceIndex};
 use crate::util::rng::Pcg32;
 
 use super::{Block, PAD, WARP_M};
@@ -54,6 +55,11 @@ pub struct StagedBlock {
 /// only pad at warp tails, so group order is preserved), and both slabs
 /// are padded to their full `[S, N]` / `[S]` shapes.
 ///
+/// Generic over [`TensorView`], so the gather reads from RAM or from the
+/// paged `FTB2` store identically — the staged slabs are a pure function
+/// of (view contents, block ids), which is what makes the out-of-core
+/// path bit-identical to the in-RAM one.
+///
 /// Allocates fresh slabs per block: ~S·(2N+1) words, microseconds against
 /// the milliseconds of per-block compute, and ownership then transfers
 /// cleanly through the channel (a recycling return-path would complicate
@@ -62,7 +68,7 @@ pub struct StagedBlock {
 /// kernels read it, but it runs on the producer thread where the double
 /// buffer hides it, and a conditional would leak backend knowledge into
 /// the scheduler.
-pub fn stage(t: &SparseTensor, block: &Block) -> StagedBlock {
+pub fn stage<T: TensorView + ?Sized>(t: &T, block: &Block) -> StagedBlock {
     let n = t.order();
     let s = block.ids.len();
     let mut coords = vec![0u32; s * n];
@@ -72,8 +78,7 @@ pub fn stage(t: &SparseTensor, block: &Block) -> StagedBlock {
         if id == PAD {
             continue;
         }
-        coords[slot * n..(slot + 1) * n].copy_from_slice(t.coords(id as usize));
-        values[slot] = t.values[id as usize];
+        values[slot] = t.load_entry(id as usize, &mut coords[slot * n..(slot + 1) * n]);
         slot += 1;
     }
     debug_assert_eq!(slot, block.valid);
@@ -126,8 +131,26 @@ enum Kind<'a> {
 }
 
 impl<'a> BlockIter<'a> {
-    /// FastTuckerPlus sampling: shuffled full pass over Ω.
-    pub fn uniform(t: &SparseTensor, s: usize, seed: u64, epoch: u64) -> BlockIter<'a> {
+    /// FastTuckerPlus sampling: shuffled full pass over Ω.  Only the
+    /// entry *count* is read here, so any [`TensorView`] (in-RAM or
+    /// paged) with the same nnz yields the same id schedule.
+    ///
+    /// # Panics
+    /// If `t.nnz() >= u32::MAX`: block ids are `u32` with `u32::MAX`
+    /// reserved as the [`PAD`] sentinel, so larger tensors would silently
+    /// wrap.  [`crate::coordinator::Trainer::new`] rejects such tensors
+    /// with a clean error before any stream is built.
+    pub fn uniform<T: TensorView + ?Sized>(
+        t: &T,
+        s: usize,
+        seed: u64,
+        epoch: u64,
+    ) -> BlockIter<'a> {
+        assert!(
+            t.nnz() < u32::MAX as usize,
+            "block ids are u32 (u32::MAX is the PAD sentinel); nnz {} does not fit",
+            t.nnz()
+        );
         let mut rng = Pcg32::new(seed, 0x0731 ^ epoch);
         let mut ids: Vec<u32> = (0..t.nnz() as u32).collect();
         rng.shuffle(&mut ids);
@@ -310,10 +333,12 @@ pub struct StagedStream<'scope> {
 
 impl<'scope> StagedStream<'scope> {
     /// Spawn the producer on `scope`.  `tensor` and everything `iter`
-    /// borrows must outlive the scope (`'env`).
-    pub fn spawn<'env>(
+    /// borrows must outlive the scope (`'env`).  The view is shared with
+    /// the producer thread ([`TensorView`] is `Sync`), so staging gathers
+    /// from RAM or from a paged store through the same code path.
+    pub fn spawn<'env, T: TensorView + ?Sized>(
         scope: &'scope Scope<'scope, 'env>,
-        tensor: &'env SparseTensor,
+        tensor: &'env T,
         iter: BlockIter<'env>,
     ) -> StagedStream<'scope> {
         let (tx, rx) = sync_channel::<StagedBlock>(PIPELINE_DEPTH);
@@ -344,6 +369,7 @@ impl<'scope> StagedStream<'scope> {
 mod tests {
     use super::*;
     use crate::synth::{generate, SynthConfig};
+    use crate::tensor::SparseTensor;
 
     fn tensor() -> SparseTensor {
         generate(&SynthConfig::order_sweep(3, 32, 1500, 11))

@@ -30,6 +30,7 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::coordinator::config::Algo;
 use crate::kernel::micro;
 use crate::model::TuckerModel;
+use crate::util::fnv::fnv1a;
 
 /// Magic bytes of the serve checkpoint format.
 const MAGIC: &[u8; 4] = b"FTCK";
@@ -267,16 +268,6 @@ impl std::fmt::Debug for ModelSnapshot {
             .field("epoch", &self.inner.epoch)
             .finish()
     }
-}
-
-/// FNV-1a over a byte slice (the corruption tripwire; not cryptographic).
-fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100_0000_01b3);
-    }
-    h
 }
 
 /// Little-endian reader over a checkpoint body.

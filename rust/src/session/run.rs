@@ -5,13 +5,30 @@
 
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 
 use crate::coordinator::{TrainConfig, Trainer};
+use crate::data::{PagedTensor, TensorView};
 use crate::serve::{ModelSnapshot, Server};
 use crate::session::observer::{EpochEvent, Observer, RunReport};
-use crate::session::spec::{RunSpec, Schedule};
+use crate::session::spec::{DataSource, RunSpec, Schedule};
 use crate::tensor::{split::train_test_split, SparseTensor};
+
+/// The training data a session drives epochs over: fully in RAM, or an
+/// out-of-core paged store (both feed the trainer through [`TensorView`]).
+enum TrainData {
+    Ram(SparseTensor),
+    Paged(PagedTensor),
+}
+
+impl TrainData {
+    fn view(&self) -> &dyn TensorView {
+        match self {
+            TrainData::Ram(t) => t,
+            TrainData::Paged(p) => p,
+        }
+    }
+}
 
 /// The builder-constructed run driver — one validated spec, executed.
 ///
@@ -31,7 +48,7 @@ use crate::tensor::{split::train_test_split, SparseTensor};
 pub struct Session {
     schedule: Schedule,
     trainer: Trainer,
-    train: SparseTensor,
+    train: TrainData,
     test: SparseTensor,
 }
 
@@ -39,10 +56,37 @@ impl Session {
     /// Validate `spec`, resolve its data source, split, and build the
     /// trainer.  The one entry point the CLI's `--spec` path, the flag
     /// path, the examples and the benches all share.
+    ///
+    /// A [`DataSource::Store`] stays *out of core*: the session opens it
+    /// as a [`PagedTensor`] (verifying every section checksum) and trains
+    /// straight from disk; every other source materializes in RAM.
     pub fn from_spec(spec: &RunSpec) -> Result<Session> {
         spec.validate().context("invalid run spec")?;
+        if let DataSource::Store(path) = &spec.data {
+            let paged = PagedTensor::open(path).with_context(|| format!("opening {path:?}"))?;
+            return Session::with_paged(paged, spec.train.clone(), spec.schedule.clone());
+        }
         let tensor = spec.data.resolve()?;
         Session::with_owned_tensor(tensor, spec.train.clone(), spec.schedule.clone())
+    }
+
+    /// Build a session that trains out of core from an opened paged
+    /// store.  Paged runs have no held-out split (`schedule.test_frac`
+    /// must be 0) — evaluate against a separate in-RAM tensor through
+    /// [`Session::trainer_mut`] if needed.
+    pub fn with_paged(train: PagedTensor, cfg: TrainConfig, schedule: Schedule) -> Result<Session> {
+        ensure!(
+            schedule.test_frac == 0.0,
+            "paged stores train without a held-out split (test_frac must be 0)"
+        );
+        let trainer = Trainer::new(&train, cfg)?;
+        let test = SparseTensor::new(train.dims().to_vec());
+        Ok(Session {
+            schedule,
+            trainer,
+            train: TrainData::Paged(train),
+            test,
+        })
     }
 
     /// Build a session over an already-loaded tensor (what benches and
@@ -91,7 +135,7 @@ impl Session {
         Ok(Session {
             schedule,
             trainer,
-            train,
+            train: TrainData::Ram(train),
             test,
         })
     }
@@ -112,9 +156,29 @@ impl Session {
         &mut self.trainer
     }
 
-    /// The training split.
-    pub fn train_tensor(&self) -> &SparseTensor {
-        &self.train
+    /// The in-RAM training split (`None` when this session trains out of
+    /// core from a paged store — use [`Session::train_nnz`] /
+    /// [`Session::train_dims`] for the shape either way).
+    pub fn train_tensor(&self) -> Option<&SparseTensor> {
+        match &self.train {
+            TrainData::Ram(t) => Some(t),
+            TrainData::Paged(_) => None,
+        }
+    }
+
+    /// The training data as a [`TensorView`] (RAM or paged).
+    pub fn train_view(&self) -> &dyn TensorView {
+        self.train.view()
+    }
+
+    /// Entries in the training data.
+    pub fn train_nnz(&self) -> usize {
+        self.train.view().nnz()
+    }
+
+    /// Dimension sizes of the training data.
+    pub fn train_dims(&self) -> &[u32] {
+        self.train.view().dims()
     }
 
     /// The held-out split (empty when `test_frac == 0`).
@@ -205,7 +269,7 @@ impl Session {
         let mut epochs_run = 0usize;
         for epoch in 1..=sched.epochs {
             let lr_a = self.trainer.cfg.hyper.lr_a;
-            let stats = self.trainer.epoch(&self.train)?;
+            let stats = self.trainer.epoch(self.train.view())?;
             epochs_run = epoch;
 
             let eval = if can_eval && epoch % sched.eval_every == 0 {

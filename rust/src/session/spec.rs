@@ -107,14 +107,24 @@ impl SynthSpec {
 pub enum DataSource {
     /// The deterministic 8x8x8 toy dataset shipped with the repo.
     Toy,
-    /// A tensor file on disk (text or `.ftb` binary, auto-detected).
+    /// A tensor file on disk (text, `.ftb` binary or `.ftb2` store,
+    /// auto-detected), materialized in RAM.
     File(PathBuf),
     /// A synthetic tensor generated in-process from a preset recipe.
     Synth(SynthSpec),
+    /// An `FTB2` paged store trained *out of core*: entries stay on disk
+    /// and page in on demand (`fasttucker ingest` produces these).
+    /// Requires the `plus` algorithm and `test_frac == 0` — see
+    /// [`SpecError::StoreNeedsPlus`] / [`SpecError::StoreWithSplit`].
+    Store(PathBuf),
 }
 
 impl DataSource {
-    /// Load or generate the tensor this source describes.
+    /// Load or generate the tensor this source describes, in RAM.  For
+    /// [`DataSource::Store`] this *materializes* the store —
+    /// [`super::Session::from_spec`] instead keeps store sources paged
+    /// through [`crate::data::PagedTensor`]; this path serves tools that
+    /// genuinely need the whole tensor.
     pub fn resolve(&self) -> Result<SparseTensor> {
         match self {
             DataSource::Toy => Ok(io::toy_dataset()),
@@ -122,6 +132,8 @@ impl DataSource {
                 io::read_auto(path).with_context(|| format!("reading {path:?}"))
             }
             DataSource::Synth(s) => Ok(synth::generate(&s.config())),
+            DataSource::Store(path) => crate::data::store::read_store(path)
+                .with_context(|| format!("materializing store {path:?}")),
         }
     }
 
@@ -131,6 +143,7 @@ impl DataSource {
             DataSource::Toy => "toy dataset".to_string(),
             DataSource::File(p) => p.display().to_string(),
             DataSource::Synth(s) => format!("synth preset {} ({} nnz)", s.preset.name(), s.nnz),
+            DataSource::Store(p) => format!("paged store {}", p.display()),
         }
     }
 }
@@ -240,6 +253,23 @@ pub enum SpecError {
         /// The missing path.
         path: PathBuf,
     },
+    /// A store data source whose `FTB2` header does not check out
+    /// (wrong magic/version, checksum mismatch, or truncation).
+    StoreInvalid {
+        /// The offending store path.
+        path: PathBuf,
+        /// Why the header was rejected.
+        detail: String,
+    },
+    /// A paged store was combined with an algorithm whose sampling needs
+    /// in-RAM per-mode indexes (only `plus` trains out of core).
+    StoreNeedsPlus {
+        /// The configured algorithm.
+        algo: Algo,
+    },
+    /// A paged store was combined with a held-out split — splits are
+    /// in-RAM; hold out a test set at ingest time instead.
+    StoreWithSplit,
     /// A synthetic data source would generate an empty tensor.
     EmptySynth,
     /// A hyper-parameter is NaN or infinite.
@@ -302,6 +332,20 @@ impl fmt::Display for SpecError {
             SpecError::MissingData { path } => {
                 write!(f, "data file {path:?} does not exist")
             }
+            SpecError::StoreInvalid { path, detail } => {
+                write!(f, "store {path:?} is not a valid FTB2 file: {detail}")
+            }
+            SpecError::StoreNeedsPlus { algo } => write!(
+                f,
+                "algorithm {} needs in-RAM sampling indexes; paged FTB2 stores \
+                 train with --algo plus",
+                algo.name()
+            ),
+            SpecError::StoreWithSplit => write!(
+                f,
+                "paged stores train without a held-out split (set test_frac to 0 \
+                 and hold out a test set at ingest time)"
+            ),
             SpecError::EmptySynth => write!(f, "synthetic data source with nnz = 0"),
             SpecError::NonFiniteHyper { name } => {
                 write!(f, "hyper-parameter {name} is not finite")
@@ -398,6 +442,25 @@ impl RunSpec {
                     return Err(SpecError::EmptySynth);
                 }
             }
+            DataSource::Store(path) => {
+                if !path.exists() {
+                    return Err(SpecError::MissingData { path: path.clone() });
+                }
+                if let Err(e) = crate::data::store::open_store(path) {
+                    return Err(SpecError::StoreInvalid {
+                        path: path.clone(),
+                        detail: format!("{e:#}"),
+                    });
+                }
+                if self.train.algo != Algo::Plus {
+                    return Err(SpecError::StoreNeedsPlus {
+                        algo: self.train.algo,
+                    });
+                }
+                if self.schedule.test_frac != 0.0 {
+                    return Err(SpecError::StoreWithSplit);
+                }
+            }
         }
         // --- trainer config -------------------------------------------
         let t = &self.train;
@@ -481,6 +544,10 @@ impl RunSpec {
                 ("nnz", json::num(s.nnz as f64)),
                 ("seed", num_u64(s.seed)),
             ]),
+            DataSource::Store(p) => json::obj(vec![
+                ("kind", json::s("store")),
+                ("path", json::s(&p.to_string_lossy())),
+            ]),
         };
         let t = &self.train;
         let train = json::obj(vec![
@@ -557,6 +624,7 @@ impl RunSpec {
         let data = match get_str(d, "kind")? {
             "toy" => DataSource::Toy,
             "file" => DataSource::File(PathBuf::from(get_str(d, "path")?)),
+            "store" => DataSource::Store(PathBuf::from(get_str(d, "path")?)),
             "synth" => DataSource::Synth(SynthSpec {
                 preset: parse_field(d, "preset", SynthPreset::parse)?,
                 order: get_usize(d, "order")?,

@@ -1,14 +1,38 @@
 //! Tensor I/O: a text COO format (one `i1 i2 ... iN value` line per entry,
 //! whitespace-separated, `#` comments, 0-based indices) and a faster binary
-//! format (`FTB1`) for benchmark datasets.
+//! format (`FTB1`) for benchmark datasets.  The paged `FTB2` store lives in
+//! [`crate::data::store`]; [`read_auto`] dispatches to all three by
+//! extension.
+//!
+//! The text parser is *streaming*: [`parse_text_into`] pushes the dims
+//! header and every entry into an [`EntrySink`] as lines are read, holding
+//! O(1) memory — [`parse_text`] builds a [`SparseTensor`] sink on top, and
+//! the constant-memory ingester ([`crate::data::ingest`]) streams the same
+//! lines straight into an on-disk store.  Every malformed line fails with
+//! its 1-based line number (pinned by a mutation property test), and
+//! [`read_binary`] cross-checks the header's entry count against the real
+//! file length before allocating, so truncated or hostile files error out
+//! instead of OOMing.
 
 use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use super::coo::SparseTensor;
+
+// ======================================================================
+// Text format
+// ======================================================================
+
+/// Receiver of the streaming text parser's events (header, then entries).
+pub trait EntrySink {
+    /// The `dims I1 ... IN` header (exactly once, before any entry).
+    fn on_dims(&mut self, dims: &[u32]) -> Result<()>;
+    /// One bounds-checked, finite entry, in file order.
+    fn on_entry(&mut self, coords: &[u32], value: f32) -> Result<()>;
+}
 
 /// Read a text COO file.  First non-comment line must be the header:
 /// `dims I1 I2 ... IN`.
@@ -19,60 +43,98 @@ pub fn read_text(path: &Path) -> Result<SparseTensor> {
 
 /// Parse the text COO format from any reader (see [`read_text`]).
 pub fn parse_text<R: BufRead>(r: R) -> Result<SparseTensor> {
-    let mut tensor: Option<SparseTensor> = None;
+    struct Builder(Option<SparseTensor>);
+    impl EntrySink for Builder {
+        fn on_dims(&mut self, dims: &[u32]) -> Result<()> {
+            self.0 = Some(SparseTensor::new(dims.to_vec()));
+            Ok(())
+        }
+        fn on_entry(&mut self, coords: &[u32], value: f32) -> Result<()> {
+            let t = self.0.as_mut().expect("header precedes entries");
+            t.push(coords, value);
+            Ok(())
+        }
+    }
+    let mut b = Builder(None);
+    parse_text_into(r, &mut b)?;
+    let t = b.0.expect("parse_text_into guarantees a dims header");
+    t.validate()?; // belt and braces; the parser already bounds-checks
+    Ok(t)
+}
+
+/// Streaming core of the text parser: feed the header and every entry to
+/// `sink` as lines are read (O(1) memory for O(1)-memory sinks).
+///
+/// Guarantees on malformed input: every error is `Err` (never a panic)
+/// and carries the offending 1-based line number — bad tokens, missing or
+/// trailing fields, out-of-bounds indices and non-finite values are all
+/// rejected at their line.
+pub fn parse_text_into<R: BufRead>(r: R, sink: &mut dyn EntrySink) -> Result<()> {
+    let mut dims: Option<Vec<u32>> = None;
+    let mut coords: Vec<u32> = Vec::new();
     for (lineno, line) in r.lines().enumerate() {
-        let line = line?;
+        let lineno = lineno + 1;
+        let line = line.with_context(|| format!("line {lineno}: read error"))?;
         let line = line.split('#').next().unwrap_or("").trim();
         if line.is_empty() {
             continue;
         }
         let mut toks = line.split_whitespace();
-        match &mut tensor {
+        match &dims {
             None => {
-                let head = toks.next();
-                if head != Some("dims") {
-                    bail!("line {}: expected 'dims I1 ... IN' header", lineno + 1);
+                if toks.next() != Some("dims") {
+                    bail!("line {lineno}: expected 'dims I1 ... IN' header");
                 }
-                let dims: Vec<u32> = toks
-                    .map(|t| t.parse().with_context(|| format!("line {}: bad dim", lineno + 1)))
+                let d: Vec<u32> = toks
+                    .map(|t| t.parse().map_err(|_| anyhow!("line {lineno}: bad dim {t:?}")))
                     .collect::<Result<_>>()?;
-                if dims.len() < 2 {
-                    bail!("need at least 2 dims");
+                if d.len() < 2 {
+                    bail!("line {lineno}: need at least 2 dims");
                 }
-                tensor = Some(SparseTensor::new(dims));
+                sink.on_dims(&d)?;
+                coords = Vec::with_capacity(d.len());
+                dims = Some(d);
             }
-            Some(t) => {
-                let n = t.order();
-                let mut coords = Vec::with_capacity(n);
-                for _ in 0..n {
+            Some(d) => {
+                coords.clear();
+                for (m, &dim) in d.iter().enumerate() {
                     let tok = toks
                         .next()
-                        .with_context(|| format!("line {}: too few indices", lineno + 1))?;
-                    coords.push(tok.parse::<u32>().with_context(|| {
-                        format!("line {}: bad index {tok:?}", lineno + 1)
-                    })?);
+                        .with_context(|| format!("line {lineno}: too few indices"))?;
+                    let ix: u32 = tok
+                        .parse()
+                        .map_err(|_| anyhow!("line {lineno}: bad index {tok:?}"))?;
+                    if ix >= dim {
+                        bail!("line {lineno}: mode-{m} index {ix} out of bounds (dim {dim})");
+                    }
+                    coords.push(ix);
                 }
                 let vtok = toks
                     .next()
-                    .with_context(|| format!("line {}: missing value", lineno + 1))?;
+                    .with_context(|| format!("line {lineno}: missing value"))?;
                 let v: f32 = vtok
                     .parse()
-                    .with_context(|| format!("line {}: bad value {vtok:?}", lineno + 1))?;
-                if toks.next().is_some() {
-                    bail!("line {}: trailing tokens", lineno + 1);
+                    .map_err(|_| anyhow!("line {lineno}: bad value {vtok:?}"))?;
+                if !v.is_finite() {
+                    bail!("line {lineno}: non-finite value {vtok:?}");
                 }
-                t.push(&coords, v);
+                if toks.next().is_some() {
+                    bail!("line {lineno}: trailing tokens");
+                }
+                sink.on_entry(&coords, v)?;
             }
         }
     }
-    let t = tensor.ok_or_else(|| anyhow::anyhow!("empty tensor file"))?;
-    t.validate()?;
-    Ok(t)
+    if dims.is_none() {
+        bail!("empty tensor file");
+    }
+    Ok(())
 }
 
-/// Write the text COO format (`dims` header + one entry per line).
-pub fn write_text(t: &SparseTensor, path: &Path) -> Result<()> {
-    let mut w = BufWriter::new(File::create(path)?);
+/// Write the text COO format to any writer (`dims` header + one entry per
+/// line).  Values print as their shortest round-tripping decimal, so
+/// `write → parse` recovers every `f32` bit-exactly.
+pub fn write_text_to<W: Write>(t: &SparseTensor, w: &mut W) -> Result<()> {
     write!(w, "dims")?;
     for d in &t.dims {
         write!(w, " {d}")?;
@@ -87,7 +149,88 @@ pub fn write_text(t: &SparseTensor, path: &Path) -> Result<()> {
     Ok(())
 }
 
+/// Write the text COO format to a file (see [`write_text_to`]).
+pub fn write_text(t: &SparseTensor, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    write_text_to(t, &mut w)?;
+    w.flush()?;
+    Ok(())
+}
+
+// ======================================================================
+// FTB1 binary format
+// ======================================================================
+
 const MAGIC: &[u8; 4] = b"FTB1";
+
+/// Parsed `FTB1` header: magic, u32 order, dims, u64 nnz — followed in
+/// the file by all coordinates (u32 LE, entry-major) and then all values
+/// (f32 LE).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Ftb1Header {
+    /// Dimension sizes `I_n`.
+    pub dims: Vec<u32>,
+    /// Number of stored entries.
+    pub nnz: u64,
+}
+
+impl Ftb1Header {
+    /// Header length in bytes (magic + order + dims + nnz).
+    pub fn header_len(&self) -> u64 {
+        16 + 4 * self.dims.len() as u64
+    }
+
+    /// Absolute offset of the values block (after all coordinates).
+    pub fn values_offset(&self) -> u64 {
+        self.header_len() + self.nnz * 4 * self.dims.len() as u64
+    }
+
+    /// Payload bytes the header implies (coords + values), with
+    /// overflow-checked arithmetic.
+    pub fn payload_len(&self) -> Result<u64> {
+        self.nnz
+            .checked_mul(self.dims.len() as u64 + 1)
+            .and_then(|x| x.checked_mul(4))
+            .ok_or_else(|| anyhow!("nnz {} overflows the addressable payload", self.nnz))
+    }
+
+    /// Reject a header whose implied size disagrees with the actual file
+    /// length — a truncated or hostile `nnz` fails here *before* any
+    /// entry-count-sized allocation can OOM.
+    pub fn check_len(&self, file_len: u64) -> Result<()> {
+        let need = self.payload_len()?;
+        let have = file_len.saturating_sub(self.header_len());
+        if have != need {
+            bail!(
+                "header claims {} entries ({need} payload bytes) but the file has \
+                 {have} bytes after the header (truncated or corrupt)",
+                self.nnz
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Read and sanity-check an `FTB1` header from `r`.
+pub fn read_ftb1_header<R: Read>(r: &mut R) -> Result<Ftb1Header> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not an FTB1 file");
+    }
+    let order = read_u32(r)? as usize;
+    if !(2..=16).contains(&order) {
+        bail!("implausible order {order}");
+    }
+    let mut dims = Vec::with_capacity(order);
+    for _ in 0..order {
+        dims.push(read_u32(r)?);
+    }
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    let nnz = u64::from_le_bytes(b8);
+    Ok(Ftb1Header { dims, nnz })
+}
 
 /// Binary format: magic, u32 order, dims, u64 nnz, indices (u32 LE), values
 /// (f32 LE).  ~10x faster to load than text for multi-million-nnz tensors.
@@ -105,38 +248,34 @@ pub fn write_binary(t: &SparseTensor, path: &Path) -> Result<()> {
     Ok(())
 }
 
-/// Read a binary `FTB1` file written by [`write_binary`].
+/// Read a binary `FTB1` file written by [`write_binary`].  The header's
+/// `nnz` is cross-checked against the file length (see
+/// [`Ftb1Header::check_len`]) before anything is allocated.
 pub fn read_binary(path: &Path) -> Result<SparseTensor> {
-    let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
-    let mut magic = [0u8; 4];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("{path:?}: not an FTB1 file");
-    }
-    let order = read_u32(&mut r)? as usize;
-    if !(2..=16).contains(&order) {
-        bail!("implausible order {order}");
-    }
-    let mut dims = Vec::with_capacity(order);
-    for _ in 0..order {
-        dims.push(read_u32(&mut r)?);
-    }
-    let mut b8 = [0u8; 8];
-    r.read_exact(&mut b8)?;
-    let nnz = u64::from_le_bytes(b8) as usize;
-    let mut t = SparseTensor::new(dims);
+    let f = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let stat = f.metadata().with_context(|| format!("stat {path:?}"))?;
+    let file_len = stat.len();
+    let mut r = BufReader::new(f);
+    let header = read_ftb1_header(&mut r).with_context(|| format!("{path:?}"))?;
+    header.check_len(file_len).with_context(|| format!("{path:?}"))?;
+    let nnz = header.nnz as usize;
+    let mut t = SparseTensor::new(header.dims);
+    let order = t.order();
     t.indices = read_vec_u32(&mut r, nnz * order)?;
     t.values = read_vec_f32(&mut r, nnz)?;
     t.validate()?;
     Ok(t)
 }
 
-/// Load either format by extension (`.ftb` binary, anything else text).
+/// Load any supported format by extension: `.ftb` is `FTB1` binary,
+/// `.ftb2` is the paged store (materialized — use
+/// [`crate::data::PagedTensor`] to keep it out of core), anything else is
+/// text.
 pub fn read_auto(path: &Path) -> Result<SparseTensor> {
-    if path.extension().map(|e| e == "ftb").unwrap_or(false) {
-        read_binary(path)
-    } else {
-        read_text(path)
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("ftb") => read_binary(path),
+        Some("ftb2") => crate::data::store::read_store(path),
+        _ => read_text(path),
     }
 }
 
@@ -217,7 +356,7 @@ mod tests {
         assert_eq!(t.dims, u.dims);
         assert_eq!(t.indices, u.indices);
         for (a, b) in t.values.iter().zip(&u.values) {
-            assert!((a - b).abs() < 1e-5);
+            assert_eq!(a.to_bits(), b.to_bits()); // shortest-decimal exact
         }
     }
 
@@ -241,6 +380,16 @@ mod tests {
         assert!(parse_text("dims 4 4\n9 0 1.0\n".as_bytes()).is_err()); // oob
         assert!(parse_text("nodims\n".as_bytes()).is_err());
         assert!(parse_text("dims 4 4\n0 0 1.0 extra\n".as_bytes()).is_err());
+        assert!(parse_text("dims 4 4\n0 0 nan\n".as_bytes()).is_err()); // non-finite
+        assert!(parse_text("dims 4\n".as_bytes()).is_err()); // < 2 dims
+    }
+
+    #[test]
+    fn parse_text_errors_carry_line_numbers() {
+        let err = parse_text("dims 4 4\n0 0 1.0\n0 5 2.0\n".as_bytes()).unwrap_err();
+        assert!(format!("{err:#}").contains("line 3"), "{err:#}");
+        let err = parse_text("wrong\n".as_bytes()).unwrap_err();
+        assert!(format!("{err:#}").contains("line 1"), "{err:#}");
     }
 
     #[test]
@@ -248,6 +397,34 @@ mod tests {
         let t = parse_text("# hi\ndims 2 2\n0 0 1.5 # entry\n1 1 2.5\n".as_bytes()).unwrap();
         assert_eq!(t.nnz(), 2);
         assert_eq!(t.values, vec![1.5, 2.5]);
+    }
+
+    #[test]
+    fn read_binary_rejects_hostile_nnz_before_allocating() {
+        let dir = std::env::temp_dir().join("ft_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("hostile.ftb");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"FTB1");
+        bytes.extend_from_slice(&3u32.to_le_bytes());
+        for d in [4u32, 4, 4] {
+            bytes.extend_from_slice(&d.to_le_bytes());
+        }
+        // a claimed u64::MAX entries would overflow / OOM a trusting reader
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(read_binary(&p).is_err());
+        // truncation of a real file is caught by the same length check
+        let t = toy_dataset();
+        write_binary(&t, &p).unwrap();
+        let good = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &good[..good.len() - 7]).unwrap();
+        assert!(read_binary(&p).is_err());
+        // trailing garbage is also a length mismatch
+        let mut long = good.clone();
+        long.extend_from_slice(&[0u8; 3]);
+        std::fs::write(&p, &long).unwrap();
+        assert!(read_binary(&p).is_err());
     }
 
     #[test]

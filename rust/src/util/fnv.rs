@@ -1,0 +1,47 @@
+//! FNV-1a 64-bit hashing — the corruption tripwire every on-disk format in
+//! this repo uses (FTCK checkpoints, FTB2 store sections).
+//!
+//! FNV-1a is not cryptographic; it detects accidental corruption (bit rot,
+//! truncation, torn writes), which is exactly the failure model of local
+//! checkpoint and dataset files.  One shared implementation keeps the
+//! formats' checksums byte-compatible with each other and with the
+//! documented specs.
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x100_0000_01b3;
+
+/// Hash a byte slice with 64-bit FNV-1a.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // reference values of the 64-bit FNV-1a test suite
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn sensitive_to_every_byte() {
+        let base = fnv1a(b"hello world");
+        for i in 0..b"hello world".len() {
+            let mut bytes = b"hello world".to_vec();
+            bytes[i] ^= 1;
+            assert_ne!(fnv1a(&bytes), base, "flip at byte {i} not detected");
+        }
+    }
+}

@@ -5,6 +5,7 @@
 //! Each substitute is small, documented and unit-tested.
 
 pub mod cli;
+pub mod fnv;
 pub mod json;
 pub mod pool;
 pub mod rng;

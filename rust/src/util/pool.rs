@@ -48,6 +48,46 @@ where
     });
 }
 
+/// A tiny free-list of reusable byte buffers.
+///
+/// The paged tensor store ([`crate::data::PagedTensor`]) recycles evicted
+/// page buffers through one of these instead of round-tripping every
+/// eviction through the allocator; anything that loads fixed-size chunks
+/// in a loop can use it the same way.  `take` hands out a zero-filled
+/// buffer of exactly the requested length (reusing a retired allocation
+/// when one is available), `put` retires a buffer for reuse.  The free
+/// list is capped so a burst of odd-sized buffers cannot pin memory.
+#[derive(Debug, Default)]
+pub struct BufferPool {
+    free: Vec<Vec<u8>>,
+}
+
+/// Retired buffers kept around for reuse (beyond this they are dropped).
+const POOL_KEEP: usize = 8;
+
+impl BufferPool {
+    /// An empty pool.
+    pub fn new() -> BufferPool {
+        BufferPool::default()
+    }
+
+    /// A zero-filled buffer of length `len`, reusing a retired allocation
+    /// when one is available.
+    pub fn take(&mut self, len: usize) -> Vec<u8> {
+        let mut buf = self.free.pop().unwrap_or_default();
+        buf.clear();
+        buf.resize(len, 0);
+        buf
+    }
+
+    /// Retire a buffer for later reuse.
+    pub fn put(&mut self, buf: Vec<u8>) {
+        if self.free.len() < POOL_KEEP {
+            self.free.push(buf);
+        }
+    }
+}
+
 /// Work-stealing-ish dynamic scheduler: workers grab items one index at a
 /// time via an atomic counter.  Better than `parallel_chunks` when item cost
 /// is very uneven (e.g. fiber-sampler batches).
@@ -104,6 +144,22 @@ mod tests {
             hits[i].fetch_add(1, Ordering::Relaxed);
         });
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn buffer_pool_recycles_and_zeroes() {
+        let mut pool = BufferPool::new();
+        let mut a = pool.take(16);
+        assert_eq!(a, vec![0u8; 16]);
+        a.iter_mut().for_each(|b| *b = 0xFF);
+        let ptr = a.as_ptr();
+        pool.put(a);
+        // same allocation comes back, zeroed, even at a different length
+        let b = pool.take(8);
+        assert_eq!(b, vec![0u8; 8]);
+        assert_eq!(b.as_ptr(), ptr);
+        let c = pool.take(4);
+        assert_eq!(c, vec![0u8; 4]);
     }
 
     #[test]

@@ -1,0 +1,379 @@
+//! Data-pipeline tests: the hardened text parser (round-trip + mutation
+//! properties), the frozen on-disk formats (byte-exact golden fixtures for
+//! FTB1 / FTB2 / FTCK and a full bit-flip sweep over the FTB2 fixture),
+//! the streaming ingester's constant-memory contract, and the acceptance
+//! bar of the out-of-core path: a paged FTB2 store trains bit-identically
+//! to the same tensor in RAM (block stream, staged slabs, per-epoch RMSE
+//! trajectory and final model).
+
+use std::path::{Path, PathBuf};
+
+use fasttucker::coordinator::{tensor_fingerprint, Algo, Backend, TrainConfig, Trainer};
+use fasttucker::data::{ingest_file, store, PagedTensor, TensorView};
+use fasttucker::model::TuckerModel;
+use fasttucker::sampler::{self, BlockIter};
+use fasttucker::serve::ModelSnapshot;
+use fasttucker::synth::{generate, SynthConfig};
+use fasttucker::tensor::{io, SparseTensor};
+use fasttucker::util::rng::Pcg32;
+
+// ======================================================================
+// helpers
+// ======================================================================
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("ft_data_pipeline_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/data")
+        .join(name)
+}
+
+/// A random tensor with ≥ 1 entry (duplicates allowed — the formats
+/// preserve entry order, they do not dedup).
+fn random_tensor(rng: &mut Pcg32) -> SparseTensor {
+    let order = 2 + rng.gen_index(3);
+    let dims: Vec<u32> = (0..order).map(|_| 1 + rng.gen_range(40)).collect();
+    let nnz = 1 + rng.gen_index(200);
+    let mut t = SparseTensor::new(dims.clone());
+    let mut coords = vec![0u32; order];
+    for _ in 0..nnz {
+        for (c, &d) in coords.iter_mut().zip(&dims) {
+            *c = rng.gen_range(d);
+        }
+        t.push(&coords, rng.gen_normal() * 3.0);
+    }
+    t
+}
+
+fn text_of(t: &SparseTensor) -> String {
+    let mut buf = Vec::new();
+    io::write_text_to(t, &mut buf).unwrap();
+    String::from_utf8(buf).unwrap()
+}
+
+/// The byte-exact golden tensor behind `rust/tests/data/golden.*`.
+fn golden_tensor() -> SparseTensor {
+    let mut t = SparseTensor::new(vec![4, 3, 2]);
+    t.push(&[0, 0, 0], 1.5);
+    t.push(&[1, 2, 1], -0.25);
+    t.push(&[3, 1, 0], 2.0);
+    t.push(&[2, 0, 1], 0.75);
+    t.push(&[3, 2, 1], -3.5);
+    t
+}
+
+/// The byte-exact golden model behind `rust/tests/data/golden.ftck`
+/// (values chosen exactly representable in f32).
+fn golden_model() -> TuckerModel {
+    TuckerModel {
+        dims: vec![2, 3],
+        j: 2,
+        r: 2,
+        factors: vec![vec![0.5, -1.0, 1.5, 2.0], vec![0.25, -0.75, 1.0, 0.5, -2.0, 3.0]],
+        cores: vec![vec![1.0, 0.5, -0.5, 2.0], vec![0.75, -1.5, 2.5, 1.25]],
+    }
+}
+
+// ======================================================================
+// text parser properties
+// ======================================================================
+
+#[test]
+fn text_roundtrip_property() {
+    let mut rng = Pcg32::new(0x7E47, 1);
+    for case in 0..120 {
+        let t = random_tensor(&mut rng);
+        let back = io::parse_text(text_of(&t).as_bytes())
+            .unwrap_or_else(|e| panic!("case {case}: {e:#}"));
+        assert_eq!(back.dims, t.dims, "case {case}");
+        assert_eq!(back.indices, t.indices, "case {case}");
+        // shortest-decimal printing makes the value round-trip bit-exact
+        let a: Vec<u32> = t.values.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = back.values.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "case {case}");
+    }
+}
+
+#[test]
+fn text_mutations_fail_with_the_offending_line_number() {
+    let mut rng = Pcg32::new(0x7E48, 2);
+    for case in 0..220 {
+        let t = random_tensor(&mut rng);
+        let text = text_of(&t);
+        let mut lines: Vec<String> = text.lines().map(str::to_string).collect();
+        // line 1 is the dims header; entry e sits on line e + 2
+        let e = rng.gen_index(t.nnz());
+        let lineno = e + 2;
+        let entry = lines[lineno - 1].clone();
+        let toks: Vec<&str> = entry.split_whitespace().collect();
+        lines[lineno - 1] = match rng.gen_index(6) {
+            // each arm is guaranteed-invalid: garbage tokens, a dropped
+            // value, a trailing token, an out-of-bounds index, a
+            // non-finite value, an unparseable value
+            0 => "definitely not an entry".to_string(),
+            1 => toks[..toks.len() - 1].join(" "),
+            2 => format!("{entry} 9"),
+            3 => {
+                // first index pushed out of bounds
+                let mut m = toks.clone();
+                let oob = (t.dims[0] + rng.gen_range(5)).to_string();
+                m[0] = &oob;
+                m.join(" ")
+            }
+            4 => {
+                let mut m = toks.clone();
+                m[t.order()] = "nan";
+                m.join(" ")
+            }
+            _ => {
+                let mut m = toks.clone();
+                m[t.order()] = "1.2.3";
+                m.join(" ")
+            }
+        };
+        let mutated = lines.join("\n");
+        let err = io::parse_text(mutated.as_bytes())
+            .expect_err(&format!("case {case} should fail:\n{mutated}"));
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains(&format!("line {lineno}")),
+            "case {case}: error {msg:?} does not name line {lineno}"
+        );
+    }
+}
+
+#[test]
+fn text_garbage_never_panics() {
+    let mut rng = Pcg32::new(0x7E49, 3);
+    for _ in 0..200 {
+        let len = rng.gen_index(200);
+        let bytes: Vec<u8> = (0..len)
+            .map(|_| b" dims0123456789.#\n-eExz"[rng.gen_index(23)])
+            .collect();
+        // any outcome is fine as long as it is an Ok/Err, not a panic
+        let _ = io::parse_text(&bytes[..]);
+    }
+}
+
+// ======================================================================
+// golden fixtures: the formats are frozen
+// ======================================================================
+
+#[test]
+fn ftb1_writer_reproduces_the_golden_fixture() {
+    let p = tmp("golden_check.ftb");
+    io::write_binary(&golden_tensor(), &p).unwrap();
+    assert_eq!(
+        std::fs::read(&p).unwrap(),
+        std::fs::read(fixture("golden.ftb")).unwrap(),
+        "FTB1 writer output changed — the format is frozen"
+    );
+    let back = io::read_binary(&fixture("golden.ftb")).unwrap();
+    assert_eq!(back.indices, golden_tensor().indices);
+    assert_eq!(back.values, golden_tensor().values);
+}
+
+#[test]
+fn ftb2_writer_reproduces_the_golden_fixture() {
+    let p = tmp("golden_check.ftb2");
+    store::write_store(&golden_tensor(), &p, 2).unwrap();
+    assert_eq!(
+        std::fs::read(&p).unwrap(),
+        std::fs::read(fixture("golden.ftb2")).unwrap(),
+        "FTB2 writer output changed — the format is frozen"
+    );
+    let back = store::read_store(&fixture("golden.ftb2")).unwrap();
+    assert_eq!(back.indices, golden_tensor().indices);
+    assert_eq!(back.values, golden_tensor().values);
+}
+
+#[test]
+fn ftck_writer_reproduces_the_golden_fixture() {
+    let snap = ModelSnapshot::from_model(&golden_model(), Algo::Plus, 7);
+    assert_eq!(
+        snap.to_bytes(),
+        std::fs::read(fixture("golden.ftck")).unwrap(),
+        "FTCK serialization changed — the format is frozen"
+    );
+    let back = ModelSnapshot::load(&fixture("golden.ftck")).unwrap();
+    assert_eq!(back.epoch(), 7);
+    assert_eq!(back.algo(), Algo::Plus);
+    assert_eq!(back.to_model().factors, golden_model().factors);
+    assert_eq!(back.to_model().cores, golden_model().cores);
+}
+
+#[test]
+fn ftb2_bit_flip_sweep_is_always_detected() {
+    let good = std::fs::read(fixture("golden.ftb2")).unwrap();
+    // sanity: the pristine fixture opens
+    PagedTensor::open(&fixture("golden.ftb2")).unwrap();
+    let p = tmp("flipped.ftb2");
+    for byte in 0..good.len() {
+        for bit in 0..8u8 {
+            let mut bad = good.clone();
+            bad[byte] ^= 1 << bit;
+            std::fs::write(&p, &bad).unwrap();
+            assert!(
+                PagedTensor::open(&p).is_err(),
+                "flip of byte {byte} bit {bit} went undetected"
+            );
+        }
+    }
+}
+
+// ======================================================================
+// ingest: streaming, bounded, exact
+// ======================================================================
+
+#[test]
+fn ingest_memory_is_bounded_by_the_page_size() {
+    let t = generate(&SynthConfig::order_sweep(3, 24, 5_000, 3));
+    let text = tmp("bounded.coo");
+    io::write_text(&t, &text).unwrap();
+    let page = 512;
+    let stats = ingest_file(&text, &tmp("bounded.ftb2"), page).unwrap();
+    assert_eq!(stats.nnz, t.nnz() as u64);
+    assert_eq!(stats.pages, (t.nnz() as u64).div_ceil(page as u64));
+    // the constant-memory contract, asserted by construction: the writer
+    // never buffered more than one section of entries
+    assert!(
+        stats.peak_buffered <= page,
+        "peak {} exceeds the page size {page}",
+        stats.peak_buffered
+    );
+}
+
+#[test]
+fn ingested_ftb1_matches_ingested_text_bitwise() {
+    let t = generate(&SynthConfig::order_sweep(4, 16, 3_000, 5));
+    let text = tmp("pair.coo");
+    let ftb1 = tmp("pair.ftb");
+    io::write_text(&t, &text).unwrap();
+    io::write_binary(&t, &ftb1).unwrap();
+    ingest_file(&text, &tmp("pair_text.ftb2"), 700).unwrap();
+    ingest_file(&ftb1, &tmp("pair_ftb1.ftb2"), 700).unwrap();
+    let a = std::fs::read(tmp("pair_text.ftb2")).unwrap();
+    let b = std::fs::read(tmp("pair_ftb1.ftb2")).unwrap();
+    assert_eq!(a, b, "text and FTB1 ingest produced different stores");
+    let back = store::read_store(&tmp("pair_text.ftb2")).unwrap();
+    assert_eq!(back.indices, t.indices);
+    assert_eq!(back.values, t.values);
+}
+
+#[test]
+fn paged_view_is_indistinguishable_from_ram() {
+    let mut rng = Pcg32::new(0xBEEF, 9);
+    for case in 0..30 {
+        let t = random_tensor(&mut rng);
+        let p = tmp(&format!("view_{case}.ftb2"));
+        let page = 1 + rng.gen_index(64);
+        store::write_store(&t, &p, page).unwrap();
+        let paged = PagedTensor::open_with_cache(&p, 2).unwrap();
+        assert_eq!(paged.dims(), &t.dims[..]);
+        assert_eq!(TensorView::nnz(&paged), t.nnz());
+        assert_eq!(paged.mean_value().to_bits(), t.mean_value().to_bits());
+        assert_eq!(
+            tensor_fingerprint(&paged),
+            tensor_fingerprint(&t),
+            "case {case}: fingerprints diverge"
+        );
+        let mut coords = vec![0u32; t.order()];
+        for _ in 0..64 {
+            let e = rng.gen_index(t.nnz());
+            let v = paged.load_entry(e, &mut coords);
+            assert_eq!(&coords[..], t.coords(e), "case {case} entry {e}");
+            assert_eq!(v.to_bits(), t.values[e].to_bits());
+        }
+    }
+}
+
+// ======================================================================
+// out-of-core training parity (the acceptance bar)
+// ======================================================================
+
+fn plus_cfg() -> TrainConfig {
+    TrainConfig {
+        algo: Algo::Plus,
+        backend: Backend::CpuRef, // deterministic serial path
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn block_stream_and_staged_slabs_are_identical_ram_vs_paged() {
+    let t = generate(&SynthConfig::order_sweep(3, 32, 2_000, 11));
+    let p = tmp("stream.ftb2");
+    store::write_store(&t, &p, 256).unwrap();
+    let paged = PagedTensor::open_with_cache(&p, 3).unwrap();
+    for epoch in 0..2u64 {
+        let mut ram_iter = BlockIter::uniform(&t, 128, 7, epoch);
+        let mut paged_iter = BlockIter::uniform(&paged, 128, 7, epoch);
+        loop {
+            let (a, b) = (ram_iter.next_block(), paged_iter.next_block());
+            match (a, b) {
+                (None, None) => break,
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.ids, b.ids, "epoch {epoch}: id schedules diverge");
+                    let sa = sampler::stage(&t, &a);
+                    let sb = sampler::stage(&paged, &b);
+                    assert_eq!(sa.coords, sb.coords, "epoch {epoch}");
+                    assert_eq!(sa.lanes, sb.lanes, "epoch {epoch}");
+                    assert_eq!(sa.valid, sb.valid, "epoch {epoch}");
+                    let va: Vec<u32> = sa.values.iter().map(|v| v.to_bits()).collect();
+                    let vb: Vec<u32> = sb.values.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(va, vb, "epoch {epoch}: staged values diverge");
+                }
+                (a, b) => panic!("epoch {epoch}: stream lengths diverge ({a:?} vs {b:?})"),
+            }
+        }
+    }
+}
+
+#[test]
+fn training_trajectory_is_bit_identical_ram_vs_paged() {
+    // the same bytes reach both paths: the text dump is parsed into RAM
+    // on one side and ingested into a store on the other
+    let t = generate(&SynthConfig::order_sweep(3, 32, 4_000, 13));
+    let text = tmp("parity.coo");
+    io::write_text(&t, &text).unwrap();
+    let ram = io::read_text(&text).unwrap();
+    ingest_file(&text, &tmp("parity.ftb2"), 1024).unwrap();
+    let paged = PagedTensor::open(&tmp("parity.ftb2")).unwrap();
+
+    let mut a = Trainer::new(&ram, plus_cfg()).unwrap();
+    let mut b = Trainer::new(&paged, plus_cfg()).unwrap();
+    for epoch in 0..4 {
+        a.epoch(&ram).unwrap();
+        b.epoch(&paged).unwrap();
+        // evaluate both models against the same in-RAM tensor: the RMSE
+        // trajectories must agree to the last bit
+        let (rmse_a, mae_a) = a.evaluate(&ram).unwrap();
+        let (rmse_b, mae_b) = b.evaluate(&ram).unwrap();
+        assert_eq!(
+            rmse_a.to_bits(),
+            rmse_b.to_bits(),
+            "epoch {epoch}: RMSE diverged ({rmse_a} vs {rmse_b})"
+        );
+        assert_eq!(mae_a.to_bits(), mae_b.to_bits(), "epoch {epoch}");
+    }
+    assert_eq!(a.model.factors, b.model.factors, "final factors diverged");
+    assert_eq!(a.model.cores, b.model.cores, "final cores diverged");
+}
+
+#[test]
+fn paged_training_rejects_index_hungry_algorithms() {
+    let t = golden_tensor();
+    let p = tmp("needs_plus.ftb2");
+    store::write_store(&t, &p, 2).unwrap();
+    let paged = PagedTensor::open(&p).unwrap();
+    for algo in [Algo::FastTucker, Algo::FasterTucker, Algo::FasterTuckerCoo] {
+        let cfg = TrainConfig { algo, ..plus_cfg() };
+        let err = Trainer::new(&paged, cfg).expect_err("index algos need RAM");
+        assert!(format!("{err:#}").contains("plus"), "unhelpful error: {err:#}");
+    }
+}

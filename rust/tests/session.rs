@@ -21,6 +21,21 @@ use fasttucker::util::rng::Pcg32;
 // helpers
 // ======================================================================
 
+fn store_dir() -> PathBuf {
+    let dir = std::env::temp_dir().join("ft_session_store_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A small but real FTB2 store on disk (validation opens the header).
+/// Tests run in parallel, so each caller names its own file.
+fn valid_store(name: &str) -> PathBuf {
+    let path = store_dir().join(name);
+    let tensor = fasttucker::tensor::io::toy_dataset();
+    fasttucker::data::store::write_store(&tensor, &path, 16).unwrap();
+    path
+}
+
 /// A spec that passes validation from a clean checkout: toy data, CPU
 /// backend, default schedule.
 fn valid_spec() -> RunSpec {
@@ -44,10 +59,14 @@ fn random_hyper(rng: &mut Pcg32) -> f32 {
 }
 
 fn random_spec(rng: &mut Pcg32) -> RunSpec {
-    let data = match rng.gen_range(3) {
+    let data = match rng.gen_range(4) {
         0 => DataSource::Toy,
         1 => DataSource::File(PathBuf::from(format!(
             "/tmp/tensor_{}.ftb",
+            rng.gen_range(1000)
+        ))),
+        2 => DataSource::Store(PathBuf::from(format!(
+            "/tmp/store_{}.ftb2",
             rng.gen_range(1000)
         ))),
         _ => DataSource::Synth(SynthSpec {
@@ -286,6 +305,37 @@ fn validate_rejection_table() {
             Box::new(|s| s.schedule.checkpoint_every = 2),
             |e| matches!(e, SpecError::CheckpointCadenceWithoutPath),
         ),
+        (
+            "missing store",
+            Box::new(|s| {
+                s.data = DataSource::Store(PathBuf::from("/nonexistent/t.ftb2"));
+            }),
+            |e| matches!(e, SpecError::MissingData { .. }),
+        ),
+        (
+            "store that is not an FTB2 file",
+            Box::new(|s| {
+                let p = store_dir().join("not_a_store.ftb2");
+                std::fs::write(&p, b"dims 2 2\n0 0 1.0\n").unwrap();
+                s.data = DataSource::Store(p);
+            }),
+            |e| matches!(e, SpecError::StoreInvalid { .. }),
+        ),
+        (
+            "store with a non-plus algorithm",
+            Box::new(|s| {
+                s.data = DataSource::Store(valid_store("needs_plus.ftb2"));
+                s.train.algo = Algo::FastTucker;
+                s.schedule.test_frac = 0.0;
+                s.schedule.eval_every = 0;
+            }),
+            |e| matches!(e, SpecError::StoreNeedsPlus { .. }),
+        ),
+        (
+            "store with a held-out split",
+            Box::new(|s| s.data = DataSource::Store(valid_store("with_split.ftb2"))),
+            |e| matches!(e, SpecError::StoreWithSplit),
+        ),
     ];
     for (label, mutate, expect) in cases {
         let mut spec = valid_spec();
@@ -472,4 +522,29 @@ fn from_spec_rejects_invalid() {
     let mut spec = valid_spec();
     spec.train.j = 12;
     assert!(Session::from_spec(&spec).is_err());
+}
+
+#[test]
+fn from_spec_trains_out_of_core_from_a_store() {
+    // a Store source must stay paged (train_tensor() is None) and still
+    // drive the schedule end to end
+    let spec = RunSpec {
+        data: DataSource::Store(valid_store("run_from_spec.ftb2")),
+        schedule: Schedule {
+            epochs: 2,
+            eval_every: 0,
+            test_frac: 0.0,
+            ..Schedule::default()
+        },
+        ..valid_spec()
+    };
+    spec.validate().unwrap();
+    let mut session = Session::from_spec(&spec).unwrap();
+    assert!(session.train_tensor().is_none(), "store runs must stay paged");
+    let tensor = fasttucker::tensor::io::toy_dataset();
+    assert_eq!(session.train_nnz(), tensor.nnz());
+    assert_eq!(session.train_dims(), &tensor.dims[..]);
+    let report = session.run(&mut NullObserver).unwrap();
+    assert_eq!(report.epochs_run, 2);
+    assert!(report.final_rmse.is_none(), "no split => no evaluation");
 }
