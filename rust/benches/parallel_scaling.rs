@@ -6,11 +6,12 @@
 //! per-epoch (factor + core) wall time of the CPU path at 1 thread
 //! (`CpuRef`) vs the Hogwild block-sharded backend at increasing worker
 //! counts, on the Netflix-like surrogate.  The serial configuration is
-//! measured twice — once with the scalar reference kernels
-//! (`--cpu-kernel scalar`) and once with the tiled microkernels (the
-//! default) — so the table shows both the microkernel speedup and the
-//! thread scaling on top of it.  Reported rows include the speedup vs the
-//! scalar serial baseline.
+//! measured three times — with the scalar reference kernels
+//! (`--cpu-kernel scalar`), the tiled microkernels (the default), and the
+//! runtime-dispatched SIMD tier (`--cpu-kernel simd`; the active backend
+//! is printed) — so the table shows the microkernel speedup, the SIMD
+//! speedup on top of it, and the thread scaling on top of both.  Reported
+//! rows include the speedup vs the scalar serial baseline.
 //!
 //! Run: `cargo bench --bench parallel_scaling` (BENCH_QUICK=1 shrinks it).
 //! Record the printed table in ARCHITECTURE.md §Bench notes when hardware
@@ -35,6 +36,14 @@ fn main() -> anyhow::Result<()> {
 
     cfg.cpu_kernel = KernelPolicy::Tiled;
     rows.extend(bench_phases("cpu_ref", &train, cfg.clone(), warmup, reps)?);
+
+    println!(
+        "simd backend: {}",
+        fasttucker::kernel::simd::active().name()
+    );
+    cfg.cpu_kernel = KernelPolicy::Simd;
+    rows.extend(bench_phases("cpu_simd", &train, cfg.clone(), warmup, reps)?);
+    cfg.cpu_kernel = KernelPolicy::Tiled;
 
     let max_threads = pool::default_threads();
     let mut threads = 2usize;

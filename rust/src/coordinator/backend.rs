@@ -20,13 +20,14 @@
 //! epoch-for-epoch.
 
 use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::config::{Algo, Backend, Strategy, TrainConfig};
 use crate::coordinator::metrics::{time_into, PhaseStats};
 use crate::cpu_ref::{self, step, Hyper};
-use crate::kernel::{self, InvariantPolicy, KernelCfg};
+use crate::kernel::{self, InvariantPolicy, KernelCfg, KernelCounters, KernelPolicy};
 use crate::model::{SharedFactors, TuckerModel};
 use crate::runtime::{Engine, Executable};
 use crate::sampler::StagedBlock;
@@ -612,10 +613,15 @@ impl CpuBackend {
 
 impl StepBackend for CpuBackend {
     fn platform(&self) -> String {
-        if self.workers <= 1 {
+        let base = if self.workers <= 1 {
             "cpu_ref".to_string()
         } else {
             format!("parallel_cpu({} threads)", self.workers)
+        };
+        if self.kernel.policy == KernelPolicy::Simd {
+            format!("{base} [simd:{}]", kernel::simd::active().name())
+        } else {
+            base
         }
     }
 
@@ -656,7 +662,7 @@ impl StepBackend for CpuBackend {
         let (n, j, r) = (model.order(), model.j, model.r);
         let (algo, hyper, workers) = (self.algo, self.hyper, self.workers.min(block.valid));
         let kcfg = self.kernel;
-        time_into(&mut st.exec, || {
+        let counters = time_into(&mut st.exec, || {
             let (factors, cores) = (&mut model.factors, &model.cores);
             let shared = SharedFactors::new(factors, j);
             let data = step::BlockData {
@@ -671,13 +677,22 @@ impl StepBackend for CpuBackend {
                 hyper,
             };
             if workers <= 1 {
-                kernel::run_factor_range(algo, mode, &shared, &data, 0..block.valid, kcfg);
+                kernel::run_factor_range(algo, mode, &shared, &data, 0..block.valid, kcfg)
             } else {
+                let hits = AtomicU64::new(0);
+                let misses = AtomicU64::new(0);
                 pool::parallel_chunks(block.valid, workers, |range| {
-                    kernel::run_factor_range(algo, mode, &shared, &data, range, kcfg);
+                    let c = kernel::run_factor_range(algo, mode, &shared, &data, range, kcfg);
+                    hits.fetch_add(c.inv_hits, Ordering::Relaxed);
+                    misses.fetch_add(c.inv_misses, Ordering::Relaxed);
                 });
+                KernelCounters {
+                    inv_hits: hits.into_inner(),
+                    inv_misses: misses.into_inner(),
+                }
             }
         });
+        st.add_counters(counters);
         Ok(())
     }
 
@@ -696,7 +711,7 @@ impl StepBackend for CpuBackend {
         let (algo, hyper, workers) = (self.algo, self.hyper, self.workers.min(block.valid));
         let kcfg = self.kernel;
         let glen = acc.grad.len();
-        time_into(&mut st.exec, || {
+        let counters = time_into(&mut st.exec, || {
             let (factors, cores) = (&mut model.factors, &model.cores);
             let shared = SharedFactors::new(factors, j);
             let data = step::BlockData {
@@ -712,12 +727,16 @@ impl StepBackend for CpuBackend {
             };
             if workers <= 1 {
                 let range = 0..block.valid;
-                kernel::run_core_range(algo, mode, &shared, &data, range, &mut acc.grad, kcfg);
+                kernel::run_core_range(algo, mode, &shared, &data, range, &mut acc.grad, kcfg)
             } else {
+                let hits = AtomicU64::new(0);
+                let misses = AtomicU64::new(0);
                 let partials = std::sync::Mutex::new(Vec::with_capacity(workers));
                 pool::parallel_chunks(block.valid, workers, |range| {
                     let mut g = vec![0f32; glen];
-                    kernel::run_core_range(algo, mode, &shared, &data, range, &mut g, kcfg);
+                    let c = kernel::run_core_range(algo, mode, &shared, &data, range, &mut g, kcfg);
+                    hits.fetch_add(c.inv_hits, Ordering::Relaxed);
+                    misses.fetch_add(c.inv_misses, Ordering::Relaxed);
                     partials.lock().unwrap().push(g);
                 });
                 for g in partials.into_inner().unwrap() {
@@ -725,8 +744,13 @@ impl StepBackend for CpuBackend {
                         *a += b;
                     }
                 }
+                KernelCounters {
+                    inv_hits: hits.into_inner(),
+                    inv_misses: misses.into_inner(),
+                }
             }
         });
+        st.add_counters(counters);
         Ok(())
     }
 

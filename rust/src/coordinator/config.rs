@@ -202,8 +202,9 @@ pub struct TrainConfig {
     /// Worker threads for the `ParallelCpu` backend's Hogwild block
     /// sharding (0 = auto-detect via `util::pool::default_threads`).
     pub threads: usize,
-    /// CPU step implementation: tiled fixed-width microkernels (default)
-    /// or the scalar oracle (`--cpu-kernel scalar`).
+    /// CPU step implementation: tiled fixed-width microkernels (default),
+    /// the scalar oracle (`--cpu-kernel scalar`), or the runtime-detected
+    /// SIMD tier (`--cpu-kernel simd`).
     pub cpu_kernel: KernelPolicy,
 }
 
@@ -282,6 +283,10 @@ mod tests {
         for b in [Backend::Hlo, Backend::CpuRef, Backend::ParallelCpu] {
             assert_eq!(Backend::parse(b.name()), Some(b));
         }
+        for k in [KernelPolicy::Tiled, KernelPolicy::Scalar, KernelPolicy::Simd] {
+            assert_eq!(KernelPolicy::parse(k.name()), Some(k));
+        }
+        assert_eq!(KernelPolicy::parse("avx2"), None);
         // code() round-trips through from_code()
         for a in [
             Algo::FastTucker,

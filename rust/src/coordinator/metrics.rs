@@ -4,6 +4,7 @@
 
 use std::time::{Duration, Instant};
 
+use crate::kernel::KernelCounters;
 use crate::util::json::{self, Json};
 
 /// Stage timings accumulated over one phase (factor or core) of an epoch.
@@ -27,6 +28,10 @@ pub struct PhaseStats {
     pub samples: usize,
     /// Padding slots staged but masked out.
     pub padded_slots: usize,
+    /// Invariant-cache hits reported by the storage-scheme kernels.
+    pub inv_hits: u64,
+    /// Invariant-cache misses (recomputed exclusion products).
+    pub inv_misses: u64,
 }
 
 impl PhaseStats {
@@ -50,6 +55,20 @@ impl PhaseStats {
         }
     }
 
+    /// Invariant-cache hit rate over this phase's storage-scheme kernel
+    /// samples; `None` when no storage-scheme kernel ran (the other
+    /// algorithms report no cache traffic).
+    pub fn invariant_hit_rate(&self) -> Option<f64> {
+        let total = self.inv_hits + self.inv_misses;
+        (total > 0).then(|| self.inv_hits as f64 / total as f64)
+    }
+
+    /// Fold one kernel range's counters into this phase.
+    pub fn add_counters(&mut self, c: KernelCounters) {
+        self.inv_hits += c.inv_hits;
+        self.inv_misses += c.inv_misses;
+    }
+
     /// Add another phase's counters and timings into this one.
     pub fn merge(&mut self, o: &PhaseStats) {
         self.sample += o.sample;
@@ -60,11 +79,13 @@ impl PhaseStats {
         self.blocks += o.blocks;
         self.samples += o.samples;
         self.padded_slots += o.padded_slots;
+        self.inv_hits += o.inv_hits;
+        self.inv_misses += o.inv_misses;
     }
 
     /// Serialize for the `BENCH_JSON` scrape lines.
     pub fn to_json(&self) -> Json {
-        json::obj(vec![
+        let mut fields = vec![
             ("sample_s", json::num(self.sample.as_secs_f64())),
             ("gather_s", json::num(self.gather.as_secs_f64())),
             ("exec_s", json::num(self.exec.as_secs_f64())),
@@ -75,7 +96,11 @@ impl PhaseStats {
             ("blocks", json::num(self.blocks as f64)),
             ("samples", json::num(self.samples as f64)),
             ("padding", json::num(self.padding_ratio())),
-        ])
+        ];
+        if let Some(rate) = self.invariant_hit_rate() {
+            fields.push(("inv_hit_rate", json::num(rate)));
+        }
+        json::obj(fields)
     }
 }
 
@@ -89,6 +114,14 @@ pub struct EpochStats {
 }
 
 impl EpochStats {
+    /// Invariant-cache hit rate across both phases; `None` when no
+    /// storage-scheme kernel ran this epoch.
+    pub fn invariant_hit_rate(&self) -> Option<f64> {
+        let hits = self.factor.inv_hits + self.core.inv_hits;
+        let total = hits + self.factor.inv_misses + self.core.inv_misses;
+        (total > 0).then(|| hits as f64 / total as f64)
+    }
+
     /// Serialize both phases for the `BENCH_JSON` scrape lines.
     pub fn to_json(&self) -> Json {
         json::obj(vec![
@@ -148,6 +181,28 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.blocks, 5);
         assert_eq!(a.samples, 15);
+    }
+
+    #[test]
+    fn invariant_hit_rate_counts() {
+        let mut s = PhaseStats::default();
+        assert_eq!(s.invariant_hit_rate(), None);
+        s.add_counters(KernelCounters {
+            inv_hits: 3,
+            inv_misses: 1,
+        });
+        s.add_counters(KernelCounters {
+            inv_hits: 0,
+            inv_misses: 4,
+        });
+        assert!((s.invariant_hit_rate().unwrap() - 0.375).abs() < 1e-12);
+        let e = EpochStats {
+            factor: s,
+            core: PhaseStats::default(),
+        };
+        assert!((e.invariant_hit_rate().unwrap() - 0.375).abs() < 1e-12);
+        assert!(s.to_json().get("inv_hit_rate").is_some());
+        assert!(PhaseStats::default().to_json().get("inv_hit_rate").is_none());
     }
 
     #[test]

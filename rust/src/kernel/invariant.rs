@@ -17,7 +17,7 @@
 
 use crate::cpu_ref::step::BlockData;
 
-use super::InvariantPolicy;
+use super::{simd, InvariantPolicy, KernelCounters};
 
 /// Cached exclusion product for the storage-scheme kernels, scoped to one
 /// block range (each worker shard owns its own cache).
@@ -28,6 +28,7 @@ pub struct InvariantCache<const R: usize> {
     key: Vec<u32>,
     d: [f32; R],
     valid: bool,
+    simd: bool,
     hits: u64,
     misses: u64,
 }
@@ -40,9 +41,19 @@ impl<const R: usize> InvariantCache<R> {
             key: vec![0; n],
             d: [1.0; R],
             valid: false,
+            simd: false,
             hits: 0,
             misses: 0,
         }
+    }
+
+    /// Route the rebuild's elementwise row products through the SIMD
+    /// primitive layer.  The products are elementwise (one rounding per
+    /// lane, no reassociation), so the cache stays bit-identical to the
+    /// scalar rebuild even on this path.
+    pub fn with_simd(mut self, on: bool) -> InvariantCache<R> {
+        self.simd = on;
+        self
     }
 
     /// Exclusion product `d` for sample `e` of the block, excluding `mode`.
@@ -68,8 +79,12 @@ impl<const R: usize> InvariantCache<R> {
             }
             let row = data.coord(e, m) as usize;
             let crow = &data.c_store[m][row * R..row * R + R];
-            for rr in 0..R {
-                self.d[rr] *= crow[rr];
+            if self.simd {
+                simd::mul_in(&mut self.d, crow);
+            } else {
+                for rr in 0..R {
+                    self.d[rr] *= crow[rr];
+                }
             }
             self.key[m] = row as u32;
         }
@@ -89,6 +104,15 @@ impl<const R: usize> InvariantCache<R> {
     /// Number of samples that recomputed the product.
     pub fn misses(&self) -> u64 {
         self.misses
+    }
+
+    /// Hit/miss totals in the shape the kernel range functions report
+    /// back to the backend.
+    pub fn counters(&self) -> KernelCounters {
+        KernelCounters {
+            inv_hits: self.hits,
+            inv_misses: self.misses,
+        }
     }
 }
 
@@ -128,14 +152,19 @@ mod tests {
 
         let mut cached = InvariantCache::<16>::new(InvariantPolicy::CachePerFiber, 3);
         let mut recomputed = InvariantCache::<16>::new(InvariantPolicy::Recompute, 3);
+        let mut simd = InvariantCache::<16>::new(InvariantPolicy::CachePerFiber, 3).with_simd(true);
         for e in 0..3 {
             let a = *cached.exclusion(&data, e, 0);
             let b = *recomputed.exclusion(&data, e, 0);
+            let c = *simd.exclusion(&data, e, 0);
             assert_eq!(a, b, "policies must agree bit-for-bit at sample {e}");
+            assert_eq!(a, c, "simd rebuild must stay bit-identical at sample {e}");
         }
         assert_eq!(cached.hits(), 1);
         assert_eq!(cached.misses(), 2);
         assert_eq!(recomputed.hits(), 0);
         assert_eq!(recomputed.misses(), 3);
+        let kc = cached.counters();
+        assert_eq!((kc.inv_hits, kc.inv_misses), (1, 2));
     }
 }

@@ -8,32 +8,48 @@
 //! * `micro` — fixed-width `(J, R)` microkernels (const generics, fully
 //!   unrolled inner loops over contiguous chunks) that LLVM autovectorizes;
 //!   the lane-level mirror of the L1 Pallas tiles.
+//! * [`simd`] — explicit runtime-dispatched SIMD primitives (AVX2+FMA on
+//!   x86_64, NEON on aarch64, a chunked portable fallback) — the CPU's
+//!   stand-in for the paper's tensor-core fragments.
 //! * `tile` — per-(algorithm, phase) drivers that walk a block range
-//!   through the microkernels, bit-identical to the scalar oracle.
+//!   through a [`tile::TileMath`] primitive set: `ExactMath` (bit-identical
+//!   to the scalar oracle) or `SimdMath` (tolerance-bounded).
 //! * [`invariant`] — [`InvariantCache`], the block-level calc-vs-store knob
 //!   for the storage-scheme kernels (recompute the exclusion product per
 //!   sample, or reuse it across a fiber).
+//! * [`prim`] — exact runtime-width primitives shared with the serve layer
+//!   (one accumulation-order contract for snapshots and scoring).
 //!
 //! The public entry points (`*_factor_range` / `*_core_range` and the
 //! algorithm dispatchers [`run_factor_range`] / [`run_core_range`]) mirror
-//! the scalar functions in [`crate::cpu_ref::step`] and take a
-//! [`KernelCfg`]:
+//! the scalar functions in [`crate::cpu_ref::step`], take a [`KernelCfg`],
+//! and return [`KernelCounters`] (invariant-cache hit/miss totals):
 //!
 //! * [`KernelPolicy::Tiled`] (default) selects a monomorphized tiled driver
 //!   when the run's `(J, R)` shape has one (J, R ∈ {16, 32}, plus the
 //!   square 48/64 shapes) and falls back to the scalar path otherwise;
 //! * [`KernelPolicy::Scalar`] forces the scalar oracle (`--cpu-kernel
 //!   scalar` on the CLI) — the baseline the `parallel_scaling` bench and
-//!   the `kernel_parity` test compare against.
+//!   the `kernel_parity` test compare against;
+//! * [`KernelPolicy::Simd`] routes the same monomorphized drivers through
+//!   the explicit SIMD primitives ([`simd::active`] picks AVX2/NEON/
+//!   portable once per process), with the same scalar fallback for shapes
+//!   without an instantiation.
 //!
-//! Both paths perform the same operations in the same order, so switching
-//! policies never changes a trajectory — only the wall clock.
+//! Numerical contract: `Tiled` and `Scalar` perform the same operations in
+//! the same order, so switching between them never changes a trajectory —
+//! only the wall clock.  `Simd` reassociates reductions into lanes and
+//! fuses multiply-adds, so it tracks the exact tiers to a small relative
+//! tolerance (pinned by `kernel_parity`) rather than bit-for-bit.
 
 pub mod invariant;
 pub(crate) mod micro;
+pub mod prim;
+pub mod simd;
 pub(crate) mod tile;
 
 pub use invariant::InvariantCache;
+pub use simd::SimdBackend;
 
 use std::ops::Range;
 
@@ -45,20 +61,25 @@ use crate::model::SharedFactors;
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum KernelPolicy {
     /// Fixed-width tiled microkernels (scalar fallback for shapes without a
-    /// monomorphized instantiation).
+    /// monomorphized instantiation) — exact, bit-identical to `Scalar`.
     #[default]
     Tiled,
     /// The scalar reference path — the CpuRef oracle, kept behind this flag
     /// for parity tests and baseline measurements.
     Scalar,
+    /// Explicit SIMD microkernels (AVX2+FMA / NEON, runtime-detected, with
+    /// a portable chunked fallback) — tolerance-bounded, not bit-identical
+    /// to the exact tiers.
+    Simd,
 }
 
 impl KernelPolicy {
-    /// Parse a CLI value (`tiled` / `scalar`).
+    /// Parse a CLI value (`tiled` / `scalar` / `simd`).
     pub fn parse(s: &str) -> Option<KernelPolicy> {
         match s {
             "tiled" => Some(KernelPolicy::Tiled),
             "scalar" => Some(KernelPolicy::Scalar),
+            "simd" => Some(KernelPolicy::Simd),
             _ => None,
         }
     }
@@ -68,6 +89,7 @@ impl KernelPolicy {
         match self {
             KernelPolicy::Tiled => "tiled",
             KernelPolicy::Scalar => "scalar",
+            KernelPolicy::Simd => "simd",
         }
     }
 }
@@ -89,24 +111,61 @@ pub enum InvariantPolicy {
 /// into every CPU block execution.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct KernelCfg {
-    /// Tiled microkernels vs the scalar oracle.
+    /// Tiled microkernels vs the scalar oracle vs explicit SIMD.
     pub policy: KernelPolicy,
     /// Calc-vs-store handling of the storage-scheme invariants.
     pub invariant: InvariantPolicy,
 }
 
-/// Monomorphized `(J, R)` dispatch: route to a fixed-shape tile driver, or
-/// to the scalar fallback when the shape has no instantiation.
+/// Counters every kernel range execution reports back to the backend —
+/// currently the invariant-cache hit/miss totals of the storage-scheme
+/// kernels (zero for the other algorithms and for the scalar path, which
+/// recomputes unconditionally).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KernelCounters {
+    /// Samples whose exclusion product was served from the fiber cache.
+    pub inv_hits: u64,
+    /// Samples that recomputed the exclusion product.
+    pub inv_misses: u64,
+}
+
+impl KernelCounters {
+    /// Fold another range's counters into this one.
+    pub fn merge(&mut self, other: KernelCounters) {
+        self.inv_hits += other.inv_hits;
+        self.inv_misses += other.inv_misses;
+    }
+}
+
+/// Monomorphized `(J, R)` dispatch: route to a fixed-shape tile driver
+/// instantiated with the given math, or to the scalar fallback when the
+/// shape has no instantiation.
 macro_rules! dispatch_jr {
-    (($j:expr, $r:expr), $f:ident ( $($a:expr),* ), $fallback:expr) => {
+    (($j:expr, $r:expr), $math:ty, $f:ident ( $($a:expr),* ), $fallback:expr) => {
         match ($j, $r) {
-            (16, 16) => tile::$f::<16, 16>($($a),*),
-            (16, 32) => tile::$f::<16, 32>($($a),*),
-            (32, 16) => tile::$f::<32, 16>($($a),*),
-            (32, 32) => tile::$f::<32, 32>($($a),*),
-            (48, 48) => tile::$f::<48, 48>($($a),*),
-            (64, 64) => tile::$f::<64, 64>($($a),*),
+            (16, 16) => tile::$f::<$math, 16, 16>($($a),*),
+            (16, 32) => tile::$f::<$math, 16, 32>($($a),*),
+            (32, 16) => tile::$f::<$math, 32, 16>($($a),*),
+            (32, 32) => tile::$f::<$math, 32, 32>($($a),*),
+            (48, 48) => tile::$f::<$math, 48, 48>($($a),*),
+            (64, 64) => tile::$f::<$math, 64, 64>($($a),*),
             _ => $fallback,
+        }
+    };
+}
+
+/// Policy dispatch on top of [`dispatch_jr!`]: scalar forces the oracle,
+/// the tiled tiers pick their math, unsupported shapes fall back.
+macro_rules! dispatch_policy {
+    ($cfg:expr, ($j:expr, $r:expr), $f:ident ( $($a:expr),* ), $fallback:expr) => {
+        match $cfg.policy {
+            KernelPolicy::Scalar => $fallback,
+            KernelPolicy::Tiled => {
+                dispatch_jr!(($j, $r), tile::ExactMath, $f($($a),*), $fallback)
+            }
+            KernelPolicy::Simd => {
+                dispatch_jr!(($j, $r), tile::SimdMath, $f($($a),*), $fallback)
+            }
         }
     };
 }
@@ -117,15 +176,11 @@ pub fn plus_factor_range(
     data: &BlockData<'_>,
     range: Range<usize>,
     cfg: KernelCfg,
-) {
-    if cfg.policy == KernelPolicy::Scalar {
-        return step::plus_factor_scalar(shared, data, range);
-    }
-    dispatch_jr!(
-        (data.j, data.r),
-        plus_factor(shared, data, range),
-        step::plus_factor_scalar(shared, data, range)
-    );
+) -> KernelCounters {
+    dispatch_policy!(cfg, (data.j, data.r), plus_factor(shared, data, range), {
+        step::plus_factor_scalar(shared, data, range);
+        KernelCounters::default()
+    })
 }
 
 /// FastTuckerPlus core step over `range`, accumulating into `grad`
@@ -136,15 +191,11 @@ pub fn plus_core_range(
     range: Range<usize>,
     grad: &mut [f32],
     cfg: KernelCfg,
-) {
-    if cfg.policy == KernelPolicy::Scalar {
-        return step::plus_core_scalar(shared, data, range, grad);
-    }
-    dispatch_jr!(
-        (data.j, data.r),
-        plus_core(shared, data, range, grad),
-        step::plus_core_scalar(shared, data, range, grad)
-    );
+) -> KernelCounters {
+    dispatch_policy!(cfg, (data.j, data.r), plus_core(shared, data, range, grad), {
+        step::plus_core_scalar(shared, data, range, grad);
+        KernelCounters::default()
+    })
 }
 
 /// FastTucker factor step for `mode` over `range`.
@@ -154,15 +205,11 @@ pub fn mode_factor_range(
     mode: usize,
     range: Range<usize>,
     cfg: KernelCfg,
-) {
-    if cfg.policy == KernelPolicy::Scalar {
-        return step::mode_factor_scalar(shared, data, mode, range);
-    }
-    dispatch_jr!(
-        (data.j, data.r),
-        mode_factor(shared, data, mode, range),
-        step::mode_factor_scalar(shared, data, mode, range)
-    );
+) -> KernelCounters {
+    dispatch_policy!(cfg, (data.j, data.r), mode_factor(shared, data, mode, range), {
+        step::mode_factor_scalar(shared, data, mode, range);
+        KernelCounters::default()
+    })
 }
 
 /// FastTucker core step for `mode` over `range`, accumulating into `grad`
@@ -174,15 +221,16 @@ pub fn mode_core_range(
     range: Range<usize>,
     grad: &mut [f32],
     cfg: KernelCfg,
-) {
-    if cfg.policy == KernelPolicy::Scalar {
-        return step::mode_core_scalar(shared, data, mode, range, grad);
-    }
-    dispatch_jr!(
+) -> KernelCounters {
+    dispatch_policy!(
+        cfg,
         (data.j, data.r),
         mode_core(shared, data, mode, range, grad),
-        step::mode_core_scalar(shared, data, mode, range, grad)
-    );
+        {
+            step::mode_core_scalar(shared, data, mode, range, grad);
+            KernelCounters::default()
+        }
+    )
 }
 
 /// FasterTucker (storage scheme) factor step for `mode` over `range`.
@@ -192,15 +240,16 @@ pub fn stored_factor_range(
     mode: usize,
     range: Range<usize>,
     cfg: KernelCfg,
-) {
-    if cfg.policy == KernelPolicy::Scalar {
-        return step::stored_factor_scalar(shared, data, mode, range);
-    }
-    dispatch_jr!(
+) -> KernelCounters {
+    dispatch_policy!(
+        cfg,
         (data.j, data.r),
         stored_factor(shared, data, mode, range, cfg.invariant),
-        step::stored_factor_scalar(shared, data, mode, range)
-    );
+        {
+            step::stored_factor_scalar(shared, data, mode, range);
+            KernelCounters::default()
+        }
+    )
 }
 
 /// FasterTucker (storage scheme) core step for `mode` over `range`,
@@ -212,15 +261,16 @@ pub fn stored_core_range(
     range: Range<usize>,
     grad: &mut [f32],
     cfg: KernelCfg,
-) {
-    if cfg.policy == KernelPolicy::Scalar {
-        return step::stored_core_scalar(shared, data, mode, range, grad);
-    }
-    dispatch_jr!(
+) -> KernelCounters {
+    dispatch_policy!(
+        cfg,
         (data.j, data.r),
         stored_core(shared, data, mode, range, grad, cfg.invariant),
-        step::stored_core_scalar(shared, data, mode, range, grad)
-    );
+        {
+            step::stored_core_scalar(shared, data, mode, range, grad);
+            KernelCounters::default()
+        }
+    )
 }
 
 /// Dispatch one factor-step range to the algorithm's kernel (the CPU
@@ -232,7 +282,7 @@ pub fn run_factor_range(
     data: &BlockData<'_>,
     range: Range<usize>,
     cfg: KernelCfg,
-) {
+) -> KernelCounters {
     match (algo, mode) {
         (Algo::Plus, None) => plus_factor_range(shared, data, range, cfg),
         (Algo::FastTucker, Some(m)) => mode_factor_range(shared, data, m, range, cfg),
@@ -253,7 +303,7 @@ pub fn run_core_range(
     range: Range<usize>,
     grad: &mut [f32],
     cfg: KernelCfg,
-) {
+) -> KernelCounters {
     match (algo, mode) {
         (Algo::Plus, None) => plus_core_range(shared, data, range, grad, cfg),
         (Algo::FastTucker, Some(m)) => mode_core_range(shared, data, m, range, grad, cfg),
@@ -272,7 +322,7 @@ mod tests {
 
     #[test]
     fn policy_parse_roundtrip() {
-        for p in [KernelPolicy::Tiled, KernelPolicy::Scalar] {
+        for p in [KernelPolicy::Tiled, KernelPolicy::Scalar, KernelPolicy::Simd] {
             assert_eq!(KernelPolicy::parse(p.name()), Some(p));
         }
         assert_eq!(KernelPolicy::parse("nope"), None);
@@ -280,13 +330,27 @@ mod tests {
         assert_eq!(InvariantPolicy::default(), InvariantPolicy::Recompute);
     }
 
+    #[test]
+    fn counters_merge_sums() {
+        let mut a = KernelCounters {
+            inv_hits: 3,
+            inv_misses: 5,
+        };
+        a.merge(KernelCounters {
+            inv_hits: 2,
+            inv_misses: 1,
+        });
+        assert_eq!(a.inv_hits, 5);
+        assert_eq!(a.inv_misses, 6);
+    }
+
     /// A shape with no monomorphized tile must run through the scalar
-    /// fallback and still produce the scalar trajectory.
+    /// fallback and still produce the scalar trajectory — under the tiled
+    /// *and* the SIMD tier (the fallback is the same exact oracle).
     #[test]
     fn unsupported_shape_falls_back_to_scalar() {
         let (j, r) = (48, 16); // not in the dispatch table
-        let mut a = TuckerModel::init(&[8, 8, 8], j, r, 3);
-        let mut b = a.clone();
+        let base = TuckerModel::init(&[8, 8, 8], j, r, 3);
         let coords: Vec<u32> = (0..12u32)
             .flat_map(|e| [e % 8, (e / 2) % 8, (e / 3) % 8])
             .collect();
@@ -307,18 +371,29 @@ mod tests {
             };
             plus_factor_range(&shared, &data, 0..12, cfg);
         };
-        let tiled = KernelCfg {
-            policy: KernelPolicy::Tiled,
-            ..Default::default()
-        };
-        let scalar = KernelCfg {
-            policy: KernelPolicy::Scalar,
-            ..Default::default()
-        };
-        run(&mut a, tiled);
-        run(&mut b, scalar);
-        for m in 0..3 {
-            assert_eq!(a.factors[m], b.factors[m], "mode {m} diverged");
+        let mut scalar = base.clone();
+        run(
+            &mut scalar,
+            KernelCfg {
+                policy: KernelPolicy::Scalar,
+                ..Default::default()
+            },
+        );
+        for policy in [KernelPolicy::Tiled, KernelPolicy::Simd] {
+            let mut m = base.clone();
+            run(
+                &mut m,
+                KernelCfg {
+                    policy,
+                    ..Default::default()
+                },
+            );
+            for mode in 0..3 {
+                assert_eq!(
+                    m.factors[mode], scalar.factors[mode],
+                    "{policy:?} mode {mode} diverged"
+                );
+            }
         }
     }
 }

@@ -1,0 +1,130 @@
+//! Exact runtime-width primitives — the single accumulation-order contract
+//! shared by the serving layer and the snapshot builder.
+//!
+//! The serve layer works with runtime `j`/`r` (read from a checkpoint),
+//! not const generics, and its outputs are pinned **bit-identical** to the
+//! trainer's oracle (`cpu_ref::compute_c_full`, `TuckerModel::predict_one`).
+//! These wrappers give it one place to get that arithmetic: known widths
+//! route to the monomorphized microkernels in [`super::micro`] (which the
+//! `kernel_parity` suite proves equal to the oracle), and every other
+//! width runs the same ascending-index scalar loops.  `engine::dot_r` and
+//! `snapshot::project_rows` used to duplicate this logic privately; they
+//! now both call here, so there is exactly one place to optimize and one
+//! order to test.
+
+use super::micro;
+
+/// Exact dot product `Σ a[i] * b[i]` in ascending index order.  Known
+/// Kruskal widths (16/32/48/64) use the monomorphized microkernel; the
+/// result is bit-identical either way.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match a.len() {
+        16 => micro::dot::<16>(a.try_into().unwrap(), b.try_into().unwrap()),
+        32 => micro::dot::<32>(a.try_into().unwrap(), b.try_into().unwrap()),
+        48 => micro::dot::<48>(a.try_into().unwrap(), b.try_into().unwrap()),
+        64 => micro::dot::<64>(a.try_into().unwrap(), b.try_into().unwrap()),
+        _ => {
+            let mut acc = 0.0f32;
+            for (&x, &y) in a.iter().zip(b) {
+                acc += x * y;
+            }
+            acc
+        }
+    }
+}
+
+/// Exact elementwise `acc[i] *= src[i]` (one rounding per element).
+pub fn mul_in(acc: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(acc.len(), src.len());
+    for (a, &s) in acc.iter_mut().zip(src) {
+        *a *= s;
+    }
+}
+
+/// Project every row of `factor` (`rows x j` row-major) through `core`
+/// (`j x r` row-major) into `out` (`rows x r` row-major) — the exact
+/// table build `C = A B`, bit-identical to `cpu_ref::compute_c_full`
+/// (zero-init, ascending `j`, ascending `r`).
+pub fn project_rows(factor: &[f32], core: &[f32], j: usize, r: usize, out: &mut [f32]) {
+    debug_assert_eq!(core.len(), j * r);
+    debug_assert_eq!(factor.len() / j * r, out.len());
+    match (j, r) {
+        (16, 16) => project_tile::<16, 16>(factor, core, out),
+        (16, 32) => project_tile::<16, 32>(factor, core, out),
+        (32, 16) => project_tile::<32, 16>(factor, core, out),
+        (32, 32) => project_tile::<32, 32>(factor, core, out),
+        (48, 48) => project_tile::<48, 48>(factor, core, out),
+        (64, 64) => project_tile::<64, 64>(factor, core, out),
+        _ => {
+            for (row, dst) in factor.chunks_exact(j).zip(out.chunks_exact_mut(r)) {
+                dst.fill(0.0);
+                for (&a, brow) in row.iter().zip(core.chunks_exact(r)) {
+                    for (d, &b) in dst.iter_mut().zip(brow) {
+                        *d += a * b;
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn project_tile<const J: usize, const R: usize>(factor: &[f32], core: &[f32], out: &mut [f32]) {
+    for (row, dst) in factor.chunks_exact(J).zip(out.chunks_exact_mut(R)) {
+        let row: &[f32; J] = row.try_into().unwrap();
+        let dst: &mut [f32; R] = dst.try_into().unwrap();
+        micro::project::<J, R>(row, core, dst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|i| (i % 13) as f32 * scale - 0.4).collect()
+    }
+
+    #[test]
+    fn dot_bit_identical_to_scalar_all_widths() {
+        for len in [1usize, 7, 16, 17, 32, 48, 64, 65] {
+            let a = seq(len, 0.11);
+            let b = seq(len, 0.07);
+            let mut want = 0.0f32;
+            for (&x, &y) in a.iter().zip(&b) {
+                want += x * y;
+            }
+            assert_eq!(dot(&a, &b), want, "width {len}");
+        }
+    }
+
+    #[test]
+    fn project_rows_bit_identical_to_scalar_order() {
+        for (j, r) in [(16usize, 16usize), (16, 32), (5, 9), (48, 48)] {
+            let rows = 3;
+            let factor = seq(rows * j, 0.05);
+            let core = seq(j * r, 0.03);
+            let mut got = vec![0f32; rows * r];
+            project_rows(&factor, &core, j, r, &mut got);
+            let mut want = vec![0f32; rows * r];
+            for i in 0..rows {
+                for jj in 0..j {
+                    let a = factor[i * j + jj];
+                    for rr in 0..r {
+                        want[i * r + rr] += a * core[jj * r + rr];
+                    }
+                }
+            }
+            assert_eq!(got, want, "shape ({j}, {r})");
+        }
+    }
+
+    #[test]
+    fn mul_in_is_elementwise() {
+        let mut acc = seq(10, 0.3);
+        let src = seq(10, 0.2);
+        let want: Vec<f32> = acc.iter().zip(&src).map(|(&a, &s)| a * s).collect();
+        mul_in(&mut acc, &src);
+        assert_eq!(acc, want);
+    }
+}

@@ -1,0 +1,158 @@
+//! AVX2 + FMA implementations of the SIMD primitives (x86_64 only).
+//!
+//! Every function carries `#[target_feature(enable = "avx2", enable =
+//! "fma")]` and is `unsafe` to call: the dispatcher in [`super`] only
+//! routes here after `is_x86_feature_detected!` confirmed both features
+//! at runtime, which is the entire safety contract.  Bodies process
+//! 8-lane `__m256` chunks with unaligned loads (`_mm256_loadu_ps`) and
+//! fused multiply-add (`_mm256_fmadd_ps`); remainders run scalar.
+//! Reductions fold the 8 lanes ascending, matching the portable
+//! fallback's accumulator shape.
+
+use std::arch::x86_64::*;
+
+/// Fold the 8 lanes of `v` in ascending lane order.
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn hsum(v: __m256) -> f32 {
+    let mut lanes = [0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), v);
+    lanes.iter().sum()
+}
+
+/// Dot product with a fused 8-lane accumulator.
+///
+/// # Safety
+/// AVX2 and FMA must be available (checked by the dispatcher).
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut acc = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let va = _mm256_loadu_ps(a.as_ptr().add(i));
+        let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+        acc = _mm256_fmadd_ps(va, vb, acc);
+        i += 8;
+    }
+    let mut sum = hsum(acc);
+    while i < n {
+        sum += a[i] * b[i];
+        i += 1;
+    }
+    sum
+}
+
+/// Elementwise `acc[i] *= src[i]` — exact (one rounding per lane).
+///
+/// # Safety
+/// AVX2 and FMA must be available (checked by the dispatcher).
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(super) unsafe fn mul_in(acc: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(acc.len(), src.len());
+    let n = acc.len();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let v = _mm256_mul_ps(
+            _mm256_loadu_ps(acc.as_ptr().add(i)),
+            _mm256_loadu_ps(src.as_ptr().add(i)),
+        );
+        _mm256_storeu_ps(acc.as_mut_ptr().add(i), v);
+        i += 8;
+    }
+    while i < n {
+        acc[i] *= src[i];
+        i += 1;
+    }
+}
+
+/// Fused `out[i] += alpha * x[i]`.
+///
+/// # Safety
+/// AVX2 and FMA must be available (checked by the dispatcher).
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(super) unsafe fn axpy(alpha: f32, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    let n = out.len();
+    let va = _mm256_set1_ps(alpha);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let vo = _mm256_fmadd_ps(
+            va,
+            _mm256_loadu_ps(x.as_ptr().add(i)),
+            _mm256_loadu_ps(out.as_ptr().add(i)),
+        );
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), vo);
+        i += 8;
+    }
+    while i < n {
+        out[i] += alpha * x[i];
+        i += 1;
+    }
+}
+
+/// `out = row · core` — ascending-`j` fused axpy accumulation.
+///
+/// # Safety
+/// AVX2 and FMA must be available (checked by the dispatcher).
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(super) unsafe fn project_row(row: &[f32], core: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(core.len(), row.len() * out.len());
+    out.fill(0.0);
+    for (&a, brow) in row.iter().zip(core.chunks_exact(out.len())) {
+        axpy(a, brow, out);
+    }
+}
+
+/// `out[j] = core[j, :] · d` for every row of `core`.
+///
+/// # Safety
+/// AVX2 and FMA must be available (checked by the dispatcher).
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(super) unsafe fn matvec_rows(core: &[f32], d: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(core.len(), out.len() * d.len());
+    for (o, brow) in out.iter_mut().zip(core.chunks_exact(d.len())) {
+        *o = dot(brow, d);
+    }
+}
+
+/// SGD row update `out = row + lr * (err * db - lam * row)` with fused
+/// multiply-adds.
+///
+/// # Safety
+/// AVX2 and FMA must be available (checked by the dispatcher).
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(super) unsafe fn sgd_row(row: &[f32], db: &[f32], err: f32, lr: f32, lam: f32, out: &mut [f32]) {
+    debug_assert_eq!(row.len(), db.len());
+    debug_assert_eq!(row.len(), out.len());
+    let n = out.len();
+    let verr = _mm256_set1_ps(err);
+    let vlr = _mm256_set1_ps(lr);
+    let vlam = _mm256_set1_ps(lam);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let vrow = _mm256_loadu_ps(row.as_ptr().add(i));
+        let vdb = _mm256_loadu_ps(db.as_ptr().add(i));
+        // t = err * db - lam * row, fused on the err * db side
+        let t = _mm256_fmsub_ps(verr, vdb, _mm256_mul_ps(vlam, vrow));
+        let vo = _mm256_fmadd_ps(vlr, t, vrow);
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), vo);
+        i += 8;
+    }
+    while i < n {
+        out[i] = row[i] + lr * (err * db[i] - lam * row[i]);
+        i += 1;
+    }
+}
+
+/// Rank-1 accumulation `grad[j, :] += (err * row[j]) * d`.
+///
+/// # Safety
+/// AVX2 and FMA must be available (checked by the dispatcher).
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(super) unsafe fn grad_accum(grad: &mut [f32], row: &[f32], d: &[f32], err: f32) {
+    debug_assert_eq!(grad.len(), row.len() * d.len());
+    for (&a, grow) in row.iter().zip(grad.chunks_exact_mut(d.len())) {
+        axpy(err * a, d, grow);
+    }
+}

@@ -1,0 +1,325 @@
+//! Runtime-dispatched f32 SIMD primitives — the CPU's stand-in for the
+//! paper's tensor-core fragments, behind [`KernelPolicy::Simd`].
+//!
+//! The first call probes the CPU once (`is_x86_feature_detected!` /
+//! `is_aarch64_feature_detected!`), caches the winner in an atomic, and
+//! every primitive then routes to that backend:
+//!
+//! ```text
+//! detect (once, cached)          select                 execute
+//! ───────────────────────  ───────────────────  ───────────────────────
+//! avx2 && fma present   →  SimdBackend::Avx2Fma → 8-lane __m256 + FMA
+//! neon present (arm64)  →  SimdBackend::Neon    → 4-lane float32x4 + FMA
+//! otherwise             →  SimdBackend::Portable→ 8-lane chunked scalar
+//! ```
+//!
+//! Numerical contract: elementwise primitives ([`mul_in`], [`sgd_row`]
+//! minus its FMA fusion) round once per lane exactly like scalar code,
+//! but reductions ([`dot`], [`matvec_rows`], [`project_row`] tails) fold
+//! lanes in a different order and FMA skips intermediate roundings — so
+//! the `Simd` tier is **tolerance-bounded** against the scalar oracle,
+//! never bit-identical.  The exact tiers (`Tiled`, `Scalar`) do not go
+//! through this module and stay bit-for-bit reproducible.
+//!
+//! All primitives accept arbitrary (ragged, unaligned) slice lengths;
+//! chunk remainders run scalar.
+//!
+//! [`KernelPolicy::Simd`]: crate::kernel::KernelPolicy::Simd
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+mod portable;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which implementation backs the SIMD tier on this machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdBackend {
+    /// 256-bit AVX2 lanes with FMA contraction (x86_64, runtime-detected).
+    Avx2Fma,
+    /// 128-bit NEON lanes with fused multiply-add (aarch64 baseline).
+    Neon,
+    /// Chunked scalar fallback (autovectorizable), selected when no
+    /// supported instruction set is detected.
+    Portable,
+}
+
+impl SimdBackend {
+    /// Stable lowercase name for logs, platform strings, and benches.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdBackend::Avx2Fma => "avx2_fma",
+            SimdBackend::Neon => "neon",
+            SimdBackend::Portable => "portable",
+        }
+    }
+}
+
+const UNPROBED: u8 = 0;
+const SEL_AVX2: u8 = 1;
+const SEL_NEON: u8 = 2;
+const SEL_PORTABLE: u8 = 3;
+
+static SELECTED: AtomicU8 = AtomicU8::new(UNPROBED);
+
+fn probe() -> u8 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            return SEL_AVX2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return SEL_NEON;
+        }
+    }
+    SEL_PORTABLE
+}
+
+/// The backend the SIMD tier dispatches to on this machine.  Probes the
+/// CPU on first call, then answers from a cached atomic (a benign race
+/// at worst probes twice with the same result).
+pub fn active() -> SimdBackend {
+    let mut sel = SELECTED.load(Ordering::Relaxed);
+    if sel == UNPROBED {
+        sel = probe();
+        SELECTED.store(sel, Ordering::Relaxed);
+    }
+    match sel {
+        SEL_AVX2 => SimdBackend::Avx2Fma,
+        SEL_NEON => SimdBackend::Neon,
+        _ => SimdBackend::Portable,
+    }
+}
+
+/// Dot product `Σ a[i] * b[i]` (lane-chunked reduction; tolerance-bounded
+/// vs scalar).  Lengths must match.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        SimdBackend::Avx2Fma => unsafe { avx2::dot(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        SimdBackend::Neon => neon::dot(a, b),
+        _ => portable::dot(a, b),
+    }
+}
+
+/// Elementwise `acc[i] *= src[i]` — bit-identical to scalar on every
+/// backend (one rounding per lane, no reassociation).
+pub fn mul_in(acc: &mut [f32], src: &[f32]) {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        SimdBackend::Avx2Fma => unsafe { avx2::mul_in(acc, src) },
+        #[cfg(target_arch = "aarch64")]
+        SimdBackend::Neon => neon::mul_in(acc, src),
+        _ => portable::mul_in(acc, src),
+    }
+}
+
+/// `out[i] += alpha * x[i]` (FMA-fused where available).
+pub fn axpy(alpha: f32, x: &[f32], out: &mut [f32]) {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        SimdBackend::Avx2Fma => unsafe { avx2::axpy(alpha, x, out) },
+        #[cfg(target_arch = "aarch64")]
+        SimdBackend::Neon => neon::axpy(alpha, x, out),
+        _ => portable::axpy(alpha, x, out),
+    }
+}
+
+/// Row projection `out = row · core` where `core` is `j x r` row-major,
+/// `j = row.len()`, `r = out.len()` — the SIMD twin of
+/// `kernel::micro::project`.
+pub fn project_row(row: &[f32], core: &[f32], out: &mut [f32]) {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        SimdBackend::Avx2Fma => unsafe { avx2::project_row(row, core, out) },
+        #[cfg(target_arch = "aarch64")]
+        SimdBackend::Neon => neon::project_row(row, core, out),
+        _ => portable::project_row(row, core, out),
+    }
+}
+
+/// Per-row dot `out[j] = core[j, :] · d` where `core` is `j x r`
+/// row-major, `r = d.len()` — the SIMD twin of `kernel::micro::db_rows`.
+pub fn matvec_rows(core: &[f32], d: &[f32], out: &mut [f32]) {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        SimdBackend::Avx2Fma => unsafe { avx2::matvec_rows(core, d, out) },
+        #[cfg(target_arch = "aarch64")]
+        SimdBackend::Neon => neon::matvec_rows(core, d, out),
+        _ => portable::matvec_rows(core, d, out),
+    }
+}
+
+/// SGD row update `out = row + lr * (err * db - lam * row)` — the SIMD
+/// twin of `kernel::micro::sgd_row` (FMA-fused, tolerance-bounded).
+pub fn sgd_row(row: &[f32], db: &[f32], err: f32, lr: f32, lam: f32, out: &mut [f32]) {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        SimdBackend::Avx2Fma => unsafe { avx2::sgd_row(row, db, err, lr, lam, out) },
+        #[cfg(target_arch = "aarch64")]
+        SimdBackend::Neon => neon::sgd_row(row, db, err, lr, lam, out),
+        _ => portable::sgd_row(row, db, err, lr, lam, out),
+    }
+}
+
+/// Rank-1 gradient accumulation `grad[j, :] += (err * row[j]) * d` — the
+/// SIMD twin of `kernel::micro::grad_accum`.
+pub fn grad_accum(grad: &mut [f32], row: &[f32], d: &[f32], err: f32) {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        SimdBackend::Avx2Fma => unsafe { avx2::grad_accum(grad, row, d, err) },
+        #[cfg(target_arch = "aarch64")]
+        SimdBackend::Neon => neon::grad_accum(grad, row, d, err),
+        _ => portable::grad_accum(grad, row, d, err),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic pseudo-random fill in [-0.5, 0.5).
+    fn data(n: usize, seed: u64) -> Vec<f32> {
+        let mut x = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1;
+        (0..n)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+                (x % 10_000) as f32 * 1e-4 - 0.5
+            })
+            .collect()
+    }
+
+    fn close(a: f32, b: f32) -> bool {
+        (a - b).abs() <= 1e-5 * (1.0 + a.abs().max(b.abs()))
+    }
+
+    fn assert_all_close(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+        for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+            assert!(close(x, y), "{what}[{i}]: simd {x} vs scalar {y}");
+        }
+    }
+
+    /// Ragged lengths straddling every chunk boundary of both lane widths.
+    const LENS: [usize; 16] = [0, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 65];
+
+    #[test]
+    fn probe_is_stable() {
+        let first = active();
+        for _ in 0..4 {
+            assert_eq!(active(), first);
+        }
+        assert!(!first.name().is_empty());
+    }
+
+    #[test]
+    fn dot_matches_scalar_ragged_and_offset() {
+        let pool = data(256, 1);
+        for len in LENS {
+            for off in [0usize, 1, 3] {
+                let a = &pool[off..off + len];
+                let b = &pool[off + len..off + 2 * len];
+                let want: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+                assert!(close(dot(a, b), want), "dot len {len} off {off}");
+                assert!(close(portable::dot(a, b), want), "portable dot len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn mul_in_is_bit_exact() {
+        let pool = data(256, 2);
+        for len in LENS {
+            for off in [0usize, 1, 3] {
+                let src = &pool[off + len..off + 2 * len];
+                let mut got = pool[off..off + len].to_vec();
+                let mut want = got.clone();
+                mul_in(&mut got, src);
+                for (w, &s) in want.iter_mut().zip(src) {
+                    *w *= s;
+                }
+                assert_eq!(got, want, "mul_in len {len} off {off}");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_matches_scalar() {
+        let pool = data(256, 3);
+        for len in LENS {
+            let x = &pool[len..2 * len];
+            let mut got = pool[..len].to_vec();
+            let mut want = got.clone();
+            axpy(0.37, x, &mut got);
+            for (w, &v) in want.iter_mut().zip(x) {
+                *w += 0.37 * v;
+            }
+            assert_all_close(&got, &want, "axpy");
+        }
+    }
+
+    #[test]
+    fn project_and_matvec_match_scalar() {
+        for (j, r) in [(1, 1), (5, 9), (16, 16), (16, 32), (3, 17), (48, 48)] {
+            let factor = data(j, (j * r) as u64);
+            let core = data(j * r, (j + r) as u64);
+            let d = data(r, r as u64);
+
+            let mut got = vec![0f32; r];
+            project_row(&factor, &core, &mut got);
+            let mut want = vec![0f32; r];
+            for (jj, &a) in factor.iter().enumerate() {
+                for (w, &b) in want.iter_mut().zip(&core[jj * r..(jj + 1) * r]) {
+                    *w += a * b;
+                }
+            }
+            assert_all_close(&got, &want, "project_row");
+
+            let mut got = vec![0f32; j];
+            matvec_rows(&core, &d, &mut got);
+            let want: Vec<f32> = core
+                .chunks_exact(r)
+                .map(|brow| brow.iter().zip(&d).map(|(x, y)| x * y).sum())
+                .collect();
+            assert_all_close(&got, &want, "matvec_rows");
+        }
+    }
+
+    #[test]
+    fn sgd_and_grad_match_scalar() {
+        let (err, lr, lam) = (0.21f32, 0.015f32, 0.03f32);
+        for (j, r) in [(7, 5), (16, 16), (33, 9)] {
+            let row = data(j, 11);
+            let db = data(j, 12);
+            let mut got = vec![0f32; j];
+            sgd_row(&row, &db, err, lr, lam, &mut got);
+            let want: Vec<f32> = row
+                .iter()
+                .zip(&db)
+                .map(|(&a, &g)| a + lr * (err * g - lam * a))
+                .collect();
+            assert_all_close(&got, &want, "sgd_row");
+
+            let d = data(r, 13);
+            let mut got = data(j * r, 14);
+            let mut want = got.clone();
+            grad_accum(&mut got, &row, &d, err);
+            for (jj, &a) in row.iter().enumerate() {
+                for (w, &v) in want[jj * r..(jj + 1) * r].iter_mut().zip(&d) {
+                    *w += (err * a) * v;
+                }
+            }
+            assert_all_close(&got, &want, "grad_accum");
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! NEON implementations of the SIMD primitives (aarch64 only).
+//!
+//! NEON is part of the aarch64 baseline, so these functions are safe
+//! wrappers around `unsafe` intrinsic blocks — no `#[target_feature]`
+//! attribute is needed (the dispatcher still confirms `neon` via
+//! `is_aarch64_feature_detected!` before routing here).  Bodies process
+//! 4-lane `float32x4_t` chunks with fused multiply-add (`vfmaq_f32`);
+//! remainders run scalar.
+
+use std::arch::aarch64::*;
+
+/// Dot product with a fused 4-lane accumulator.
+pub(super) fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    unsafe {
+        let mut acc = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            acc = vfmaq_f32(acc, vld1q_f32(a.as_ptr().add(i)), vld1q_f32(b.as_ptr().add(i)));
+            i += 4;
+        }
+        let mut sum = vaddvq_f32(acc);
+        while i < n {
+            sum += a[i] * b[i];
+            i += 1;
+        }
+        sum
+    }
+}
+
+/// Elementwise `acc[i] *= src[i]` — exact (one rounding per lane).
+pub(super) fn mul_in(acc: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(acc.len(), src.len());
+    let n = acc.len();
+    unsafe {
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let v = vmulq_f32(vld1q_f32(acc.as_ptr().add(i)), vld1q_f32(src.as_ptr().add(i)));
+            vst1q_f32(acc.as_mut_ptr().add(i), v);
+            i += 4;
+        }
+        while i < n {
+            acc[i] *= src[i];
+            i += 1;
+        }
+    }
+}
+
+/// Fused `out[i] += alpha * x[i]`.
+pub(super) fn axpy(alpha: f32, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    let n = out.len();
+    unsafe {
+        let va = vdupq_n_f32(alpha);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let vo = vfmaq_f32(vld1q_f32(out.as_ptr().add(i)), va, vld1q_f32(x.as_ptr().add(i)));
+            vst1q_f32(out.as_mut_ptr().add(i), vo);
+            i += 4;
+        }
+        while i < n {
+            out[i] += alpha * x[i];
+            i += 1;
+        }
+    }
+}
+
+/// `out = row · core` — ascending-`j` fused axpy accumulation.
+pub(super) fn project_row(row: &[f32], core: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(core.len(), row.len() * out.len());
+    out.fill(0.0);
+    for (&a, brow) in row.iter().zip(core.chunks_exact(out.len())) {
+        axpy(a, brow, out);
+    }
+}
+
+/// `out[j] = core[j, :] · d` for every row of `core`.
+pub(super) fn matvec_rows(core: &[f32], d: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(core.len(), out.len() * d.len());
+    for (o, brow) in out.iter_mut().zip(core.chunks_exact(d.len())) {
+        *o = dot(brow, d);
+    }
+}
+
+/// SGD row update `out = row + lr * (err * db - lam * row)` with fused
+/// multiply-adds.
+pub(super) fn sgd_row(row: &[f32], db: &[f32], err: f32, lr: f32, lam: f32, out: &mut [f32]) {
+    debug_assert_eq!(row.len(), db.len());
+    debug_assert_eq!(row.len(), out.len());
+    let n = out.len();
+    unsafe {
+        let verr = vdupq_n_f32(err);
+        let vlr = vdupq_n_f32(lr);
+        let vlam = vdupq_n_f32(lam);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let vrow = vld1q_f32(row.as_ptr().add(i));
+            let vdb = vld1q_f32(db.as_ptr().add(i));
+            // t = err * db - lam * row, fused on the err * db side
+            let t = vfmaq_f32(vnegq_f32(vmulq_f32(vlam, vrow)), verr, vdb);
+            let vo = vfmaq_f32(vrow, vlr, t);
+            vst1q_f32(out.as_mut_ptr().add(i), vo);
+            i += 4;
+        }
+        while i < n {
+            out[i] = row[i] + lr * (err * db[i] - lam * row[i]);
+            i += 1;
+        }
+    }
+}
+
+/// Rank-1 accumulation `grad[j, :] += (err * row[j]) * d`.
+pub(super) fn grad_accum(grad: &mut [f32], row: &[f32], d: &[f32], err: f32) {
+    debug_assert_eq!(grad.len(), row.len() * d.len());
+    for (&a, grow) in row.iter().zip(grad.chunks_exact_mut(d.len())) {
+        axpy(err * a, d, grow);
+    }
+}

@@ -1,0 +1,85 @@
+//! Portable chunked fallback for the SIMD primitive layer.
+//!
+//! Selected when runtime detection finds no supported instruction set (and
+//! on every architecture without an explicit backend).  The loops mirror
+//! the lane structure of the real SIMD backends — reductions keep
+//! `LANES` independent partial accumulators folded at the end — so the
+//! numerical behavior of the `Simd` tier is chunked-reduction shaped on
+//! every machine, and LLVM can autovectorize the bodies.  No `mul_add`:
+//! without hardware FMA that lowers to a libm call.
+
+/// Lane count the portable reductions mirror (the AVX2 f32 width).
+pub(super) const LANES: usize = 8;
+
+/// Chunked dot product: `LANES` partial accumulators, folded lane-ascending.
+pub(super) fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let split = a.len() - a.len() % LANES;
+    let (ah, at) = a.split_at(split);
+    let (bh, bt) = b.split_at(split);
+    let mut acc = [0f32; LANES];
+    for (ca, cb) in ah.chunks_exact(LANES).zip(bh.chunks_exact(LANES)) {
+        for ((l, &x), &y) in acc.iter_mut().zip(ca).zip(cb) {
+            *l += x * y;
+        }
+    }
+    let mut tail = 0f32;
+    for (&x, &y) in at.iter().zip(bt) {
+        tail += x * y;
+    }
+    acc.iter().sum::<f32>() + tail
+}
+
+/// Elementwise `acc[i] *= src[i]` (exact: one rounding per lane, same as
+/// scalar).
+pub(super) fn mul_in(acc: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(acc.len(), src.len());
+    for (a, &s) in acc.iter_mut().zip(src) {
+        *a *= s;
+    }
+}
+
+/// Elementwise `out[i] += alpha * x[i]`.
+pub(super) fn axpy(alpha: f32, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o += alpha * v;
+    }
+}
+
+/// `out = row · core` (`core` is `j x r` row-major, `j = row.len()`,
+/// `r = out.len()`): ascending-`j` axpy accumulation.
+pub(super) fn project_row(row: &[f32], core: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(core.len(), row.len() * out.len());
+    out.fill(0.0);
+    for (&a, brow) in row.iter().zip(core.chunks_exact(out.len())) {
+        axpy(a, brow, out);
+    }
+}
+
+/// `out[j] = core[j, :] · d` for every row of `core` (`j x r` row-major,
+/// `r = d.len()`).
+pub(super) fn matvec_rows(core: &[f32], d: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(core.len(), out.len() * d.len());
+    for (o, brow) in out.iter_mut().zip(core.chunks_exact(d.len())) {
+        *o = dot(brow, d);
+    }
+}
+
+/// SGD row update `out = row + lr * (err * db - lam * row)`.
+pub(super) fn sgd_row(row: &[f32], db: &[f32], err: f32, lr: f32, lam: f32, out: &mut [f32]) {
+    debug_assert_eq!(row.len(), db.len());
+    debug_assert_eq!(row.len(), out.len());
+    for ((o, &a), &g) in out.iter_mut().zip(row).zip(db) {
+        *o = a + lr * (err * g - lam * a);
+    }
+}
+
+/// Rank-1 accumulation `grad[j, :] += (err * row[j]) * d` (`grad` is
+/// `j x r` row-major).
+pub(super) fn grad_accum(grad: &mut [f32], row: &[f32], d: &[f32], err: f32) {
+    debug_assert_eq!(grad.len(), row.len() * d.len());
+    for (&a, grow) in row.iter().zip(grad.chunks_exact_mut(d.len())) {
+        axpy(err * a, d, grow);
+    }
+}

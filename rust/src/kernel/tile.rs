@@ -1,17 +1,25 @@
 //! Tiled step drivers — one per (algorithm, phase), generic over the
-//! compile-time `(J, R)` shape.
+//! compile-time `(J, R)` shape *and* the math implementation.
 //!
 //! Each driver walks its slot range sample-by-sample (factor phases must:
 //! a later sample may touch a row an earlier sample just updated, and the
 //! serial backend is defined as exactly the sequential trajectory) but
-//! performs *all* per-sample arithmetic through the fixed-width
-//! microkernels in [`super::micro`], whose fully unrolled `J`/`R` loops are
-//! the CPU mirror of the L1 Pallas `[S, J] x [J, R]` tiles.  The
-//! storage-scheme drivers thread an [`InvariantCache`] through the range,
-//! implementing the calc-vs-store knob at the block level.
+//! performs *all* per-sample arithmetic through a [`TileMath`] — the
+//! per-shape primitive vtable the dispatch macro monomorphizes:
 //!
-//! Everything here is bit-identical to the scalar oracle in
-//! [`crate::cpu_ref::step`]; the `kernel_parity` integration test pins it.
+//! * [`ExactMath`] routes to [`super::micro`], whose fully unrolled
+//!   `J`/`R` loops are the CPU mirror of the L1 Pallas `[S, J] x [J, R]`
+//!   tiles, bit-identical to the scalar oracle in
+//!   [`crate::cpu_ref::step`] (the `kernel_parity` test pins it);
+//! * [`SimdMath`] routes to the runtime-dispatched primitives in
+//!   [`super::simd`] (AVX2+FMA / NEON / portable) — tolerance-bounded
+//!   against the oracle, never bit-identical.
+//!
+//! The storage-scheme drivers thread an [`InvariantCache`] through the
+//! range (the calc-vs-store knob at block level) and return its hit/miss
+//! totals as [`KernelCounters`]; the other drivers return zeros.
+//!
+//! [`KernelCounters`]: super::KernelCounters
 
 use std::ops::Range;
 
@@ -19,7 +27,91 @@ use crate::cpu_ref::step::BlockData;
 use crate::model::SharedFactors;
 
 use super::invariant::InvariantCache;
-use super::{micro, InvariantPolicy};
+use super::{micro, simd, InvariantPolicy, KernelCounters};
+
+/// The per-sample primitive set a tile driver runs on, monomorphized per
+/// `(J, R)` shape.  Implementations must preserve the oracle's operand
+/// order per primitive (only rounding/association may differ).
+pub(crate) trait TileMath<const J: usize, const R: usize> {
+    /// Whether the storage-scheme drivers should route the invariant
+    /// cache's elementwise products through the SIMD layer too.
+    const SIMD: bool;
+    /// `out = row · core` (`core` is `J x R` row-major).
+    fn project(row: &[f32; J], core: &[f32], out: &mut [f32; R]);
+    /// `out[j] = d · core[j, :]` for every `j`.
+    fn db_rows(core: &[f32], d: &[f32; R], out: &mut [f32; J]);
+    /// Dot product over the Kruskal rank.
+    fn dot(a: &[f32; R], b: &[f32; R]) -> f32;
+    /// SGD row update `out = row + lr * (err * db - lam * row)`.
+    fn sgd_row(row: &[f32; J], db: &[f32; J], err: f32, lr: f32, lam: f32, out: &mut [f32; J]);
+    /// Rank-1 accumulation `grad[j, :] += (err * row[j]) * d`.
+    fn grad_accum(grad: &mut [f32], row: &[f32; J], d: &[f32; R], err: f32);
+}
+
+/// Exact tier: the unrolled scalar-order microkernels (bit-identical to
+/// the oracle).
+pub(crate) struct ExactMath;
+
+impl<const J: usize, const R: usize> TileMath<J, R> for ExactMath {
+    const SIMD: bool = false;
+
+    #[inline(always)]
+    fn project(row: &[f32; J], core: &[f32], out: &mut [f32; R]) {
+        micro::project::<J, R>(row, core, out);
+    }
+
+    #[inline(always)]
+    fn db_rows(core: &[f32], d: &[f32; R], out: &mut [f32; J]) {
+        micro::db_rows::<J, R>(core, d, out);
+    }
+
+    #[inline(always)]
+    fn dot(a: &[f32; R], b: &[f32; R]) -> f32 {
+        micro::dot::<R>(a, b)
+    }
+
+    #[inline(always)]
+    fn sgd_row(row: &[f32; J], db: &[f32; J], err: f32, lr: f32, lam: f32, out: &mut [f32; J]) {
+        micro::sgd_row::<J>(row, db, err, lr, lam, out);
+    }
+
+    #[inline(always)]
+    fn grad_accum(grad: &mut [f32], row: &[f32; J], d: &[f32; R], err: f32) {
+        micro::grad_accum::<J, R>(grad, row, d, err);
+    }
+}
+
+/// SIMD tier: explicit AVX2/NEON/portable primitives (tolerance-bounded).
+pub(crate) struct SimdMath;
+
+impl<const J: usize, const R: usize> TileMath<J, R> for SimdMath {
+    const SIMD: bool = true;
+
+    #[inline(always)]
+    fn project(row: &[f32; J], core: &[f32], out: &mut [f32; R]) {
+        simd::project_row(row, core, out);
+    }
+
+    #[inline(always)]
+    fn db_rows(core: &[f32], d: &[f32; R], out: &mut [f32; J]) {
+        simd::matvec_rows(core, d, out);
+    }
+
+    #[inline(always)]
+    fn dot(a: &[f32; R], b: &[f32; R]) -> f32 {
+        simd::dot(a, b)
+    }
+
+    #[inline(always)]
+    fn sgd_row(row: &[f32; J], db: &[f32; J], err: f32, lr: f32, lam: f32, out: &mut [f32; J]) {
+        simd::sgd_row(row, db, err, lr, lam, out);
+    }
+
+    #[inline(always)]
+    fn grad_accum(grad: &mut [f32], row: &[f32; J], d: &[f32; R], err: f32) {
+        simd::grad_accum(grad, row, d, err);
+    }
+}
 
 /// Per-range scratch: gathered rows and the forward chain, all fixed-width.
 struct Scratch<const J: usize, const R: usize> {
@@ -53,11 +145,15 @@ impl<const J: usize, const R: usize> Scratch<J, R> {
 
 /// Projections, exclusion products and the prediction for one sample from
 /// pre-gathered rows — the tiled analog of the oracle's `forward_rows`,
-/// same prefix/suffix multiply order.
-fn forward<const J: usize, const R: usize>(cores: &[Vec<f32>], s: &mut Scratch<J, R>) -> f32 {
+/// same prefix/suffix multiply order (the product chains are elementwise,
+/// so they stay exact under every math).
+fn forward<M: TileMath<J, R>, const J: usize, const R: usize>(
+    cores: &[Vec<f32>],
+    s: &mut Scratch<J, R>,
+) -> f32 {
     let n = s.rows.len();
     for m in 0..n {
-        micro::project::<J, R>(&s.rows[m], &cores[m], &mut s.c[m]);
+        M::project(&s.rows[m], &cores[m], &mut s.c[m]);
     }
     s.pre[0] = [1.0; R];
     for m in 0..n {
@@ -91,103 +187,102 @@ fn load_all_rows<const J: usize, const R: usize>(
 }
 
 /// FastTuckerPlus factor step (Eq. 12): update all factor rows per sample.
-pub(crate) fn plus_factor<const J: usize, const R: usize>(
+pub(crate) fn plus_factor<M: TileMath<J, R>, const J: usize, const R: usize>(
     shared: &SharedFactors<'_>,
     data: &BlockData<'_>,
     range: Range<usize>,
-) {
+) -> KernelCounters {
     let hp = data.hyper;
     let mut s = Scratch::<J, R>::new(data.n);
     for e in range {
         let coords = data.entry_coords(e);
         load_all_rows(shared, data, coords, &mut s);
-        let xhat = forward::<J, R>(data.cores, &mut s);
+        let xhat = forward::<M, J, R>(data.cores, &mut s);
         let err = data.values[e] - xhat;
         for m in 0..data.n {
-            micro::db_rows::<J, R>(&data.cores[m], &s.d[m], &mut s.db);
-            micro::sgd_row::<J>(&s.rows[m], &s.db, err, hp.lr_a, hp.lam_a, &mut s.new_row);
+            M::db_rows(&data.cores[m], &s.d[m], &mut s.db);
+            M::sgd_row(&s.rows[m], &s.db, err, hp.lr_a, hp.lam_a, &mut s.new_row);
             shared.store_row(m, coords[m] as usize, &s.new_row);
         }
     }
+    KernelCounters::default()
 }
 
 /// FastTuckerPlus core step: accumulate `∂B^(m)` for every mode into
 /// `grad` (`[N, J, R]`).
-pub(crate) fn plus_core<const J: usize, const R: usize>(
+pub(crate) fn plus_core<M: TileMath<J, R>, const J: usize, const R: usize>(
     shared: &SharedFactors<'_>,
     data: &BlockData<'_>,
     range: Range<usize>,
     grad: &mut [f32],
-) {
+) -> KernelCounters {
     let mut s = Scratch::<J, R>::new(data.n);
     for e in range {
         let coords = data.entry_coords(e);
         load_all_rows(shared, data, coords, &mut s);
-        let xhat = forward::<J, R>(data.cores, &mut s);
+        let xhat = forward::<M, J, R>(data.cores, &mut s);
         let err = data.values[e] - xhat;
         for m in 0..data.n {
-            micro::grad_accum::<J, R>(
-                &mut grad[m * J * R..(m + 1) * J * R],
-                &s.rows[m],
-                &s.d[m],
-                err,
-            );
+            M::grad_accum(&mut grad[m * J * R..(m + 1) * J * R], &s.rows[m], &s.d[m], err);
         }
     }
+    KernelCounters::default()
 }
 
 /// FastTucker factor step for one mode (Eq. 8): full forward, update only
 /// the target mode's row.
-pub(crate) fn mode_factor<const J: usize, const R: usize>(
+pub(crate) fn mode_factor<M: TileMath<J, R>, const J: usize, const R: usize>(
     shared: &SharedFactors<'_>,
     data: &BlockData<'_>,
     mode: usize,
     range: Range<usize>,
-) {
+) -> KernelCounters {
     let hp = data.hyper;
     let mut s = Scratch::<J, R>::new(data.n);
     for e in range {
         let coords = data.entry_coords(e);
         load_all_rows(shared, data, coords, &mut s);
-        let xhat = forward::<J, R>(data.cores, &mut s);
+        let xhat = forward::<M, J, R>(data.cores, &mut s);
         let err = data.values[e] - xhat;
-        micro::db_rows::<J, R>(&data.cores[mode], &s.d[mode], &mut s.db);
-        micro::sgd_row::<J>(&s.rows[mode], &s.db, err, hp.lr_a, hp.lam_a, &mut s.new_row);
+        M::db_rows(&data.cores[mode], &s.d[mode], &mut s.db);
+        M::sgd_row(&s.rows[mode], &s.db, err, hp.lr_a, hp.lam_a, &mut s.new_row);
         shared.store_row(mode, coords[mode] as usize, &s.new_row);
     }
+    KernelCounters::default()
 }
 
 /// FastTucker core step for one mode (Eq. 9): accumulate `∂B^(mode)` into
 /// `grad` (`[J, R]`).
-pub(crate) fn mode_core<const J: usize, const R: usize>(
+pub(crate) fn mode_core<M: TileMath<J, R>, const J: usize, const R: usize>(
     shared: &SharedFactors<'_>,
     data: &BlockData<'_>,
     mode: usize,
     range: Range<usize>,
     grad: &mut [f32],
-) {
+) -> KernelCounters {
     let mut s = Scratch::<J, R>::new(data.n);
     for e in range {
         let coords = data.entry_coords(e);
         load_all_rows(shared, data, coords, &mut s);
-        let xhat = forward::<J, R>(data.cores, &mut s);
+        let xhat = forward::<M, J, R>(data.cores, &mut s);
         let err = data.values[e] - xhat;
-        micro::grad_accum::<J, R>(grad, &s.rows[mode], &s.d[mode], err);
+        M::grad_accum(grad, &s.rows[mode], &s.d[mode], err);
     }
+    KernelCounters::default()
 }
 
 /// FasterTucker factor step for one mode (storage scheme): `d` via the
 /// [`InvariantCache`], own projection recomputed from the live row.
-pub(crate) fn stored_factor<const J: usize, const R: usize>(
+pub(crate) fn stored_factor<M: TileMath<J, R>, const J: usize, const R: usize>(
     shared: &SharedFactors<'_>,
     data: &BlockData<'_>,
     mode: usize,
     range: Range<usize>,
     policy: InvariantPolicy,
-) {
+) -> KernelCounters {
     let hp = data.hyper;
     let core = &data.cores[mode];
-    let mut cache = InvariantCache::<R>::new(policy, data.n);
+    let mut cache = InvariantCache::<R>::new(policy, data.n).with_simd(M::SIMD);
     let mut row = [0f32; J];
     let mut new_row = [0f32; J];
     let mut db = [0f32; J];
@@ -196,25 +291,26 @@ pub(crate) fn stored_factor<const J: usize, const R: usize>(
         let i = data.coord(e, mode) as usize;
         let d = cache.exclusion(data, e, mode);
         shared.load_row(mode, i, &mut row);
-        micro::project::<J, R>(&row, core, &mut c_own);
-        let err = data.values[e] - micro::dot::<R>(&c_own, d);
-        micro::db_rows::<J, R>(core, d, &mut db);
-        micro::sgd_row::<J>(&row, &db, err, hp.lr_a, hp.lam_a, &mut new_row);
+        M::project(&row, core, &mut c_own);
+        let err = data.values[e] - M::dot(&c_own, d);
+        M::db_rows(core, d, &mut db);
+        M::sgd_row(&row, &db, err, hp.lr_a, hp.lam_a, &mut new_row);
         shared.store_row(mode, i, &new_row);
     }
+    cache.counters()
 }
 
 /// FasterTucker core step for one mode (storage scheme): prediction from
 /// stored `C` rows, gradient into `grad` (`[J, R]`).
-pub(crate) fn stored_core<const J: usize, const R: usize>(
+pub(crate) fn stored_core<M: TileMath<J, R>, const J: usize, const R: usize>(
     shared: &SharedFactors<'_>,
     data: &BlockData<'_>,
     mode: usize,
     range: Range<usize>,
     grad: &mut [f32],
     policy: InvariantPolicy,
-) {
-    let mut cache = InvariantCache::<R>::new(policy, data.n);
+) -> KernelCounters {
+    let mut cache = InvariantCache::<R>::new(policy, data.n).with_simd(M::SIMD);
     let mut row = [0f32; J];
     for e in range {
         let i = data.coord(e, mode) as usize;
@@ -222,8 +318,9 @@ pub(crate) fn stored_core<const J: usize, const R: usize>(
         let crow: &[f32; R] = (&data.c_store[mode][i * R..i * R + R])
             .try_into()
             .expect("stored C row width");
-        let err = data.values[e] - micro::dot::<R>(crow, d);
+        let err = data.values[e] - M::dot(crow, d);
         shared.load_row(mode, i, &mut row);
-        micro::grad_accum::<J, R>(grad, &row, d, err);
+        M::grad_accum(grad, &row, d, err);
     }
+    cache.counters()
 }

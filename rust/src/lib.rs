@@ -14,7 +14,9 @@
 //!   scheduler: sample/stage block *k+1* while block *k* executes) →
 //!   `coordinator::backend::StepBackend` (pluggable execution) →
 //!   `runtime::Engine` (PJRT) or [`kernel`] (tiled CPU microkernels, with
-//!   `cpu_ref::step` as the scalar oracle behind `--cpu-kernel scalar`).
+//!   `cpu_ref::step` as the scalar oracle behind `--cpu-kernel scalar`
+//!   and a runtime-dispatched AVX2/NEON SIMD tier behind
+//!   `--cpu-kernel simd` — see [`kernel::simd`]).
 //!
 //! Execution backends (`--backend` on the CLI, [`prelude::Backend`] in
 //! code):

@@ -64,7 +64,7 @@ fn usage() -> &'static str {
            [--algo plus|fasttucker|fastertucker]\n\
            [--variant tc|cc] [--strategy calc|storage]\n\
            [--backend hlo|cpu|parallel] [--threads K]\n\
-           [--cpu-kernel tiled|scalar] [--epochs T] [--j J] [--r R] [--lr-a F]\n\
+           [--cpu-kernel tiled|scalar|simd] [--epochs T] [--j J] [--r R] [--lr-a F]\n\
            [--lr-b F] [--lam-a F] [--lam-b F] [--test-frac F] [--seed S]\n\
            [--eval-every N] [--early-stop PATIENCE] [--min-delta F]\n\
            [--lr-decay F] [--artifacts DIR] [--save FILE]\n\
@@ -80,6 +80,7 @@ fn usage() -> &'static str {
            (loads FILE if it exists; otherwise trains through the session\n\
             layer and, when FILE is given, checkpoints to it before serving)\n\
      query --checkpoint FILE --coords I1,I2,...,IN [--mode M] [--topk K]\n\
+           [--cpu-kernel tiled|scalar|simd]\n\
      checkpoint save --model FILE --out FILE [--algo A] [--epoch E]\n\
      checkpoint load --file FILE [--model-out FILE]\n\
      cost  [--order N] [--j J] [--r R] [--m M] [--nnz K]\n\
@@ -445,7 +446,8 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     let seed: u64 = a.get_parse("seed", 42).map_err(anyhow::Error::msg)?;
 
     let dims = snap.dims().to_vec();
-    let server = Server::start(snap, workers, batch);
+    // serve's bulk scoring honours the same --cpu-kernel tier as training
+    let server = Server::start_with_policy(snap, workers, batch, spec.train.cpu_kernel);
     let handle = server.handle();
 
     // a few demonstration top-K answers first
@@ -516,7 +518,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
 /// One-shot query against a checkpoint: predict an entry, or top-K
 /// completion over `--mode` when given.
 fn cmd_query(argv: Vec<String>) -> Result<()> {
-    let a = Args::parse(argv, &["checkpoint", "coords", "mode", "topk"], &[])
+    let a = Args::parse(argv, &["checkpoint", "coords", "mode", "topk", "cpu-kernel"], &[])
         .map_err(anyhow::Error::msg)?;
     let path = PathBuf::from(a.get("checkpoint").context("--checkpoint FILE required")?);
     let snap = ModelSnapshot::load(&path)?;
@@ -533,7 +535,11 @@ fn cmd_query(argv: Vec<String>) -> Result<()> {
     // same validation the serving workers apply (arity + bounds, free
     // mode exempt)
     check_coords(&snap, &coords, free_mode).map_err(anyhow::Error::msg)?;
-    let mut engine = Engine::new(snap);
+    let policy = match a.get("cpu-kernel") {
+        Some(s) => KernelPolicy::parse(s).with_context(|| format!("bad --cpu-kernel {s}"))?,
+        None => KernelPolicy::Tiled,
+    };
+    let mut engine = Engine::with_policy(snap, policy);
     match free_mode {
         Some(mode) => {
             let k: usize = a.get_parse("topk", 10).map_err(anyhow::Error::msg)?;

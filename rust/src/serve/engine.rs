@@ -5,11 +5,11 @@
 //! * [`Engine::predict`] — the *full product chain*: for each Kruskal rank
 //!   `r`, multiply the stored projection rows `C^(m)[i_m, r]` in ascending
 //!   mode order and sum over `r`.  This is exactly the arithmetic sequence
-//!   of the scalar oracle's `forward` (projection rows are built by the
-//!   same `kernel::micro::project` order, the chain is the oracle's prefix
-//!   product, the sum is ascending), so serve predictions are
-//!   **bit-identical** to the trainer's evaluation path — pinned by
-//!   `tests/serve.rs`.
+//!   of the scalar oracle's `forward` (projection rows are built in the
+//!   same accumulation order by [`crate::kernel::prim`], the chain is the
+//!   oracle's prefix product, the sum is ascending), so serve predictions
+//!   are **bit-identical** to the trainer's evaluation path — pinned by
+//!   `tests/serve.rs` — under *every* kernel policy.
 //! * [`Engine::complete_mode`] — the *mode-completion* (recommender)
 //!   workload: given all-but-one coordinates, compute the exclusion
 //!   product `d = Π_{m≠mode} C^(m)[i_m, :]` **once** (the
@@ -21,8 +21,17 @@
 //! The engine owns only scratch (one R-wide product) on top of the
 //! snapshot handle, so serving workers build one per batch and swap
 //! snapshots in O(1) on hot-swap.
+//!
+//! [`Engine::with_policy`] selects the arithmetic tier for the *bulk*
+//! paths (`exclusion` / `complete_mode` candidate scoring):
+//! [`KernelPolicy::Simd`] routes them through the runtime-dispatched SIMD
+//! layer (the exclusion product stays bit-exact — elementwise multiplies
+//! don't re-round — while candidate dots are tolerance-bounded); any other
+//! policy takes the exact [`crate::kernel::prim`] path.  `predict` /
+//! `rmse_mae` ignore the policy entirely, keeping the bit-identity
+//! contract with the trainer's evaluation unconditional.
 
-use crate::kernel::micro;
+use crate::kernel::{prim, simd, KernelPolicy};
 use crate::tensor::SparseTensor;
 
 use super::snapshot::ModelSnapshot;
@@ -36,21 +45,39 @@ pub struct Engine {
     snap: ModelSnapshot,
     /// Scratch for the fiber-shared exclusion product (length R).
     d: Vec<f32>,
+    /// Arithmetic tier for the bulk paths (exclusion / candidate scoring).
+    policy: KernelPolicy,
 }
 
 impl Engine {
     /// Bind an engine to a snapshot (allocates only the R-wide scratch).
+    /// Uses the exact kernel tier; see [`Engine::with_policy`].
     pub fn new(snap: ModelSnapshot) -> Engine {
+        Engine::with_policy(snap, KernelPolicy::Tiled)
+    }
+
+    /// Bind an engine with an explicit kernel policy for the bulk scoring
+    /// paths.  [`KernelPolicy::Simd`] uses the runtime-dispatched SIMD
+    /// layer for `exclusion` / `complete_mode`; `Tiled` and `Scalar` both
+    /// take the exact path (they are bit-identical here).  `predict` is
+    /// policy-independent.
+    pub fn with_policy(snap: ModelSnapshot, policy: KernelPolicy) -> Engine {
         let r = snap.r();
         Engine {
             snap,
             d: vec![0f32; r],
+            policy,
         }
     }
 
     /// The snapshot this engine currently scores against.
     pub fn snapshot(&self) -> &ModelSnapshot {
         &self.snap
+    }
+
+    /// The kernel policy governing the bulk scoring paths.
+    pub fn policy(&self) -> KernelPolicy {
+        self.policy
     }
 
     /// Swap in a newer snapshot (O(1): an `Arc` move; scratch is resized
@@ -112,14 +139,18 @@ impl Engine {
     /// [`crate::kernel::InvariantCache`]), and return it.
     pub fn exclusion(&mut self, coords: &[u32], mode: usize) -> &[f32] {
         let n = self.snap.order();
+        let simd_on = self.policy == KernelPolicy::Simd;
         self.d.fill(1.0);
         for m in 0..n {
             if m == mode {
                 continue;
             }
             let crow = self.snap.c_row(m, coords[m] as usize);
-            for (dv, &cv) in self.d.iter_mut().zip(crow) {
-                *dv *= cv;
+            // elementwise: the SIMD lane is bit-identical to the scalar one
+            if simd_on {
+                simd::mul_in(&mut self.d, crow);
+            } else {
+                prim::mul_in(&mut self.d, crow);
             }
         }
         &self.d
@@ -136,8 +167,14 @@ impl Engine {
         self.exclusion(coords, mode);
         scores.reserve(rows);
         let table = self.snap.c_table(mode);
-        for crow in table.chunks_exact(r) {
-            scores.push(dot_r(crow, &self.d));
+        if self.policy == KernelPolicy::Simd {
+            for crow in table.chunks_exact(r) {
+                scores.push(simd::dot(crow, &self.d));
+            }
+        } else {
+            for crow in table.chunks_exact(r) {
+                scores.push(prim::dot(crow, &self.d));
+            }
         }
     }
 
@@ -155,25 +192,6 @@ impl Engine {
         }
         let n = test.nnz().max(1) as f64;
         ((sse / n).sqrt(), sae / n)
-    }
-}
-
-/// R-wide dot product through the fixed-width microkernel when R has a
-/// monomorphized width, the scalar order (identical arithmetic) otherwise.
-fn dot_r(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    match a.len() {
-        16 => micro::dot::<16>(a.try_into().unwrap(), b.try_into().unwrap()),
-        32 => micro::dot::<32>(a.try_into().unwrap(), b.try_into().unwrap()),
-        48 => micro::dot::<48>(a.try_into().unwrap(), b.try_into().unwrap()),
-        64 => micro::dot::<64>(a.try_into().unwrap(), b.try_into().unwrap()),
-        _ => {
-            let mut acc = 0f32;
-            for (&x, &y) in a.iter().zip(b) {
-                acc += x * y;
-            }
-            acc
-        }
     }
 }
 
@@ -227,8 +245,35 @@ mod tests {
                     d[rr] *= crow[rr];
                 }
             }
-            let want = dot_r(snap.c_row(1, i), &d);
+            let want = prim::dot(snap.c_row(1, i), &d);
             assert_eq!(got, want, "candidate {i}");
+        }
+    }
+
+    #[test]
+    fn simd_policy_tracks_exact_completion_within_tolerance() {
+        let m = TuckerModel::init(&[9, 11, 13], 16, 16, 77);
+        let snap = ModelSnapshot::from_model(&m, Algo::Plus, 0);
+        let mut exact = Engine::new(snap.clone());
+        let mut simd_eng = Engine::with_policy(snap, KernelPolicy::Simd);
+        assert_eq!(simd_eng.policy(), KernelPolicy::Simd);
+        let coords = [4u32, 0, 6];
+        // predict is policy-independent: bit-identical under Simd
+        assert_eq!(simd_eng.predict(&coords), exact.predict(&coords));
+        // the exclusion product is elementwise, hence bit-identical too
+        let de: Vec<f32> = exact.exclusion(&coords, 1).to_vec();
+        let ds: Vec<f32> = simd_eng.exclusion(&coords, 1).to_vec();
+        assert_eq!(de, ds);
+        // candidate dots re-associate: tolerance-bounded
+        let (mut se, mut ss) = (Vec::new(), Vec::new());
+        exact.complete_mode(&coords, 1, &mut se);
+        simd_eng.complete_mode(&coords, 1, &mut ss);
+        assert_eq!(se.len(), ss.len());
+        for (i, (&a, &b)) in se.iter().zip(&ss).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-5 * (1.0 + a.abs()),
+                "candidate {i}: exact {a} vs simd {b}"
+            );
         }
     }
 

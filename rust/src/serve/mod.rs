@@ -15,7 +15,10 @@
 //!   bit-identical to the trainer's evaluation path; `complete_mode`
 //!   computes the fiber-shared exclusion product once per query and scores
 //!   every candidate of the free mode with one R-wide dot (the
-//!   `InvariantCache` trick applied to serving).
+//!   `InvariantCache` trick applied to serving).  Bulk scoring runs on the
+//!   exact [`crate::kernel::prim`] layer by default, or the
+//!   runtime-dispatched SIMD tier via [`Engine::with_policy`] /
+//!   [`Server::start_with_policy`].
 //! * [`topk`] — deterministic top-K selection over completion scores.
 //! * [`server`] — [`Server`]: a threaded request loop with request
 //!   batching and snapshot hot-swap, so `Trainer::publish` can push a

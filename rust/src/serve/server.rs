@@ -26,6 +26,8 @@ use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
 
+use crate::kernel::KernelPolicy;
+
 use super::engine::Engine;
 use super::snapshot::ModelSnapshot;
 use super::topk::{mode_topk, Scored};
@@ -83,6 +85,7 @@ struct Shared {
     queue: Mutex<VecDeque<Job>>,
     ready: Condvar,
     snapshot: RwLock<ModelSnapshot>,
+    policy: KernelPolicy,
     stop: AtomicBool,
     served: AtomicU64,
     batches: AtomicU64,
@@ -104,12 +107,27 @@ pub struct ServerHandle {
 
 impl Server {
     /// Start `workers` threads serving `snapshot`, batching up to
-    /// `max_batch` queued requests per worker wakeup.
+    /// `max_batch` queued requests per worker wakeup.  Workers score with
+    /// the exact kernel tier; see [`Server::start_with_policy`].
     pub fn start(snapshot: ModelSnapshot, workers: usize, max_batch: usize) -> Server {
+        Server::start_with_policy(snapshot, workers, max_batch, KernelPolicy::Tiled)
+    }
+
+    /// [`Server::start`] with an explicit kernel policy for the workers'
+    /// scoring engines.  [`KernelPolicy::Simd`] routes the top-K candidate
+    /// sweeps through the runtime-dispatched SIMD layer
+    /// (tolerance-bounded); predictions stay bit-exact under every policy.
+    pub fn start_with_policy(
+        snapshot: ModelSnapshot,
+        workers: usize,
+        max_batch: usize,
+        policy: KernelPolicy,
+    ) -> Server {
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             ready: Condvar::new(),
             snapshot: RwLock::new(snapshot),
+            policy,
             stop: AtomicBool::new(false),
             served: AtomicU64::new(0),
             batches: AtomicU64::new(0),
@@ -224,7 +242,7 @@ impl ServerHandle {
 }
 
 fn worker_loop(shared: &Shared, max_batch: usize) {
-    let mut engine = Engine::new(shared.snapshot.read().unwrap().clone());
+    let mut engine = Engine::with_policy(shared.snapshot.read().unwrap().clone(), shared.policy);
     let mut batch: Vec<Job> = Vec::with_capacity(max_batch);
     loop {
         batch.clear();
@@ -340,6 +358,18 @@ mod tests {
         assert_eq!(server.epoch(), 7);
         let stats = server.shutdown();
         assert_eq!(stats.swaps, 1);
+    }
+
+    #[test]
+    fn simd_policy_server_predicts_exactly() {
+        let snap = snapshot(4, 0);
+        let eng = Engine::new(snap.clone());
+        let server = Server::start_with_policy(snap, 1, 4, KernelPolicy::Simd);
+        let h = server.handle();
+        // predict is policy-independent: bit-identical to the exact engine
+        assert_eq!(h.predict(vec![1, 2, 3]).unwrap(), eng.predict(&[1, 2, 3]));
+        assert_eq!(h.topk(vec![1, 0, 3], 1, 5).unwrap().len(), 5);
+        server.shutdown();
     }
 
     #[test]

@@ -6,10 +6,12 @@
 //! carrying the precomputed projection tables `C^(n) = A^(n) B^(n)`
 //! (`I_n x R` each) that make per-query scoring a pure product chain over
 //! R-wide rows — the SGD_Tucker "compact serving representation" of the
-//! Tucker factors.  The tables are built through the same
-//! `kernel::micro::project` tiles the trainer uses, in the same operation
-//! order as the scalar oracle's projection, so every value a snapshot
-//! serves is bit-identical to what the trainer's evaluation path computes.
+//! Tucker factors.  By default the tables are built through the shared
+//! exact primitive layer ([`crate::kernel::prim`]) the trainer's oracle
+//! defines, so every value a snapshot serves is bit-identical to what the
+//! trainer's evaluation path computes.  [`ModelSnapshot::from_model_policy`]
+//! can opt a build into the runtime-dispatched SIMD layer instead
+//! (tolerance-bounded, for bulk republish paths where throughput wins).
 //!
 //! The on-disk checkpoint (`FTCK` version 1) is the durable form of a
 //! snapshot: a little-endian header (algo, epoch, order, J, R, dims),
@@ -28,7 +30,7 @@ use std::sync::Arc;
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::config::Algo;
-use crate::kernel::micro;
+use crate::kernel::{prim, simd, KernelPolicy};
 use crate::model::TuckerModel;
 use crate::util::fnv::fnv1a;
 
@@ -62,10 +64,27 @@ struct Inner {
 impl ModelSnapshot {
     /// Freeze a trained model into a snapshot, tagged with the algorithm
     /// and epoch that produced it.  Builds the `C^(n)` projection tables
-    /// through the tiled microkernels (scalar fallback for shapes without
-    /// an instantiation — both orders are bit-identical).
+    /// through the exact primitive layer ([`crate::kernel::prim`]) —
+    /// bit-identical to the trainer's oracle projection.
     pub fn from_model(model: &TuckerModel, algo: Algo, epoch: u64) -> ModelSnapshot {
-        let c_tables = (0..model.order()).map(|m| project_table(model, m)).collect();
+        ModelSnapshot::from_model_policy(model, algo, epoch, KernelPolicy::Tiled)
+    }
+
+    /// [`ModelSnapshot::from_model`] with an explicit kernel policy for the
+    /// table build.  [`KernelPolicy::Simd`] routes the projections through
+    /// the runtime-dispatched SIMD layer (tolerance-bounded against the
+    /// oracle); every other policy takes the exact path.  The choice only
+    /// affects table *construction* — serving arithmetic on the finished
+    /// tables is governed by the engine's own policy.
+    pub fn from_model_policy(
+        model: &TuckerModel,
+        algo: Algo,
+        epoch: u64,
+        policy: KernelPolicy,
+    ) -> ModelSnapshot {
+        let c_tables = (0..model.order())
+            .map(|m| project_table(model, m, policy))
+            .collect();
         ModelSnapshot {
             inner: Arc::new(Inner {
                 dims: model.dims.clone(),
@@ -308,33 +327,23 @@ impl<'a> Cursor<'a> {
 }
 
 /// Project every row of mode `mode`'s factor matrix through its core:
-/// `C[i, :] = A[i, :] B` — the tiled path for known `(J, R)` shapes,
-/// delegating to the scalar oracle (`cpu_ref::compute_c_full`, the same
-/// arithmetic sequence) otherwise so the bit-identity contract has one
-/// scalar implementation, not two.
-fn project_table(model: &TuckerModel, mode: usize) -> Vec<f32> {
+/// `C[i, :] = A[i, :] B`.  The exact path is one call into the shared
+/// primitive layer ([`prim::project_rows`] — the same accumulation-order
+/// contract the trainer's oracle defines); the SIMD policy runs the
+/// runtime-dispatched [`simd::project_row`] per table row instead.
+fn project_table(model: &TuckerModel, mode: usize, policy: KernelPolicy) -> Vec<f32> {
     let (j, r) = (model.j, model.r);
     let factor = &model.factors[mode];
     let core = &model.cores[mode];
     let mut out = vec![0f32; (factor.len() / j) * r];
-    match (j, r) {
-        (16, 16) => project_rows::<16, 16>(factor, core, &mut out),
-        (16, 32) => project_rows::<16, 32>(factor, core, &mut out),
-        (32, 16) => project_rows::<32, 16>(factor, core, &mut out),
-        (32, 32) => project_rows::<32, 32>(factor, core, &mut out),
-        (48, 48) => project_rows::<48, 48>(factor, core, &mut out),
-        (64, 64) => project_rows::<64, 64>(factor, core, &mut out),
-        _ => return crate::cpu_ref::compute_c_full(model, mode),
+    if policy == KernelPolicy::Simd {
+        for (row, dst) in factor.chunks_exact(j).zip(out.chunks_exact_mut(r)) {
+            simd::project_row(row, core, dst);
+        }
+    } else {
+        prim::project_rows(factor, core, j, r, &mut out);
     }
     out
-}
-
-fn project_rows<const J: usize, const R: usize>(factor: &[f32], core: &[f32], out: &mut [f32]) {
-    for (row, dst) in factor.chunks_exact(J).zip(out.chunks_exact_mut(R)) {
-        let row: &[f32; J] = row.try_into().unwrap();
-        let dst: &mut [f32; R] = dst.try_into().unwrap();
-        micro::project::<J, R>(row, core, dst);
-    }
 }
 
 #[cfg(test)]
@@ -365,6 +374,21 @@ mod tests {
         for mode in 0..2 {
             let want = cpu_ref::compute_c_full(&m, mode);
             assert_eq!(snap.c_table(mode), &want[..]);
+        }
+    }
+
+    #[test]
+    fn simd_tables_track_oracle_within_tolerance() {
+        let m = model();
+        let snap = ModelSnapshot::from_model_policy(&m, Algo::Plus, 3, KernelPolicy::Simd);
+        for mode in 0..3 {
+            let want = cpu_ref::compute_c_full(&m, mode);
+            for (i, (&got, &w)) in snap.c_table(mode).iter().zip(&want).enumerate() {
+                assert!(
+                    (got - w).abs() <= 1e-5 * (1.0 + w.abs()),
+                    "mode {mode} [{i}]: simd {got} vs oracle {w}"
+                );
+            }
         }
     }
 

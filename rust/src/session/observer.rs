@@ -33,6 +33,12 @@ pub struct EpochEvent {
 }
 
 impl EpochEvent {
+    /// Invariant-cache hit rate of this epoch's storage-scheme kernels
+    /// (`None` for the init event or when no storage-scheme kernel ran).
+    pub fn invariant_hit_rate(&self) -> Option<f64> {
+        self.stats.as_ref().and_then(|s| s.invariant_hit_rate())
+    }
+
     /// Serialize for JSON-line logs (`EPOCH_JSON` scrape lines).
     pub fn to_json(&self) -> Json {
         let mut fields = vec![("epoch", json::num(self.epoch as f64))];
@@ -45,6 +51,9 @@ impl EpochEvent {
         fields.push(("lr_a", json::num(self.lr_a as f64)));
         if let Some(st) = &self.stats {
             fields.push(("stats", st.to_json()));
+        }
+        if let Some(rate) = self.invariant_hit_rate() {
+            fields.push(("inv_hit_rate", json::num(rate)));
         }
         if let Some(p) = &self.checkpoint {
             fields.push(("checkpoint", json::s(&p.to_string_lossy())));
@@ -118,6 +127,9 @@ impl Observer for NullObserver {}
 /// epoch  0: rmse 1.2345  mae 0.9876  (init)
 /// epoch  3: rmse 0.9123  mae 0.7012  factor 0.412s core 0.198s (mem 0.051s, pad 2.1%)
 /// ```
+///
+/// When the storage-scheme kernels report invariant-cache traffic the
+/// line also carries the epoch's hit rate (`inv 83.2%`).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ProgressPrinter;
 
@@ -129,13 +141,18 @@ impl Observer for ProgressPrinter {
         }
         match &ev.stats {
             None => line.push_str(" (init)"),
-            Some(st) => line.push_str(&format!(
-                " factor {:.3}s core {:.3}s (mem {:.3}s, pad {:.1}%)",
-                st.factor.total().as_secs_f64(),
-                st.core.total().as_secs_f64(),
-                (st.factor.memory() + st.core.memory()).as_secs_f64(),
-                100.0 * st.factor.padding_ratio(),
-            )),
+            Some(st) => {
+                line.push_str(&format!(
+                    " factor {:.3}s core {:.3}s (mem {:.3}s, pad {:.1}%)",
+                    st.factor.total().as_secs_f64(),
+                    st.core.total().as_secs_f64(),
+                    (st.factor.memory() + st.core.memory()).as_secs_f64(),
+                    100.0 * st.factor.padding_ratio(),
+                ));
+                if let Some(rate) = st.invariant_hit_rate() {
+                    line.push_str(&format!(" inv {:.1}%", 100.0 * rate));
+                }
+            }
         }
         if let Some(p) = &ev.checkpoint {
             line.push_str(&format!("  [checkpoint {}]", p.display()));
@@ -223,6 +240,25 @@ mod tests {
         assert_eq!(r.events.len(), 2);
         assert_eq!(r.events[1].epoch, 1);
         assert!(r.report.is_none());
+    }
+
+    #[test]
+    fn epoch_json_carries_hit_rate() {
+        use crate::coordinator::{EpochStats, PhaseStats};
+        let mut e = ev(2, Some(0.8));
+        assert!(e.invariant_hit_rate().is_none());
+        assert!(e.to_json().get("inv_hit_rate").is_none());
+        e.stats = Some(EpochStats {
+            factor: PhaseStats {
+                inv_hits: 3,
+                inv_misses: 1,
+                ..Default::default()
+            },
+            core: PhaseStats::default(),
+        });
+        assert!((e.invariant_hit_rate().unwrap() - 0.75).abs() < 1e-12);
+        let j = e.to_json();
+        assert!(j.get("inv_hit_rate").is_some());
     }
 
     #[test]

@@ -4,6 +4,12 @@
 //! and both invariant policies.  The tiled kernels are written to perform
 //! the same operations in the same order as the oracle, so the 1e-5
 //! tolerance required here is expected to hold exactly.
+//!
+//! The SIMD tier (`KernelPolicy::Simd`) re-associates reductions and fuses
+//! multiply-adds, so it is pinned *tolerance-bounded* against the same
+//! oracle (per-step relative bounds; a looser compounding bound on whole
+//! training trajectories), while the exact tiers (`Tiled`/`Scalar`) are
+//! additionally pinned **bit-identical** to each other end-to-end.
 
 use fasttucker::coordinator::{Algo, Backend, TrainConfig, Trainer};
 use fasttucker::cpu_ref::step::BlockData;
@@ -69,6 +75,24 @@ fn tiled_cfg(invariant: InvariantPolicy) -> KernelCfg {
     KernelCfg {
         policy: KernelPolicy::Tiled,
         invariant,
+    }
+}
+
+fn simd_cfg(invariant: InvariantPolicy) -> KernelCfg {
+    KernelCfg {
+        policy: KernelPolicy::Simd,
+        invariant,
+    }
+}
+
+/// Relative-tolerance comparison for the SIMD tier (reductions
+/// re-associate, FMA fusion re-rounds — exact equality is not expected).
+fn assert_close_rel(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + y.abs()),
+            "{what}[{i}]: simd {x} vs scalar {y}"
+        );
     }
 }
 
@@ -236,6 +260,102 @@ fn fastertucker_parity_both_policies() {
     }
 }
 
+/// SIMD step parity against the scalar oracle over every monomorphized
+/// `(J, R)` shape, both phases, including ragged/offset ranges.
+#[test]
+fn simd_plus_parity_all_monomorphized_shapes() {
+    for (j, r) in [(16, 16), (16, 32), (32, 16), (32, 32), (48, 48), (64, 64)] {
+        let s = setup(j, r, 11);
+        let ids: Vec<u32> = (0..s.tensor.nnz() as u32).collect();
+        let (coords, lanes, values) = staged(&s.tensor, &ids);
+        for range in ranges(s.tensor.nnz()) {
+            let mut a = s.model.clone();
+            let mut b = s.model.clone();
+            let cores = s.model.cores.clone();
+            let data = BlockData {
+                cores: &cores,
+                c_store: &[],
+                coords: &coords,
+                lanes: &lanes,
+                values: &values,
+                n: 3,
+                j,
+                r,
+                hyper: s.hyper,
+            };
+            let mut ga = vec![0f32; 3 * j * r];
+            let mut gb = vec![0f32; 3 * j * r];
+            {
+                let shared = SharedFactors::new(&mut a.factors, j);
+                let cfg = simd_cfg(InvariantPolicy::Recompute);
+                kernel::plus_factor_range(&shared, &data, range.clone(), cfg);
+                kernel::plus_core_range(&shared, &data, range.clone(), &mut ga, cfg);
+            }
+            {
+                let shared = SharedFactors::new(&mut b.factors, j);
+                step::plus_factor_scalar(&shared, &data, range.clone());
+                step::plus_core_scalar(&shared, &data, range.clone(), &mut gb);
+            }
+            for m in 0..3 {
+                let what = format!("simd plus factors ({j},{r})");
+                assert_close_rel(&a.factors[m], &b.factors[m], 2e-5, &what);
+            }
+            assert_close_rel(&ga, &gb, 2e-5, &format!("simd plus core grad ({j},{r})"));
+        }
+    }
+}
+
+/// SIMD parity for the storage-scheme (FasterTucker) kernels under both
+/// invariant policies — the fiber-ordered path where the exclusion cache
+/// (kept bit-exact even under SIMD) interacts with SIMD dots and updates.
+#[test]
+fn simd_fastertucker_parity_both_policies() {
+    let (j, r) = (16, 16);
+    let s = setup(j, r, 13);
+    let mode = 1usize;
+    let fibers = FiberIndex::build(&s.tensor, mode);
+    let order: Vec<u32> = (0..fibers.num_fibers())
+        .flat_map(|f| fibers.fiber(f).to_vec())
+        .collect();
+    let (coords, lanes, values) = staged(&s.tensor, &order);
+    let c_store: Vec<Vec<f32>> = (0..3)
+        .map(|m| cpu_ref::compute_c_full(&s.model, m))
+        .collect();
+    for invariant in [InvariantPolicy::Recompute, InvariantPolicy::CachePerFiber] {
+        for range in ranges(order.len()) {
+            let mut a = s.model.clone();
+            let mut b = s.model.clone();
+            let cores = s.model.cores.clone();
+            let data = BlockData {
+                cores: &cores,
+                c_store: &c_store,
+                coords: &coords,
+                lanes: &lanes,
+                values: &values,
+                n: 3,
+                j,
+                r,
+                hyper: s.hyper,
+            };
+            let mut ga = vec![0f32; j * r];
+            let mut gb = vec![0f32; j * r];
+            {
+                let shared = SharedFactors::new(&mut a.factors, j);
+                let cfg = simd_cfg(invariant);
+                kernel::stored_factor_range(&shared, &data, mode, range.clone(), cfg);
+                kernel::stored_core_range(&shared, &data, mode, range.clone(), &mut ga, cfg);
+            }
+            {
+                let shared = SharedFactors::new(&mut b.factors, j);
+                step::stored_factor_scalar(&shared, &data, mode, range.clone());
+                step::stored_core_scalar(&shared, &data, mode, range.clone(), &mut gb);
+            }
+            assert_close_rel(&a.factors[mode], &b.factors[mode], 2e-5, "simd ft factors");
+            assert_close_rel(&ga, &gb, 2e-5, "simd ft core grad");
+        }
+    }
+}
+
 /// End-to-end: a CpuRef trainer with tiled kernels must reproduce the
 /// scalar trainer's RMSE trajectory for every algorithm.
 #[test]
@@ -262,6 +382,79 @@ fn trainer_trajectories_match_across_kernel_policies() {
             assert!(
                 (a - b).abs() < 1e-5 * (1.0 + a.abs()),
                 "{algo:?}: tiled {a} vs scalar {b}"
+            );
+        }
+    }
+}
+
+/// Exact-mode regression: the `Tiled` and `Scalar` trajectories must stay
+/// **bit-identical** — down to every factor entry — proving the SIMD
+/// refactor did not perturb either exact tier.
+#[test]
+fn exact_policies_stay_bit_identical() {
+    let tensor = generate(&SynthConfig::order_sweep(3, 32, 2_000, 23));
+    let (train, test) = fasttucker::tensor::split::train_test_split(&tensor, 0.2, 1);
+    for algo in [Algo::Plus, Algo::FasterTucker] {
+        let mut runs: Vec<(TuckerModel, Vec<f64>)> = Vec::new();
+        for policy in [KernelPolicy::Tiled, KernelPolicy::Scalar] {
+            let cfg = TrainConfig {
+                backend: Backend::CpuRef,
+                algo,
+                cpu_kernel: policy,
+                ..TrainConfig::default()
+            };
+            let mut tr = Trainer::new(&train, cfg).unwrap();
+            let mut curve = Vec::new();
+            for _ in 0..2 {
+                tr.epoch(&train).unwrap();
+                let (rmse, _) = tr.evaluate(&test).unwrap();
+                curve.push(rmse);
+            }
+            runs.push((tr.model.clone(), curve));
+        }
+        let (tiled_model, tiled_curve) = &runs[0];
+        let (scalar_model, scalar_curve) = &runs[1];
+        assert_eq!(tiled_curve, scalar_curve, "{algo:?}: rmse curves diverged");
+        for m in 0..3 {
+            assert_eq!(
+                tiled_model.factors[m], scalar_model.factors[m],
+                "{algo:?}: factor {m} not bit-identical"
+            );
+        }
+        assert_eq!(tiled_model.cores, scalar_model.cores, "{algo:?}: cores");
+    }
+}
+
+/// End-to-end SIMD trajectory: per-step rounding differences compound over
+/// epochs, so the whole-trajectory bound is looser than the per-step one
+/// (documented tracking bound, not a drift allowance — SGD on this problem
+/// is contractive enough that 1e-3 relative holds with slack).
+#[test]
+fn simd_trainer_trajectory_tracks_exact() {
+    let tensor = generate(&SynthConfig::order_sweep(3, 32, 3_000, 25));
+    let (train, test) = fasttucker::tensor::split::train_test_split(&tensor, 0.2, 1);
+    for algo in [Algo::Plus, Algo::FasterTucker] {
+        let mut curves: Vec<Vec<f64>> = Vec::new();
+        for policy in [KernelPolicy::Scalar, KernelPolicy::Simd] {
+            let cfg = TrainConfig {
+                backend: Backend::CpuRef,
+                algo,
+                cpu_kernel: policy,
+                ..TrainConfig::default()
+            };
+            let mut tr = Trainer::new(&train, cfg).unwrap();
+            let mut curve = Vec::new();
+            for _ in 0..3 {
+                tr.epoch(&train).unwrap();
+                let (rmse, _) = tr.evaluate(&test).unwrap();
+                curve.push(rmse);
+            }
+            curves.push(curve);
+        }
+        for (a, b) in curves[0].iter().zip(&curves[1]) {
+            assert!(
+                (a - b).abs() < 1e-2 * (1.0 + a.abs()),
+                "{algo:?}: scalar {a} vs simd {b}"
             );
         }
     }

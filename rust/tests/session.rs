@@ -105,7 +105,8 @@ fn random_spec(rng: &mut Pcg32) -> RunSpec {
         seed: random_u64(rng),
         artifact_dir: PathBuf::from(format!("artifacts_{}", rng.gen_range(100))),
         threads: rng.gen_index(64),
-        cpu_kernel: [KernelPolicy::Tiled, KernelPolicy::Scalar][rng.gen_index(2)],
+        cpu_kernel: [KernelPolicy::Tiled, KernelPolicy::Scalar, KernelPolicy::Simd]
+            [rng.gen_index(3)],
     };
     let schedule = Schedule {
         epochs: rng.gen_index(1000),

@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# Run the paper-table bench suite and scrape each bench's BENCH_JSON lines
+# into committed-friendly BENCH_<name>.json files:
+#
+#   scripts/bench_json.sh [out_dir]          # full runs (slow, real numbers)
+#   BENCH_QUICK=1 scripts/bench_json.sh out  # CI-sized smoke numbers
+#
+# Each output file is one JSON object: {"bench": "<name>", "rows": [...]},
+# where rows are the bench's Row::to_json() objects (median_s, mad_s, reps,
+# plus extras such as speedup_vs_scalar_serial).  Regenerate on the target
+# hardware before updating the BENCH_*.json files referenced by
+# BENCHMARKS.md — never hand-edit the numbers.
+set -euo pipefail
+
+out_dir="${1:-.}"
+mkdir -p "$out_dir"
+
+benches=(parallel_scaling table8_tc_speedup)
+
+for b in "${benches[@]}"; do
+    log="$(mktemp)"
+    echo "== cargo bench --bench $b =="
+    cargo bench --bench "$b" | tee "$log"
+    rows="$(grep '^BENCH_JSON ' "$log" | sed 's/^BENCH_JSON //' | paste -sd, -)"
+    rm -f "$log"
+    if [ -z "$rows" ]; then
+        echo "warning: $b produced no BENCH_JSON rows; skipping" >&2
+        continue
+    fi
+    printf '{"bench":"%s","rows":[%s]}\n' "$b" "$rows" > "$out_dir/BENCH_$b.json"
+    echo "wrote $out_dir/BENCH_$b.json"
+done
