@@ -206,6 +206,12 @@ pub struct TrainConfig {
     /// the scalar oracle (`--cpu-kernel scalar`), or the runtime-detected
     /// SIMD tier (`--cpu-kernel simd`).
     pub cpu_kernel: KernelPolicy,
+    /// Sharded data-parallel workers for the [`crate::dist`] layer
+    /// (0 = serial training through [`crate::session::Session`]).  When
+    /// > 0, `train` runs N in-process workers over disjoint section
+    /// ranges with barrier averaging; requires the `plus` algorithm and
+    /// a CPU backend (see [`crate::session::SpecError`]).
+    pub workers: usize,
 }
 
 impl TrainConfig {
@@ -248,6 +254,7 @@ impl Default for TrainConfig {
             artifact_dir: PathBuf::from("artifacts"),
             threads: 0,
             cpu_kernel: KernelPolicy::Tiled,
+            workers: 0,
         }
     }
 }

@@ -130,6 +130,58 @@ impl Trainer {
         })
     }
 
+    /// Build a trainer around an existing model instead of a fresh
+    /// mean-seeded init.  The distributed worker loop
+    /// ([`crate::dist::worker`]) uses this to resume each round from the
+    /// coordinator's averaged model; everything else (backend build,
+    /// index policy, fingerprint pinning) matches [`Trainer::new`].
+    pub fn with_model<T: TensorView + ?Sized>(
+        train: &T,
+        cfg: TrainConfig,
+        model: TuckerModel,
+    ) -> Result<Trainer> {
+        ensure!(
+            train.nnz() < u32::MAX as usize,
+            "tensor has {} entries; the block samplers address at most 2^32 - 2 \
+             (shard the store first)",
+            train.nnz()
+        );
+        ensure!(
+            model.dims == train.dims(),
+            "model dims {:?} do not match tensor dims {:?}",
+            model.dims,
+            train.dims()
+        );
+        ensure!(
+            model.j == cfg.j && model.r == cfg.r,
+            "model ranks (J={}, R={}) do not match config (J={}, R={})",
+            model.j,
+            model.r,
+            cfg.j,
+            cfg.r
+        );
+        // the worker loop trains shards through ShardView, which never
+        // exposes an in-RAM tensor, so the index-building algorithms are
+        // structurally unsupported here
+        ensure!(
+            cfg.algo == Algo::Plus,
+            "with_model() is used by the sharded worker loop, which supports the \
+             'plus' algorithm only (got {})",
+            cfg.algo.name()
+        );
+        let dims = train.dims().to_vec();
+        let backend = backend::make_backend(&dims, &cfg)?;
+        Ok(Trainer {
+            model,
+            backend,
+            slice_idx: Vec::new(),
+            fiber_idx: Vec::new(),
+            epoch_no: 0,
+            fingerprint: tensor_fingerprint(train),
+            cfg,
+        })
+    }
+
     /// Run one full iteration (factor phase + core phase) over `train`.
     pub fn epoch<T: TensorView + ?Sized>(&mut self, train: &T) -> Result<EpochStats> {
         ensure!(

@@ -1,7 +1,7 @@
 //! The out-of-core data layer: how tensors too large for RAM reach the
 //! trainer.
 //!
-//! Three pieces (ARCHITECTURE.md §The data layer has the diagram):
+//! Four pieces (ARCHITECTURE.md §The data layer has the diagram):
 //!
 //! * [`store`] — the `FTB2` on-disk format: a checksummed header plus
 //!   fixed-size sections of entry-major coordinates + values, sized so
@@ -13,6 +13,8 @@
 //! * [`view`] / [`paged`] — the [`TensorView`] trait the staging pipeline
 //!   gathers through, with the in-RAM [`crate::tensor::SparseTensor`]
 //!   and the LRU-paged [`PagedTensor`] as its two implementations.
+//! * [`shard`] — [`ShardView`], the section-range window the distributed
+//!   layer ([`crate::dist`]) trains each worker through.
 //!
 //! End to end: `fasttucker ingest --input big.coo --out big.ftb2` then
 //! `fasttucker train --store big.ftb2` trains FastTuckerPlus without ever
@@ -21,10 +23,12 @@
 
 pub mod ingest;
 pub mod paged;
+pub mod shard;
 pub mod store;
 pub mod view;
 
 pub use ingest::{ingest as ingest_file, IngestStats};
 pub use paged::PagedTensor;
+pub use shard::ShardView;
 pub use store::{StoreMeta, StoreWriter};
 pub use view::TensorView;

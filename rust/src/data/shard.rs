@@ -1,0 +1,190 @@
+//! [`ShardView`]: a [`TensorView`] restricted to a member's assigned
+//! sections, for sharded data-parallel training.
+//!
+//! The distributed layer deals section ids to members
+//! ([`crate::dist::shard::assign`]); this adapter turns "sections
+//! `{3, 4, 9}` of that tensor" back into an ordinary dense-id
+//! `TensorView` (local ids `0..shard_nnz`), so the existing sampler /
+//! staging / [`crate::coordinator::Trainer`] stack runs over a shard
+//! completely unchanged.  Sections map to entry-id ranges: section `s`
+//! covers global entries `[s * section_entries, (s + 1) * section_entries)`
+//! clamped to `nnz` — for a [`crate::data::PagedTensor`] that is exactly
+//! one FTB2 section (so a worker's page working set is its own shard);
+//! for an in-RAM tensor the driver picks a synthetic `section_entries`.
+//!
+//! Adjacent assigned sections merge into one contiguous segment, and
+//! local → global translation is a binary search over the segment prefix
+//! sums — O(log segments), with segments ≤ sections ≪ nnz.
+
+use crate::data::view::TensorView;
+use crate::tensor::SparseTensor;
+
+/// A contiguous-by-segments window onto a base [`TensorView`].
+///
+/// When the full id range is assigned (e.g. a single worker holding every
+/// section), the view is the identity: local id == global id, and
+/// `mean_value` sees the same entries in the same order as the base —
+/// the property behind the byte-for-byte 1-worker parity test.
+pub struct ShardView<'a> {
+    base: &'a dyn TensorView,
+    /// Half-open global entry ranges, ascending and non-overlapping.
+    segments: Vec<(usize, usize)>,
+    /// `prefix[i]` = number of local entries before `segments[i]`;
+    /// one extra trailing element equal to `nnz`.
+    prefix: Vec<usize>,
+    nnz: usize,
+}
+
+impl<'a> ShardView<'a> {
+    /// View `sections` (each spanning `section_entries` global entry ids,
+    /// the last clamped to `base.nnz()`) of `base`.  Duplicate section
+    /// ids are collapsed; out-of-range sections contribute no entries.
+    ///
+    /// # Panics
+    /// If `section_entries == 0`.
+    pub fn new(base: &'a dyn TensorView, sections: &[u32], section_entries: usize) -> ShardView<'a> {
+        assert!(section_entries > 0, "section_entries must be positive");
+        let total = base.nnz();
+        let mut ids: Vec<u32> = sections.to_vec();
+        ids.sort_unstable();
+        ids.dedup();
+        let mut segments: Vec<(usize, usize)> = Vec::new();
+        for s in ids {
+            let lo = (s as usize).saturating_mul(section_entries).min(total);
+            let hi = lo.saturating_add(section_entries).min(total);
+            if lo == hi {
+                continue;
+            }
+            match segments.last_mut() {
+                // adjacent sections fuse, so a single-worker shard is one
+                // segment [0, nnz) and lookups cost nothing
+                Some(last) if last.1 == lo => last.1 = hi,
+                _ => segments.push((lo, hi)),
+            }
+        }
+        let mut prefix = Vec::with_capacity(segments.len() + 1);
+        let mut acc = 0usize;
+        for &(lo, hi) in &segments {
+            prefix.push(acc);
+            acc += hi - lo;
+        }
+        prefix.push(acc);
+        ShardView {
+            base,
+            segments,
+            prefix,
+            nnz: acc,
+        }
+    }
+
+    /// Global entry id for local id `e` (`e < nnz()`).
+    pub fn global_id(&self, e: usize) -> usize {
+        debug_assert!(e < self.nnz);
+        // index of the segment containing local id e
+        let seg = self.prefix.partition_point(|&p| p <= e) - 1;
+        self.segments[seg].0 + (e - self.prefix[seg])
+    }
+
+    /// Number of merged contiguous segments (diagnostics / tests).
+    pub fn segment_count(&self) -> usize {
+        self.segments.len()
+    }
+}
+
+impl TensorView for ShardView<'_> {
+    fn dims(&self) -> &[u32] {
+        self.base.dims()
+    }
+
+    fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    fn load_entry(&self, e: usize, out: &mut [u32]) -> f32 {
+        self.base.load_entry(self.global_id(e), out)
+    }
+
+    fn mean_value(&self) -> f32 {
+        // f64 accumulation in local-id order, per the trait contract; for
+        // the identity shard this walks the same ids as the base view
+        let mut sum = 0.0f64;
+        let mut coords = vec![0u32; self.base.order()];
+        for e in 0..self.nnz {
+            sum += f64::from(self.base.load_entry(self.global_id(e), &mut coords));
+        }
+        if self.nnz == 0 {
+            0.0
+        } else {
+            (sum / self.nnz as f64) as f32
+        }
+    }
+
+    fn as_sparse(&self) -> Option<&SparseTensor> {
+        // shards never expose the base tensor: the per-mode indexes built
+        // from it would cover entries outside this shard
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tensor(n: usize) -> SparseTensor {
+        let mut t = SparseTensor::new(vec![64, 64]);
+        for e in 0..n {
+            t.push(&[e as u32 % 64, (e as u32 * 7) % 64], e as f32 + 0.5);
+        }
+        t
+    }
+
+    #[test]
+    fn identity_shard_matches_base() {
+        let t = tensor(100);
+        let v = ShardView::new(&t, &[0, 1, 2, 3], 25);
+        assert_eq!(v.nnz(), 100);
+        assert_eq!(v.segment_count(), 1, "adjacent sections must fuse");
+        assert_eq!(v.mean_value(), TensorView::mean_value(&t));
+        let mut a = [0u32; 2];
+        let mut b = [0u32; 2];
+        for e in [0usize, 1, 50, 99] {
+            assert_eq!(v.load_entry(e, &mut a), t.load_entry(e, &mut b));
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn sparse_sections_map_to_global_ids() {
+        let t = tensor(100);
+        // sections of 10 entries; take 2, 5, 9 (out-of-order + duplicate)
+        let v = ShardView::new(&t, &[9, 2, 5, 2], 10);
+        assert_eq!(v.nnz(), 30);
+        assert_eq!(v.segment_count(), 3);
+        assert_eq!(v.global_id(0), 20);
+        assert_eq!(v.global_id(9), 29);
+        assert_eq!(v.global_id(10), 50);
+        assert_eq!(v.global_id(29), 99);
+        let mut c = [0u32; 2];
+        assert_eq!(v.load_entry(10, &mut c), 50.5);
+    }
+
+    #[test]
+    fn tail_section_clamps_to_nnz() {
+        let t = tensor(25);
+        // 3 sections of 10: the last holds entries 20..25 only
+        let v = ShardView::new(&t, &[2], 10);
+        assert_eq!(v.nnz(), 5);
+        assert_eq!(v.global_id(4), 24);
+        // a section wholly past the end contributes nothing
+        let v = ShardView::new(&t, &[7], 10);
+        assert_eq!(v.nnz(), 0);
+        assert_eq!(v.mean_value(), 0.0);
+    }
+
+    #[test]
+    fn shards_never_expose_the_base_indexes() {
+        let t = tensor(10);
+        let v = ShardView::new(&t, &[0], 10);
+        assert!(v.as_sparse().is_none());
+    }
+}

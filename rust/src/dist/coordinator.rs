@@ -1,0 +1,504 @@
+//! The pure, tick-driven coordinator state machine.
+//!
+//! The coordinator never touches a clock, a thread or a socket: it
+//! consumes [`Event`]s ([`Coordinator::apply`]) and a monotonic tick
+//! counter ([`Coordinator::tick`]), and emits [`Directive`]s telling the
+//! backend what to do.  That makes every run a replayable function of its
+//! inputs — the property the tick-table tests in `tests/dist.rs` pin —
+//! and means a wire backend only has to move the (JSON-serializable)
+//! events and directives to get the same semantics.
+//!
+//! Lifecycle:
+//!
+//! ```text
+//! WaitingForMembers --quorum--> Warmup --warmup_ticks--> Train
+//!       Train --all StepComplete--> Sync --SyncComplete--> Train (next round)
+//!       Sync --last round--> Done
+//! ```
+//!
+//! Liveness: members heartbeat; in `Warmup`/`Train` a member silent for
+//! more than [`DistConfig::heartbeat_timeout_ticks`] ticks is evicted
+//! ([`Directive::Evict`]) and its shards return to the pool at the next
+//! `BeginRound` — the round in flight completes over the survivors'
+//! shards only (the dropped shards' entries miss one round of updates,
+//! which SGD tolerates; the fault-injection test bounds the effect).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+
+use crate::dist::event::{CoordinatorState, Directive, DistConfig, DistPhase, Event, MemberId};
+use crate::dist::shard;
+
+/// Why [`Coordinator::apply`] rejected an event — the tick-table tests
+/// assert exactly which (phase, event) pairs are legal.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EventError {
+    /// A `Join` arrived after the membership window closed.
+    JoinClosed {
+        /// The member that tried to join.
+        member: MemberId,
+        /// The phase the coordinator was in.
+        phase: DistPhase,
+    },
+    /// An event referenced a member the coordinator does not know (never
+    /// joined, or already evicted).
+    UnknownMember {
+        /// The unknown member.
+        member: MemberId,
+    },
+    /// The event is not legal in the current phase.
+    WrongPhase {
+        /// The event's kind tag.
+        event: &'static str,
+        /// The phase the coordinator was in.
+        phase: DistPhase,
+    },
+    /// A `StepComplete`/`SyncComplete` for a round other than the current
+    /// one (a late or duplicated message).
+    WrongRound {
+        /// The round the event claimed.
+        got: u64,
+        /// The coordinator's current round.
+        want: u64,
+    },
+}
+
+impl fmt::Display for EventError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EventError::JoinClosed { member, phase } => write!(
+                f,
+                "member {member} cannot join during {} (joins close at warmup)",
+                phase.name()
+            ),
+            EventError::UnknownMember { member } => {
+                write!(f, "unknown member {member} (never joined, or evicted)")
+            }
+            EventError::WrongPhase { event, phase } => {
+                write!(f, "event {event:?} is not legal in phase {}", phase.name())
+            }
+            EventError::WrongRound { got, want } => {
+                write!(f, "event for round {got}, but the current round is {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EventError {}
+
+/// The coordinator: owns the membership table, the round counter and the
+/// phase, and nothing else.  See the module docs for the lifecycle.
+#[derive(Clone, Debug)]
+pub struct Coordinator {
+    cfg: DistConfig,
+    phase: DistPhase,
+    tick: u64,
+    round: u64,
+    /// member → tick of its last sign of life (join, heartbeat, step).
+    members: BTreeMap<MemberId, u64>,
+    completed: BTreeSet<MemberId>,
+    warmup_started: u64,
+    sync_done: bool,
+    finish_requested: bool,
+}
+
+impl Coordinator {
+    /// A fresh coordinator in `WaitingForMembers`.
+    pub fn new(cfg: DistConfig) -> Coordinator {
+        Coordinator {
+            cfg,
+            phase: DistPhase::WaitingForMembers,
+            tick: 0,
+            round: 0,
+            members: BTreeMap::new(),
+            completed: BTreeSet::new(),
+            warmup_started: 0,
+            sync_done: false,
+            finish_requested: false,
+        }
+    }
+
+    /// Current phase.
+    pub fn phase(&self) -> DistPhase {
+        self.phase
+    }
+
+    /// Current round (0-based).
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    /// Ticks elapsed so far.
+    pub fn ticks(&self) -> u64 {
+        self.tick
+    }
+
+    /// Live members, sorted by id.
+    pub fn members(&self) -> Vec<MemberId> {
+        self.members.keys().copied().collect()
+    }
+
+    /// The static configuration this coordinator runs.
+    pub fn config(&self) -> &DistConfig {
+        &self.cfg
+    }
+
+    /// Observable snapshot (for the [`crate::session::Observer`] stream
+    /// and, later, a wire status endpoint).
+    pub fn state(&self) -> CoordinatorState {
+        CoordinatorState {
+            phase: self.phase,
+            tick: self.tick,
+            round: self.round,
+            members: self.members(),
+            completed: self.completed.iter().copied().collect(),
+            n_sections: self.cfg.n_sections,
+        }
+    }
+
+    /// Feed one event in.  Legal (phase, event) pairs — the tick-table:
+    ///
+    /// | event          | Waiting | Warmup | Train | Sync | Done |
+    /// |----------------|---------|--------|-------|------|------|
+    /// | `Join`         | ok      | err    | err   | err  | err  |
+    /// | `Heartbeat`    | ok*     | ok*    | ok*   | ok*  | ok*  |
+    /// | `StepComplete` | err     | err    | ok*†  | err  | err  |
+    /// | `SyncComplete` | err     | err    | err   | ok†  | err  |
+    /// | `Shutdown`     | ok      | ok     | ok    | ok   | ok   |
+    ///
+    /// `*` known members only; `†` current round only.  Rejected events
+    /// change nothing — the backend logs and drops them (a late heartbeat
+    /// from an evicted worker is expected traffic, not a bug).
+    pub fn apply(&mut self, event: &Event) -> Result<(), EventError> {
+        match event {
+            Event::Join { member } => {
+                if self.phase != DistPhase::WaitingForMembers {
+                    return Err(EventError::JoinClosed {
+                        member: *member,
+                        phase: self.phase,
+                    });
+                }
+                self.members.insert(*member, self.tick);
+                Ok(())
+            }
+            Event::Heartbeat { member } => match self.members.get_mut(member) {
+                Some(last_seen) => {
+                    *last_seen = self.tick;
+                    Ok(())
+                }
+                None => Err(EventError::UnknownMember { member: *member }),
+            },
+            Event::StepComplete { member, round } => {
+                if self.phase != DistPhase::Train {
+                    return Err(EventError::WrongPhase {
+                        event: event.kind(),
+                        phase: self.phase,
+                    });
+                }
+                if *round != self.round {
+                    return Err(EventError::WrongRound {
+                        got: *round,
+                        want: self.round,
+                    });
+                }
+                match self.members.get_mut(member) {
+                    Some(last_seen) => {
+                        *last_seen = self.tick; // a finished step is proof of life
+                        self.completed.insert(*member);
+                        Ok(())
+                    }
+                    None => Err(EventError::UnknownMember { member: *member }),
+                }
+            }
+            Event::SyncComplete { round } => {
+                if self.phase != DistPhase::Sync {
+                    return Err(EventError::WrongPhase {
+                        event: event.kind(),
+                        phase: self.phase,
+                    });
+                }
+                if *round != self.round {
+                    return Err(EventError::WrongRound {
+                        got: *round,
+                        want: self.round,
+                    });
+                }
+                self.sync_done = true;
+                Ok(())
+            }
+            Event::Shutdown => {
+                self.finish_requested = true;
+                Ok(())
+            }
+        }
+    }
+
+    /// Advance time by one tick and return the directives that fall out.
+    /// This is the only place phase transitions happen, so the backend's
+    /// loop is: drain events → tick until caught up → obey directives.
+    pub fn tick(&mut self) -> Vec<Directive> {
+        self.tick += 1;
+        let mut out = Vec::new();
+        if self.finish_requested && self.phase != DistPhase::Done {
+            self.finish(&mut out);
+            return out;
+        }
+        match self.phase {
+            DistPhase::WaitingForMembers => {
+                if self.members.len() >= self.cfg.min_members.max(1) {
+                    self.phase = DistPhase::Warmup;
+                    self.warmup_started = self.tick;
+                    // everyone gets a fresh liveness window: time spent
+                    // waiting for the quorum is not heartbeat silence
+                    for last_seen in self.members.values_mut() {
+                        *last_seen = self.tick;
+                    }
+                    out.push(Directive::EnterWarmup);
+                }
+            }
+            DistPhase::Warmup => {
+                self.evict_stale(&mut out);
+                if self.members.is_empty() {
+                    self.finish(&mut out);
+                } else if self.tick - self.warmup_started >= self.cfg.warmup_ticks {
+                    self.begin_round(&mut out);
+                }
+            }
+            DistPhase::Train => {
+                self.evict_stale(&mut out);
+                if self.members.is_empty() {
+                    self.finish(&mut out);
+                } else if self.members.keys().all(|m| self.completed.contains(m)) {
+                    self.phase = DistPhase::Sync;
+                    self.sync_done = false;
+                    let last_round = self.round + 1 >= self.cfg.rounds;
+                    out.push(Directive::RunSync {
+                        round: self.round,
+                        members: self.members(),
+                        // the averaging cadence, with the final barrier
+                        // always averaging so the run ends on one model
+                        average: last_round
+                            || (self.round + 1) % self.cfg.sync_every.max(1) == 0,
+                    });
+                }
+            }
+            DistPhase::Sync => {
+                // no evictions here: the barrier is backend work, and the
+                // members are idle-but-heartbeating while it runs
+                if self.sync_done {
+                    if self.round + 1 >= self.cfg.rounds {
+                        self.finish(&mut out);
+                    } else {
+                        self.round += 1;
+                        self.begin_round(&mut out);
+                    }
+                }
+            }
+            DistPhase::Done => {}
+        }
+        out
+    }
+
+    fn begin_round(&mut self, out: &mut Vec<Directive>) {
+        self.phase = DistPhase::Train;
+        self.completed.clear();
+        let members = self.members();
+        out.push(Directive::BeginRound {
+            round: self.round,
+            assignment: shard::assign(self.cfg.seed, self.round, self.cfg.n_sections, &members),
+        });
+    }
+
+    fn finish(&mut self, out: &mut Vec<Directive>) {
+        self.phase = DistPhase::Done;
+        out.push(Directive::Finish);
+    }
+
+    fn evict_stale(&mut self, out: &mut Vec<Directive>) {
+        let timeout = self.cfg.heartbeat_timeout_ticks;
+        let now = self.tick;
+        let dead: Vec<MemberId> = self
+            .members
+            .iter()
+            .filter(|(_, &last_seen)| now.saturating_sub(last_seen) > timeout)
+            .map(|(&m, _)| m)
+            .collect();
+        for m in dead {
+            self.members.remove(&m);
+            self.completed.remove(&m);
+            out.push(Directive::Evict { member: m });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(min_members: usize, rounds: u64) -> DistConfig {
+        DistConfig {
+            min_members,
+            warmup_ticks: 2,
+            heartbeat_timeout_ticks: 5,
+            rounds,
+            sync_every: 1,
+            seed: 7,
+            n_sections: 8,
+        }
+    }
+
+    /// Tick until a directive appears (bounded, so a logic bug fails the
+    /// test instead of hanging it).
+    fn tick_until(c: &mut Coordinator, max: u64) -> Vec<Directive> {
+        for _ in 0..max {
+            let d = c.tick();
+            if !d.is_empty() {
+                return d;
+            }
+        }
+        Vec::new()
+    }
+
+    #[test]
+    fn happy_path_two_members_two_rounds() {
+        let mut c = Coordinator::new(cfg(2, 2));
+        assert_eq!(c.phase(), DistPhase::WaitingForMembers);
+        c.apply(&Event::Join { member: 2 }).unwrap();
+        assert!(c.tick().is_empty(), "below quorum: nothing happens");
+        c.apply(&Event::Join { member: 1 }).unwrap();
+        assert_eq!(tick_until(&mut c, 4), vec![Directive::EnterWarmup]);
+        assert_eq!(c.phase(), DistPhase::Warmup);
+
+        let d = tick_until(&mut c, 4);
+        let Directive::BeginRound { round: 0, assignment } = &d[0] else {
+            panic!("expected BeginRound, got {d:?}");
+        };
+        assert_eq!(assignment.shards.len(), 2);
+        assert_eq!(c.phase(), DistPhase::Train);
+
+        // keep both alive, finish the round
+        c.apply(&Event::Heartbeat { member: 1 }).unwrap();
+        c.apply(&Event::StepComplete { member: 1, round: 0 }).unwrap();
+        assert!(c.tick().is_empty(), "one member still training");
+        c.apply(&Event::StepComplete { member: 2, round: 0 }).unwrap();
+        let d = tick_until(&mut c, 2);
+        assert_eq!(
+            d,
+            vec![Directive::RunSync {
+                round: 0,
+                members: vec![1, 2],
+                average: true,
+            }]
+        );
+        assert_eq!(c.phase(), DistPhase::Sync);
+
+        c.apply(&Event::SyncComplete { round: 0 }).unwrap();
+        let d = tick_until(&mut c, 2);
+        assert!(matches!(d[0], Directive::BeginRound { round: 1, .. }));
+
+        c.apply(&Event::StepComplete { member: 1, round: 1 }).unwrap();
+        c.apply(&Event::StepComplete { member: 2, round: 1 }).unwrap();
+        tick_until(&mut c, 2);
+        c.apply(&Event::SyncComplete { round: 1 }).unwrap();
+        assert_eq!(tick_until(&mut c, 2), vec![Directive::Finish]);
+        assert_eq!(c.phase(), DistPhase::Done);
+    }
+
+    #[test]
+    fn heartbeat_timeout_evicts_and_barrier_proceeds() {
+        let mut c = Coordinator::new(cfg(2, 1));
+        c.apply(&Event::Join { member: 1 }).unwrap();
+        c.apply(&Event::Join { member: 2 }).unwrap();
+        tick_until(&mut c, 4); // warmup
+        tick_until(&mut c, 4); // round 0
+        c.apply(&Event::StepComplete { member: 1, round: 0 }).unwrap();
+        // member 2 goes silent; member 1 keeps heartbeating
+        let mut saw_evict = false;
+        for _ in 0..20 {
+            c.apply(&Event::Heartbeat { member: 1 }).unwrap();
+            let d = c.tick();
+            if d.contains(&Directive::Evict { member: 2 }) {
+                saw_evict = true;
+                // the survivor already completed, so the same tick (or the
+                // next) must reach the barrier over the survivors only
+                let sync = if d.iter().any(|x| matches!(x, Directive::RunSync { .. })) {
+                    d
+                } else {
+                    c.tick()
+                };
+                assert!(
+                    sync.iter().any(|x| matches!(
+                        x,
+                        Directive::RunSync { members, .. } if members == &vec![1]
+                    )),
+                    "barrier should run over the survivors, got {sync:?}"
+                );
+                break;
+            }
+        }
+        assert!(saw_evict, "silent member was never evicted");
+        // the evicted member is gone for good
+        assert_eq!(
+            c.apply(&Event::Heartbeat { member: 2 }),
+            Err(EventError::UnknownMember { member: 2 })
+        );
+    }
+
+    #[test]
+    fn all_members_lost_finishes_the_run() {
+        let mut c = Coordinator::new(cfg(1, 3));
+        c.apply(&Event::Join { member: 9 }).unwrap();
+        tick_until(&mut c, 4);
+        tick_until(&mut c, 4);
+        assert_eq!(c.phase(), DistPhase::Train);
+        // silence: ticks pass, nobody heartbeats
+        let mut out = Vec::new();
+        for _ in 0..20 {
+            out.extend(c.tick());
+            if c.phase() == DistPhase::Done {
+                break;
+            }
+        }
+        assert!(out.contains(&Directive::Evict { member: 9 }));
+        assert!(out.contains(&Directive::Finish));
+    }
+
+    #[test]
+    fn shutdown_finishes_from_any_phase() {
+        let mut c = Coordinator::new(cfg(1, 5));
+        c.apply(&Event::Join { member: 1 }).unwrap();
+        tick_until(&mut c, 4);
+        tick_until(&mut c, 4);
+        assert_eq!(c.phase(), DistPhase::Train);
+        c.apply(&Event::Shutdown).unwrap();
+        assert_eq!(c.tick(), vec![Directive::Finish]);
+        assert_eq!(c.phase(), DistPhase::Done);
+        assert!(c.tick().is_empty(), "Finish is emitted exactly once");
+    }
+
+    #[test]
+    fn sync_every_cadence_controls_average_flag() {
+        let mut c = Coordinator::new(DistConfig {
+            sync_every: 2,
+            rounds: 3,
+            ..cfg(1, 3)
+        });
+        c.apply(&Event::Join { member: 1 }).unwrap();
+        tick_until(&mut c, 4);
+        tick_until(&mut c, 4);
+        let mut averages = Vec::new();
+        for round in 0..3 {
+            c.apply(&Event::StepComplete { member: 1, round }).unwrap();
+            let d = tick_until(&mut c, 4);
+            let Directive::RunSync { average, .. } = d[0] else {
+                panic!("expected RunSync, got {d:?}");
+            };
+            averages.push(average);
+            c.apply(&Event::SyncComplete { round }).unwrap();
+            tick_until(&mut c, 4);
+        }
+        // rounds are 0-based: barrier after round 1 hits the cadence, and
+        // the final barrier always averages
+        assert_eq!(averages, vec![false, true, true]);
+    }
+}

@@ -1,0 +1,613 @@
+//! The distributed layer's wire surface: every event a member can send,
+//! every directive the coordinator can emit, and the coordinator's
+//! observable state — all round-tripping losslessly through the in-tree
+//! [`crate::util::json`] so a TCP wire layer is a drop-in later (the
+//! in-process backend in [`crate::dist::local`] passes these same types
+//! over channels today).
+//!
+//! Nothing here touches the clock: time is a monotonic *tick* counter the
+//! backend advances ([`crate::dist::Coordinator::tick`]), so the state
+//! machine is a pure function of (events, ticks) and every run replays.
+
+use std::fmt;
+
+use crate::util::json::{self, Json};
+
+/// Stable identity of one worker in a run.  The in-process backend hands
+/// out small consecutive ids; a wire backend can derive them from
+/// connection handshakes — the coordinator only ever orders and compares
+/// them (deterministic shard assignment sorts by id).
+pub type MemberId = u64;
+
+// ======================================================================
+// JSON field helpers (shared by every type in this module)
+// ======================================================================
+
+/// u64 → JSON, lossless: exactly-representable values as numbers, larger
+/// ones as decimal strings (the in-tree parser stores numbers as f64).
+fn num_u64(v: u64) -> Json {
+    if v <= (1u64 << 53) {
+        Json::Num(v as f64)
+    } else {
+        Json::Str(v.to_string())
+    }
+}
+
+fn get_u64(v: &Json, key: &str) -> Result<u64, String> {
+    match v.get(key).ok_or_else(|| format!("missing field {key:?}"))? {
+        Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= (1u64 << 53) as f64 => {
+            Ok(*n as u64)
+        }
+        Json::Str(s) => s
+            .parse::<u64>()
+            .map_err(|_| format!("field {key:?}: bad u64 string {s:?}")),
+        other => Err(format!("field {key:?}: expected a u64, got {other:?}")),
+    }
+}
+
+fn get_str<'a>(v: &'a Json, key: &str) -> Result<&'a str, String> {
+    v.get(key)
+        .ok_or_else(|| format!("missing field {key:?}"))?
+        .as_str()
+        .ok_or_else(|| format!("field {key:?}: expected a string"))
+}
+
+fn get_u64_list(v: &Json, key: &str) -> Result<Vec<u64>, String> {
+    let arr = v
+        .get(key)
+        .ok_or_else(|| format!("missing field {key:?}"))?
+        .as_arr()
+        .ok_or_else(|| format!("field {key:?}: expected an array"))?;
+    arr.iter()
+        .map(|e| match e {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Ok(*n as u64),
+            Json::Str(s) => s
+                .parse::<u64>()
+                .map_err(|_| format!("field {key:?}: bad u64 string {s:?}")),
+            other => Err(format!("field {key:?}: expected u64 elements, got {other:?}")),
+        })
+        .collect()
+}
+
+fn u64_list(xs: &[u64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| num_u64(x)).collect())
+}
+
+// ======================================================================
+// Events (member → coordinator)
+// ======================================================================
+
+/// One input to the coordinator state machine.  Events carry everything
+/// the coordinator learns about the outside world; combined with the tick
+/// counter they fully determine its behavior.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Event {
+    /// A member announces itself (legal only while the coordinator is
+    /// waiting for the quorum — late joins are rejected in this PR).
+    Join {
+        /// The joining member.
+        member: MemberId,
+    },
+    /// Proof of life.  A member that misses
+    /// [`DistConfig::heartbeat_timeout_ticks`] consecutive ticks of
+    /// heartbeats is evicted at the next tick and its shards are
+    /// reassigned at the next round barrier.
+    Heartbeat {
+        /// The member reporting in.
+        member: MemberId,
+    },
+    /// A member finished its assigned shards for `round` (one full
+    /// factor+core epoch over its ranges).
+    StepComplete {
+        /// The member that finished.
+        member: MemberId,
+        /// The round it finished (must match the coordinator's).
+        round: u64,
+    },
+    /// The backend finished the barrier work (model collection, factor
+    /// averaging, redistribution) for `round`.
+    SyncComplete {
+        /// The synced round.
+        round: u64,
+    },
+    /// Orderly teardown request from the backend (early stopping, operator
+    /// abort).  Legal in every phase; the next tick finishes the run.
+    Shutdown,
+}
+
+impl Event {
+    /// The variant tag used in the JSON encoding (and error messages).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::Join { .. } => "join",
+            Event::Heartbeat { .. } => "heartbeat",
+            Event::StepComplete { .. } => "step_complete",
+            Event::SyncComplete { .. } => "sync_complete",
+            Event::Shutdown => "shutdown",
+        }
+    }
+
+    /// Serialize (the future wire encoding).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![("kind", json::s(self.kind()))];
+        match self {
+            Event::Join { member } | Event::Heartbeat { member } => {
+                fields.push(("member", num_u64(*member)));
+            }
+            Event::StepComplete { member, round } => {
+                fields.push(("member", num_u64(*member)));
+                fields.push(("round", num_u64(*round)));
+            }
+            Event::SyncComplete { round } => fields.push(("round", num_u64(*round))),
+            Event::Shutdown => {}
+        }
+        json::obj(fields)
+    }
+
+    /// Parse (inverse of [`Event::to_json`]).
+    pub fn from_json(v: &Json) -> Result<Event, String> {
+        Ok(match get_str(v, "kind")? {
+            "join" => Event::Join {
+                member: get_u64(v, "member")?,
+            },
+            "heartbeat" => Event::Heartbeat {
+                member: get_u64(v, "member")?,
+            },
+            "step_complete" => Event::StepComplete {
+                member: get_u64(v, "member")?,
+                round: get_u64(v, "round")?,
+            },
+            "sync_complete" => Event::SyncComplete {
+                round: get_u64(v, "round")?,
+            },
+            "shutdown" => Event::Shutdown,
+            other => return Err(format!("unknown event kind {other:?}")),
+        })
+    }
+}
+
+// ======================================================================
+// Phases
+// ======================================================================
+
+/// The coordinator's lifecycle, a one-way street:
+/// `WaitingForMembers → Warmup → (Train ⇄ Sync)* → Done`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DistPhase {
+    /// Accepting joins until the quorum ([`DistConfig::min_members`]).
+    WaitingForMembers,
+    /// Quorum reached; members settle for
+    /// [`DistConfig::warmup_ticks`] ticks before the first round.
+    Warmup,
+    /// A round is in flight: members train their assigned shards.
+    Train,
+    /// Round barrier reached: the backend averages/redistributes factors.
+    Sync,
+    /// The run is over (all rounds done, shutdown, or no members left).
+    Done,
+}
+
+impl DistPhase {
+    /// Canonical name (`parse(name()) == Some(self)`).
+    pub fn name(self) -> &'static str {
+        match self {
+            DistPhase::WaitingForMembers => "waiting_for_members",
+            DistPhase::Warmup => "warmup",
+            DistPhase::Train => "train",
+            DistPhase::Sync => "sync",
+            DistPhase::Done => "done",
+        }
+    }
+
+    /// Parse a serialized phase name.
+    pub fn parse(s: &str) -> Option<DistPhase> {
+        match s {
+            "waiting_for_members" => Some(DistPhase::WaitingForMembers),
+            "warmup" => Some(DistPhase::Warmup),
+            "train" => Some(DistPhase::Train),
+            "sync" => Some(DistPhase::Sync),
+            "done" => Some(DistPhase::Done),
+            _ => None,
+        }
+    }
+
+    /// Every phase, in lifecycle order (tick-table tests iterate this).
+    pub const ALL: [DistPhase; 5] = [
+        DistPhase::WaitingForMembers,
+        DistPhase::Warmup,
+        DistPhase::Train,
+        DistPhase::Sync,
+        DistPhase::Done,
+    ];
+}
+
+// ======================================================================
+// Shard assignment
+// ======================================================================
+
+/// One round's seeded deterministic mapping of section ids to members.
+///
+/// Sections are the shard unit: FTB2 store pages for out-of-core runs,
+/// fixed-size entry-id ranges for in-RAM tensors (see
+/// [`crate::data::ShardView`]).  The assignment is a pure function of
+/// `(seed, round, n_sections, membership set)` — reproducible from the
+/// seed alone and invariant to join order, pinned by `tests/dist.rs`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardAssignment {
+    /// The round this assignment is for.
+    pub round: u64,
+    /// Total sections dealt (every id in `0..n_sections` appears exactly
+    /// once across all members).
+    pub n_sections: u32,
+    /// `(member, its sorted section ids)`, sorted by member id.
+    pub shards: Vec<(MemberId, Vec<u32>)>,
+}
+
+impl ShardAssignment {
+    /// The sections assigned to `member` (empty when unknown).
+    pub fn sections_for(&self, member: MemberId) -> &[u32] {
+        self.shards
+            .iter()
+            .find(|(m, _)| *m == member)
+            .map(|(_, s)| s.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Serialize.
+    pub fn to_json(&self) -> Json {
+        let shards = self
+            .shards
+            .iter()
+            .map(|(m, sections)| {
+                json::obj(vec![
+                    ("member", num_u64(*m)),
+                    (
+                        "sections",
+                        Json::Arr(sections.iter().map(|&s| json::num(s as f64)).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("round", num_u64(self.round)),
+            ("n_sections", json::num(self.n_sections as f64)),
+            ("shards", Json::Arr(shards)),
+        ])
+    }
+
+    /// Parse (inverse of [`ShardAssignment::to_json`]).
+    pub fn from_json(v: &Json) -> Result<ShardAssignment, String> {
+        let arr = v
+            .get("shards")
+            .ok_or("missing field \"shards\"")?
+            .as_arr()
+            .ok_or("field \"shards\": expected an array")?;
+        let mut shards = Vec::with_capacity(arr.len());
+        for entry in arr {
+            let member = get_u64(entry, "member")?;
+            let sections = entry
+                .get("sections")
+                .ok_or("missing field \"sections\"")?
+                .as_arr()
+                .ok_or("field \"sections\": expected an array")?
+                .iter()
+                .map(|s| {
+                    s.as_usize()
+                        .map(|x| x as u32)
+                        .ok_or_else(|| "field \"sections\": expected integers".to_string())
+                })
+                .collect::<Result<Vec<u32>, String>>()?;
+            shards.push((member, sections));
+        }
+        Ok(ShardAssignment {
+            round: get_u64(v, "round")?,
+            n_sections: get_u64(v, "n_sections")? as u32,
+            shards,
+        })
+    }
+}
+
+// ======================================================================
+// Directives (coordinator → backend)
+// ======================================================================
+
+/// One instruction [`crate::dist::Coordinator::tick`] hands the backend.
+/// The coordinator never performs work itself — it tells the backend what
+/// to do and learns the outcome through events, so the core stays pure.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Directive {
+    /// Quorum reached; the run is warming up.
+    EnterWarmup,
+    /// Start round `round`: deliver each member its shards (and the
+    /// current global model).
+    BeginRound {
+        /// The round beginning now.
+        round: u64,
+        /// Who trains which sections this round.
+        assignment: ShardAssignment,
+    },
+    /// All live members finished `round`: run the barrier.  `average`
+    /// says whether this barrier exchanges factors
+    /// ([`DistConfig::sync_every`] cadence — the final round always
+    /// averages so the run ends on one agreed model).
+    RunSync {
+        /// The round being synced.
+        round: u64,
+        /// The live membership at the barrier, sorted by id — the models
+        /// to collect and average.
+        members: Vec<MemberId>,
+        /// Whether this barrier averages + redistributes factors.
+        average: bool,
+    },
+    /// `member` missed its heartbeat window and is out of the run; its
+    /// shards return to the pool at the next `BeginRound`.
+    Evict {
+        /// The evicted member.
+        member: MemberId,
+    },
+    /// The run is over; tear the workers down.
+    Finish,
+}
+
+impl Directive {
+    /// The variant tag used in the JSON encoding.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Directive::EnterWarmup => "enter_warmup",
+            Directive::BeginRound { .. } => "begin_round",
+            Directive::RunSync { .. } => "run_sync",
+            Directive::Evict { .. } => "evict",
+            Directive::Finish => "finish",
+        }
+    }
+
+    /// Serialize.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![("kind", json::s(self.kind()))];
+        match self {
+            Directive::EnterWarmup | Directive::Finish => {}
+            Directive::BeginRound { round, assignment } => {
+                fields.push(("round", num_u64(*round)));
+                fields.push(("assignment", assignment.to_json()));
+            }
+            Directive::RunSync {
+                round,
+                members,
+                average,
+            } => {
+                fields.push(("round", num_u64(*round)));
+                fields.push(("members", u64_list(members)));
+                fields.push(("average", Json::Bool(*average)));
+            }
+            Directive::Evict { member } => fields.push(("member", num_u64(*member))),
+        }
+        json::obj(fields)
+    }
+
+    /// Parse (inverse of [`Directive::to_json`]).
+    pub fn from_json(v: &Json) -> Result<Directive, String> {
+        Ok(match get_str(v, "kind")? {
+            "enter_warmup" => Directive::EnterWarmup,
+            "begin_round" => Directive::BeginRound {
+                round: get_u64(v, "round")?,
+                assignment: ShardAssignment::from_json(
+                    v.get("assignment").ok_or("missing field \"assignment\"")?,
+                )?,
+            },
+            "run_sync" => Directive::RunSync {
+                round: get_u64(v, "round")?,
+                members: get_u64_list(v, "members")?,
+                average: v
+                    .get("average")
+                    .and_then(|b| b.as_bool())
+                    .ok_or("field \"average\": expected a bool")?,
+            },
+            "evict" => Directive::Evict {
+                member: get_u64(v, "member")?,
+            },
+            "finish" => Directive::Finish,
+            other => return Err(format!("unknown directive kind {other:?}")),
+        })
+    }
+}
+
+// ======================================================================
+// Config + observable state
+// ======================================================================
+
+/// Static parameters of one distributed run.  Everything is in *ticks*
+/// and *rounds* — the backend decides how long a tick is (the in-process
+/// backend maps 1 tick ≈ 5 ms of wall time; a test harness can tick a
+/// coordinator by hand).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DistConfig {
+    /// Members required before the run leaves `WaitingForMembers`.
+    pub min_members: usize,
+    /// Ticks spent in `Warmup` once the quorum is reached.
+    pub warmup_ticks: u64,
+    /// Ticks of heartbeat silence tolerated before eviction.
+    pub heartbeat_timeout_ticks: u64,
+    /// Rounds to run (each round = one full collective pass over the
+    /// training entries, i.e. one epoch of the serial trainer).
+    pub rounds: u64,
+    /// Factor averaging cadence: barriers exchange factors every this
+    /// many rounds (1 = every barrier; the final barrier always does).
+    pub sync_every: u64,
+    /// Seed for the deterministic shard assignment.
+    pub seed: u64,
+    /// Sections being dealt (store pages, or computed entry ranges).
+    pub n_sections: u32,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        Self {
+            min_members: 1,
+            warmup_ticks: 2,
+            heartbeat_timeout_ticks: 60,
+            rounds: 1,
+            sync_every: 1,
+            seed: 42,
+            n_sections: 1,
+        }
+    }
+}
+
+impl DistConfig {
+    /// Serialize.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("min_members", json::num(self.min_members as f64)),
+            ("warmup_ticks", num_u64(self.warmup_ticks)),
+            (
+                "heartbeat_timeout_ticks",
+                num_u64(self.heartbeat_timeout_ticks),
+            ),
+            ("rounds", num_u64(self.rounds)),
+            ("sync_every", num_u64(self.sync_every)),
+            ("seed", num_u64(self.seed)),
+            ("n_sections", json::num(self.n_sections as f64)),
+        ])
+    }
+
+    /// Parse (inverse of [`DistConfig::to_json`]).
+    pub fn from_json(v: &Json) -> Result<DistConfig, String> {
+        Ok(DistConfig {
+            min_members: get_u64(v, "min_members")? as usize,
+            warmup_ticks: get_u64(v, "warmup_ticks")?,
+            heartbeat_timeout_ticks: get_u64(v, "heartbeat_timeout_ticks")?,
+            rounds: get_u64(v, "rounds")?,
+            sync_every: get_u64(v, "sync_every")?,
+            seed: get_u64(v, "seed")?,
+            n_sections: get_u64(v, "n_sections")? as u32,
+        })
+    }
+}
+
+/// A snapshot of the coordinator for observers and logs (surfaced through
+/// [`crate::session::Observer::on_round`] and serializable for a wire
+/// status endpoint later).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CoordinatorState {
+    /// Current lifecycle phase.
+    pub phase: DistPhase,
+    /// Ticks elapsed since construction.
+    pub tick: u64,
+    /// Current round (0-based; meaningful from the first `Train` on).
+    pub round: u64,
+    /// Live members, sorted by id.
+    pub members: Vec<MemberId>,
+    /// Members that completed the current round so far, sorted by id.
+    pub completed: Vec<MemberId>,
+    /// Sections being dealt each round.
+    pub n_sections: u32,
+}
+
+impl fmt::Display for CoordinatorState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "phase {} round {} ({}/{} members done, tick {})",
+            self.phase.name(),
+            self.round,
+            self.completed.len(),
+            self.members.len(),
+            self.tick
+        )
+    }
+}
+
+impl CoordinatorState {
+    /// Serialize.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("phase", json::s(self.phase.name())),
+            ("tick", num_u64(self.tick)),
+            ("round", num_u64(self.round)),
+            ("members", u64_list(&self.members)),
+            ("completed", u64_list(&self.completed)),
+            ("n_sections", json::num(self.n_sections as f64)),
+        ])
+    }
+
+    /// Parse (inverse of [`CoordinatorState::to_json`]).
+    pub fn from_json(v: &Json) -> Result<CoordinatorState, String> {
+        let phase_name = get_str(v, "phase")?;
+        Ok(CoordinatorState {
+            phase: DistPhase::parse(phase_name)
+                .ok_or_else(|| format!("unknown phase {phase_name:?}"))?,
+            tick: get_u64(v, "tick")?,
+            round: get_u64(v, "round")?,
+            members: get_u64_list(v, "members")?,
+            completed: get_u64_list(v, "completed")?,
+            n_sections: get_u64(v, "n_sections")? as u32,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_json_roundtrip() {
+        for ev in [
+            Event::Join { member: 3 },
+            Event::Heartbeat { member: u64::MAX },
+            Event::StepComplete {
+                member: 1,
+                round: 7,
+            },
+            Event::SyncComplete { round: 2 },
+            Event::Shutdown,
+        ] {
+            let text = ev.to_json().dump();
+            let back = Event::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, ev, "through {text}");
+        }
+    }
+
+    #[test]
+    fn phase_names_roundtrip() {
+        for p in DistPhase::ALL {
+            assert_eq!(DistPhase::parse(p.name()), Some(p));
+        }
+        assert_eq!(DistPhase::parse("nope"), None);
+    }
+
+    #[test]
+    fn config_and_state_roundtrip() {
+        let cfg = DistConfig {
+            min_members: 4,
+            warmup_ticks: 3,
+            heartbeat_timeout_ticks: 99,
+            rounds: 12,
+            sync_every: 2,
+            seed: u64::MAX - 1, // exercises the string fallback
+            n_sections: 37,
+        };
+        let back = DistConfig::from_json(&Json::parse(&cfg.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+
+        let st = CoordinatorState {
+            phase: DistPhase::Sync,
+            tick: 1234,
+            round: 5,
+            members: vec![1, 2, 9],
+            completed: vec![2],
+            n_sections: 37,
+        };
+        let back =
+            CoordinatorState::from_json(&Json::parse(&st.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back, st);
+        assert!(st.to_string().contains("sync"));
+    }
+
+    #[test]
+    fn bad_json_is_rejected_with_field_names() {
+        let err = Event::from_json(&json::obj(vec![("kind", json::s("join"))])).unwrap_err();
+        assert!(err.contains("member"), "{err}");
+        let err = Event::from_json(&json::obj(vec![("kind", json::s("warp"))])).unwrap_err();
+        assert!(err.contains("warp"), "{err}");
+    }
+}

@@ -1,0 +1,502 @@
+//! The in-process channel backend: N workers on threads, one
+//! coordinator, `mpsc` channels as the wire.
+//!
+//! This is the reference implementation of the distributed protocol —
+//! the TCP backend (a later PR) replaces the channels and the
+//! tick-from-wall-clock mapping here, and nothing else: the
+//! [`Coordinator`] itself never sees a clock.  The mapping is
+//! [`TICK_MS`] milliseconds of wall time per tick, so the default
+//! heartbeat timeout of 60 ticks is ~300 ms against workers that
+//! heartbeat every ~20 ms ([`crate::dist::worker::HEARTBEAT_MS`]).
+//!
+//! One round = one epoch on every worker over its assigned sections,
+//! then a barrier: the driver collects the workers' models, averages
+//! them (f64 accumulation over members in ascending id order, so the
+//! result is independent of arrival order), evaluates/checkpoints per
+//! the schedule, and deals the next round.  With one worker the barrier
+//! averages a single model — a bit-exact identity — so `--workers 1`
+//! reproduces the serial trainer byte for byte (pinned by
+//! `tests/dist.rs` and the CI `dist-smoke` job).
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::coordinator::EpochStats;
+use crate::cpu_ref;
+use crate::data::{PagedTensor, TensorView};
+use crate::dist::coordinator::Coordinator;
+use crate::dist::event::{CoordinatorState, Directive, DistConfig, Event, MemberId};
+use crate::dist::worker::{worker_loop, Fault, RoundResult, WorkerCmd};
+use crate::model::TuckerModel;
+use crate::serve::ModelSnapshot;
+use crate::session::{DataSource, EpochEvent, Observer, RunReport, RunSpec};
+use crate::tensor::{split::train_test_split, SparseTensor};
+
+/// Wall-clock milliseconds per coordinator tick in this backend.
+pub const TICK_MS: u64 = 5;
+
+/// Hard wall-clock ceiling on a local distributed run — a liveness bug
+/// should fail a test, not hang it (and CI) forever.
+const WATCHDOG_S: u64 = 600;
+
+/// Sections dealt per worker for in-RAM tensors (more sections than
+/// workers so a re-deal after an eviction stays balanced).  FTB2 stores
+/// use their real on-disk sections instead.
+const RAM_SECTIONS_PER_WORKER: usize = 8;
+
+/// Injected failure for the fault tests: worker number `member_index`
+/// (0-based spawn index) dies mid-epoch in `round`.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultSpec {
+    /// Which worker dies, as its 0-based spawn index.
+    pub member_index: usize,
+    /// The round it dies in.
+    pub round: u64,
+}
+
+/// Knobs for [`run_local_with`] beyond the spec itself.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LocalOpts {
+    /// Kill one worker mid-epoch (tests only).
+    pub fault: Option<FaultSpec>,
+}
+
+/// What a finished distributed run hands back.
+pub struct DistRun {
+    /// The same report a serial [`crate::session::Session`] produces.
+    pub report: RunReport,
+    /// The final (averaged) global model.
+    pub model: TuckerModel,
+    /// The coordinator's terminal state (phase is `Done`; the member
+    /// list shows who survived to the end).
+    pub final_state: CoordinatorState,
+}
+
+/// Train `spec` with `spec.train.workers` in-process workers.
+pub fn run_local(spec: &RunSpec, observer: &mut dyn Observer) -> Result<DistRun> {
+    run_local_with(spec, &LocalOpts::default(), observer)
+}
+
+/// The training data, RAM or paged (the distributed twin of the
+/// session's internal enum — both feed workers through [`TensorView`]).
+enum DistData {
+    Ram(SparseTensor),
+    Paged(PagedTensor),
+}
+
+impl DistData {
+    fn view(&self) -> &dyn TensorView {
+        match self {
+            DistData::Ram(t) => t,
+            DistData::Paged(p) => p,
+        }
+    }
+}
+
+/// [`run_local`] with fault injection.  Validates the spec, resolves the
+/// data exactly like a serial session (same split, same seed), then runs
+/// coordinator + workers to completion and returns the averaged model.
+pub fn run_local_with(
+    spec: &RunSpec,
+    opts: &LocalOpts,
+    observer: &mut dyn Observer,
+) -> Result<DistRun> {
+    spec.validate()
+        .map_err(|e| anyhow!(e))
+        .context("invalid run spec")?;
+    let workers = spec.train.workers;
+    ensure!(
+        workers > 0,
+        "run_local needs train.workers >= 1 (serial runs go through Session)"
+    );
+    let cfg = &spec.train;
+    let sched = &spec.schedule;
+
+    // --- data: mirror Session::from_spec so the 1-worker run sees the
+    // exact same train/test split as the serial trainer ------------------
+    let (data, test, n_sections, section_entries) = match &spec.data {
+        DataSource::Store(path) => {
+            let paged = PagedTensor::open(path).with_context(|| format!("opening {path:?}"))?;
+            let meta = paged.meta().clone();
+            let empty = SparseTensor::new(meta.dims.clone());
+            let n_sections = u32::try_from(meta.num_pages().max(1))
+                .map_err(|_| anyhow!("store has more than u32::MAX sections"))?;
+            (
+                DistData::Paged(paged),
+                empty,
+                n_sections,
+                meta.page_entries,
+            )
+        }
+        _ => {
+            let tensor = spec.data.resolve()?;
+            let (train, test) = if sched.test_frac > 0.0 {
+                train_test_split(&tensor, sched.test_frac, cfg.seed)
+            } else {
+                let empty = SparseTensor::new(tensor.dims.clone());
+                (tensor, empty)
+            };
+            let nnz = train.values.len();
+            let n_sections = (workers * RAM_SECTIONS_PER_WORKER).min(nnz.max(1));
+            let section_entries = nnz.div_ceil(n_sections).max(1);
+            (
+                DistData::Ram(train),
+                test,
+                n_sections as u32,
+                section_entries,
+            )
+        }
+    };
+    let view: &dyn TensorView = data.view();
+    ensure!(
+        view.nnz() < u32::MAX as usize,
+        "tensor has {} entries; the block samplers address at most 2^32 - 2",
+        view.nnz()
+    );
+
+    // same init as Trainer::new — with one worker the first round starts
+    // from bit-identical factors
+    let global0 = TuckerModel::init_with_mean(
+        &view.dims().to_vec(),
+        cfg.j,
+        cfg.r,
+        cfg.seed,
+        view.mean_value(),
+    );
+
+    let dist_cfg = DistConfig {
+        min_members: workers,
+        warmup_ticks: 2,
+        heartbeat_timeout_ticks: 60,
+        rounds: sched.epochs as u64,
+        sync_every: 1,
+        seed: cfg.seed,
+        n_sections,
+    };
+
+    let t0 = Instant::now();
+    std::thread::scope(|scope| -> Result<DistRun> {
+        let (event_tx, event_rx) = mpsc::channel::<Event>();
+        let (done_tx, done_rx) = mpsc::channel::<RoundResult>();
+        let mut cmds: BTreeMap<MemberId, mpsc::Sender<WorkerCmd>> = BTreeMap::new();
+        let mut handles = Vec::with_capacity(workers);
+        for idx in 0..workers {
+            let member = (idx + 1) as MemberId;
+            let (cmd_tx, cmd_rx) = mpsc::channel::<WorkerCmd>();
+            cmds.insert(member, cmd_tx);
+            let events = event_tx.clone();
+            let done = done_tx.clone();
+            let fault = opts
+                .fault
+                .filter(|f| f.member_index == idx)
+                .map(|f| Fault { round: f.round });
+            handles.push(scope.spawn(move || {
+                worker_loop(member, view, cfg, section_entries, cmd_rx, events, done, fault)
+            }));
+        }
+        // the driver holds only receivers: when every worker has exited,
+        // recv reports Disconnected instead of blocking forever
+        drop(event_tx);
+        drop(done_tx);
+
+        let mut coord = Coordinator::new(dist_cfg);
+        let mut hyper = cfg.hyper;
+        let mut global = global0;
+        let mut last_model: BTreeMap<MemberId, TuckerModel> = BTreeMap::new();
+        let mut pending: Vec<RoundResult> = Vec::new();
+
+        let can_eval = sched.eval_every > 0 && test.nnz() > 0;
+        let mut history: Vec<EpochEvent> = Vec::new();
+        let mut best_rmse: Option<f64> = None;
+        let mut final_eval: Option<(f64, f64)> = None;
+        let mut strikes = 0usize;
+        let mut stopped_early = false;
+        let mut last_epoch_checkpointed = false;
+        let mut epochs_run = 0usize;
+
+        if can_eval {
+            let (rmse, mae) = cpu_ref::evaluate(&global, &test);
+            best_rmse = Some(rmse);
+            final_eval = Some((rmse, mae));
+            let ev = EpochEvent {
+                epoch: 0,
+                stats: None,
+                rmse: Some(rmse),
+                mae: Some(mae),
+                lr_a: hyper.lr_a,
+                checkpoint: None,
+                published: false,
+            };
+            observer.on_epoch(&ev);
+            history.push(ev);
+        }
+
+        let mut ticked = 0u64;
+        'drive: loop {
+            // 1. drain worker events into the coordinator.  Rejected
+            // events (a late heartbeat from an evicted worker, a
+            // duplicate step-complete) are dropped by design.
+            match event_rx.recv_timeout(Duration::from_millis(1)) {
+                Ok(ev) => {
+                    let _ = coord.apply(&ev);
+                    while let Ok(ev) = event_rx.try_recv() {
+                        let _ = coord.apply(&ev);
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    // every worker is gone; ticks below will evict them
+                    // all and finish the run
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+
+            // 2. map wall time onto the tick counter and catch up
+            let due = t0.elapsed().as_millis() as u64 / TICK_MS;
+            let mut directives = Vec::new();
+            while ticked < due {
+                ticked += 1;
+                directives.extend(coord.tick());
+            }
+
+            // 3. obey the directives
+            for d in directives {
+                match d {
+                    Directive::EnterWarmup | Directive::Evict { .. } => {
+                        if let Directive::Evict { member } = d {
+                            last_model.remove(&member);
+                        }
+                        observer.on_round(&coord.state());
+                    }
+                    Directive::BeginRound { round, assignment } => {
+                        observer.on_round(&coord.state());
+                        for (member, sections) in assignment.shards {
+                            let model =
+                                last_model.get(&member).unwrap_or(&global).clone();
+                            if let Some(tx) = cmds.get(&member) {
+                                // a dead worker's channel errors; the
+                                // coordinator will evict it by timeout
+                                let _ = tx.send(WorkerCmd::Round {
+                                    round,
+                                    sections,
+                                    model,
+                                    hyper,
+                                });
+                            }
+                        }
+                    }
+                    Directive::RunSync {
+                        round,
+                        members,
+                        average,
+                    } => {
+                        observer.on_round(&coord.state());
+                        while let Ok(r) = done_rx.try_recv() {
+                            pending.push(r);
+                        }
+                        pending.retain(|(_, r, _, _)| *r >= round);
+                        // members are sorted by id, so `picked` is too —
+                        // the averaging order is deterministic
+                        let mut picked: Vec<(MemberId, TuckerModel, EpochStats)> = Vec::new();
+                        for &m in &members {
+                            if let Some(pos) = pending
+                                .iter()
+                                .position(|(pm, pr, _, _)| *pm == m && *pr == round)
+                            {
+                                let (_, _, model, stats) = pending.remove(pos);
+                                picked.push((m, model, stats));
+                            }
+                        }
+                        let mut agg = EpochStats::default();
+                        for (_, _, stats) in &picked {
+                            agg.factor.merge(&stats.factor);
+                            agg.core.merge(&stats.core);
+                        }
+                        if average {
+                            let models: Vec<&TuckerModel> =
+                                picked.iter().map(|(_, m, _)| m).collect();
+                            if !models.is_empty() {
+                                global = average_models(&models);
+                            }
+                            for (m, _, _) in &picked {
+                                last_model.insert(*m, global.clone());
+                            }
+                        } else {
+                            for (m, model, _) in picked {
+                                last_model.insert(m, model);
+                            }
+                        }
+
+                        let epoch = (round + 1) as usize;
+                        epochs_run = epoch;
+                        let lr_a = hyper.lr_a;
+                        let eval = if can_eval && epoch % sched.eval_every == 0 {
+                            let (rmse, mae) = cpu_ref::evaluate(&global, &test);
+                            final_eval = Some((rmse, mae));
+                            Some((rmse, mae))
+                        } else {
+                            None
+                        };
+                        let checkpoint = match &sched.checkpoint {
+                            Some(path)
+                                if sched.checkpoint_every > 0
+                                    && epoch % sched.checkpoint_every == 0 =>
+                            {
+                                ModelSnapshot::from_model(&global, cfg.algo, round + 1)
+                                    .save(path)?;
+                                Some(path.clone())
+                            }
+                            _ => None,
+                        };
+                        last_epoch_checkpointed = checkpoint.is_some();
+
+                        if let (Some(es), Some((rmse, _))) = (&sched.early_stop, eval) {
+                            let improved = match best_rmse {
+                                Some(best) => rmse < best - es.min_delta,
+                                None => true,
+                            };
+                            if improved {
+                                strikes = 0;
+                            } else {
+                                strikes += 1;
+                                if strikes >= es.patience {
+                                    stopped_early = true;
+                                }
+                            }
+                        }
+                        if let Some((rmse, _)) = eval {
+                            best_rmse = Some(best_rmse.map_or(rmse, |b| b.min(rmse)));
+                        }
+
+                        let ev = EpochEvent {
+                            epoch,
+                            stats: Some(agg),
+                            rmse: eval.map(|e| e.0),
+                            mae: eval.map(|e| e.1),
+                            lr_a,
+                            checkpoint,
+                            published: false,
+                        };
+                        observer.on_epoch(&ev);
+                        history.push(ev);
+
+                        if stopped_early {
+                            coord
+                                .apply(&Event::Shutdown)
+                                .map_err(|e| anyhow!("coordinator rejected Shutdown: {e}"))?;
+                        } else {
+                            if let Some(decay) = sched.lr_decay {
+                                hyper.lr_a *= decay;
+                                hyper.lr_b *= decay;
+                            }
+                            coord
+                                .apply(&Event::SyncComplete { round })
+                                .map_err(|e| anyhow!("coordinator rejected SyncComplete: {e}"))?;
+                        }
+                    }
+                    Directive::Finish => {
+                        observer.on_round(&coord.state());
+                        break 'drive;
+                    }
+                }
+            }
+
+            if t0.elapsed().as_secs() > WATCHDOG_S {
+                bail!(
+                    "distributed run exceeded the {WATCHDOG_S}s watchdog in phase {} \
+                     (round {}, {} members)",
+                    coord.phase().name(),
+                    coord.round(),
+                    coord.members().len()
+                );
+            }
+        }
+
+        // orderly shutdown: Stop every worker, then surface any worker
+        // error or panic (dropping `cmds` unblocks workers even if a
+        // Stop send raced a worker exit)
+        for tx in cmds.values() {
+            let _ = tx.send(WorkerCmd::Stop);
+        }
+        drop(cmds);
+        for h in handles {
+            match h.join() {
+                Ok(r) => r?,
+                Err(p) => std::panic::resume_unwind(p),
+            }
+        }
+
+        if let Some(path) = &sched.checkpoint {
+            if !last_epoch_checkpointed {
+                ModelSnapshot::from_model(&global, cfg.algo, epochs_run as u64).save(path)?;
+            }
+        }
+
+        let report = RunReport {
+            epochs_run,
+            stopped_early,
+            final_rmse: final_eval.map(|e| e.0),
+            final_mae: final_eval.map(|e| e.1),
+            best_rmse,
+            wall_s: t0.elapsed().as_secs_f64(),
+            history,
+        };
+        observer.on_finish(&report);
+        Ok(DistRun {
+            report,
+            model: global,
+            final_state: coord.state(),
+        })
+    })
+}
+
+/// Element-wise mean of the members' models, accumulated in `f64`.
+/// Callers pass models in ascending member-id order, so the sum order —
+/// and therefore the result, bit for bit — is deterministic.  Averaging
+/// a single model is the identity (`(f64::from(x) / 1.0) as f32 == x`).
+fn average_models(models: &[&TuckerModel]) -> TuckerModel {
+    let mut out = models[0].clone();
+    let k = models.len() as f64;
+    for n in 0..out.factors.len() {
+        for (i, slot) in out.factors[n].iter_mut().enumerate() {
+            let sum: f64 = models.iter().map(|m| f64::from(m.factors[n][i])).sum();
+            *slot = (sum / k) as f32;
+        }
+        for (i, slot) in out.cores[n].iter_mut().enumerate() {
+            let sum: f64 = models.iter().map(|m| f64::from(m.cores[n][i])).sum();
+            *slot = (sum / k) as f32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(seed: u64) -> TuckerModel {
+        TuckerModel::init_with_mean(&[4, 5, 6], 16, 16, seed, 1.0)
+    }
+
+    #[test]
+    fn averaging_one_model_is_the_identity() {
+        let m = model(3);
+        let avg = average_models(&[&m]);
+        for n in 0..m.factors.len() {
+            assert_eq!(m.factors[n], avg.factors[n]);
+            assert_eq!(m.cores[n], avg.cores[n]);
+        }
+    }
+
+    #[test]
+    fn averaging_is_the_elementwise_mean() {
+        let a = model(1);
+        let b = model(2);
+        let avg = average_models(&[&a, &b]);
+        let expect = (f64::from(a.factors[0][0]) + f64::from(b.factors[0][0])) / 2.0;
+        assert_eq!(avg.factors[0][0], expect as f32);
+    }
+}

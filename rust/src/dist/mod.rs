@@ -1,0 +1,47 @@
+//! The distributed layer: sharded data-parallel training of
+//! FastTuckerPlus, in the style of cu_FastTucker's multi-GPU extension
+//! mapped onto worker threads (and, later, worker processes).
+//!
+//! Split cleanly into policy and plumbing:
+//!
+//! * [`event`] — the protocol vocabulary: [`Event`]s workers send,
+//!   [`Directive`]s the coordinator issues, [`CoordinatorState`]
+//!   snapshots observers read.  Every type round-trips through
+//!   [`crate::util::json`], so a TCP backend can serialize the exact
+//!   same values onto a wire.
+//! * [`shard`] — seeded deterministic shard assignment: disjoint,
+//!   covering, balanced, reproducible, join-order invariant.
+//! * [`coordinator`] — the pure, tick-driven [`Coordinator`] state
+//!   machine (`WaitingForMembers → Warmup → Train ⇄ Sync → Done`).  No
+//!   wall clock, no threads, no I/O: events + ticks in, directives out.
+//! * [`worker`] — the worker loop: wrap the assigned sections in a
+//!   [`crate::data::ShardView`], run one epoch through the ordinary
+//!   [`crate::coordinator::Trainer`] / `StepBackend` dispatch, ship the
+//!   model back.
+//! * [`local`] — the in-process backend: N workers on threads, `mpsc`
+//!   channels as the wire, wall time mapped to ticks.  Drives a
+//!   [`crate::session::RunSpec`] end to end (`train --workers N`).
+//!
+//! Semantics in one paragraph: each round, the coordinator deals the
+//! tensor's sections to the live members ([`shard::assign`]); every
+//! member trains one epoch over only its sections, starting from the
+//! last averaged global model; at the barrier the driver averages the
+//! members' models element-wise (f64, ascending member id) and the next
+//! round starts from the average.  Liveness is heartbeat-based: a member
+//! silent for longer than [`DistConfig::heartbeat_timeout_ticks`] is
+//! evicted and its sections return to the pool at the next deal.  With
+//! one worker every mechanism degenerates to the serial trainer —
+//! byte-identically, which is what makes the whole layer testable.
+
+pub mod coordinator;
+pub mod event;
+pub mod local;
+pub mod shard;
+pub mod worker;
+
+pub use coordinator::{Coordinator, EventError};
+pub use event::{
+    CoordinatorState, Directive, DistConfig, DistPhase, Event, MemberId, ShardAssignment,
+};
+pub use local::{run_local, run_local_with, DistRun, FaultSpec, LocalOpts};
+pub use worker::{worker_loop, Fault, WorkerCmd};

@@ -1,0 +1,112 @@
+//! Seeded deterministic shard assignment: which member trains which
+//! sections each round.
+//!
+//! Properties (pinned by `tests/dist.rs`):
+//!
+//! * **disjoint + covering** — every section id in `0..n_sections`
+//!   appears in exactly one member's list;
+//! * **reproducible** — the assignment is a pure function of
+//!   `(seed, round, n_sections, membership set)`;
+//! * **join-order invariant** — members are sorted by id before dealing,
+//!   so the order they joined (or the order a caller lists them) never
+//!   changes who gets what;
+//! * **balanced** — member shard sizes differ by at most one section.
+//!
+//! The permutation depends only on `(seed, round)`, so consecutive rounds
+//! re-deal the sections (every member eventually sees every region of the
+//! tensor — the distributed analog of the serial trainer's per-epoch
+//! reshuffle), while a membership change mid-run only moves the chunk
+//! boundaries.
+
+use crate::dist::event::{MemberId, ShardAssignment};
+use crate::util::rng::Pcg32;
+
+/// Pcg32 stream tag for assignment shuffles (mixed with the round so each
+/// round permutes differently, mirroring the sampler's `0x0731 ^ epoch`
+/// convention).
+const ASSIGN_STREAM: u64 = 0xD157_0000;
+
+/// Deal `0..n_sections` to `members` for `round`.  Duplicate member ids
+/// are collapsed; an empty member list yields an empty assignment (the
+/// coordinator never asks for one — it finishes the run instead).
+pub fn assign(seed: u64, round: u64, n_sections: u32, members: &[MemberId]) -> ShardAssignment {
+    let mut ids: Vec<MemberId> = members.to_vec();
+    ids.sort_unstable();
+    ids.dedup();
+
+    let mut sections: Vec<u32> = (0..n_sections).collect();
+    let mut rng = Pcg32::new(seed, ASSIGN_STREAM ^ round);
+    rng.shuffle(&mut sections);
+
+    let mut shards: Vec<(MemberId, Vec<u32>)> = Vec::with_capacity(ids.len());
+    if ids.is_empty() {
+        return ShardAssignment {
+            round,
+            n_sections,
+            shards,
+        };
+    }
+    // contiguous chunks of the permuted list; the first `extra` members
+    // take one section more so sizes differ by at most one
+    let base = sections.len() / ids.len();
+    let extra = sections.len() % ids.len();
+    let mut at = 0usize;
+    for (k, &member) in ids.iter().enumerate() {
+        let take = base + usize::from(k < extra);
+        let mut own: Vec<u32> = sections[at..at + take].to_vec();
+        at += take;
+        // sorted section ids keep each member's entry ranges ascending,
+        // which ShardView requires and which makes assignments canonical
+        own.sort_unstable();
+        shards.push((member, own));
+    }
+    ShardAssignment {
+        round,
+        n_sections,
+        shards,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_disjoint_balanced() {
+        let a = assign(7, 0, 13, &[10, 20, 30]);
+        let mut seen: Vec<u32> = a.shards.iter().flat_map(|(_, s)| s.clone()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..13).collect::<Vec<u32>>());
+        for (_, s) in &a.shards {
+            assert!(s.len() == 4 || s.len() == 5);
+            assert!(s.windows(2).all(|w| w[0] < w[1]), "sorted sections");
+        }
+    }
+
+    #[test]
+    fn join_order_and_duplicates_do_not_matter() {
+        let a = assign(7, 3, 20, &[3, 1, 2]);
+        let b = assign(7, 3, 20, &[2, 3, 1, 1, 2]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rounds_redeal() {
+        let a = assign(7, 0, 64, &[1, 2]);
+        let b = assign(7, 1, 64, &[1, 2]);
+        assert_ne!(a.shards, b.shards, "round should reshuffle the deal");
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        // more members than sections: someone gets nothing
+        let a = assign(1, 0, 2, &[1, 2, 3]);
+        assert_eq!(a.shards.iter().filter(|(_, s)| s.is_empty()).count(), 1);
+        // no members
+        assert!(assign(1, 0, 4, &[]).shards.is_empty());
+        // single member takes everything
+        let a = assign(9, 5, 6, &[42]);
+        assert_eq!(a.shards.len(), 1);
+        assert_eq!(a.shards[0].1, (0..6).collect::<Vec<u32>>());
+    }
+}

@@ -1,0 +1,158 @@
+//! The worker side of the distributed loop: train my shard, report back.
+//!
+//! A worker is deliberately dumb.  It joins, heartbeats from a side
+//! thread, and then executes [`WorkerCmd`]s: for each round it wraps its
+//! assigned sections in a [`ShardView`], builds a
+//! [`Trainer`](crate::coordinator::Trainer) around the model the
+//! coordinator handed it, runs exactly one epoch (factor phase + core
+//! phase) through the ordinary [`StepBackend`](crate::coordinator::backend::StepBackend)
+//! dispatch, and ships the updated model back.  All policy — membership,
+//! barriers, averaging, eviction — lives in the coordinator; a worker
+//! that dies mid-round simply stops heartbeating and the coordinator
+//! routes around it.
+//!
+//! Determinism: the worker pins `trainer.epoch_no = round` before the
+//! phases, so the per-epoch sampler streams (`0x0731 ^ epoch`) and core
+//! seeds match what the serial trainer would use at the same epoch — the
+//! 1-worker run replays the serial schedule exactly.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::{EpochStats, TrainConfig, Trainer};
+use crate::cpu_ref::Hyper;
+use crate::data::{ShardView, TensorView};
+use crate::dist::event::{Event, MemberId};
+use crate::model::TuckerModel;
+
+/// How often a live worker heartbeats, in milliseconds.  The local
+/// backend's tick is 5 ms and the default timeout is 60 ticks, so a
+/// healthy worker gets ~15 chances per timeout window.
+pub const HEARTBEAT_MS: u64 = 20;
+
+/// A command from the driver to one worker.
+pub enum WorkerCmd {
+    /// Train one epoch over `sections` starting from `model`.
+    Round {
+        /// The round this epoch belongs to (becomes the trainer's
+        /// `epoch_no`, so sampling seeds match the serial schedule).
+        round: u64,
+        /// Section ids this member owns for the round.
+        sections: Vec<u32>,
+        /// The model to start from (the last averaged global model, or
+        /// this member's own model between averaging barriers).
+        model: TuckerModel,
+        /// Hyper-parameters for the round (carries the driver's
+        /// learning-rate decay to every worker).
+        hyper: Hyper,
+    },
+    /// The run is over; exit the loop.
+    Stop,
+}
+
+/// One finished round: `(member, round, updated model, stats)`.
+pub type RoundResult = (MemberId, u64, TuckerModel, EpochStats);
+
+/// Injected failure for the fault tests: die (silently — no
+/// `StepComplete`, heartbeats stop) partway through the given round.
+#[derive(Clone, Copy, Debug)]
+pub struct Fault {
+    /// The round to die in.
+    pub round: u64,
+}
+
+/// Run one worker until `Stop` (or a fault).  Emits `Join` immediately,
+/// heartbeats every [`HEARTBEAT_MS`] from a scoped side thread, and for
+/// each `Round` sends the result on `done` *before* the `StepComplete`
+/// event — so when the coordinator has seen every `StepComplete`, every
+/// model is already in the `done` queue.
+///
+/// Channel sends ignore disconnects: if the driver is gone (e.g. it bailed
+/// on an error), the worker just drains to its own exit.
+#[allow(clippy::too_many_arguments)] // one call site, in dist::local
+pub fn worker_loop(
+    member: MemberId,
+    base: &dyn TensorView,
+    cfg: &TrainConfig,
+    section_entries: usize,
+    cmd: Receiver<WorkerCmd>,
+    events: Sender<Event>,
+    done: Sender<RoundResult>,
+    fault: Option<Fault>,
+) -> Result<()> {
+    let _ = events.send(Event::Join { member });
+    let alive = AtomicBool::new(true);
+    std::thread::scope(|scope| -> Result<()> {
+        let hb_events = events.clone();
+        let hb_alive = &alive;
+        scope.spawn(move || {
+            // 2 ms slices so the thread notices `alive` dropping fast and
+            // scope teardown never waits a full heartbeat period
+            let slices = HEARTBEAT_MS.div_ceil(2).max(1);
+            while hb_alive.load(Ordering::Relaxed) {
+                for _ in 0..slices {
+                    if !hb_alive.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                if hb_events.send(Event::Heartbeat { member }).is_err() {
+                    return;
+                }
+            }
+        });
+        let result = run_rounds(member, base, cfg, section_entries, &cmd, &events, &done, fault);
+        alive.store(false, Ordering::Relaxed);
+        result
+    })
+}
+
+#[allow(clippy::too_many_arguments)] // private plumbing for worker_loop
+fn run_rounds(
+    member: MemberId,
+    base: &dyn TensorView,
+    cfg: &TrainConfig,
+    section_entries: usize,
+    cmd: &Receiver<WorkerCmd>,
+    events: &Sender<Event>,
+    done: &Sender<RoundResult>,
+    fault: Option<Fault>,
+) -> Result<()> {
+    while let Ok(command) = cmd.recv() {
+        let WorkerCmd::Round {
+            round,
+            sections,
+            model,
+            hyper,
+        } = command
+        else {
+            break;
+        };
+        let shard = ShardView::new(base, &sections, section_entries);
+        if shard.nnz() == 0 {
+            // nothing to train: echo the model back untouched.  (Running
+            // the phases anyway would still apply the regularization
+            // decay with zero samples — a silent model change.)
+            let _ = done.send((member, round, model, EpochStats::default()));
+            let _ = events.send(Event::StepComplete { member, round });
+            continue;
+        }
+        let mut run_cfg = cfg.clone();
+        run_cfg.hyper = hyper;
+        let mut trainer = Trainer::with_model(&shard, run_cfg, model)?;
+        trainer.epoch_no = round;
+        let factor = trainer.factor_phase(&shard)?;
+        if fault.is_some_and(|f| f.round == round) {
+            // simulated crash mid-epoch: no StepComplete, no more
+            // heartbeats (worker_loop flips `alive` when we return)
+            return Ok(());
+        }
+        let core = trainer.core_phase(&shard)?;
+        let _ = done.send((member, round, trainer.model, EpochStats { factor, core }));
+        let _ = events.send(Event::StepComplete { member, round });
+    }
+    Ok(())
+}

@@ -51,6 +51,14 @@
 //! disk ([`data::PagedTensor`]) — the out-of-core path the paper's
 //! HOHDST motivation calls for, bit-identical to the in-RAM path.
 //!
+//! Scaling out sits the **distributed layer** ([`dist`]): a pure,
+//! tick-driven coordinator state machine dealing disjoint section
+//! ranges to N workers each round, with heartbeat-based eviction and
+//! barrier model averaging (`train --workers N`; the in-process thread
+//! backend today, with every protocol type JSON-serializable so a wire
+//! backend is a drop-in).  One worker reproduces the serial trainer
+//! byte for byte.
+//!
 //! Supporting modules: sparse tensor substrate ([`tensor`]), the three
 //! Table-3 sampling strategies ([`sampler`]), model state + gather/scatter
 //! ([`model`]), the tiled CPU kernels ([`kernel`]), analytic cost models
@@ -96,6 +104,7 @@ pub mod coordinator;
 pub mod cost;
 pub mod cpu_ref;
 pub mod data;
+pub mod dist;
 pub mod kernel;
 pub mod model;
 pub mod runtime;

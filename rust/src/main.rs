@@ -26,6 +26,7 @@ use fasttucker::bench::percentile;
 use fasttucker::coordinator::{Algo, Backend, Strategy, TrainConfig, Variant};
 use fasttucker::cost;
 use fasttucker::data;
+use fasttucker::dist;
 use fasttucker::kernel::KernelPolicy;
 use fasttucker::model::TuckerModel;
 use fasttucker::serve::{check_coords, mode_topk, Engine, ModelSnapshot, Server};
@@ -63,7 +64,7 @@ fn usage() -> &'static str {
      train --data FILE|--store FILE.ftb2|--toy\n\
            [--algo plus|fasttucker|fastertucker]\n\
            [--variant tc|cc] [--strategy calc|storage]\n\
-           [--backend hlo|cpu|parallel] [--threads K]\n\
+           [--backend hlo|cpu|parallel] [--threads K] [--workers N]\n\
            [--cpu-kernel tiled|scalar|simd] [--epochs T] [--j J] [--r R] [--lr-a F]\n\
            [--lr-b F] [--lam-a F] [--lam-b F] [--test-frac F] [--seed S]\n\
            [--eval-every N] [--early-stop PATIENCE] [--min-delta F]\n\
@@ -72,7 +73,9 @@ fn usage() -> &'static str {
            [--spec FILE] [--dump-spec]\n\
            (flags build a validated RunSpec executed by the session layer;\n\
             --dump-spec prints that spec as JSON and exits, --spec FILE\n\
-            replays a dumped spec bit-identically, ignoring config flags)\n\
+            replays a dumped spec bit-identically, ignoring config flags;\n\
+            --workers N trains data-parallel on N in-process shard workers\n\
+            with barrier averaging — N=1 matches serial byte-for-byte)\n\
      serve [--checkpoint FILE] [--data FILE|--toy] [--epochs T] [--nnz K]\n\
            [--spec FILE] [--dump-spec] [train's config flags: --algo,\n\
             --backend, --threads, --j, --r, --seed, --artifacts, ...]\n\
@@ -210,6 +213,11 @@ fn train_config_from_flags(a: &Args) -> Result<TrainConfig> {
         None if cfg.threads > 0 => Backend::ParallelCpu,
         None => cfg.auto_backend(),
     };
+    cfg.workers = a.get_parse("workers", cfg.workers).map_err(anyhow::Error::msg)?;
+    if cfg.workers > 0 && a.get("backend").is_none() && a.get("threads").is_none() {
+        // sharded workers are CPU-side; don't auto-select hlo under them
+        cfg.backend = Backend::ParallelCpu;
+    }
     cfg.j = a.get_parse("j", cfg.j).map_err(anyhow::Error::msg)?;
     cfg.r = a.get_parse("r", cfg.r).map_err(anyhow::Error::msg)?;
     cfg.seed = a.get_parse("seed", cfg.seed).map_err(anyhow::Error::msg)?;
@@ -281,10 +289,10 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     let a = Args::parse(
         argv,
         &[
-            "data", "store", "algo", "variant", "strategy", "backend", "threads", "cpu-kernel",
-            "epochs", "j", "r", "lr-a", "lr-b", "lam-a", "lam-b", "test-frac", "seed", "artifacts",
-            "save", "checkpoint", "checkpoint-every", "eval-every", "early-stop", "min-delta",
-            "lr-decay", "toy", "spec", "dump-spec",
+            "data", "store", "algo", "variant", "strategy", "backend", "threads", "workers",
+            "cpu-kernel", "epochs", "j", "r", "lr-a", "lr-b", "lam-a", "lam-b", "test-frac",
+            "seed", "artifacts", "save", "checkpoint", "checkpoint-every", "eval-every",
+            "early-stop", "min-delta", "lr-decay", "toy", "spec", "dump-spec",
         ],
         &["toy", "dump-spec"],
     )
@@ -295,6 +303,42 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     };
     if a.get_bool("dump-spec") {
         println!("{}", spec.dump());
+        return Ok(());
+    }
+
+    // --workers N routes through the distributed driver instead of a
+    // serial session: N in-process workers over disjoint section ranges
+    // with barrier averaging (see ARCHITECTURE.md §The distributed layer)
+    if spec.train.workers > 0 {
+        spec.validate().map_err(anyhow::Error::msg)?;
+        println!(
+            "data {} | algo {} backend {} | {} sharded workers",
+            spec.data.describe(),
+            spec.train.algo.name(),
+            spec.train.backend.name(),
+            spec.train.workers
+        );
+        let run = dist::run_local(&spec, &mut ProgressPrinter)?;
+        if run.report.stopped_early {
+            println!(
+                "early stop: test RMSE plateaued after {} epochs (best {:.4})",
+                run.report.epochs_run,
+                run.report.best_rmse.unwrap_or(f64::NAN)
+            );
+        }
+        println!("dist: {}", run.final_state);
+        if let Some(path) = a.get("save") {
+            run.model.save(Path::new(path))?;
+            println!("saved model to {path}");
+        }
+        if let Some(path) = &spec.schedule.checkpoint {
+            println!(
+                "saved serve checkpoint to {} (epoch {}, algo {})",
+                path.display(),
+                run.report.epochs_run,
+                spec.train.algo.name()
+            );
+        }
         return Ok(());
     }
 

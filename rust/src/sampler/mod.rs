@@ -20,6 +20,13 @@
 //! [`stream::StagedStream`] double-buffers their staging on a producer
 //! thread (gather block *k+1* while block *k* executes).  The eager
 //! functions below remain as thin `collect()`s for benches and tests.
+//!
+//! A property the distributed layer leans on: the uniform stream reads
+//! nothing from the tensor except `nnz()` (its shuffle is a pure function
+//! of `(seed, epoch, nnz)`), and gathers entries only through
+//! [`TensorView::load_entry`].  That is why a [`crate::data::ShardView`]
+//! covering the full id range replays the serial schedule bit-for-bit —
+//! the `--workers 1` parity anchor in `tests/dist.rs`.
 
 pub mod stream;
 

@@ -113,6 +113,11 @@ pub trait Observer {
 
     /// Called once when the run finishes (normally or by early stop).
     fn on_finish(&mut self, _report: &RunReport) {}
+
+    /// Called by the distributed driver ([`crate::dist::local`]) whenever
+    /// the coordinator's observable state changes — phase transitions,
+    /// round starts, evictions.  Serial sessions never call this.
+    fn on_round(&mut self, _state: &crate::dist::CoordinatorState) {}
 }
 
 /// Ignores everything — for callers that only want the [`RunReport`].
@@ -161,6 +166,12 @@ impl Observer for ProgressPrinter {
             line.push_str("  [published]");
         }
         println!("{line}");
+    }
+
+    fn on_round(&mut self, state: &crate::dist::CoordinatorState) {
+        // one dist-prefixed line per coordinator transition, next to the
+        // epoch lines (CoordinatorState's Display is the compact summary)
+        println!("dist: {state}");
     }
 }
 

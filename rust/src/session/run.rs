@@ -62,6 +62,13 @@ impl Session {
     /// straight from disk; every other source materializes in RAM.
     pub fn from_spec(spec: &RunSpec) -> Result<Session> {
         spec.validate().context("invalid run spec")?;
+        ensure!(
+            spec.train.workers == 0,
+            "spec requests {} sharded workers; drive it through \
+             crate::dist::local::run_local (the CLI's `train --workers N` path) \
+             instead of a serial Session",
+            spec.train.workers
+        );
         if let DataSource::Store(path) = &spec.data {
             let paged = PagedTensor::open(path).with_context(|| format!("opening {path:?}"))?;
             return Session::with_paged(paged, spec.train.clone(), spec.schedule.clone());

@@ -305,6 +305,25 @@ pub enum SpecError {
     /// A checkpoint cadence (`checkpoint_every > 0`) with no checkpoint
     /// path to write to.
     CheckpointCadenceWithoutPath,
+    /// Sharded workers were combined with the HLO backend — the
+    /// in-process workers each build their own backend, and the compiled
+    /// artifacts assume exclusive device ownership.
+    WorkersOnHlo {
+        /// The requested worker count.
+        workers: usize,
+    },
+    /// Sharded workers were combined with an algorithm whose sampling
+    /// needs in-RAM per-mode indexes; shards train through
+    /// [`crate::data::ShardView`], which never exposes one, so only
+    /// `plus` trains sharded.
+    WorkersNeedPlus {
+        /// The configured algorithm.
+        algo: Algo,
+    },
+    /// Sharded workers were combined with a serve-publish cadence — the
+    /// distributed driver has no attached server (publish from the saved
+    /// final model instead).
+    WorkersWithPublish,
 }
 
 impl fmt::Display for SpecError {
@@ -378,6 +397,22 @@ impl fmt::Display for SpecError {
             SpecError::CheckpointCadenceWithoutPath => write!(
                 f,
                 "schedule.checkpoint_every > 0 needs schedule.checkpoint to name a path"
+            ),
+            SpecError::WorkersOnHlo { workers } => write!(
+                f,
+                "--workers {workers} runs in-process CPU workers; the hlo backend \
+                 assumes exclusive device ownership (use --backend parallel)"
+            ),
+            SpecError::WorkersNeedPlus { algo } => write!(
+                f,
+                "algorithm {} needs in-RAM sampling indexes; sharded workers \
+                 train with --algo plus",
+                algo.name()
+            ),
+            SpecError::WorkersWithPublish => write!(
+                f,
+                "sharded runs have no attached serve server \
+                 (set publish_every to 0 and publish from the saved model)"
             ),
         }
     }
@@ -476,6 +511,19 @@ impl RunSpec {
                 threads: t.threads,
             });
         }
+        // workers checks are structural, so they come before the
+        // environment-dependent artifact probe
+        if t.workers > 0 {
+            if t.backend == Backend::Hlo {
+                return Err(SpecError::WorkersOnHlo { workers: t.workers });
+            }
+            if t.algo != Algo::Plus {
+                return Err(SpecError::WorkersNeedPlus { algo: t.algo });
+            }
+            if self.schedule.publish_every > 0 {
+                return Err(SpecError::WorkersWithPublish);
+            }
+        }
         if t.backend == Backend::Hlo && !t.hlo_available() {
             return Err(SpecError::HloWithoutArtifacts {
                 dir: t.artifact_dir.clone(),
@@ -559,6 +607,7 @@ impl RunSpec {
             ("r", json::num(t.r as f64)),
             ("seed", num_u64(t.seed)),
             ("threads", json::num(t.threads as f64)),
+            ("workers", json::num(t.workers as f64)),
             ("cpu_kernel", json::s(t.cpu_kernel.name())),
             ("artifacts", json::s(&t.artifact_dir.to_string_lossy())),
             ("lr_a", num_f32(t.hyper.lr_a)),
@@ -645,6 +694,11 @@ impl RunSpec {
             r: get_usize(t, "r")?,
             seed: get_u64(t, "seed")?,
             threads: get_usize(t, "threads")?,
+            // absent in pre-dist spec files (same SPEC_VERSION): default 0
+            workers: match t.get("workers") {
+                None => 0,
+                Some(_) => get_usize(t, "workers")?,
+            },
             cpu_kernel: parse_field(t, "cpu_kernel", KernelPolicy::parse)?,
             artifact_dir: PathBuf::from(get_str(t, "artifacts")?),
             hyper: Hyper {

@@ -1,0 +1,199 @@
+//! Golden reference-trajectory harness: the full (epoch, RMSE, MAE)
+//! trajectory of a small fixed run, pinned bit for bit against a
+//! committed fixture — so any change to the numerics (sampler order,
+//! gradient math, averaging, evaluation) is caught as a diff, not a
+//! silent drift.
+//!
+//! The fixture lives at `tests/data/reference_trajectory.txt` and stores
+//! one trajectory per CPU kernel policy (`scalar` — the paper-faithful
+//! oracle — and `tiled` — the production microkernels), plus an FNV-1a
+//! hash of the input tensor's bytes so a changed synthetic generator
+//! fails loudly instead of producing a confusing trajectory mismatch.
+//!
+//! Self-capture flow: a fixture whose first line is `# PENDING` puts the
+//! test in capture mode — it verifies each policy replays *itself*
+//! bit-identically (two runs, same bits), writes the real fixture, and
+//! passes; the captured file is then committed and every later run
+//! replays against it exactly.
+
+use fasttucker::coordinator::{Backend, TrainConfig};
+use fasttucker::kernel::KernelPolicy;
+use fasttucker::session::{DataSource, Recorder, RunSpec, Schedule, Session, SynthPreset, SynthSpec};
+use fasttucker::synth::{generate, SynthConfig};
+use fasttucker::tensor::SparseTensor;
+use fasttucker::util::fnv::{FNV_OFFSET, FNV_PRIME};
+
+/// Fixture path, relative to the crate root (stable under `cargo test`
+/// from any working directory).
+const FIXTURE: &str = concat!(
+    env!("CARGO_MANIFEST_DIR"),
+    "/tests/data/reference_trajectory.txt"
+);
+
+// The reference recipe.  Changing any of these invalidates the committed
+// fixture — re-capture by resetting the file to `# PENDING`.
+const ORDER: usize = 3;
+const DIM: u32 = 32;
+const NNZ: usize = 1_500;
+const DATA_SEED: u64 = 23;
+const EPOCHS: usize = 6;
+const TEST_FRAC: f64 = 0.25;
+
+/// FNV-1a over the tensor's structure and payload: dims, nnz, then every
+/// entry's coordinates and value bits in storage order.
+fn input_hash(t: &SparseTensor) -> u64 {
+    fn mix(h: &mut u64, x: u64) {
+        *h ^= x;
+        *h = h.wrapping_mul(FNV_PRIME);
+    }
+    let mut h = FNV_OFFSET;
+    for &d in &t.dims {
+        mix(&mut h, d as u64);
+    }
+    mix(&mut h, t.values.len() as u64);
+    for e in 0..t.values.len() {
+        for &c in t.coords(e) {
+            mix(&mut h, c as u64);
+        }
+        mix(&mut h, t.values[e].to_bits() as u64);
+    }
+    h
+}
+
+fn reference_spec(policy: KernelPolicy) -> RunSpec {
+    RunSpec {
+        data: DataSource::Synth(SynthSpec {
+            preset: SynthPreset::Order,
+            order: ORDER,
+            dim: DIM,
+            nnz: NNZ,
+            seed: DATA_SEED,
+        }),
+        train: TrainConfig {
+            backend: Backend::CpuRef,
+            cpu_kernel: policy,
+            ..TrainConfig::default()
+        },
+        schedule: Schedule {
+            epochs: EPOCHS,
+            eval_every: 1,
+            test_frac: TEST_FRAC,
+            ..Schedule::default()
+        },
+    }
+}
+
+/// One full run: every evaluated `(epoch, rmse bits, mae bits)` row,
+/// including the epoch-0 random-init evaluation.
+fn trajectory(policy: KernelPolicy) -> Vec<(usize, u64, u64)> {
+    let spec = reference_spec(policy);
+    let mut session = Session::from_spec(&spec).unwrap();
+    let mut rec = Recorder::default();
+    session.run(&mut rec).unwrap();
+    assert_eq!(rec.events.len(), EPOCHS + 1, "init eval + one row per epoch");
+    rec.events
+        .iter()
+        .map(|e| {
+            (
+                e.epoch,
+                e.rmse.expect("eval_every=1 evaluates every epoch").to_bits(),
+                e.mae.expect("eval_every=1 evaluates every epoch").to_bits(),
+            )
+        })
+        .collect()
+}
+
+const POLICIES: [(&str, KernelPolicy); 2] = [
+    ("scalar", KernelPolicy::Scalar),
+    ("tiled", KernelPolicy::Tiled),
+];
+
+fn render_fixture(hash: u64, runs: &[(&str, Vec<(usize, u64, u64)>)]) -> String {
+    let mut out = String::from("# fasttucker reference trajectory v1\n");
+    out.push_str(&format!("# input fnv1a: {hash:016x}\n"));
+    for (name, rows) in runs {
+        out.push_str(&format!("# policy {name}\n"));
+        for (epoch, rmse, mae) in rows {
+            out.push_str(&format!("{epoch} {rmse:016x} {mae:016x}\n"));
+        }
+    }
+    out
+}
+
+/// Parse the committed fixture: `(input hash, policy name -> rows)`.
+fn parse_fixture(text: &str) -> (u64, Vec<(String, Vec<(usize, u64, u64)>)>) {
+    let mut lines = text.lines();
+    assert_eq!(
+        lines.next(),
+        Some("# fasttucker reference trajectory v1"),
+        "unknown fixture header"
+    );
+    let hash_line = lines.next().expect("missing input-hash line");
+    let hash_hex = hash_line
+        .strip_prefix("# input fnv1a: ")
+        .expect("malformed input-hash line");
+    let hash = u64::from_str_radix(hash_hex, 16).expect("bad input hash hex");
+    let mut runs: Vec<(String, Vec<(usize, u64, u64)>)> = Vec::new();
+    for line in lines {
+        if let Some(name) = line.strip_prefix("# policy ") {
+            runs.push((name.to_string(), Vec::new()));
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let epoch: usize = parts.next().unwrap().parse().expect("bad epoch");
+        let rmse = u64::from_str_radix(parts.next().expect("missing rmse"), 16).unwrap();
+        let mae = u64::from_str_radix(parts.next().expect("missing mae"), 16).unwrap();
+        runs.last_mut()
+            .expect("trajectory row before any `# policy` line")
+            .1
+            .push((epoch, rmse, mae));
+    }
+    (hash, runs)
+}
+
+#[test]
+fn reference_trajectory_replays_bit_identically() {
+    let tensor = generate(&SynthConfig::order_sweep(ORDER, DIM, NNZ, DATA_SEED));
+    let hash = input_hash(&tensor);
+
+    let text = std::fs::read_to_string(FIXTURE)
+        .unwrap_or_else(|e| panic!("fixture {FIXTURE} unreadable: {e}"));
+
+    if text.starts_with("# PENDING") {
+        // Capture mode: prove each policy is deterministic (a flaky
+        // trajectory must never become the golden one), then write the
+        // real fixture for the committer to check in.
+        let mut runs: Vec<(&str, Vec<(usize, u64, u64)>)> = Vec::new();
+        for (name, policy) in POLICIES {
+            let a = trajectory(policy);
+            let b = trajectory(policy);
+            assert_eq!(a, b, "policy {name} did not replay bit-identically");
+            runs.push((name, a));
+        }
+        std::fs::write(FIXTURE, render_fixture(hash, &runs)).unwrap();
+        eprintln!("reference_trajectory: fixture captured at {FIXTURE}; commit it");
+        return;
+    }
+
+    // Replay mode: the committed trajectory must reproduce exactly.
+    let (want_hash, want_runs) = parse_fixture(&text);
+    assert_eq!(
+        hash, want_hash,
+        "input tensor changed (synthetic generator drift?) — \
+         reset the fixture to `# PENDING` to re-capture"
+    );
+    assert_eq!(want_runs.len(), POLICIES.len(), "fixture policy count");
+    for (name, policy) in POLICIES {
+        let want = &want_runs
+            .iter()
+            .find(|(n, _)| n == name)
+            .unwrap_or_else(|| panic!("fixture has no `# policy {name}` section"))
+            .1;
+        let got = trajectory(policy);
+        assert_eq!(
+            &got, want,
+            "policy {name}: trajectory diverged from the committed reference \
+             (bit-level RMSE/MAE mismatch)"
+        );
+    }
+}

@@ -105,6 +105,7 @@ fn random_spec(rng: &mut Pcg32) -> RunSpec {
         seed: random_u64(rng),
         artifact_dir: PathBuf::from(format!("artifacts_{}", rng.gen_range(100))),
         threads: rng.gen_index(64),
+        workers: rng.gen_index(8),
         cpu_kernel: [KernelPolicy::Tiled, KernelPolicy::Scalar, KernelPolicy::Simd]
             [rng.gen_index(3)],
     };
@@ -336,6 +337,37 @@ fn validate_rejection_table() {
             "store with a held-out split",
             Box::new(|s| s.data = DataSource::Store(valid_store("with_split.ftb2"))),
             |e| matches!(e, SpecError::StoreWithSplit),
+        ),
+        (
+            "workers on the hlo backend",
+            Box::new(|s| {
+                s.train.workers = 2;
+                s.train.backend = Backend::Hlo;
+            }),
+            |e| matches!(e, SpecError::WorkersOnHlo { workers: 2 }),
+        ),
+        (
+            "workers with a non-plus algorithm",
+            Box::new(|s| {
+                s.train.workers = 2;
+                s.train.algo = Algo::FastTucker;
+            }),
+            |e| {
+                matches!(
+                    e,
+                    SpecError::WorkersNeedPlus {
+                        algo: Algo::FastTucker
+                    }
+                )
+            },
+        ),
+        (
+            "workers with a publish cadence",
+            Box::new(|s| {
+                s.train.workers = 2;
+                s.schedule.publish_every = 3;
+            }),
+            |e| matches!(e, SpecError::WorkersWithPublish),
         ),
     ];
     for (label, mutate, expect) in cases {
