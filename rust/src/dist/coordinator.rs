@@ -22,6 +22,10 @@
 //! `BeginRound` — the round in flight completes over the survivors'
 //! shards only (the dropped shards' entries miss one round of updates,
 //! which SGD tolerates; the fault-injection test bounds the effect).
+//! Every member's liveness window resets when a phase the *backend*
+//! spends time in ends (quorum → Warmup, and each `BeginRound`), so
+//! ticks the backend burned on barrier work — averaging, evaluation,
+//! checkpointing — are never judged as member silence.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
@@ -302,6 +306,13 @@ impl Coordinator {
     fn begin_round(&mut self, out: &mut Vec<Directive>) {
         self.phase = DistPhase::Train;
         self.completed.clear();
+        // a fresh liveness window for everyone, exactly like the Warmup
+        // entry: the ticks just spent were barrier work on the *backend's*
+        // side (model collection, averaging, eval, checkpointing), so they
+        // must not count as heartbeat silence against the members
+        for last_seen in self.members.values_mut() {
+            *last_seen = self.tick;
+        }
         let members = self.members();
         out.push(Directive::BeginRound {
             round: self.round,
@@ -442,6 +453,43 @@ mod tests {
             c.apply(&Event::Heartbeat { member: 2 }),
             Err(EventError::UnknownMember { member: 2 })
         );
+    }
+
+    #[test]
+    fn barrier_stall_is_not_heartbeat_silence() {
+        // Regression: members heartbeat last just before the barrier,
+        // then the backend stalls in Sync (a big eval, a checkpoint
+        // save) for far longer than the heartbeat timeout.  The next
+        // round must open a fresh liveness window instead of evicting
+        // everyone for silence that was really driver-side work.
+        let mut c = Coordinator::new(cfg(2, 2));
+        c.apply(&Event::Join { member: 1 }).unwrap();
+        c.apply(&Event::Join { member: 2 }).unwrap();
+        tick_until(&mut c, 4); // warmup
+        tick_until(&mut c, 4); // round 0 deal
+        c.apply(&Event::StepComplete { member: 1, round: 0 }).unwrap();
+        c.apply(&Event::StepComplete { member: 2, round: 0 }).unwrap();
+        tick_until(&mut c, 2);
+        assert_eq!(c.phase(), DistPhase::Sync);
+        for _ in 0..50 {
+            assert!(c.tick().is_empty(), "Sync must neither evict nor act");
+        }
+        c.apply(&Event::SyncComplete { round: 0 }).unwrap();
+        let d = tick_until(&mut c, 2);
+        assert!(
+            matches!(d[0], Directive::BeginRound { round: 1, .. }),
+            "expected the next round to begin, got {d:?}"
+        );
+        // only *new* silence counts: a full timeout must elapse before
+        // anyone is evicted
+        let timeout = c.config().heartbeat_timeout_ticks;
+        for _ in 0..timeout {
+            assert!(
+                c.tick().is_empty(),
+                "barrier-stall ticks were counted as heartbeat silence"
+            );
+        }
+        assert_eq!(c.members(), vec![1, 2]);
     }
 
     #[test]

@@ -33,8 +33,12 @@ fn num_u64(v: u64) -> Json {
     }
 }
 
-fn get_u64(v: &Json, key: &str) -> Result<u64, String> {
-    match v.get(key).ok_or_else(|| format!("missing field {key:?}"))? {
+/// One JSON value as a u64 — the single parser behind scalars and list
+/// elements, so both enforce the same bound: numbers must be
+/// non-negative integers at or below 2^53 (exactly representable in the
+/// parser's f64), anything larger must arrive as a decimal string.
+fn parse_u64(v: &Json, key: &str) -> Result<u64, String> {
+    match v {
         Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= (1u64 << 53) as f64 => {
             Ok(*n as u64)
         }
@@ -43,6 +47,10 @@ fn get_u64(v: &Json, key: &str) -> Result<u64, String> {
             .map_err(|_| format!("field {key:?}: bad u64 string {s:?}")),
         other => Err(format!("field {key:?}: expected a u64, got {other:?}")),
     }
+}
+
+fn get_u64(v: &Json, key: &str) -> Result<u64, String> {
+    parse_u64(v.get(key).ok_or_else(|| format!("missing field {key:?}"))?, key)
 }
 
 fn get_str<'a>(v: &'a Json, key: &str) -> Result<&'a str, String> {
@@ -58,15 +66,7 @@ fn get_u64_list(v: &Json, key: &str) -> Result<Vec<u64>, String> {
         .ok_or_else(|| format!("missing field {key:?}"))?
         .as_arr()
         .ok_or_else(|| format!("field {key:?}: expected an array"))?;
-    arr.iter()
-        .map(|e| match e {
-            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Ok(*n as u64),
-            Json::Str(s) => s
-                .parse::<u64>()
-                .map_err(|_| format!("field {key:?}: bad u64 string {s:?}")),
-            other => Err(format!("field {key:?}: expected u64 elements, got {other:?}")),
-        })
-        .collect()
+    arr.iter().map(|e| parse_u64(e, key)).collect()
 }
 
 fn u64_list(xs: &[u64]) -> Json {
@@ -601,6 +601,32 @@ mod tests {
             CoordinatorState::from_json(&Json::parse(&st.to_json().dump()).unwrap()).unwrap();
         assert_eq!(back, st);
         assert!(st.to_string().contains("sync"));
+    }
+
+    #[test]
+    fn numbers_above_2_pow_53_are_rejected_as_scalars_and_list_elements() {
+        // beyond 2^53 a JSON number is no longer exactly representable in
+        // the parser's f64, so it must arrive as a decimal string — both
+        // as a scalar and inside a list (a member id in `members` would
+        // otherwise round-trip silently truncated)
+        let big = ((1u64 << 53) + 2) as f64;
+        let err = Event::from_json(&json::obj(vec![
+            ("kind", json::s("join")),
+            ("member", Json::Num(big)),
+        ]))
+        .unwrap_err();
+        assert!(err.contains("member"), "{err}");
+
+        let st = json::obj(vec![
+            ("phase", json::s("train")),
+            ("tick", Json::Num(1.0)),
+            ("round", Json::Num(0.0)),
+            ("members", Json::Arr(vec![Json::Num(big)])),
+            ("completed", Json::Arr(Vec::new())),
+            ("n_sections", Json::Num(4.0)),
+        ]);
+        let err = CoordinatorState::from_json(&st).unwrap_err();
+        assert!(err.contains("members"), "{err}");
     }
 
     #[test]

@@ -8,6 +8,10 @@
 //! [`TICK_MS`] milliseconds of wall time per tick, so the default
 //! heartbeat timeout of 60 ticks is ~300 ms against workers that
 //! heartbeat every ~20 ms ([`crate::dist::worker::HEARTBEAT_MS`]).
+//! Each drive-loop pass converts at most `PASS_CREDIT_MAX` of elapsed
+//! wall time into ticks and drains events before every tick, so time
+//! the driver spent stalled on barrier work is forgotten rather than
+//! replayed — never judged as worker heartbeat silence.
 //!
 //! One round = one epoch on every worker over its assigned sections,
 //! then a barrier: the driver collects the workers' models, averages
@@ -38,13 +42,33 @@ use crate::tensor::{split::train_test_split, SparseTensor};
 /// Wall-clock milliseconds per coordinator tick in this backend.
 pub const TICK_MS: u64 = 5;
 
+/// One coordinator tick's worth of wall time.
+const TICK: Duration = Duration::from_millis(TICK_MS);
+
+/// The longest stretch of wall time one drive-loop pass may convert into
+/// coordinator ticks.  Directive handling can stall the driver for
+/// hundreds of milliseconds (the initial eval, a barrier eval on a
+/// sizable test set, a checkpoint save) while the workers' heartbeats
+/// pile up unread in the event queue; converting that whole stretch into
+/// ticks at once would fast-forward the coordinator past the heartbeat
+/// timeout against a backlog it never drained, evict every healthy
+/// member and silently truncate the run.  Clamping each pass's credit
+/// *forgets* driver-side stalls instead of replaying them: while the
+/// driver is responsive the coordinator clock tracks wall time (so a
+/// genuinely dead worker is still evicted after ~heartbeat timeout ×
+/// [`TICK_MS`] of real silence), and a stalled pass contributes at most
+/// two ticks.  The tick counter may therefore lag wall time — nothing
+/// requires it to be wall-accurate, only monotonic.
+const PASS_CREDIT_MAX: Duration = Duration::from_millis(2 * TICK_MS);
+
 /// Hard wall-clock ceiling on a local distributed run — a liveness bug
 /// should fail a test, not hang it (and CI) forever.
 const WATCHDOG_S: u64 = 600;
 
-/// Sections dealt per worker for in-RAM tensors (more sections than
-/// workers so a re-deal after an eviction stays balanced).  FTB2 stores
-/// use their real on-disk sections instead.
+/// Target sections per worker for in-RAM tensors (more sections than
+/// workers so a re-deal after an eviction stays balanced; the actual
+/// count is trimmed so no section is empty).  FTB2 stores use their
+/// real on-disk sections instead.
 const RAM_SECTIONS_PER_WORKER: usize = 8;
 
 /// Injected failure for the fault tests: worker number `member_index`
@@ -140,8 +164,16 @@ pub fn run_local_with(
                 (tensor, empty)
             };
             let nnz = train.values.len();
-            let n_sections = (workers * RAM_SECTIONS_PER_WORKER).min(nnz.max(1));
-            let section_entries = nnz.div_ceil(n_sections).max(1);
+            // aim for ~RAM_SECTIONS_PER_WORKER sections per worker, then
+            // shrink the count to the non-empty fixed-stride ranges:
+            // `n_sections = ceil(nnz / section_entries)` puts every
+            // section's start offset below nnz, so no member is dealt
+            // only empty sections (such a worker would echo its model
+            // back untouched and the averaging barrier would dilute that
+            // round's gradient updates by 1/N)
+            let target = (workers * RAM_SECTIONS_PER_WORKER).min(nnz.max(1));
+            let section_entries = nnz.div_ceil(target).max(1);
+            let n_sections = nnz.div_ceil(section_entries).max(1);
             (
                 DistData::Ram(train),
                 test,
@@ -234,7 +266,8 @@ pub fn run_local_with(
             history.push(ev);
         }
 
-        let mut ticked = 0u64;
+        let mut tick_debt = Duration::ZERO;
+        let mut last_pass = Instant::now();
         'drive: loop {
             // 1. drain worker events into the coordinator.  Rejected
             // events (a late heartbeat from an evicted worker, a
@@ -254,11 +287,20 @@ pub fn run_local_with(
                 }
             }
 
-            // 2. map wall time onto the tick counter and catch up
-            let due = t0.elapsed().as_millis() as u64 / TICK_MS;
+            // 2. convert wall time since the last pass into coordinator
+            // ticks — crediting at most PASS_CREDIT_MAX per pass so a
+            // driver-side stall is forgotten rather than replayed, and
+            // draining freshly arrived events before every tick so
+            // liveness is never judged against an unread backlog
+            let now = Instant::now();
+            tick_debt += now.duration_since(last_pass).min(PASS_CREDIT_MAX);
+            last_pass = now;
             let mut directives = Vec::new();
-            while ticked < due {
-                ticked += 1;
+            while tick_debt >= TICK {
+                tick_debt -= TICK;
+                while let Ok(ev) = event_rx.try_recv() {
+                    let _ = coord.apply(&ev);
+                }
                 directives.extend(coord.tick());
             }
 

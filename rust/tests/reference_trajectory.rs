@@ -14,7 +14,10 @@
 //! test in capture mode — it verifies each policy replays *itself*
 //! bit-identically (two runs, same bits), writes the real fixture, and
 //! passes; the captured file is then committed and every later run
-//! replays against it exactly.
+//! replays against it exactly.  A capture run pins nothing across
+//! commits, so CI refuses to stay green on one: a dedicated workflow
+//! step fails whenever this test rewrote the fixture, printing the
+//! captured file for a maintainer to commit verbatim.
 
 use fasttucker::coordinator::{Backend, TrainConfig};
 use fasttucker::kernel::KernelPolicy;
