@@ -95,6 +95,7 @@ impl PhaseStats {
             ("memory_s", json::num(self.memory().as_secs_f64())),
             ("blocks", json::num(self.blocks as f64)),
             ("samples", json::num(self.samples as f64)),
+            ("padded_slots", json::num(self.padded_slots as f64)),
             ("padding", json::num(self.padding_ratio())),
         ];
         if let Some(rate) = self.invariant_hit_rate() {
@@ -120,6 +121,19 @@ impl EpochStats {
         let hits = self.factor.inv_hits + self.core.inv_hits;
         let total = hits + self.factor.inv_misses + self.core.inv_misses;
         (total > 0).then(|| hits as f64 / total as f64)
+    }
+
+    /// Padding-waste ratio across both phases — the paper's Table-1
+    /// load-imbalance number for the whole epoch.
+    pub fn padding_ratio(&self) -> f64 {
+        let samples = self.factor.samples + self.core.samples;
+        let padded = self.factor.padded_slots + self.core.padded_slots;
+        let total = samples + padded;
+        if total == 0 {
+            0.0
+        } else {
+            padded as f64 / total as f64
+        }
     }
 
     /// Serialize both phases for the `BENCH_JSON` scrape lines.

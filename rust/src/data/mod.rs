@@ -28,7 +28,7 @@ pub mod store;
 pub mod view;
 
 pub use ingest::{ingest as ingest_file, IngestStats};
-pub use paged::PagedTensor;
+pub use paged::{CacheStats, PagedTensor};
 pub use shard::ShardView;
 pub use store::{StoreMeta, StoreWriter};
 pub use view::TensorView;

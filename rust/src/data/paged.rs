@@ -26,10 +26,55 @@ use anyhow::Result;
 use crate::data::store::{self, StoreMeta};
 use crate::data::view::TensorView;
 use crate::util::fnv::fnv1a;
+use crate::util::json::{self, Json};
 use crate::util::pool::BufferPool;
 
 /// Default number of cached pages (× the default page size ≈ a few MB).
 pub const DEFAULT_CACHE_PAGES: usize = 8;
+
+/// Page-cache traffic counters: cumulative when read through
+/// [`PagedTensor::cache_stats_full`], or per-epoch deltas when carried
+/// on a [`crate::session::EpochEvent`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Accesses served from a cached page.
+    pub hits: u64,
+    /// Accesses that faulted a page in from disk.
+    pub loads: u64,
+    /// Bytes read from disk faulting pages in (payload + checksums).
+    pub bytes_read: u64,
+}
+
+impl CacheStats {
+    /// Hit fraction over all accesses; `None` before any traffic.
+    pub fn hit_rate(&self) -> Option<f64> {
+        let total = self.hits + self.loads;
+        (total > 0).then(|| self.hits as f64 / total as f64)
+    }
+
+    /// The traffic between an `earlier` reading and this one
+    /// (saturating, so a swapped argument order cannot panic).
+    pub fn delta_since(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits.saturating_sub(earlier.hits),
+            loads: self.loads.saturating_sub(earlier.loads),
+            bytes_read: self.bytes_read.saturating_sub(earlier.bytes_read),
+        }
+    }
+
+    /// Serialize for epoch stats JSON and `metrics.jsonl`.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("hits", json::num(self.hits as f64)),
+            ("loads", json::num(self.loads as f64)),
+            ("bytes_read", json::num(self.bytes_read as f64)),
+        ];
+        if let Some(rate) = self.hit_rate() {
+            fields.push(("hit_rate", json::num(rate)));
+        }
+        json::obj(fields)
+    }
+}
 
 /// Out-of-core sparse tensor backed by a verified FTB2 store.
 pub struct PagedTensor {
@@ -46,6 +91,7 @@ struct PageCache {
     pool: BufferPool,
     hits: u64,
     loads: u64,
+    bytes_read: u64,
 }
 
 struct Slot {
@@ -77,6 +123,7 @@ impl PagedTensor {
                 pool: BufferPool::new(),
                 hits: 0,
                 loads: 0,
+                bytes_read: 0,
             }),
         })
     }
@@ -97,6 +144,18 @@ impl PagedTensor {
     pub fn cache_stats(&self) -> (u64, u64) {
         let c = self.cache.lock().unwrap();
         (c.hits, c.loads)
+    }
+
+    /// Full cumulative cache counters since open, including the bytes
+    /// read from disk — what the session reports per epoch (as deltas)
+    /// when training from a store.
+    pub fn cache_stats_full(&self) -> CacheStats {
+        let c = self.cache.lock().unwrap();
+        CacheStats {
+            hits: c.hits,
+            loads: c.loads,
+            bytes_read: c.bytes_read,
+        }
     }
 }
 
@@ -158,6 +217,7 @@ impl PageCache {
         }
         self.loads += 1;
         let len = meta.page_payload_bytes(page);
+        self.bytes_read += len as u64 + 8;
         let mut bytes = self.pool.take(len + 8);
         read_exact_at(file, &mut bytes, meta.page_offset(page)).unwrap_or_else(|e| {
             panic!("{path:?}: reading FTB2 section {page} failed mid-run: {e}")
@@ -273,5 +333,33 @@ mod tests {
         }
         let (_, loads) = paged.cache_stats();
         assert_eq!(loads, meta.num_pages());
+    }
+
+    #[test]
+    fn full_stats_track_bytes_and_deltas() {
+        let t = toy_dataset();
+        let p = tmp("full.ftb2");
+        write_store(&t, &p, 16).unwrap();
+        let paged = PagedTensor::open(&p).unwrap();
+        let mut c = vec![0u32; t.order()];
+        paged.load_entry(0, &mut c);
+        let first = paged.cache_stats_full();
+        assert_eq!(first.loads, 1);
+        // page payload (coords + values) plus the 8-byte checksum
+        let n = t.order() as u64;
+        assert_eq!(first.bytes_read, 16 * (n * 4 + 4) + 8);
+        // full scan: legacy and full counters agree
+        for e in 0..t.nnz() {
+            paged.load_entry(e, &mut c);
+        }
+        let full = paged.cache_stats_full();
+        let (hits, loads) = paged.cache_stats();
+        assert_eq!((full.hits, full.loads), (hits, loads));
+        assert!(full.bytes_read > first.bytes_read);
+        let delta = full.delta_since(&first);
+        assert_eq!(delta.loads, full.loads - 1);
+        assert!(delta.hit_rate().unwrap() > 0.0);
+        // swapped order saturates instead of panicking
+        assert_eq!(first.delta_since(&full), CacheStats::default());
     }
 }

@@ -23,7 +23,10 @@
 //! `tests/dist.rs` and the CI `dist-smoke` job).
 
 use std::collections::BTreeMap;
+use std::io;
+use std::path::Path;
 use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
@@ -35,6 +38,7 @@ use crate::dist::coordinator::Coordinator;
 use crate::dist::event::{CoordinatorState, Directive, DistConfig, Event, MemberId};
 use crate::dist::worker::{worker_loop, Fault, RoundResult, WorkerCmd};
 use crate::model::TuckerModel;
+use crate::obs::{Counter, FlightRecorder, Hist, Metrics, MetricsFile};
 use crate::serve::ModelSnapshot;
 use crate::session::{DataSource, EpochEvent, Observer, RunReport, RunSpec};
 use crate::tensor::{split::train_test_split, SparseTensor};
@@ -117,6 +121,70 @@ impl DistData {
             DistData::Ram(t) => t,
             DistData::Paged(p) => p,
         }
+    }
+}
+
+/// Telemetry for one distributed run: registry handles the drive loop
+/// bumps, the flight-recorder tape of every protocol message, and the
+/// JSONL sink both are dumped to on completion or watchdog abort.
+/// Created only when [`RunSpec::metrics`] is set — with it absent every
+/// recording site takes the `None` branch and the run's outputs are
+/// bit-identical (pinned by `tests/dist.rs`).
+struct DistTelemetry {
+    registry: Metrics,
+    flight: FlightRecorder,
+    file: MetricsFile,
+    ticks: Arc<Counter>,
+    heartbeats: Arc<Counter>,
+    evictions: Arc<Counter>,
+    rounds: Arc<Counter>,
+    round_ns: Arc<Hist>,
+    barrier_ns: Arc<Hist>,
+}
+
+impl DistTelemetry {
+    fn create(path: &Path) -> Result<DistTelemetry> {
+        let registry = Metrics::new();
+        let file = MetricsFile::create(path)
+            .with_context(|| format!("creating metrics file {path:?}"))?;
+        Ok(DistTelemetry {
+            ticks: registry.counter("dist.ticks"),
+            heartbeats: registry.counter("dist.heartbeats"),
+            evictions: registry.counter("dist.evictions"),
+            rounds: registry.counter("dist.rounds"),
+            round_ns: registry.hist("dist.round_ns"),
+            barrier_ns: registry.hist("dist.barrier_ns"),
+            flight: FlightRecorder::default(),
+            registry,
+            file,
+        })
+    }
+
+    /// Tape a worker → coordinator event before it is applied, so even
+    /// events the coordinator rejects are on record.
+    fn on_event(&self, tick: u64, ev: &Event) {
+        if matches!(ev, Event::Heartbeat { .. }) {
+            self.heartbeats.inc();
+        }
+        self.flight.record(tick, "event", ev.to_json());
+    }
+
+    /// Tape a coordinator → worker directive as it is issued.
+    fn on_directive(&self, tick: u64, d: &Directive) {
+        match d {
+            Directive::Evict { .. } => self.evictions.inc(),
+            Directive::BeginRound { .. } => self.rounds.inc(),
+            _ => {}
+        }
+        self.flight.record(tick, "directive", d.to_json());
+    }
+
+    /// Dump the final registry snapshot plus the flight tape.  The
+    /// watchdog-abort path ignores the result — a sink error must never
+    /// mask the liveness failure being reported.
+    fn finish(&mut self) -> io::Result<()> {
+        self.file.write_snapshot("dist", &self.registry.snapshot())?;
+        self.file.write_flight(&self.flight)
     }
 }
 
@@ -209,6 +277,11 @@ pub fn run_local_with(
         n_sections,
     };
 
+    let mut tel = match &spec.metrics {
+        Some(path) => Some(DistTelemetry::create(path)?),
+        None => None,
+    };
+
     let t0 = Instant::now();
     std::thread::scope(|scope| -> Result<DistRun> {
         let (event_tx, event_rx) = mpsc::channel::<Event>();
@@ -261,6 +334,7 @@ pub fn run_local_with(
                 lr_a: hyper.lr_a,
                 checkpoint: None,
                 published: false,
+                cache: None,
             };
             observer.on_epoch(&ev);
             history.push(ev);
@@ -268,14 +342,23 @@ pub fn run_local_with(
 
         let mut tick_debt = Duration::ZERO;
         let mut last_pass = Instant::now();
+        // wall-clock anchor of the round in flight, for the telemetry
+        // round-duration histogram (BeginRound issued → RunSync reached)
+        let mut round_started: Option<Instant> = None;
         'drive: loop {
             // 1. drain worker events into the coordinator.  Rejected
             // events (a late heartbeat from an evicted worker, a
             // duplicate step-complete) are dropped by design.
             match event_rx.recv_timeout(Duration::from_millis(1)) {
                 Ok(ev) => {
+                    if let Some(t) = &tel {
+                        t.on_event(coord.ticks(), &ev);
+                    }
                     let _ = coord.apply(&ev);
                     while let Ok(ev) = event_rx.try_recv() {
+                        if let Some(t) = &tel {
+                            t.on_event(coord.ticks(), &ev);
+                        }
                         let _ = coord.apply(&ev);
                     }
                 }
@@ -299,13 +382,22 @@ pub fn run_local_with(
             while tick_debt >= TICK {
                 tick_debt -= TICK;
                 while let Ok(ev) = event_rx.try_recv() {
+                    if let Some(t) = &tel {
+                        t.on_event(coord.ticks(), &ev);
+                    }
                     let _ = coord.apply(&ev);
+                }
+                if let Some(t) = &tel {
+                    t.ticks.inc();
                 }
                 directives.extend(coord.tick());
             }
 
             // 3. obey the directives
             for d in directives {
+                if let Some(t) = &tel {
+                    t.on_directive(coord.ticks(), &d);
+                }
                 match d {
                     Directive::EnterWarmup | Directive::Evict { .. } => {
                         if let Directive::Evict { member } = d {
@@ -315,6 +407,7 @@ pub fn run_local_with(
                     }
                     Directive::BeginRound { round, assignment } => {
                         observer.on_round(&coord.state());
+                        round_started = Some(Instant::now());
                         for (member, sections) in assignment.shards {
                             let model =
                                 last_model.get(&member).unwrap_or(&global).clone();
@@ -336,6 +429,12 @@ pub fn run_local_with(
                         average,
                     } => {
                         observer.on_round(&coord.state());
+                        let barrier_t0 = Instant::now();
+                        if let Some(t) = &tel {
+                            if let Some(started) = round_started.take() {
+                                t.round_ns.record_duration(started.elapsed());
+                            }
+                        }
                         while let Ok(r) = done_rx.try_recv() {
                             pending.push(r);
                         }
@@ -421,22 +520,34 @@ pub fn run_local_with(
                             lr_a,
                             checkpoint,
                             published: false,
+                            cache: None,
                         };
                         observer.on_epoch(&ev);
                         history.push(ev);
 
                         if stopped_early {
+                            let shutdown = Event::Shutdown;
+                            if let Some(t) = &tel {
+                                t.on_event(coord.ticks(), &shutdown);
+                            }
                             coord
-                                .apply(&Event::Shutdown)
+                                .apply(&shutdown)
                                 .map_err(|e| anyhow!("coordinator rejected Shutdown: {e}"))?;
                         } else {
                             if let Some(decay) = sched.lr_decay {
                                 hyper.lr_a *= decay;
                                 hyper.lr_b *= decay;
                             }
+                            let done = Event::SyncComplete { round };
+                            if let Some(t) = &tel {
+                                t.on_event(coord.ticks(), &done);
+                            }
                             coord
-                                .apply(&Event::SyncComplete { round })
+                                .apply(&done)
                                 .map_err(|e| anyhow!("coordinator rejected SyncComplete: {e}"))?;
+                        }
+                        if let Some(t) = &tel {
+                            t.barrier_ns.record_duration(barrier_t0.elapsed());
                         }
                     }
                     Directive::Finish => {
@@ -447,6 +558,12 @@ pub fn run_local_with(
             }
 
             if t0.elapsed().as_secs() > WATCHDOG_S {
+                // dump the tape first: the flight recorder exists for
+                // exactly this moment, and a sink error must not mask
+                // the liveness failure
+                if let Some(t) = tel.as_mut() {
+                    let _ = t.finish();
+                }
                 bail!(
                     "distributed run exceeded the {WATCHDOG_S}s watchdog in phase {} \
                      (round {}, {} members)",
@@ -475,6 +592,10 @@ pub fn run_local_with(
             if !last_epoch_checkpointed {
                 ModelSnapshot::from_model(&global, cfg.algo, epochs_run as u64).save(path)?;
             }
+        }
+
+        if let Some(t) = tel.as_mut() {
+            t.finish().context("writing dist metrics file")?;
         }
 
         let report = RunReport {

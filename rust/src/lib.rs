@@ -59,6 +59,13 @@
 //! backend is a drop-in).  One worker reproduces the serial trainer
 //! byte for byte.
 //!
+//! Cutting across every layer is the **telemetry layer** ([`obs`]): a
+//! zero-dependency metrics registry (lock-free counters, gauges, and
+//! log-bucketed latency histograms), scoped timers, JSONL/text
+//! exporters, and a bounded flight recorder taping the dist protocol —
+//! switched on with `--metrics FILE` (`RunSpec.metrics`) and strictly
+//! passive otherwise.
+//!
 //! Supporting modules: sparse tensor substrate ([`tensor`]), the three
 //! Table-3 sampling strategies ([`sampler`]), model state + gather/scatter
 //! ([`model`]), the tiled CPU kernels ([`kernel`]), analytic cost models
@@ -107,6 +114,7 @@ pub mod data;
 pub mod dist;
 pub mod kernel;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod sampler;
 pub mod serve;

@@ -29,6 +29,7 @@ use fasttucker::data;
 use fasttucker::dist;
 use fasttucker::kernel::KernelPolicy;
 use fasttucker::model::TuckerModel;
+use fasttucker::obs::{render_text, MetricsFile};
 use fasttucker::serve::{check_coords, mode_topk, Engine, ModelSnapshot, Server};
 use fasttucker::session::{
     DataSource, EarlyStop, NullObserver, ProgressPrinter, RunSpec, Schedule, Session, SynthPreset,
@@ -70,18 +71,24 @@ fn usage() -> &'static str {
            [--eval-every N] [--early-stop PATIENCE] [--min-delta F]\n\
            [--lr-decay F] [--artifacts DIR] [--save FILE]\n\
            [--checkpoint FILE] [--checkpoint-every N]\n\
-           [--spec FILE] [--dump-spec]\n\
+           [--spec FILE] [--dump-spec] [--metrics FILE.jsonl]\n\
            (flags build a validated RunSpec executed by the session layer;\n\
             --dump-spec prints that spec as JSON and exits, --spec FILE\n\
             replays a dumped spec bit-identically, ignoring config flags;\n\
             --workers N trains data-parallel on N in-process shard workers\n\
-            with barrier averaging — N=1 matches serial byte-for-byte)\n\
+            with barrier averaging — N=1 matches serial byte-for-byte;\n\
+            --metrics FILE.jsonl appends telemetry snapshots per epoch and,\n\
+            under --workers, the protocol flight-recorder tape — purely\n\
+            observational, the trained model is bit-identical without it)\n\
      serve [--checkpoint FILE] [--data FILE|--toy] [--epochs T] [--nnz K]\n\
            [--spec FILE] [--dump-spec] [train's config flags: --algo,\n\
             --backend, --threads, --j, --r, --seed, --artifacts, ...]\n\
            [--serve-threads K] [--batch B] [--queries Q] [--topk K] [--mode M]\n\
+           [--metrics FILE.jsonl]\n\
            (loads FILE if it exists; otherwise trains through the session\n\
-            layer and, when FILE is given, checkpoints to it before serving)\n\
+            layer and, when FILE is given, checkpoints to it before serving;\n\
+            --metrics writes per-request latency histograms, batch-size\n\
+            distribution and queue stats after the burst, plus a text dump)\n\
      query --checkpoint FILE --coords I1,I2,...,IN [--mode M] [--topk K]\n\
            [--cpu-kernel tiled|scalar|simd]\n\
      checkpoint save --model FILE --out FILE [--algo A] [--epoch E]\n\
@@ -282,6 +289,7 @@ fn train_spec_from_flags(a: &Args) -> Result<RunSpec> {
         data,
         train: train_config_from_flags(a)?,
         schedule,
+        metrics: a.get("metrics").map(PathBuf::from),
     })
 }
 
@@ -292,13 +300,21 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
             "data", "store", "algo", "variant", "strategy", "backend", "threads", "workers",
             "cpu-kernel", "epochs", "j", "r", "lr-a", "lr-b", "lam-a", "lam-b", "test-frac",
             "seed", "artifacts", "save", "checkpoint", "checkpoint-every", "eval-every",
-            "early-stop", "min-delta", "lr-decay", "toy", "spec", "dump-spec",
+            "early-stop", "min-delta", "lr-decay", "toy", "spec", "dump-spec", "metrics",
         ],
         &["toy", "dump-spec"],
     )
     .map_err(anyhow::Error::msg)?;
     let spec = match a.get("spec") {
-        Some(path) => RunSpec::load(Path::new(path))?,
+        Some(path) => {
+            let mut s = RunSpec::load(Path::new(path))?;
+            // telemetry is observational, so the flag still applies on
+            // top of a replayed spec without breaking bit-identity
+            if let Some(p) = a.get("metrics") {
+                s.metrics = Some(PathBuf::from(p));
+            }
+            s
+        }
         None => train_spec_from_flags(&a)?,
     };
     if a.get_bool("dump-spec") {
@@ -327,6 +343,9 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
             );
         }
         println!("dist: {}", run.final_state);
+        if let Some(path) = &spec.metrics {
+            println!("metrics + flight tape written to {}", path.display());
+        }
         if let Some(path) = a.get("save") {
             run.model.save(Path::new(path))?;
             println!("saved model to {path}");
@@ -354,6 +373,9 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     );
     println!("runtime platform: {}", session.platform());
     let report = session.run(&mut ProgressPrinter)?;
+    if let Some(path) = &spec.metrics {
+        println!("metrics written to {}", path.display());
+    }
     if report.stopped_early {
         println!(
             "early stop: test RMSE plateaued after {} epochs (best {:.4})",
@@ -408,6 +430,7 @@ fn serve_spec_from_flags(a: &Args) -> Result<RunSpec> {
         data,
         train: train_config_from_flags(a)?,
         schedule,
+        metrics: a.get("metrics").map(PathBuf::from),
     })
 }
 
@@ -423,7 +446,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             "checkpoint", "data", "toy", "epochs", "nnz", "algo", "variant", "strategy",
             "backend", "threads", "cpu-kernel", "j", "r", "lr-a", "lr-b", "lam-a", "lam-b",
             "seed", "artifacts", "serve-threads", "batch", "queries", "topk", "mode", "spec",
-            "dump-spec",
+            "dump-spec", "metrics",
         ],
         &["toy", "dump-spec"],
     )
@@ -432,9 +455,13 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         Some(path) => {
             let mut s = RunSpec::load(Path::new(path))?;
             // --checkpoint decides load-vs-train for serve, so the flag
-            // still applies on top of a spec file
+            // still applies on top of a spec file; --metrics likewise
+            // (telemetry never alters the run it observes)
             if let Some(p) = a.get("checkpoint") {
                 s.schedule.checkpoint = Some(PathBuf::from(p));
+            }
+            if let Some(p) = a.get("metrics") {
+                s.metrics = Some(PathBuf::from(p));
             }
             s
         }
@@ -444,6 +471,11 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         println!("{}", spec.dump());
         return Ok(());
     }
+    // for `serve`, --metrics means serving telemetry: take the path out
+    // of the spec so a pre-serve training pass doesn't write (and the
+    // post-burst dump then truncate) the same file
+    let mut spec = spec;
+    let metrics_path = spec.metrics.take();
     let ckpt = spec.schedule.checkpoint.clone();
     let snap = match &ckpt {
         Some(p) if p.exists() => {
@@ -537,6 +569,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     });
     let wall = t0.elapsed().as_secs_f64();
     let mut lat = latencies.into_inner().unwrap();
+    let obs_snap = server.metrics_snapshot();
     let stats = server.shutdown();
     // qps counts only the timed burst (the demo top-Ks above predate t0)
     println!(
@@ -555,6 +588,13 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             percentile(&mut lat, 50.0) * 1e6,
             percentile(&mut lat, 99.0) * 1e6
         );
+    }
+    if let Some(path) = &metrics_path {
+        let mut mf = MetricsFile::create(path)
+            .with_context(|| format!("creating metrics file {path:?}"))?;
+        mf.write_snapshot("serve", &obs_snap)?;
+        println!("\nserve metrics -> {}", path.display());
+        print!("{}", render_text(&obs_snap));
     }
     Ok(())
 }

@@ -1,0 +1,118 @@
+//! Exporters: the `metrics.jsonl` file sink and the one-shot text dump.
+//!
+//! The JSONL file is append-only, one self-describing object per line,
+//! tagged by `"kind"`:
+//!
+//! * `{"kind":"metrics","scope":..,"seq":..,"elapsed_ms":..,
+//!   "counters":{..},"gauges":{..},"hists":{..}}` — a registry
+//!   snapshot (periodic: per epoch for train, post-burst for serve);
+//! * `{"kind":"flight_head",..}` / `{"kind":"flight",..}` — the dist
+//!   flight-recorder dump (see [`super::FlightRecorder::to_jsonl`]).
+//!
+//! Every write flushes, so the file survives a watchdog abort or panic
+//! mid-run — the whole point of a flight recorder.
+
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+use std::time::Instant;
+
+use crate::util::json::{num, obj, s, Json};
+
+use super::flight::FlightRecorder;
+use super::registry::MetricsSnapshot;
+
+/// An open `metrics.jsonl` sink.
+#[derive(Debug)]
+pub struct MetricsFile {
+    out: BufWriter<File>,
+    seq: u64,
+    t0: Instant,
+}
+
+impl MetricsFile {
+    /// Create (truncate) the metrics file at `path`.
+    pub fn create(path: &Path) -> io::Result<MetricsFile> {
+        Ok(MetricsFile {
+            out: BufWriter::new(File::create(path)?),
+            seq: 0,
+            t0: Instant::now(),
+        })
+    }
+
+    fn write_line(&mut self, line: &Json) -> io::Result<()> {
+        self.out.write_all(line.dump().as_bytes())?;
+        self.out.write_all(b"\n")?;
+        self.out.flush()
+    }
+
+    /// Append one registry snapshot line. `scope` names the emitting
+    /// layer/moment (e.g. `"epoch"`, `"serve"`, `"final"`).
+    pub fn write_snapshot(&mut self, scope: &str, snap: &MetricsSnapshot) -> io::Result<()> {
+        let seq = self.seq;
+        self.seq += 1;
+        let mut fields = vec![
+            ("kind", s("metrics")),
+            ("scope", s(scope)),
+            ("seq", num(seq as f64)),
+            ("elapsed_ms", num(self.t0.elapsed().as_millis() as f64)),
+        ];
+        match snap.to_json() {
+            Json::Obj(m) => {
+                let mut line: Vec<(&str, Json)> = Vec::new();
+                line.append(&mut fields);
+                for (k, v) in &m {
+                    match k.as_str() {
+                        "counters" => line.push(("counters", v.clone())),
+                        "gauges" => line.push(("gauges", v.clone())),
+                        "hists" => line.push(("hists", v.clone())),
+                        _ => {}
+                    }
+                }
+                self.write_line(&obj(line))
+            }
+            other => self.write_line(&other),
+        }
+    }
+
+    /// Append the flight-recorder tape (header + one line per entry).
+    pub fn write_flight(&mut self, rec: &FlightRecorder) -> io::Result<()> {
+        self.out.write_all(rec.to_jsonl().as_bytes())?;
+        self.out.flush()
+    }
+}
+
+/// Render a snapshot as a human-readable text table — the one-shot dump
+/// printed at the end of a `--metrics` serve run.
+pub fn render_text(snap: &MetricsSnapshot) -> String {
+    let mut out = String::new();
+    if !snap.counters.is_empty() {
+        out.push_str("counters:\n");
+        for (k, v) in &snap.counters {
+            out.push_str(&format!("  {k:<28} {v}\n"));
+        }
+    }
+    if !snap.gauges.is_empty() {
+        out.push_str("gauges:\n");
+        for (k, v) in &snap.gauges {
+            out.push_str(&format!("  {k:<28} {v}\n"));
+        }
+    }
+    if !snap.hists.is_empty() {
+        out.push_str("histograms:\n");
+        for (k, h) in &snap.hists {
+            out.push_str(&format!(
+                "  {k:<28} n={} mean={:.1} p50={} p95={} p99={}\n",
+                h.count(),
+                h.mean(),
+                h.quantile(50.0),
+                h.quantile(95.0),
+                h.quantile(99.0),
+            ));
+        }
+    }
+    if out.is_empty() {
+        out.push_str("(no metrics recorded)\n");
+    }
+    out
+}

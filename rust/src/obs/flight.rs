@@ -1,0 +1,146 @@
+//! The distributed flight recorder: a bounded ring buffer of every
+//! protocol message the coordinator saw or issued, stamped with the
+//! coordinator tick, dumpable as JSONL after a clean finish or a
+//! watchdog abort. This is the post-hoc story for fault-injection runs:
+//! when a worker is evicted, the `Evict` directive and the heartbeat
+//! silence leading up to it are all on tape.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::util::json::{num, obj, s, Json};
+
+/// One recorded protocol message.
+#[derive(Clone, Debug)]
+pub struct FlightEntry {
+    /// Global sequence number (monotone, never reused — gaps after
+    /// `dropped > 0` show exactly how much tape was lost).
+    pub seq: u64,
+    /// Coordinator tick count when the entry was recorded.
+    pub tick: u64,
+    /// `"event"` (worker → coordinator) or `"directive"` (coordinator →
+    /// workers).
+    pub role: &'static str,
+    /// The message body, as the protocol type's own `to_json` form.
+    pub body: Json,
+}
+
+impl FlightEntry {
+    /// The JSONL line form: `{"kind":"flight","seq":..,"tick":..,...}`.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("kind", s("flight")),
+            ("seq", num(self.seq as f64)),
+            ("tick", num(self.tick as f64)),
+            ("role", s(self.role)),
+            ("body", self.body.clone()),
+        ])
+    }
+}
+
+struct Tape {
+    next_seq: u64,
+    dropped: u64,
+    ring: VecDeque<FlightEntry>,
+}
+
+/// A bounded ring buffer of [`FlightEntry`]s. When full, the oldest
+/// entry is dropped (and counted), so memory stays constant no matter
+/// how long the run is while the most recent window — the part that
+/// explains an abort — is always retained.
+pub struct FlightRecorder {
+    cap: usize,
+    tape: Mutex<Tape>,
+}
+
+/// Default ring capacity — generous for an epoch-scale window at
+/// dist protocol rates (a handful of messages per worker per round).
+pub const DEFAULT_FLIGHT_CAP: usize = 4096;
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        Self::new(DEFAULT_FLIGHT_CAP)
+    }
+}
+
+impl FlightRecorder {
+    /// A recorder retaining at most `cap` entries (min 1).
+    pub fn new(cap: usize) -> FlightRecorder {
+        FlightRecorder {
+            cap: cap.max(1),
+            tape: Mutex::new(Tape {
+                next_seq: 0,
+                dropped: 0,
+                ring: VecDeque::new(),
+            }),
+        }
+    }
+
+    /// Append one message to the tape.
+    pub fn record(&self, tick: u64, role: &'static str, body: Json) {
+        let mut t = self.tape.lock().unwrap();
+        let seq = t.next_seq;
+        t.next_seq += 1;
+        if t.ring.len() == self.cap {
+            t.ring.pop_front();
+            t.dropped += 1;
+        }
+        t.ring.push_back(FlightEntry {
+            seq,
+            tick,
+            role,
+            body,
+        });
+    }
+
+    /// Number of entries currently on tape.
+    pub fn len(&self) -> usize {
+        self.tape.lock().unwrap().ring.len()
+    }
+
+    /// True when nothing has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// How many old entries the ring has evicted to stay bounded.
+    pub fn dropped(&self) -> u64 {
+        self.tape.lock().unwrap().dropped
+    }
+
+    /// Clone out the retained entries, oldest first.
+    pub fn entries(&self) -> Vec<FlightEntry> {
+        self.tape.lock().unwrap().ring.iter().cloned().collect()
+    }
+
+    /// Dump the tape as JSONL: one `{"kind":"flight",...}` line per
+    /// entry, preceded by a `{"kind":"flight_head",...}` header line
+    /// carrying the drop count so truncation is self-describing.
+    pub fn to_jsonl(&self) -> String {
+        let t = self.tape.lock().unwrap();
+        let mut out = String::new();
+        let head = obj(vec![
+            ("kind", s("flight_head")),
+            ("retained", num(t.ring.len() as f64)),
+            ("dropped", num(t.dropped as f64)),
+        ]);
+        out.push_str(&head.dump());
+        out.push('\n');
+        for e in &t.ring {
+            out.push_str(&e.to_json().dump());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+impl std::fmt::Debug for FlightRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let t = self.tape.lock().unwrap();
+        f.debug_struct("FlightRecorder")
+            .field("cap", &self.cap)
+            .field("retained", &t.ring.len())
+            .field("dropped", &t.dropped)
+            .finish()
+    }
+}

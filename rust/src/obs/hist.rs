@@ -1,0 +1,223 @@
+//! Fixed log-bucketed histogram with lock-free recording.
+//!
+//! The bucket layout is an HDR-style log-linear grid over `u64`:
+//!
+//! * values `0..8` get exact unit buckets (`FIRST_BUCKETS`), so tiny
+//!   counts (batch sizes, queue depths) are never smeared;
+//! * every octave `[2^k, 2^(k+1))` for `k >= 3` is split into 8 linear
+//!   sub-buckets, bounding the relative bucket width at 12.5%.
+//!
+//! That yields `8 + 61*8 = 496` buckets covering the full `u64` range
+//! with a fixed-size table, so [`Hist::record`] is two relaxed atomic
+//! adds — no allocation, no locks, safe to call from every serve worker
+//! and trainer thread concurrently.
+//!
+//! [`HistSnapshot`] is the frozen view: mergeable across workers
+//! (bucket-wise addition, associative + commutative) and queryable for
+//! nearest-rank quantiles with the same rank rule as
+//! [`crate::bench::percentile`], which the tests cross-check.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::json::{arr, num, obj, Json};
+
+/// Number of exact unit buckets for values `0..FIRST_BUCKETS`.
+pub const FIRST_BUCKETS: usize = 8;
+
+/// Sub-buckets per octave above the unit range (2^3 = 8).
+const SUB_PER_OCT: u64 = 8;
+
+/// Total bucket count: 8 unit buckets + octaves 3..=63, 8 sub-buckets each.
+pub const NUM_BUCKETS: usize = FIRST_BUCKETS + 61 * SUB_PER_OCT as usize;
+
+/// The bucket index a value lands in.
+pub fn bucket_index(v: u64) -> usize {
+    if v < FIRST_BUCKETS as u64 {
+        return v as usize;
+    }
+    let oct = 63 - v.leading_zeros() as u64; // >= 3 since v >= 8
+    let sub = (v >> (oct - 3)) & (SUB_PER_OCT - 1);
+    (FIRST_BUCKETS as u64 + (oct - 3) * SUB_PER_OCT + sub) as usize
+}
+
+/// Inclusive lower bound of bucket `i` — the canonical value a quantile
+/// query reports for a sample that landed in this bucket.
+pub fn bucket_lo(i: usize) -> u64 {
+    assert!(i < NUM_BUCKETS, "bucket index {i} out of range");
+    if i < FIRST_BUCKETS {
+        return i as u64;
+    }
+    let k = (i - FIRST_BUCKETS) as u64;
+    let oct = k / SUB_PER_OCT + 3;
+    let sub = k % SUB_PER_OCT;
+    (1u64 << oct) + (sub << (oct - 3))
+}
+
+/// Exclusive upper bound of bucket `i` (saturating: the top bucket's
+/// bound is `u64::MAX` since `2^64` is unrepresentable).
+pub fn bucket_hi(i: usize) -> u64 {
+    assert!(i < NUM_BUCKETS, "bucket index {i} out of range");
+    if i < FIRST_BUCKETS {
+        return i as u64 + 1;
+    }
+    let k = (i - FIRST_BUCKETS) as u64;
+    let oct = k / SUB_PER_OCT + 3;
+    bucket_lo(i).saturating_add(1u64 << (oct - 3))
+}
+
+/// A concurrent log-bucketed histogram.
+///
+/// `record` is lock-free (relaxed atomics); readers take a point-in-time
+/// [`snapshot`](Hist::snapshot) which, under concurrent recording, is
+/// consistent per bucket but may be mid-update across buckets — fine for
+/// monitoring, which is all this is for.
+pub struct Hist {
+    buckets: Box<[AtomicU64]>,
+    sum: AtomicU64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hist {
+    /// A fresh, empty histogram.
+    pub fn new() -> Self {
+        let buckets: Vec<AtomicU64> = (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        Hist {
+            buckets: buckets.into_boxed_slice(),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation.
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration in nanoseconds.
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Freeze the current contents into a mergeable snapshot.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            counts: self
+                .buckets
+                .iter()
+                .map(|b| b.load(Ordering::Relaxed))
+                .collect(),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl std::fmt::Debug for Hist {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let snap = self.snapshot();
+        f.debug_struct("Hist")
+            .field("count", &snap.count())
+            .field("sum", &snap.sum)
+            .finish()
+    }
+}
+
+/// A frozen histogram: plain bucket counts, mergeable and queryable.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    /// Per-bucket observation counts (`NUM_BUCKETS` entries).
+    pub counts: Vec<u64>,
+    /// Sum of all recorded values (for the mean).
+    pub sum: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
+impl HistSnapshot {
+    /// An empty snapshot (identity element for [`merge`](Self::merge)).
+    pub fn empty() -> Self {
+        HistSnapshot {
+            counts: vec![0; NUM_BUCKETS],
+            sum: 0,
+        }
+    }
+
+    /// Total number of recorded observations.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Mean of the recorded values (0 when empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum as f64 / n as f64
+        }
+    }
+
+    /// Fold another snapshot in (bucket-wise add — associative and
+    /// commutative, so per-worker snapshots merge in any order).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.sum += other.sum;
+    }
+
+    /// Nearest-rank quantile, `p` in percent.
+    ///
+    /// Uses the same rank rule as [`crate::bench::percentile`]
+    /// (`rank = round(p/100 * (n-1))` over the sorted sample) and
+    /// reports the lower bound of the bucket holding that rank, so for
+    /// any sample the result equals
+    /// `bucket_lo(bucket_index(percentile_of_sample))` exactly.
+    /// Returns 0 for an empty snapshot.
+    pub fn quantile(&self, p: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = (p.clamp(0.0, 100.0) / 100.0 * (n - 1) as f64).round() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return bucket_lo(i);
+            }
+        }
+        // unreachable for rank < n, but stay total
+        bucket_lo(NUM_BUCKETS - 1)
+    }
+
+    /// JSON form: summary stats plus the non-empty buckets as
+    /// `[lo, count]` pairs (sparse — most of the 496 buckets are zero).
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| arr(vec![num(bucket_lo(i) as f64), num(c as f64)]))
+            .collect();
+        obj(vec![
+            ("count", num(self.count() as f64)),
+            ("sum", num(self.sum as f64)),
+            ("mean", num(self.mean())),
+            ("p50", num(self.quantile(50.0) as f64)),
+            ("p95", num(self.quantile(95.0) as f64)),
+            ("p99", num(self.quantile(99.0) as f64)),
+            ("buckets", arr(buckets)),
+        ])
+    }
+}

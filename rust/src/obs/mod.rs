@@ -1,0 +1,305 @@
+//! Unified telemetry: metrics registry, latency histograms, scoped
+//! timers, exporters, and the distributed flight recorder.
+//!
+//! The paper's whole argument is an accounting exercise — per-stage
+//! memory-access and compute overhead (Tables 6/7) — so the repro
+//! carries a measurement backbone every layer reports into:
+//!
+//! * [`Metrics`] — a registry of named [`Counter`]s, [`Gauge`]s, and
+//!   log-bucketed [`Hist`]ograms. Registration locks once; recording is
+//!   a relaxed atomic op through an `Arc` handle, cheap enough to stay
+//!   on in every serve worker and trainer epoch.
+//! * [`SpanTimer`] / [`span!`](crate::span) — scoped wall-time timers
+//!   recording nanoseconds into a histogram on drop.
+//! * [`MetricsFile`] / [`render_text`] — the `metrics.jsonl` exporter
+//!   (one flushed, `"kind"`-tagged JSON object per line) and the
+//!   human-readable one-shot dump.
+//! * [`FlightRecorder`] — a bounded ring of every dist `Event` /
+//!   `Directive` with coordinator-tick stamps, dumped into the same
+//!   JSONL file on completion or watchdog abort.
+//!
+//! Everything here is strictly **passive**: recording never branches
+//! the computation, so trajectories are bit-identical with telemetry on
+//! or off (pinned by `tests/session.rs`). The user-facing switch is
+//! `--metrics FILE` on `train` and `serve` (`RunSpec.metrics`).
+//!
+//! Quantiles use the same nearest-rank rule as [`crate::bench::percentile`]
+//! so `metrics.jsonl` p50/p95/p99 and the bench suite's numbers are
+//! directly comparable (cross-checked in this module's tests).
+
+mod export;
+mod flight;
+mod hist;
+mod registry;
+
+pub use export::{render_text, MetricsFile};
+pub use flight::{FlightEntry, FlightRecorder, DEFAULT_FLIGHT_CAP};
+pub use hist::{bucket_hi, bucket_index, bucket_lo, Hist, HistSnapshot, FIRST_BUCKETS, NUM_BUCKETS};
+pub use registry::{Counter, Gauge, Metrics, MetricsSnapshot, SpanTimer};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::percentile;
+    use crate::util::rng::Pcg32;
+    use std::sync::Arc;
+
+    // -- bucket grid ---------------------------------------------------
+
+    #[test]
+    fn bucket_boundaries_are_exact() {
+        // Every bucket's own bounds map back to it, and the grid tiles
+        // u64 with no gaps or overlaps: hi(i) == lo(i+1).
+        for i in 0..NUM_BUCKETS {
+            let lo = bucket_lo(i);
+            assert_eq!(bucket_index(lo), i, "lo of bucket {i}");
+            let hi = bucket_hi(i);
+            assert!(hi > lo, "bucket {i} must be non-empty");
+            assert_eq!(bucket_index(hi - 1), i, "last value of bucket {i}");
+            if i + 1 < NUM_BUCKETS {
+                assert_eq!(hi, bucket_lo(i + 1), "gap/overlap after bucket {i}");
+            }
+        }
+        // Extremes.
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(u64::MAX), NUM_BUCKETS - 1);
+        assert_eq!(bucket_hi(NUM_BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn unit_range_is_exact() {
+        for v in 0..FIRST_BUCKETS as u64 {
+            assert_eq!(bucket_lo(bucket_index(v)), v);
+            assert_eq!(bucket_hi(bucket_index(v)), v + 1);
+        }
+    }
+
+    #[test]
+    fn relative_width_bounded() {
+        // Above the unit range, bucket width / lo <= 1/8 = 12.5%.
+        for i in FIRST_BUCKETS..NUM_BUCKETS {
+            let lo = bucket_lo(i) as f64;
+            let width = (bucket_hi(i) - bucket_lo(i)) as f64;
+            assert!(
+                width / lo <= 0.125 + 1e-12,
+                "bucket {i}: width {width} at lo {lo}"
+            );
+        }
+    }
+
+    // -- snapshot merge ------------------------------------------------
+
+    fn random_snapshot(rng: &mut Pcg32) -> HistSnapshot {
+        let h = Hist::new();
+        let n = rng.next_u32() % 50;
+        for _ in 0..n {
+            // spread over several octaves
+            let v = (rng.next_u32() as u64) >> (rng.next_u32() % 24);
+            h.record(v);
+        }
+        h.snapshot()
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        let mut rng = Pcg32::new(0xA11CE, 7);
+        for round in 0..64 {
+            let a = random_snapshot(&mut rng);
+            let b = random_snapshot(&mut rng);
+            let c = random_snapshot(&mut rng);
+
+            // (a + b) + c
+            let mut ab = a.clone();
+            ab.merge(&b);
+            let mut ab_c = ab.clone();
+            ab_c.merge(&c);
+
+            // a + (b + c)
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut a_bc = a.clone();
+            a_bc.merge(&bc);
+
+            assert_eq!(ab_c, a_bc, "associativity failed on round {round}");
+
+            // a + b == b + a
+            let mut ba = b.clone();
+            ba.merge(&a);
+            assert_eq!(ab, ba, "commutativity failed on round {round}");
+
+            // empty is the identity
+            let mut a_id = a.clone();
+            a_id.merge(&HistSnapshot::empty());
+            assert_eq!(a_id, a, "identity failed on round {round}");
+
+            // counts and sums add exactly
+            assert_eq!(ab.count(), a.count() + b.count());
+            assert_eq!(ab.sum, a.sum + b.sum);
+        }
+    }
+
+    // -- concurrent recording -------------------------------------------
+
+    #[test]
+    fn concurrent_records_are_all_counted() {
+        let h = Arc::new(Hist::new());
+        let threads = 8;
+        let per_thread = 10_000u64;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    let mut rng = Pcg32::new(42, t as u64);
+                    let mut local_sum = 0u64;
+                    for _ in 0..per_thread {
+                        let v = (rng.next_u32() % 100_000) as u64;
+                        h.record(v);
+                        local_sum += v;
+                    }
+                    local_sum
+                })
+            })
+            .collect();
+        let expect_sum: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        let snap = h.snapshot();
+        assert_eq!(snap.count(), threads as u64 * per_thread);
+        assert_eq!(snap.sum, expect_sum);
+    }
+
+    // -- quantiles vs bench::percentile ---------------------------------
+
+    #[test]
+    fn quantiles_agree_with_bench_percentile() {
+        let mut rng = Pcg32::new(0xBEEF, 3);
+        for n in [1usize, 2, 3, 10, 100, 1000] {
+            let h = Hist::new();
+            let mut sample: Vec<f64> = Vec::with_capacity(n);
+            for _ in 0..n {
+                let v = ((rng.next_u32() as u64) >> (rng.next_u32() % 20)) + 1;
+                h.record(v);
+                sample.push(v as f64);
+            }
+            let snap = h.snapshot();
+            for p in [0.0, 25.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+                let exact = percentile(&mut sample, p) as u64;
+                // The histogram reports the lower bound of the bucket the
+                // exact nearest-rank percentile falls in — same rank rule,
+                // bucketed value.
+                assert_eq!(
+                    snap.quantile(p),
+                    bucket_lo(bucket_index(exact)),
+                    "n={n} p={p} exact={exact}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantiles_are_monotone() {
+        let mut rng = Pcg32::new(99, 1);
+        let h = Hist::new();
+        for _ in 0..500 {
+            h.record((rng.next_u32() % 1_000_000) as u64);
+        }
+        let snap = h.snapshot();
+        let (p50, p95, p99) = (
+            snap.quantile(50.0),
+            snap.quantile(95.0),
+            snap.quantile(99.0),
+        );
+        assert!(p50 <= p95 && p95 <= p99, "p50={p50} p95={p95} p99={p99}");
+    }
+
+    #[test]
+    fn empty_hist_quantile_is_zero() {
+        assert_eq!(Hist::new().snapshot().quantile(50.0), 0);
+        assert_eq!(Hist::new().snapshot().mean(), 0.0);
+    }
+
+    // -- registry --------------------------------------------------------
+
+    #[test]
+    fn registry_handles_share_state() {
+        let m = Metrics::new();
+        m.counter("a.hits").add(3);
+        m.counter("a.hits").inc(); // same instrument, second handle
+        m.gauge("a.depth").set(7);
+        m.hist("a.lat").record(12);
+        let snap = m.snapshot();
+        assert_eq!(snap.counters["a.hits"], 4);
+        assert_eq!(snap.gauges["a.depth"], 7);
+        assert_eq!(snap.hists["a.lat"].count(), 1);
+    }
+
+    #[test]
+    fn snapshot_merge_and_json_roundtrip_shape() {
+        let m = Metrics::new();
+        m.counter("x").add(2);
+        m.hist("h").record(100);
+        let mut a = m.snapshot();
+        let b = m.snapshot();
+        a.merge(&b);
+        assert_eq!(a.counters["x"], 4);
+        assert_eq!(a.hists["h"].count(), 2);
+        // JSON dump parses back and has the three sections
+        let j = crate::util::json::Json::parse(&a.to_json().dump()).unwrap();
+        assert!(j.get("counters").is_some());
+        assert!(j.get("gauges").is_some());
+        assert!(j.get("hists").is_some());
+        assert_eq!(
+            j.get("hists").unwrap().get("h").unwrap().get("count"),
+            Some(&crate::util::json::Json::Num(2.0))
+        );
+    }
+
+    #[test]
+    fn span_timer_records_on_drop() {
+        let m = Metrics::new();
+        {
+            let _t = SpanTimer::new(m.hist("t"));
+            std::thread::yield_now();
+        }
+        assert_eq!(m.snapshot().hists["t"].count(), 1);
+    }
+
+    // -- flight recorder -------------------------------------------------
+
+    #[test]
+    fn flight_ring_bounds_and_sequences() {
+        let r = FlightRecorder::new(4);
+        for i in 0..10u64 {
+            r.record(i, "event", crate::util::json::num(i as f64));
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 6);
+        let e = r.entries();
+        let seqs: Vec<u64> = e.iter().map(|x| x.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+        let dump = r.to_jsonl();
+        let lines: Vec<&str> = dump.lines().collect();
+        assert_eq!(lines.len(), 5); // head + 4 entries
+        let head = crate::util::json::Json::parse(lines[0]).unwrap();
+        assert_eq!(head.get("kind").unwrap().as_str(), Some("flight_head"));
+        assert_eq!(head.get("dropped").unwrap().as_usize(), Some(6));
+        for l in &lines[1..] {
+            let j = crate::util::json::Json::parse(l).unwrap();
+            assert_eq!(j.get("kind").unwrap().as_str(), Some("flight"));
+            assert!(j.get("tick").is_some() && j.get("role").is_some());
+        }
+    }
+
+    // -- text dump -------------------------------------------------------
+
+    #[test]
+    fn text_dump_mentions_every_instrument() {
+        let m = Metrics::new();
+        m.counter("serve.requests").add(5);
+        m.gauge("serve.queue_depth").set(2);
+        m.hist("serve.latency.predict").record(1234);
+        let text = render_text(&m.snapshot());
+        for needle in ["serve.requests", "serve.queue_depth", "serve.latency.predict"] {
+            assert!(text.contains(needle), "missing {needle} in:\n{text}");
+        }
+        assert!(render_text(&MetricsSnapshot::default()).contains("no metrics"));
+    }
+}

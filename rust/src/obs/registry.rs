@@ -1,0 +1,248 @@
+//! The metrics registry: named counters, gauges and histograms.
+//!
+//! Registration (`counter`/`gauge`/`hist`) takes a short mutex once and
+//! hands back an `Arc` handle; the hot path — incrementing through the
+//! handle — is a single relaxed atomic op. Call sites register once up
+//! front (e.g. [`crate::serve::Server`] pre-registers its per-request
+//! latency histograms) and record lock-free forever after.
+//!
+//! [`Metrics::snapshot`] freezes everything into a
+//! [`MetricsSnapshot`]: plain `BTreeMap`s, mergeable across workers and
+//! serializable through [`crate::util::json`] for the `metrics.jsonl`
+//! exporter and the serve `Request::Stats` reply.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::{obj, Json};
+
+use super::hist::{Hist, HistSnapshot};
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Increment by `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// An instantaneous signed value (queue depth, live worker count).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    /// Overwrite the value.
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Adjust by a signed delta.
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Default)]
+struct Tables {
+    counters: BTreeMap<String, Arc<Counter>>,
+    gauges: BTreeMap<String, Arc<Gauge>>,
+    hists: BTreeMap<String, Arc<Hist>>,
+}
+
+/// The registry. Cheap to share (`Arc<Metrics>`); all instruments
+/// registered through it appear in every snapshot under their name.
+///
+/// Names are dotted paths, `layer.instrument` — see ARCHITECTURE.md
+/// §Observability for the catalog used across train/serve/data/dist.
+#[derive(Default)]
+pub struct Metrics {
+    tables: Mutex<Tables>,
+}
+
+impl Metrics {
+    /// A fresh, empty registry.
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// A fresh registry behind an `Arc`, ready to share across threads.
+    pub fn shared() -> Arc<Metrics> {
+        Arc::new(Metrics::default())
+    }
+
+    /// Get or register the counter `name`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut t = self.tables.lock().unwrap();
+        t.counters.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get or register the gauge `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut t = self.tables.lock().unwrap();
+        t.gauges.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get or register the histogram `name`.
+    pub fn hist(&self, name: &str) -> Arc<Hist> {
+        let mut t = self.tables.lock().unwrap();
+        t.hists
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Hist::new()))
+            .clone()
+    }
+
+    /// Freeze every registered instrument into a snapshot.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let t = self.tables.lock().unwrap();
+        MetricsSnapshot {
+            counters: t
+                .counters
+                .iter()
+                .map(|(k, v)| (k.clone(), v.get()))
+                .collect(),
+            gauges: t.gauges.iter().map(|(k, v)| (k.clone(), v.get())).collect(),
+            hists: t
+                .hists
+                .iter()
+                .map(|(k, v)| (k.clone(), v.snapshot()))
+                .collect(),
+        }
+    }
+}
+
+impl std::fmt::Debug for Metrics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let t = self.tables.lock().unwrap();
+        f.debug_struct("Metrics")
+            .field("counters", &t.counters.len())
+            .field("gauges", &t.gauges.len())
+            .field("hists", &t.hists.len())
+            .finish()
+    }
+}
+
+/// A frozen view of a [`Metrics`] registry: plain maps, mergeable and
+/// JSON-serializable. This is what crosses the serve protocol in
+/// `Response::Stats` and what the exporter writes per line.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    /// Counter values by name.
+    pub counters: BTreeMap<String, u64>,
+    /// Gauge values by name.
+    pub gauges: BTreeMap<String, i64>,
+    /// Histogram snapshots by name.
+    pub hists: BTreeMap<String, HistSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// True when nothing has been registered or recorded.
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.hists.is_empty()
+    }
+
+    /// Fold another snapshot in: counters and histogram buckets add,
+    /// gauges take the other side's value (last write wins).
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+        for (k, v) in &other.hists {
+            self.hists
+                .entry(k.clone())
+                .or_insert_with(HistSnapshot::empty)
+                .merge(v);
+        }
+    }
+
+    /// JSON object with `counters` / `gauges` / `hists` sub-objects.
+    pub fn to_json(&self) -> Json {
+        let counters = Json::Obj(
+            self.counters
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                .collect(),
+        );
+        let gauges = Json::Obj(
+            self.gauges
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                .collect(),
+        );
+        let hists = Json::Obj(
+            self.hists
+                .iter()
+                .map(|(k, v)| (k.clone(), v.to_json()))
+                .collect(),
+        );
+        obj(vec![
+            ("counters", counters),
+            ("gauges", gauges),
+            ("hists", hists),
+        ])
+    }
+}
+
+/// A scoped timer: records the elapsed wall time into a histogram (in
+/// nanoseconds) when dropped. Create one at the top of the region to
+/// measure — the `span!` macro is sugar for exactly this.
+#[derive(Debug)]
+pub struct SpanTimer {
+    hist: Arc<Hist>,
+    start: Instant,
+}
+
+impl SpanTimer {
+    /// Start timing into `hist`.
+    pub fn new(hist: Arc<Hist>) -> SpanTimer {
+        SpanTimer {
+            hist,
+            start: Instant::now(),
+        }
+    }
+}
+
+impl Drop for SpanTimer {
+    fn drop(&mut self) {
+        self.hist.record_duration(self.start.elapsed());
+    }
+}
+
+/// Time the rest of the enclosing scope into a histogram.
+///
+/// ```no_run
+/// use fasttucker::obs::Metrics;
+/// let m = Metrics::new();
+/// {
+///     let _t = fasttucker::span!(m.hist("serve.latency.predict"));
+///     // ... work measured until end of scope ...
+/// }
+/// ```
+#[macro_export]
+macro_rules! span {
+    ($hist:expr) => {
+        $crate::obs::SpanTimer::new($hist)
+    };
+}

@@ -25,8 +25,10 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::kernel::KernelPolicy;
+use crate::obs::{Counter, Gauge, Hist, Metrics, MetricsSnapshot};
 
 use super::engine::Engine;
 use super::snapshot::ModelSnapshot;
@@ -53,6 +55,10 @@ pub enum Request {
     /// Report the epoch tag of the snapshot answering this batch (lets
     /// clients observe hot-swaps).
     Epoch,
+    /// Report the server's live telemetry — per-request latency
+    /// histograms, queue depth, batch sizes, swap count — as a
+    /// [`MetricsSnapshot`] over the same protocol as every other request.
+    Stats,
 }
 
 /// The answer to one [`Request`].
@@ -64,6 +70,8 @@ pub enum Response {
     TopK(Vec<Scored>),
     /// Epoch tag of the answering snapshot.
     Epoch(u64),
+    /// Telemetry snapshot answering a [`Request::Stats`].
+    Stats(MetricsSnapshot),
     /// The request was malformed or the server is stopping.
     Error(String),
 }
@@ -81,6 +89,49 @@ pub struct ServeStats {
 
 type Job = (Request, mpsc::Sender<Response>);
 
+/// Pre-registered instrument handles — resolved once at server start so
+/// the request hot path records through plain `Arc`s, never touching the
+/// registry's name table.
+struct ObsHandles {
+    requests: Arc<Counter>,
+    errors: Arc<Counter>,
+    batches: Arc<Counter>,
+    swaps: Arc<Counter>,
+    queue_depth: Arc<Gauge>,
+    batch_size: Arc<Hist>,
+    lat_predict: Arc<Hist>,
+    lat_topk: Arc<Hist>,
+    lat_epoch: Arc<Hist>,
+    lat_stats: Arc<Hist>,
+}
+
+impl ObsHandles {
+    fn new(m: &Metrics) -> ObsHandles {
+        ObsHandles {
+            requests: m.counter("serve.requests"),
+            errors: m.counter("serve.errors"),
+            batches: m.counter("serve.batches"),
+            swaps: m.counter("serve.swaps"),
+            queue_depth: m.gauge("serve.queue_depth"),
+            batch_size: m.hist("serve.batch_size"),
+            lat_predict: m.hist("serve.latency.predict"),
+            lat_topk: m.hist("serve.latency.topk"),
+            lat_epoch: m.hist("serve.latency.epoch"),
+            lat_stats: m.hist("serve.latency.stats"),
+        }
+    }
+
+    /// The latency histogram for a request's kind.
+    fn latency(&self, req: &Request) -> &Hist {
+        match req {
+            Request::Predict { .. } => &self.lat_predict,
+            Request::TopK { .. } => &self.lat_topk,
+            Request::Epoch => &self.lat_epoch,
+            Request::Stats => &self.lat_stats,
+        }
+    }
+}
+
 struct Shared {
     queue: Mutex<VecDeque<Job>>,
     ready: Condvar,
@@ -90,6 +141,8 @@ struct Shared {
     served: AtomicU64,
     batches: AtomicU64,
     swaps: AtomicU64,
+    metrics: Arc<Metrics>,
+    obs: ObsHandles,
 }
 
 /// A running serving loop; dropping it without [`Server::shutdown`] leaks
@@ -123,6 +176,8 @@ impl Server {
         max_batch: usize,
         policy: KernelPolicy,
     ) -> Server {
+        let metrics = Metrics::shared();
+        let obs = ObsHandles::new(&metrics);
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             ready: Condvar::new(),
@@ -132,6 +187,8 @@ impl Server {
             served: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             swaps: AtomicU64::new(0),
+            metrics,
+            obs,
         });
         let max_batch = max_batch.max(1);
         let workers = (0..workers.max(1))
@@ -155,6 +212,7 @@ impl Server {
     pub fn publish(&self, snapshot: ModelSnapshot) {
         *self.shared.snapshot.write().unwrap() = snapshot;
         self.shared.swaps.fetch_add(1, Ordering::SeqCst);
+        self.shared.obs.swaps.inc();
     }
 
     /// Epoch tag of the currently published snapshot.
@@ -169,6 +227,18 @@ impl Server {
             batches: self.shared.batches.load(Ordering::SeqCst),
             swaps: self.shared.swaps.load(Ordering::SeqCst),
         }
+    }
+
+    /// The server's telemetry registry (per-request latency histograms,
+    /// queue depth, batch sizes) — shareable with an exporter.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.shared.metrics.clone()
+    }
+
+    /// Freeze the current telemetry (what [`Request::Stats`] answers
+    /// with, without going through the queue).
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        self.shared.metrics.snapshot()
     }
 
     /// Stop accepting work, drain queued requests, join the workers and
@@ -207,6 +277,7 @@ impl ServerHandle {
                 return Response::Error("server stopped".to_string());
             }
             q.push_back((req, tx));
+            self.shared.obs.queue_depth.set(q.len() as i64);
         }
         self.shared.ready.notify_one();
         rx.recv()
@@ -239,6 +310,15 @@ impl ServerHandle {
             other => Err(format!("unexpected response {other:?}")),
         }
     }
+
+    /// Convenience: blocking telemetry snapshot.
+    pub fn stats(&self) -> Result<MetricsSnapshot, String> {
+        match self.call(Request::Stats) {
+            Response::Stats(s) => Ok(s),
+            Response::Error(e) => Err(e),
+            other => Err(format!("unexpected response {other:?}")),
+        }
+    }
 }
 
 fn worker_loop(shared: &Shared, max_batch: usize) {
@@ -259,6 +339,7 @@ fn worker_loop(shared: &Shared, max_batch: usize) {
             }
             let take = q.len().min(max_batch);
             batch.extend(q.drain(..take));
+            shared.obs.queue_depth.set(q.len() as i64);
         }
         // one snapshot per batch: internally consistent, O(1) refresh
         let current = shared.snapshot.read().unwrap().clone();
@@ -266,8 +347,16 @@ fn worker_loop(shared: &Shared, max_batch: usize) {
             engine.swap(current);
         }
         shared.batches.fetch_add(1, Ordering::SeqCst);
+        shared.obs.batches.inc();
+        shared.obs.batch_size.record(batch.len() as u64);
         for (req, reply) in batch.drain(..) {
-            let resp = process(&mut engine, &req);
+            let t0 = Instant::now();
+            let resp = process(&mut engine, shared, &req);
+            shared.obs.latency(&req).record_duration(t0.elapsed());
+            shared.obs.requests.inc();
+            if matches!(resp, Response::Error(_)) {
+                shared.obs.errors.inc();
+            }
             shared.served.fetch_add(1, Ordering::SeqCst);
             // a client that gave up on the call just drops its receiver
             let _ = reply.send(resp);
@@ -300,7 +389,7 @@ pub fn check_coords(
     Ok(())
 }
 
-fn process(engine: &mut Engine, req: &Request) -> Response {
+fn process(engine: &mut Engine, shared: &Shared, req: &Request) -> Response {
     match req {
         Request::Predict { coords } => match check_coords(engine.snapshot(), coords, None) {
             Ok(()) => Response::Predict(engine.predict(coords)),
@@ -316,6 +405,7 @@ fn process(engine: &mut Engine, req: &Request) -> Response {
             }
         }
         Request::Epoch => Response::Epoch(engine.snapshot().epoch()),
+        Request::Stats => Response::Stats(shared.metrics.snapshot()),
     }
 }
 
@@ -370,6 +460,35 @@ mod tests {
         assert_eq!(h.predict(vec![1, 2, 3]).unwrap(), eng.predict(&[1, 2, 3]));
         assert_eq!(h.topk(vec![1, 0, 3], 1, 5).unwrap().len(), 5);
         server.shutdown();
+    }
+
+    #[test]
+    fn stats_request_reports_latency_histograms() {
+        let server = Server::start(snapshot(5, 0), 2, 4);
+        let h = server.handle();
+        for i in 0..20u32 {
+            h.predict(vec![i % 8, 0, 0]).unwrap();
+        }
+        h.topk(vec![1, 0, 3], 1, 3).unwrap();
+        let snap = h.stats().unwrap();
+        // every prior request was counted before its reply was sent
+        assert_eq!(snap.counters["serve.requests"], 21);
+        assert_eq!(snap.counters["serve.errors"], 0);
+        let lat = &snap.hists["serve.latency.predict"];
+        assert_eq!(lat.count(), 20);
+        let (p50, p95, p99) = (lat.quantile(50.0), lat.quantile(95.0), lat.quantile(99.0));
+        assert!(
+            p50 > 0 && p50 <= p95 && p95 <= p99,
+            "non-monotone latency quantiles: p50={p50} p95={p95} p99={p99}"
+        );
+        assert_eq!(snap.hists["serve.latency.topk"].count(), 1);
+        assert!(snap.hists["serve.batch_size"].count() > 0);
+        // the direct (no queue round-trip) snapshot sees at least as much
+        let direct = server.metrics_snapshot();
+        assert!(direct.counters["serve.requests"] >= snap.counters["serve.requests"]);
+        // the Stats round-trips count toward the legacy served counter too
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 22);
     }
 
     #[test]

@@ -6,6 +6,7 @@ use std::io::Write;
 use std::path::PathBuf;
 
 use crate::coordinator::EpochStats;
+use crate::data::CacheStats;
 use crate::util::json::{self, Json};
 
 /// One completed step of a session run.  The first event of a run (when
@@ -30,6 +31,9 @@ pub struct EpochEvent {
     pub checkpoint: Option<PathBuf>,
     /// Whether a snapshot was published to the attached serve server.
     pub published: bool,
+    /// Paged-store cache traffic during this epoch (hits/loads/bytes as
+    /// deltas, not cumulative) — `None` unless training from `--store`.
+    pub cache: Option<CacheStats>,
 }
 
 impl EpochEvent {
@@ -51,9 +55,13 @@ impl EpochEvent {
         fields.push(("lr_a", json::num(self.lr_a as f64)));
         if let Some(st) = &self.stats {
             fields.push(("stats", st.to_json()));
+            fields.push(("pad_rate", json::num(st.padding_ratio())));
         }
         if let Some(rate) = self.invariant_hit_rate() {
             fields.push(("inv_hit_rate", json::num(rate)));
+        }
+        if let Some(c) = &self.cache {
+            fields.push(("cache", c.to_json()));
         }
         if let Some(p) = &self.checkpoint {
             fields.push(("checkpoint", json::s(&p.to_string_lossy())));
@@ -152,12 +160,15 @@ impl Observer for ProgressPrinter {
                     st.factor.total().as_secs_f64(),
                     st.core.total().as_secs_f64(),
                     (st.factor.memory() + st.core.memory()).as_secs_f64(),
-                    100.0 * st.factor.padding_ratio(),
+                    100.0 * st.padding_ratio(),
                 ));
                 if let Some(rate) = st.invariant_hit_rate() {
                     line.push_str(&format!(" inv {:.1}%", 100.0 * rate));
                 }
             }
+        }
+        if let Some(rate) = ev.cache.as_ref().and_then(|c| c.hit_rate()) {
+            line.push_str(&format!(" cache {:.1}%", 100.0 * rate));
         }
         if let Some(p) = &ev.checkpoint {
             line.push_str(&format!("  [checkpoint {}]", p.display()));
@@ -179,31 +190,53 @@ impl Observer for ProgressPrinter {
 /// `RUN_JSON {...}` summary to any [`Write`] sink — the machine-readable
 /// twin of [`ProgressPrinter`], in the same scrape-line style as the
 /// bench suite's `BENCH_JSON`.
+///
+/// The sink is flushed after every event and again on drop, so a run
+/// that aborts mid-way (panic, watchdog) still leaves every completed
+/// epoch's line on disk.
 #[derive(Debug)]
 pub struct JsonLogger<W: Write> {
-    sink: W,
+    // Option so `into_inner` can move the sink out from under the Drop
+    // impl; always `Some` while the logger is alive.
+    sink: Option<W>,
 }
 
 impl<W: Write> JsonLogger<W> {
     /// Log to `sink` (e.g. `std::io::stdout()` or a `Vec<u8>`).
     pub fn new(sink: W) -> Self {
-        Self { sink }
+        Self { sink: Some(sink) }
     }
 
     /// Recover the sink (e.g. to inspect a `Vec<u8>` in tests).
-    pub fn into_inner(self) -> W {
-        self.sink
+    pub fn into_inner(mut self) -> W {
+        let mut sink = self.sink.take().expect("sink present until into_inner");
+        let _ = sink.flush();
+        sink
     }
 }
 
 impl<W: Write> Observer for JsonLogger<W> {
     fn on_epoch(&mut self, ev: &EpochEvent) {
         // logging must never abort a run; drop the line on sink errors
-        let _ = writeln!(self.sink, "EPOCH_JSON {}", ev.to_json().dump());
+        if let Some(sink) = self.sink.as_mut() {
+            let _ = writeln!(sink, "EPOCH_JSON {}", ev.to_json().dump());
+            let _ = sink.flush();
+        }
     }
 
     fn on_finish(&mut self, report: &RunReport) {
-        let _ = writeln!(self.sink, "RUN_JSON {}", report.to_json().dump());
+        if let Some(sink) = self.sink.as_mut() {
+            let _ = writeln!(sink, "RUN_JSON {}", report.to_json().dump());
+            let _ = sink.flush();
+        }
+    }
+}
+
+impl<W: Write> Drop for JsonLogger<W> {
+    fn drop(&mut self) {
+        if let Some(sink) = self.sink.as_mut() {
+            let _ = sink.flush();
+        }
     }
 }
 
@@ -240,6 +273,7 @@ mod tests {
             lr_a: 0.01,
             checkpoint: None,
             published: false,
+            cache: None,
         }
     }
 
@@ -270,6 +304,83 @@ mod tests {
         assert!((e.invariant_hit_rate().unwrap() - 0.75).abs() < 1e-12);
         let j = e.to_json();
         assert!(j.get("inv_hit_rate").is_some());
+    }
+
+    #[test]
+    fn epoch_json_carries_pad_rate_and_cache() {
+        use crate::coordinator::{EpochStats, PhaseStats};
+        let mut e = ev(1, Some(0.9));
+        assert!(e.to_json().get("pad_rate").is_none(), "no stats, no pad");
+        e.stats = Some(EpochStats {
+            factor: PhaseStats {
+                samples: 75,
+                padded_slots: 25,
+                ..Default::default()
+            },
+            core: PhaseStats {
+                samples: 100,
+                padded_slots: 0,
+                ..Default::default()
+            },
+        });
+        let j = e.to_json();
+        // combined over both phases: 25 / 200
+        assert!((j.get("pad_rate").unwrap().as_f64().unwrap() - 0.125).abs() < 1e-12);
+        assert!(j.get("cache").is_none());
+
+        e.cache = Some(CacheStats {
+            hits: 7,
+            loads: 1,
+            bytes_read: 4096,
+        });
+        let j = e.to_json();
+        let c = j.get("cache").unwrap();
+        assert_eq!(c.get("hits").unwrap().as_usize(), Some(7));
+        assert_eq!(c.get("loads").unwrap().as_usize(), Some(1));
+        assert_eq!(c.get("bytes_read").unwrap().as_usize(), Some(4096));
+        assert!((c.get("hit_rate").unwrap().as_f64().unwrap() - 0.875).abs() < 1e-12);
+    }
+
+    /// A sink that only exposes bytes once `flush` is called — models a
+    /// buffered file so the test can see exactly when flushes happen.
+    struct FlushGate {
+        pending: Vec<u8>,
+        flushed: std::sync::Arc<std::sync::Mutex<Vec<u8>>>,
+    }
+
+    impl Write for FlushGate {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.pending.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            self.flushed.lock().unwrap().append(&mut self.pending);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn json_logger_flushes_every_event_and_on_drop() {
+        let flushed = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        let mut log = JsonLogger::new(FlushGate {
+            pending: Vec::new(),
+            flushed: flushed.clone(),
+        });
+        log.on_epoch(&ev(0, Some(1.0)));
+        // visible immediately — before on_finish / into_inner / drop —
+        // so an abort mid-run cannot lose completed epochs
+        {
+            let seen = String::from_utf8(flushed.lock().unwrap().clone()).unwrap();
+            assert!(
+                seen.starts_with("EPOCH_JSON {"),
+                "epoch line not flushed eagerly: {seen:?}"
+            );
+        }
+        log.on_epoch(&ev(1, Some(0.9)));
+        drop(log); // no on_finish: drop alone must leave nothing buffered
+        let seen = String::from_utf8(flushed.lock().unwrap().clone()).unwrap();
+        assert_eq!(seen.lines().count(), 2);
     }
 
     #[test]

@@ -3,12 +3,14 @@
 //! evaluation cadence, early stopping, learning-rate decay, periodic
 //! checkpoints and mid-run publishes to a serve [`Server`].
 
+use std::path::Path;
 use std::time::Instant;
 
 use anyhow::{ensure, Context, Result};
 
-use crate::coordinator::{TrainConfig, Trainer};
-use crate::data::{PagedTensor, TensorView};
+use crate::coordinator::{EpochStats, TrainConfig, Trainer};
+use crate::data::{CacheStats, PagedTensor, TensorView};
+use crate::obs::{Metrics, MetricsFile};
 use crate::serve::{ModelSnapshot, Server};
 use crate::session::observer::{EpochEvent, Observer, RunReport};
 use crate::session::spec::{DataSource, RunSpec, Schedule};
@@ -50,6 +52,54 @@ pub struct Session {
     trainer: Trainer,
     train: TrainData,
     test: SparseTensor,
+    metrics: Option<SessionMetrics>,
+}
+
+/// The telemetry half of a session: a registry the epoch loop feeds and
+/// the `metrics.jsonl` sink it snapshots into.  Only exists when
+/// `--metrics` / [`RunSpec::metrics`] switched it on; export errors are
+/// swallowed (observation must never abort a run).
+struct SessionMetrics {
+    registry: Metrics,
+    file: MetricsFile,
+}
+
+impl SessionMetrics {
+    /// Fold one epoch's trainer stats (and paged-cache traffic, when
+    /// training from a store) into the registry, then append a
+    /// `"scope":"epoch"` snapshot line.
+    fn observe_epoch(&mut self, stats: &EpochStats, cache: Option<&CacheStats>) {
+        let r = &self.registry;
+        r.counter("train.epochs").inc();
+        r.counter("train.blocks")
+            .add((stats.factor.blocks + stats.core.blocks) as u64);
+        r.counter("train.samples")
+            .add((stats.factor.samples + stats.core.samples) as u64);
+        r.counter("train.padded_slots")
+            .add((stats.factor.padded_slots + stats.core.padded_slots) as u64);
+        r.counter("train.inv_hits")
+            .add(stats.factor.inv_hits + stats.core.inv_hits);
+        r.counter("train.inv_misses")
+            .add(stats.factor.inv_misses + stats.core.inv_misses);
+        r.hist("train.epoch_ns")
+            .record_duration(stats.factor.total() + stats.core.total());
+        r.hist("train.factor_ns").record_duration(stats.factor.total());
+        r.hist("train.core_ns").record_duration(stats.core.total());
+        r.hist("train.stage_wait_ns")
+            .record_duration(stats.factor.sample + stats.core.sample);
+        if let Some(c) = cache {
+            r.counter("data.page_hits").add(c.hits);
+            r.counter("data.page_loads").add(c.loads);
+            r.counter("data.bytes_read").add(c.bytes_read);
+        }
+        let snap = self.registry.snapshot();
+        let _ = self.file.write_snapshot("epoch", &snap);
+    }
+
+    fn finish(&mut self) {
+        let snap = self.registry.snapshot();
+        let _ = self.file.write_snapshot("final", &snap);
+    }
 }
 
 impl Session {
@@ -69,12 +119,32 @@ impl Session {
              instead of a serial Session",
             spec.train.workers
         );
-        if let DataSource::Store(path) = &spec.data {
+        let mut session = if let DataSource::Store(path) = &spec.data {
             let paged = PagedTensor::open(path).with_context(|| format!("opening {path:?}"))?;
-            return Session::with_paged(paged, spec.train.clone(), spec.schedule.clone());
+            Session::with_paged(paged, spec.train.clone(), spec.schedule.clone())?
+        } else {
+            let tensor = spec.data.resolve()?;
+            Session::with_owned_tensor(tensor, spec.train.clone(), spec.schedule.clone())?
+        };
+        if let Some(path) = &spec.metrics {
+            session.enable_metrics(path)?;
         }
-        let tensor = spec.data.resolve()?;
-        Session::with_owned_tensor(tensor, spec.train.clone(), spec.schedule.clone())
+        Ok(session)
+    }
+
+    /// Switch on telemetry export: the epoch loop feeds an [`crate::obs`]
+    /// registry and appends one `metrics.jsonl` snapshot line per epoch
+    /// (plus a final one) to `path`.  Strictly passive — the training
+    /// trajectory is bit-identical with or without it (pinned by
+    /// `tests/session.rs`).
+    pub fn enable_metrics(&mut self, path: &Path) -> Result<()> {
+        let file = MetricsFile::create(path)
+            .with_context(|| format!("creating metrics file {path:?}"))?;
+        self.metrics = Some(SessionMetrics {
+            registry: Metrics::new(),
+            file,
+        });
+        Ok(())
     }
 
     /// Build a session that trains out of core from an opened paged
@@ -93,6 +163,7 @@ impl Session {
             trainer,
             train: TrainData::Paged(train),
             test,
+            metrics: None,
         })
     }
 
@@ -144,6 +215,7 @@ impl Session {
             trainer,
             train: TrainData::Ram(train),
             test,
+            metrics: None,
         })
     }
 
@@ -268,16 +340,37 @@ impl Session {
                 lr_a: self.trainer.cfg.hyper.lr_a,
                 checkpoint: None,
                 published: false,
+                cache: None,
             };
             observer.on_epoch(&ev);
             history.push(ev);
         }
 
         let mut epochs_run = 0usize;
+        let mut last_cache = match &self.train {
+            TrainData::Paged(p) => p.cache_stats_full(),
+            TrainData::Ram(_) => CacheStats::default(),
+        };
         for epoch in 1..=sched.epochs {
             let lr_a = self.trainer.cfg.hyper.lr_a;
             let stats = self.trainer.epoch(self.train.view())?;
             epochs_run = epoch;
+
+            // paged-cache traffic attributable to this epoch (reported in
+            // the event / stats JSON whether or not --metrics is set)
+            let cache = match &self.train {
+                TrainData::Paged(p) => {
+                    let now = p.cache_stats_full();
+                    let delta = now.delta_since(&last_cache);
+                    last_cache = now;
+                    Some(delta)
+                }
+                TrainData::Ram(_) => None,
+            };
+
+            if let Some(m) = &mut self.metrics {
+                m.observe_epoch(&stats, cache.as_ref());
+            }
 
             let eval = if can_eval && epoch % sched.eval_every == 0 {
                 let (rmse, mae) = self.trainer.evaluate(&self.test)?;
@@ -334,6 +427,7 @@ impl Session {
                 lr_a,
                 checkpoint,
                 published,
+                cache,
             };
             observer.on_epoch(&ev);
             history.push(ev);
@@ -356,6 +450,10 @@ impl Session {
             if !last_epoch_checkpointed {
                 self.trainer.snapshot().save(path)?;
             }
+        }
+
+        if let Some(m) = &mut self.metrics {
+            m.finish();
         }
 
         let report = RunReport {

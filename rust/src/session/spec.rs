@@ -324,6 +324,14 @@ pub enum SpecError {
     /// distributed driver has no attached server (publish from the saved
     /// final model instead).
     WorkersWithPublish,
+    /// `metrics` names a path that cannot be written: empty, an existing
+    /// directory, or inside a directory that does not exist.
+    BadMetricsPath {
+        /// The offending path.
+        path: PathBuf,
+        /// Why it was rejected.
+        detail: String,
+    },
 }
 
 impl fmt::Display for SpecError {
@@ -414,6 +422,9 @@ impl fmt::Display for SpecError {
                 "sharded runs have no attached serve server \
                  (set publish_every to 0 and publish from the saved model)"
             ),
+            SpecError::BadMetricsPath { path, detail } => {
+                write!(f, "metrics path {path:?} is not writable: {detail}")
+            }
         }
     }
 }
@@ -441,6 +452,12 @@ pub struct RunSpec {
     pub train: TrainConfig,
     /// The epoch loop: duration, evaluation, stopping, checkpointing.
     pub schedule: Schedule,
+    /// Telemetry sink: when set, the run appends `metrics.jsonl` snapshot
+    /// lines (and, for sharded runs, the dist flight-recorder dump) to
+    /// this path — the CLI's `--metrics FILE`.  `None` keeps telemetry
+    /// export off; either way the trajectory is bit-identical
+    /// (observation is strictly passive — see [`crate::obs`]).
+    pub metrics: Option<PathBuf>,
 }
 
 impl Default for RunSpec {
@@ -455,6 +472,7 @@ impl Default for RunSpec {
             data: DataSource::Toy,
             train: TrainConfig { backend, ..base },
             schedule: Schedule::default(),
+            metrics: None,
         }
     }
 }
@@ -569,6 +587,29 @@ impl RunSpec {
         if s.checkpoint_every > 0 && s.checkpoint.is_none() {
             return Err(SpecError::CheckpointCadenceWithoutPath);
         }
+        // --- metrics ---------------------------------------------------
+        if let Some(m) = &self.metrics {
+            if m.as_os_str().is_empty() {
+                return Err(SpecError::BadMetricsPath {
+                    path: m.clone(),
+                    detail: "empty path".to_string(),
+                });
+            }
+            if m.is_dir() {
+                return Err(SpecError::BadMetricsPath {
+                    path: m.clone(),
+                    detail: "is a directory".to_string(),
+                });
+            }
+            if let Some(parent) = m.parent() {
+                if !parent.as_os_str().is_empty() && !parent.is_dir() {
+                    return Err(SpecError::BadMetricsPath {
+                        path: m.clone(),
+                        detail: format!("parent directory {parent:?} does not exist"),
+                    });
+                }
+            }
+        }
         Ok(())
     }
 
@@ -652,6 +693,13 @@ impl RunSpec {
             ("data", data),
             ("train", train),
             ("schedule", schedule),
+            (
+                "metrics",
+                match &self.metrics {
+                    None => Json::Null,
+                    Some(m) => json::s(&m.to_string_lossy()),
+                },
+            ),
         ])
     }
 
@@ -741,10 +789,18 @@ impl RunSpec {
             checkpoint,
             publish_every: get_usize(s, "publish_every")?,
         };
+        // absent in pre-telemetry spec files (same SPEC_VERSION): None
+        let metrics = match v.get("metrics") {
+            None | Some(Json::Null) => None,
+            Some(m) => Some(PathBuf::from(m.as_str().ok_or_else(|| {
+                format!("metrics: expected a string path, got {m:?}")
+            })?)),
+        };
         Ok(RunSpec {
             data,
             train,
             schedule,
+            metrics,
         })
     }
 

@@ -283,6 +283,7 @@ fn base_spec(nnz: usize, epochs: usize) -> RunSpec {
             test_frac: 0.0,
             ..Schedule::default()
         },
+        metrics: None,
     }
 }
 
@@ -417,4 +418,126 @@ fn fault_injection_recovers() {
         (dist_rmse - serial_rmse).abs() <= 0.35 * serial_rmse,
         "faulted rmse {dist_rmse} strays from serial {serial_rmse}"
     );
+}
+
+// ======================================================================
+// telemetry: passivity and the flight recorder
+// ======================================================================
+
+/// Telemetry is strictly passive: the same 1-worker spec with and
+/// without a metrics sink produces a bit-identical model (and the
+/// 1-worker run is already pinned byte-for-byte against serial above,
+/// so this transitively pins the serial trajectory too).
+#[test]
+fn dist_metrics_are_passive_and_the_file_is_well_formed() {
+    let dir = std::env::temp_dir().join("ft_dist_metrics_passive");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("metrics.jsonl");
+
+    let mut spec = base_spec(2_000, 3);
+    spec.train.workers = 1;
+    let plain = run_local(&spec, &mut NullObserver).unwrap();
+
+    spec.metrics = Some(path.clone());
+    let observed = run_local(&spec, &mut NullObserver).unwrap();
+
+    assert_models_bit_identical(&plain.model, &observed.model);
+    assert_eq!(plain.report.epochs_run, observed.report.epochs_run);
+
+    // every line parses, kinds are from the known set, and both the
+    // snapshot and the flight tape made it to disk
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<Json> = text
+        .lines()
+        .map(|l| Json::parse(l).expect("line parses"))
+        .collect();
+    assert!(!lines.is_empty());
+    let kind = |j: &Json| j.get("kind").and_then(|k| k.as_str()).unwrap().to_string();
+    assert!(lines.iter().all(|l| {
+        matches!(kind(l).as_str(), "metrics" | "flight_head" | "flight")
+    }));
+    assert!(lines.iter().any(|l| kind(l) == "metrics"));
+    assert!(lines.iter().filter(|l| kind(l) == "flight_head").count() == 1);
+    assert!(lines.iter().any(|l| kind(l) == "flight"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The acceptance scenario: a 4-worker fault-injection run with
+/// `--metrics` dumps a flight tape whose directives include the Evict
+/// of the killed worker, and whose counters saw the eviction.
+#[test]
+fn fault_injection_writes_flight_tape_with_the_evict() {
+    let dir = std::env::temp_dir().join("ft_dist_flight_tape");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("metrics.jsonl");
+
+    let mut spec = base_spec(3_000, 3);
+    spec.train.workers = 4;
+    spec.metrics = Some(path.clone());
+    // worker index 3 = member 4 dies silently in round 1
+    let opts = LocalOpts {
+        fault: Some(FaultSpec {
+            member_index: 3,
+            round: 1,
+        }),
+    };
+    let run = run_local_with(&spec, &opts, &mut NullObserver).unwrap();
+    assert_eq!(run.final_state.phase, DistPhase::Done);
+    assert!(!run.final_state.members.contains(&4), "member 4 survived");
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<Json> = text
+        .lines()
+        .map(|l| Json::parse(l).expect("line parses"))
+        .collect();
+
+    // the tape holds the Evict directive for the member that died
+    let evicts: Vec<u64> = lines
+        .iter()
+        .filter(|l| l.get("kind").and_then(|k| k.as_str()) == Some("flight"))
+        .filter(|l| l.get("role").and_then(|r| r.as_str()) == Some("directive"))
+        .filter_map(|l| l.get("body"))
+        .filter(|b| b.get("kind").and_then(|k| k.as_str()) == Some("evict"))
+        .filter_map(|b| b.get("member").and_then(|m| m.as_f64()))
+        .map(|m| m as u64)
+        .collect();
+    assert!(
+        evicts.contains(&4),
+        "no Evict for member 4 on the flight tape: {evicts:?}"
+    );
+
+    // heartbeats and the protocol's happy-path messages are on tape too
+    let has = |role: &str, k: &str| {
+        lines.iter().any(|l| {
+            l.get("role").and_then(|r| r.as_str()) == Some(role)
+                && l.get("body").and_then(|b| b.get("kind")).and_then(|x| x.as_str()) == Some(k)
+        })
+    };
+    assert!(has("event", "heartbeat"));
+    assert!(has("event", "step_complete"));
+    assert!(has("directive", "begin_round"));
+
+    // the final registry snapshot counted the eviction and the rounds
+    let snap = lines
+        .iter()
+        .find(|l| l.get("kind").and_then(|k| k.as_str()) == Some("metrics"))
+        .expect("a metrics snapshot line");
+    let counter = |name: &str| {
+        snap.get("counters")
+            .and_then(|c| c.get(name))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0)
+    };
+    assert!(counter("dist.evictions") >= 1.0);
+    assert!(counter("dist.ticks") > 0.0);
+    assert!(counter("dist.heartbeats") > 0.0);
+    assert!(counter("dist.rounds") >= 3.0);
+    let barrier_count = snap
+        .get("hists")
+        .and_then(|h| h.get("dist.barrier_ns"))
+        .and_then(|h| h.get("count"))
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0);
+    assert!(barrier_count >= 3.0, "barrier hist recorded {barrier_count}");
+    let _ = std::fs::remove_dir_all(&dir);
 }

@@ -83,6 +83,7 @@ fn reference_spec(policy: KernelPolicy) -> RunSpec {
             test_frac: TEST_FRAC,
             ..Schedule::default()
         },
+        metrics: None,
     }
 }
 

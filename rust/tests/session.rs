@@ -15,6 +15,7 @@ use fasttucker::session::{
 };
 use fasttucker::synth::{generate, SynthConfig};
 use fasttucker::tensor::split::train_test_split;
+use fasttucker::util::json::Json;
 use fasttucker::util::rng::Pcg32;
 
 // ======================================================================
@@ -46,6 +47,7 @@ fn valid_spec() -> RunSpec {
             ..TrainConfig::default()
         },
         schedule: Schedule::default(),
+        metrics: None,
     }
 }
 
@@ -138,6 +140,14 @@ fn random_spec(rng: &mut Pcg32) -> RunSpec {
         data,
         train,
         schedule,
+        metrics: if rng.gen_range(2) == 0 {
+            None
+        } else {
+            Some(PathBuf::from(format!(
+                "/tmp/metrics_{}.jsonl",
+                rng.gen_range(1000)
+            )))
+        },
     }
 }
 
@@ -369,6 +379,18 @@ fn validate_rejection_table() {
             }),
             |e| matches!(e, SpecError::WorkersWithPublish),
         ),
+        (
+            "metrics path in a nonexistent directory",
+            Box::new(|s| {
+                s.metrics = Some(PathBuf::from("/nonexistent/ft_metrics/m.jsonl"));
+            }),
+            |e| matches!(e, SpecError::BadMetricsPath { .. }),
+        ),
+        (
+            "metrics path is a directory",
+            Box::new(|s| s.metrics = Some(std::env::temp_dir())),
+            |e| matches!(e, SpecError::BadMetricsPath { .. }),
+        ),
     ];
     for (label, mutate, expect) in cases {
         let mut spec = valid_spec();
@@ -548,6 +570,91 @@ fn from_spec_runs_toy_end_to_end() {
     let report = session.run(&mut NullObserver).unwrap();
     assert_eq!(report.epochs_run, 2);
     assert!(report.final_rmse.unwrap().is_finite());
+}
+
+/// The passivity contract, pinned: the same spec with and without a
+/// metrics sink yields a bit-identical model and per-epoch RMSE/MAE
+/// history, and the sink itself is well-formed JSONL with per-epoch
+/// train counters.
+#[test]
+fn metrics_are_passive_and_the_jsonl_is_well_formed() {
+    let dir = std::env::temp_dir().join("ft_session_metrics_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("metrics.jsonl");
+
+    // the deterministic serial reference backend: passivity here means
+    // bit-identical, not merely statistically equal
+    let base = RunSpec {
+        train: TrainConfig {
+            backend: Backend::CpuRef,
+            ..TrainConfig::default()
+        },
+        schedule: Schedule {
+            epochs: 2,
+            ..Schedule::default()
+        },
+        ..valid_spec()
+    };
+    let mut plain = Session::from_spec(&base).unwrap();
+    let plain_report = plain.run(&mut NullObserver).unwrap();
+
+    let observed_spec = RunSpec {
+        metrics: Some(path.clone()),
+        ..base.clone()
+    };
+    observed_spec.validate().unwrap();
+    let mut observed = Session::from_spec(&observed_spec).unwrap();
+    let observed_report = observed.run(&mut NullObserver).unwrap();
+
+    // the trajectory is bit-identical: every evaluated epoch, to the bit
+    assert_eq!(plain_report.epochs_run, observed_report.epochs_run);
+    let history_bits: Vec<_> = plain_report
+        .history
+        .iter()
+        .map(|e| (e.epoch, e.rmse.map(f64::to_bits), e.mae.map(f64::to_bits)))
+        .collect();
+    let observed_bits: Vec<_> = observed_report
+        .history
+        .iter()
+        .map(|e| (e.epoch, e.rmse.map(f64::to_bits), e.mae.map(f64::to_bits)))
+        .collect();
+    assert_eq!(history_bits, observed_bits);
+
+    // ... and so is the saved FTM1 model, byte for byte
+    let (pa, pb) = (dir.join("plain.ftm"), dir.join("observed.ftm"));
+    plain.trainer().model.save(&pa).unwrap();
+    observed.trainer().model.save(&pb).unwrap();
+    assert_eq!(std::fs::read(&pa).unwrap(), std::fs::read(&pb).unwrap());
+
+    // the sink: one "metrics" line per epoch plus the final snapshot,
+    // each parsing and carrying the train counters
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<Json> = text
+        .lines()
+        .map(|l| Json::parse(l).expect("line parses"))
+        .collect();
+    let scopes: Vec<&str> = lines
+        .iter()
+        .map(|l| l.get("scope").and_then(|s| s.as_str()).unwrap())
+        .collect();
+    assert_eq!(scopes, vec!["epoch", "epoch", "final"]);
+    for l in &lines {
+        assert_eq!(l.get("kind").and_then(|k| k.as_str()), Some("metrics"));
+        let epochs = l
+            .get("counters")
+            .and_then(|c| c.get("train.epochs"))
+            .and_then(|v| v.as_f64())
+            .unwrap();
+        assert!(epochs >= 1.0);
+        let hist_count = l
+            .get("hists")
+            .and_then(|h| h.get("train.epoch_ns"))
+            .and_then(|h| h.get("count"))
+            .and_then(|v| v.as_f64())
+            .unwrap();
+        assert!(hist_count >= 1.0);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
