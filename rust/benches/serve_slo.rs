@@ -1,0 +1,80 @@
+//! Closed-loop SLO curve for the TCP serving tier (`BENCH_serve_slo.json`).
+//!
+//! Trains a small Netflix-like model in process, publishes it into a
+//! [`Registry`], binds a [`NetServer`] on a loopback port, and walks an
+//! offered-QPS ladder with the [`run_slo`] harness over real sockets —
+//! the full client → poll thread → admission → worker → response path,
+//! framing and syscalls included.  One `BENCH_JSON` row per ladder step
+//! carrying offered vs achieved QPS, p50/p95/p99 client-observed latency,
+//! and the shed / deadline-miss counts that locate the saturation knee.
+//!
+//! Run: `cargo bench --bench serve_slo` (BENCH_QUICK=1 shrinks it).
+
+use fasttucker::coordinator::{Backend, TrainConfig};
+use fasttucker::serve::net::{run_slo, slo_header, NetConfig, NetServer, SloConfig};
+use fasttucker::serve::Registry;
+use fasttucker::session::{NullObserver, Schedule, Session};
+use fasttucker::synth::{generate, SynthConfig};
+use fasttucker::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let (nnz, epochs, steps, step_secs) = if quick {
+        (20_000, 1, vec![100u64, 400], 1.0)
+    } else {
+        (120_000, 3, vec![200u64, 800, 3200, 12800], 3.0)
+    };
+
+    let train = generate(&SynthConfig::netflix_like(nnz, 7));
+    let cfg = TrainConfig {
+        backend: Backend::ParallelCpu,
+        ..TrainConfig::default()
+    };
+    let schedule = Schedule {
+        epochs,
+        eval_every: 0,
+        test_frac: 0.0,
+        ..Schedule::default()
+    };
+    let mut session = Session::with_owned_tensor(train, cfg, schedule)?;
+    session.run(&mut NullObserver)?;
+
+    let registry = Registry::shared();
+    registry.publish("default", session.snapshot());
+    let server = NetServer::bind("127.0.0.1:0", registry, NetConfig::default())?;
+    let addr = server.local_addr().to_string();
+
+    let slo = SloConfig {
+        addr,
+        steps,
+        step_duration: std::time::Duration::from_secs_f64(step_secs),
+        ..SloConfig::default()
+    };
+    let rows = run_slo(&slo)?;
+
+    let stats = server.shutdown();
+
+    println!("\n=== Serve SLO — netflix-like, {nnz} nnz, {} connections ===", slo.connections);
+    println!("{}", slo_header());
+    for row in &rows {
+        println!("{}", row.render());
+    }
+    println!(
+        "server totals: {} frames, {} requests, {} shed, {} deadline-missed",
+        stats.frames, stats.requests, stats.shed, stats.deadline_missed
+    );
+    for row in &rows {
+        // label each scraped row by its ladder step, matching the
+        // label-keyed row convention of the other benches
+        let mut obj = match row.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        obj.insert(
+            "label".to_string(),
+            fasttucker::util::json::s(&format!("qps_{}", row.offered_qps as u64)),
+        );
+        println!("BENCH_JSON {}", Json::Obj(obj).dump());
+    }
+    Ok(())
+}

@@ -42,7 +42,15 @@
 //!   query engine whose predictions are bit-identical to the trainer's
 //!   evaluation path, mode-completion top-K scoring (the recommender
 //!   query), and a threaded request loop with batching and snapshot
-//!   hot-swap so training and serving run concurrently.
+//!   hot-swap so training and serving run concurrently.  On top sits
+//!   the **network tier** ([`serve::net`]): a std-only non-blocking
+//!   TCP front end (newline-delimited JSON frames, request pipelining,
+//!   per-request deadlines, admission control with explicit overload
+//!   shedding, graceful drain), a named+versioned model [`serve::Registry`]
+//!   with atomic promote/rollback, a cross-request fiber-invariant
+//!   completion cache, and a closed-loop SLO load harness
+//!   (`serve --listen` / `query --connect` / `registry` / `slo` on the
+//!   CLI).
 //!
 //! Underneath both sits the **data layer** ([`data`]): the checksummed
 //! `FTB2` paged tensor store, a constant-memory streaming ingester

@@ -6,8 +6,12 @@
 //!                constant memory
 //!   train      — run a decomposition and report per-epoch RMSE/MAE + timings
 //!                (`--store FILE.ftb2` trains out of core)
-//!   serve      — train-or-load a checkpoint and answer batched queries
-//!   query      — one-shot predict / top-K against a checkpoint
+//!   serve      — train-or-load a checkpoint and answer batched queries;
+//!                `--listen ADDR` runs the TCP front end + model registry
+//!   query      — one-shot predict / top-K against a checkpoint, or over
+//!                the wire with `--connect ADDR` (`--stats` for telemetry)
+//!   registry   — promote / rollback / load / list models on a live server
+//!   slo        — closed-loop SLO load harness against a live server
 //!   checkpoint — convert / inspect serve checkpoints (FTCK format)
 //!   cost       — print the Table-4 analytic cost model for a configuration
 //!   info       — runtime / artifact inventory
@@ -18,7 +22,8 @@
 //! flag-driven run and its dumped spec file are bit-identical.
 
 use std::path::{Path, PathBuf};
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
@@ -30,7 +35,11 @@ use fasttucker::dist;
 use fasttucker::kernel::KernelPolicy;
 use fasttucker::model::TuckerModel;
 use fasttucker::obs::{render_text, MetricsFile};
-use fasttucker::serve::{check_coords, mode_topk, Engine, ModelSnapshot, Server};
+use fasttucker::serve::net::{run_slo, slo_header, NetClient, NetConfig, NetServer, SloConfig, SloRow};
+use fasttucker::serve::{
+    check_coords, mode_topk, Engine, ModelSnapshot, Registry, Request, Response, Server,
+};
+use fasttucker::util::json;
 use fasttucker::session::{
     DataSource, EarlyStop, NullObserver, ProgressPrinter, RunSpec, Schedule, Session, SynthPreset,
     SynthSpec,
@@ -53,7 +62,7 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: fasttucker <synth|ingest|train|serve|query|checkpoint|cost|info> [flags]\n\
+    "usage: fasttucker <synth|ingest|train|serve|query|registry|slo|checkpoint|cost|info> [flags]\n\
      \n\
      synth --out FILE [--preset netflix|yahoo|order] [--order N] [--dim I]\n\
            [--nnz K] [--seed S]\n\
@@ -89,8 +98,33 @@ fn usage() -> &'static str {
             layer and, when FILE is given, checkpoints to it before serving;\n\
             --metrics writes per-request latency histograms, batch-size\n\
             distribution and queue stats after the burst, plus a text dump)\n\
+     serve --listen HOST:PORT [--model NAME] [--max-pending N]\n\
+           [--deadline-ms D] [--cache-fibers N] [--publish-every N]\n\
+           [serve's config flags: --checkpoint, --serve-threads, ...]\n\
+           (the network tier: a TCP front end over newline-delimited JSON\n\
+            frames, backed by a model registry; an existing --checkpoint is\n\
+            served directly, otherwise training runs behind the listener,\n\
+            publishing into the registry every --publish-every epochs;\n\
+            drains cleanly on SIGTERM, `query --shutdown`, or a shutdown\n\
+            frame — every accepted request is answered before exit)\n\
      query --checkpoint FILE --coords I1,I2,...,IN [--mode M] [--topk K]\n\
            [--cpu-kernel tiled|scalar|simd]\n\
+     query --connect HOST:PORT [--model NAME] [--deadline-ms D]\n\
+           (--coords ... [--mode M] [--topk K] | --stats | --epoch |\n\
+            --shutdown)\n\
+           (same output formats as the checkpoint path, over the wire;\n\
+            --stats prints the server's telemetry registry, --shutdown\n\
+            asks it to drain)\n\
+     registry <list|promote|rollback|load> --connect HOST:PORT\n\
+           [--model NAME] [--version V] [--path FILE.ftck]\n\
+           (admin ops against a live server; every op prints the\n\
+            resulting registry table)\n\
+     slo   --connect HOST:PORT [--model NAME] [--connections C]\n\
+           [--qps Q1,Q2,...] [--step-secs S] [--deadline-ms D]\n\
+           [--topk-every N] [--mode M] [--k K] [--seed S] [--json FILE]\n\
+           (closed-loop load harness: walks the offered-QPS ladder and\n\
+            reports achieved QPS, p50/p95/p99 latency and shed counts per\n\
+            step; --json writes the BENCH_serve_slo.json row format)\n\
      checkpoint save --model FILE --out FILE [--algo A] [--epoch E]\n\
      checkpoint load --file FILE [--model-out FILE]\n\
      cost  [--order N] [--j J] [--r R] [--m M] [--nnz K]\n\
@@ -107,6 +141,8 @@ fn run(argv: Vec<String>) -> Result<()> {
         "train" => cmd_train(rest.to_vec()),
         "serve" => cmd_serve(rest.to_vec()),
         "query" => cmd_query(rest.to_vec()),
+        "registry" => cmd_registry(rest.to_vec()),
+        "slo" => cmd_slo(rest.to_vec()),
         "checkpoint" => cmd_checkpoint(rest.to_vec()),
         "cost" => cmd_cost(rest.to_vec()),
         "info" => cmd_info(rest.to_vec()),
@@ -446,7 +482,8 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             "checkpoint", "data", "toy", "epochs", "nnz", "algo", "variant", "strategy",
             "backend", "threads", "cpu-kernel", "j", "r", "lr-a", "lr-b", "lam-a", "lam-b",
             "seed", "artifacts", "serve-threads", "batch", "queries", "topk", "mode", "spec",
-            "dump-spec", "metrics",
+            "dump-spec", "metrics", "listen", "model", "max-pending", "deadline-ms",
+            "cache-fibers", "publish-every",
         ],
         &["toy", "dump-spec"],
     )
@@ -476,6 +513,10 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     // post-burst dump then truncate) the same file
     let mut spec = spec;
     let metrics_path = spec.metrics.take();
+    if let Some(addr) = a.get("listen") {
+        let addr = addr.to_string();
+        return cmd_serve_listen(&a, spec, metrics_path, &addr);
+    }
     let ckpt = spec.schedule.checkpoint.clone();
     let snap = match &ckpt {
         Some(p) if p.exists() => {
@@ -599,11 +640,162 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+/// Set by SIGTERM / SIGINT; the `serve --listen` loop polls it and turns
+/// the signal into a graceful drain.
+static TERM_SIGNAL: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+fn install_term_handler() {
+    extern "C" fn on_term(_sig: i32) {
+        TERM_SIGNAL.store(true, Ordering::SeqCst);
+    }
+    // libc is not in the offline crate set; `signal` comes straight from
+    // the platform C library
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    let handler: extern "C" fn(i32) = on_term;
+    // SAFETY: the handler only stores to an atomic (async-signal-safe)
+    unsafe {
+        signal(15, handler as *const () as usize); // SIGTERM
+        signal(2, handler as *const () as usize); // SIGINT
+    }
+}
+
+#[cfg(not(unix))]
+fn install_term_handler() {}
+
+/// `serve --listen`: the network serving tier.  An existing
+/// `--checkpoint` is registered and served directly; otherwise training
+/// runs *behind the listener*, publishing a fresh active version into the
+/// registry every `--publish-every` epochs, so clients query the model as
+/// it converges.  Blocks until a drain completes (wire `shutdown` frame,
+/// `query --connect .. --shutdown`, or SIGTERM) — every accepted request
+/// is answered before exit.
+fn cmd_serve_listen(
+    a: &Args,
+    mut spec: RunSpec,
+    metrics_path: Option<PathBuf>,
+    addr: &str,
+) -> Result<()> {
+    let model_name = a.get_or("model", "default").to_string();
+    let net_cfg = NetConfig {
+        workers: a.get_parse("serve-threads", 2usize).map_err(anyhow::Error::msg)?,
+        max_pending: a.get_parse("max-pending", 256usize).map_err(anyhow::Error::msg)?,
+        default_deadline_ms: a.get_parse("deadline-ms", 0u64).map_err(anyhow::Error::msg)?,
+        policy: spec.train.cpu_kernel,
+        cache_fibers: a.get_parse("cache-fibers", 1024usize).map_err(anyhow::Error::msg)?,
+        ..NetConfig::default()
+    };
+    spec.schedule.publish_every = a
+        .get_parse("publish-every", 1usize)
+        .map_err(anyhow::Error::msg)?;
+
+    let registry = Registry::shared();
+    let ckpt = spec.schedule.checkpoint.clone();
+    let mut pending_train: Option<Session> = None;
+    match &ckpt {
+        Some(p) if p.exists() => {
+            let snap = ModelSnapshot::load(p)?;
+            println!(
+                "loaded checkpoint {p:?}: dims {:?} J {} R {} algo {} epoch {}",
+                snap.dims(),
+                snap.j(),
+                snap.r(),
+                snap.algo().name(),
+                snap.epoch()
+            );
+            registry.insert(&model_name, snap);
+        }
+        _ => {
+            let session = Session::from_spec(&spec)?;
+            // version 1 is the initial model, so queries are answerable
+            // from the first accepted connection; training below
+            // publishes fresher versions as it goes
+            registry.insert(&model_name, session.snapshot());
+            pending_train = Some(session);
+        }
+    }
+
+    let server = NetServer::bind(addr, registry.clone(), net_cfg)?;
+    install_term_handler();
+    println!(
+        "listening on {} — model {:?}, {} workers, max-pending {}, default deadline {} ms",
+        server.local_addr(),
+        model_name,
+        net_cfg.workers,
+        net_cfg.max_pending,
+        net_cfg.default_deadline_ms
+    );
+    println!("(drain with `fasttucker query --connect ADDR --shutdown` or SIGTERM)");
+
+    if let Some(mut session) = pending_train {
+        println!(
+            "training {} epochs of {} on {} behind the listener (publish every {})",
+            spec.schedule.epochs,
+            spec.train.algo.name(),
+            spec.data.describe(),
+            spec.schedule.publish_every
+        );
+        session.run_with_registry(&registry, &model_name, &mut ProgressPrinter)?;
+        // make sure the final model serves even when the cadence didn't
+        // land on the last epoch
+        if spec.schedule.publish_every == 0
+            || spec.schedule.epochs % spec.schedule.publish_every != 0
+        {
+            registry.publish(&model_name, session.snapshot());
+        }
+        println!("training done; serving the final model");
+    }
+
+    while !server.drained() {
+        if TERM_SIGNAL.load(Ordering::SeqCst) {
+            server.handle().stop();
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let obs_snap = server.metrics_snapshot();
+    let stats = server.shutdown();
+    println!(
+        "drained: {} connections, {} frames, {} requests answered, {} shed, \
+         {} deadline-missed, {} errors",
+        stats.connections,
+        stats.frames,
+        stats.requests,
+        stats.shed,
+        stats.deadline_missed,
+        stats.errors
+    );
+    if let Some(path) = &metrics_path {
+        let mut mf = MetricsFile::create(path)
+            .with_context(|| format!("creating metrics file {path:?}"))?;
+        mf.write_snapshot("serve.net", &obs_snap)?;
+        println!("serve metrics -> {}", path.display());
+        print!("{}", render_text(&obs_snap));
+    }
+    Ok(())
+}
+
 /// One-shot query against a checkpoint: predict an entry, or top-K
 /// completion over `--mode` when given.
 fn cmd_query(argv: Vec<String>) -> Result<()> {
-    let a = Args::parse(argv, &["checkpoint", "coords", "mode", "topk", "cpu-kernel"], &[])
-        .map_err(anyhow::Error::msg)?;
+    let a = Args::parse(
+        argv,
+        &[
+            "checkpoint", "coords", "mode", "topk", "cpu-kernel", "connect", "model",
+            "deadline-ms", "stats", "epoch", "shutdown",
+        ],
+        &["stats", "epoch", "shutdown"],
+    )
+    .map_err(anyhow::Error::msg)?;
+    if let Some(addr) = a.get("connect") {
+        let addr = addr.to_string();
+        return query_over_wire(&a, &addr);
+    }
+    ensure!(
+        !a.get_bool("stats") && !a.get_bool("epoch") && !a.get_bool("shutdown"),
+        "--stats / --epoch / --shutdown query a live server: add --connect HOST:PORT"
+    );
     let path = PathBuf::from(a.get("checkpoint").context("--checkpoint FILE required")?);
     let snap = ModelSnapshot::load(&path)?;
     let coords = parse_u32_list(a.get("coords").context("--coords I1,I2,... required")?)
@@ -632,6 +824,178 @@ fn cmd_query(argv: Vec<String>) -> Result<()> {
             }
         }
         None => println!("{:.6}", engine.predict(&coords)),
+    }
+    Ok(())
+}
+
+/// The `query --connect` path: the same predict / top-K / epoch shapes as
+/// the checkpoint path (identical output formats), plus `--stats` (remote
+/// telemetry) and `--shutdown` (graceful drain), over the wire protocol.
+fn query_over_wire(a: &Args, addr: &str) -> Result<()> {
+    let mut client = NetClient::connect(addr)?;
+    let model = a.get("model");
+    let deadline_ms = match a.get("deadline-ms") {
+        Some(_) => Some(a.get_parse("deadline-ms", 0u64).map_err(anyhow::Error::msg)?),
+        None => None,
+    };
+    if a.get_bool("shutdown") {
+        client.shutdown()?;
+        println!("server is draining");
+        return Ok(());
+    }
+    if a.get_bool("stats") {
+        match client.call(model, deadline_ms, Request::Stats)? {
+            Response::Stats(snap) => print!("{}", render_text(&snap)),
+            other => bail!("unexpected reply {other:?}"),
+        }
+        return Ok(());
+    }
+    if a.get_bool("epoch") {
+        match client.call(model, deadline_ms, Request::Epoch)? {
+            Response::Epoch(e) => println!("{e}"),
+            other => bail!("unexpected reply {other:?}"),
+        }
+        return Ok(());
+    }
+    let coords = parse_u32_list(
+        a.get("coords")
+            .context("--coords I1,I2,... required (or --stats / --epoch / --shutdown)")?,
+    )
+    .map_err(anyhow::Error::msg)?;
+    let resp = match a.get("mode") {
+        Some(_) => {
+            let mode: usize = a.get_parse("mode", 0).map_err(anyhow::Error::msg)?;
+            let k: usize = a.get_parse("topk", 10).map_err(anyhow::Error::msg)?;
+            client.call(model, deadline_ms, Request::TopK { coords, mode, k })?
+        }
+        None => client.call(model, deadline_ms, Request::Predict { coords })?,
+    };
+    match resp {
+        Response::Predict(v) => println!("{v:.6}"),
+        Response::TopK(top) => {
+            for sc in top {
+                println!("{:>8}  {:.6}", sc.index, sc.score);
+            }
+        }
+        Response::Overloaded => bail!("server overloaded: request shed by admission control"),
+        Response::DeadlineExceeded => bail!("deadline expired before a worker reached the request"),
+        Response::Error(e) => bail!("{e}"),
+        other => bail!("unexpected reply {other:?}"),
+    }
+    Ok(())
+}
+
+/// Registry admin over the wire: `list`, `promote`, `rollback`, `load`.
+/// Every op prints the resulting registry table (the server answers admin
+/// ops with the post-op listing).
+fn cmd_registry(argv: Vec<String>) -> Result<()> {
+    let Some((sub, rest)) = argv.split_first() else {
+        bail!(
+            "usage: registry <list|promote|rollback|load> --connect HOST:PORT \
+             [--model NAME] [--version V] [--path FILE.ftck]"
+        );
+    };
+    let a = Args::parse(rest.to_vec(), &["connect", "model", "version", "path"], &[])
+        .map_err(anyhow::Error::msg)?;
+    let addr = a.get("connect").context("--connect HOST:PORT required")?;
+    let mut client = NetClient::connect(addr)?;
+    let model = || a.get("model").context("--model NAME required");
+    let models = match sub.as_str() {
+        "list" => client.list()?,
+        "promote" => {
+            let version = match a.get("version") {
+                Some(_) => Some(a.get_parse("version", 0u64).map_err(anyhow::Error::msg)?),
+                None => None,
+            };
+            client.promote(model()?, version)?
+        }
+        "rollback" => client.rollback(model()?)?,
+        "load" => client.load(model()?, a.get("path").context("--path FILE.ftck required")?)?,
+        other => bail!("unknown registry subcommand {other:?} (list|promote|rollback|load)"),
+    };
+    println!(
+        "{:<16} {:>8} {:>8} {:>9} {:>7} {:>8} {:>12}  dims",
+        "model", "active", "prev", "versions", "default", "epoch", "params"
+    );
+    for m in models {
+        println!(
+            "{:<16} {:>8} {:>8} {:>9} {:>7} {:>8} {:>12}  {:?}",
+            m.name,
+            m.active,
+            m.previous.map_or_else(|| "-".to_string(), |v| v.to_string()),
+            m.versions.len(),
+            if m.is_default { "yes" } else { "no" },
+            m.epoch,
+            m.params,
+            m.dims
+        );
+    }
+    Ok(())
+}
+
+/// The closed-loop SLO harness against a live server: walk the offered-QPS
+/// ladder, print the SLO table, and optionally write the
+/// `BENCH_serve_slo.json` row format with `--json FILE`.
+fn cmd_slo(argv: Vec<String>) -> Result<()> {
+    let a = Args::parse(
+        argv,
+        &[
+            "connect", "model", "connections", "qps", "step-secs", "deadline-ms", "topk-every",
+            "mode", "k", "seed", "json",
+        ],
+        &[],
+    )
+    .map_err(anyhow::Error::msg)?;
+    let addr = a.get("connect").context("--connect HOST:PORT required")?;
+    let steps: Vec<u64> = match a.get("qps") {
+        Some(list) => parse_u32_list(list)
+            .map_err(anyhow::Error::msg)?
+            .into_iter()
+            .map(u64::from)
+            .collect(),
+        None => vec![200, 800, 3200],
+    };
+    let deadline_ms = match a.get("deadline-ms") {
+        Some(_) => Some(a.get_parse("deadline-ms", 0u64).map_err(anyhow::Error::msg)?),
+        None => None,
+    };
+    let cfg = SloConfig {
+        addr: addr.to_string(),
+        model: a.get("model").map(str::to_string),
+        connections: a.get_parse("connections", 4usize).map_err(anyhow::Error::msg)?,
+        steps,
+        step_duration: Duration::from_secs_f64(
+            a.get_parse("step-secs", 2.0f64).map_err(anyhow::Error::msg)?,
+        ),
+        deadline_ms,
+        topk_every: a.get_parse("topk-every", 8usize).map_err(anyhow::Error::msg)?,
+        mode: a.get_parse("mode", 0usize).map_err(anyhow::Error::msg)?,
+        k: a.get_parse("k", 10usize).map_err(anyhow::Error::msg)?,
+        seed: a.get_parse("seed", 42u64).map_err(anyhow::Error::msg)?,
+    };
+    println!(
+        "slo: {} connections, steps {:?} qps, {}s per step",
+        cfg.connections,
+        cfg.steps,
+        cfg.step_duration.as_secs_f64()
+    );
+    let rows = run_slo(&cfg)?;
+    println!("{}", slo_header());
+    for row in &rows {
+        println!("{}", row.render());
+    }
+    if let Some(path) = a.get("json") {
+        let doc = json::obj(vec![
+            ("bench", json::s("serve_slo")),
+            ("status", json::s("measured")),
+            (
+                "rows",
+                json::arr(rows.iter().map(SloRow::to_json).collect()),
+            ),
+        ]);
+        std::fs::write(path, doc.dump() + "\n")
+            .with_context(|| format!("writing {path:?}"))?;
+        println!("wrote {path}");
     }
     Ok(())
 }

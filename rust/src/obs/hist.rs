@@ -220,4 +220,49 @@ impl HistSnapshot {
             ("buckets", arr(buckets)),
         ])
     }
+
+    /// Decode the [`HistSnapshot::to_json`] form back into a snapshot.
+    ///
+    /// Bucket lower bounds are canonical (`bucket_lo` of the bucket a
+    /// sample landed in), so `bucket_index(lo)` recovers the dense table
+    /// exactly and `to_json -> from_json` round-trips losslessly — this is
+    /// how `query --connect --stats` turns a wire reply back into a
+    /// queryable snapshot.
+    pub fn from_json(v: &Json) -> Result<HistSnapshot, String> {
+        let sum = v
+            .get("sum")
+            .and_then(Json::as_usize)
+            .ok_or("hist missing sum")? as u64;
+        let mut counts = vec![0u64; NUM_BUCKETS];
+        let buckets = v
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .ok_or("hist missing buckets")?;
+        for b in buckets {
+            let pair = b.as_arr().ok_or("hist bucket is not a pair")?;
+            let (lo, c) = match pair {
+                [lo, c] => (
+                    lo.as_usize().ok_or("hist bucket lo not an integer")? as u64,
+                    c.as_usize().ok_or("hist bucket count not an integer")? as u64,
+                ),
+                _ => return Err("hist bucket is not a [lo, count] pair".into()),
+            };
+            let i = bucket_index(lo);
+            if bucket_lo(i) != lo {
+                return Err(format!("hist bucket lower bound {lo} is not canonical"));
+            }
+            counts[i] += c;
+        }
+        let snap = HistSnapshot { counts, sum };
+        if let Some(want) = v.get("count").and_then(Json::as_usize) {
+            if snap.count() != want as u64 {
+                return Err(format!(
+                    "hist count mismatch: header {} vs buckets {}",
+                    want,
+                    snap.count()
+                ));
+            }
+        }
+        Ok(snap)
+    }
 }

@@ -253,6 +253,34 @@ mod tests {
     }
 
     #[test]
+    fn snapshot_json_roundtrips_losslessly() {
+        let m = Metrics::new();
+        m.counter("serve.net.requests").add(17);
+        m.gauge("serve.net.queue_depth").set(-3);
+        let h = m.hist("serve.net.latency.predict");
+        let mut rng = Pcg32::new(0xD0C, 5);
+        for _ in 0..200 {
+            h.record(((rng.next_u32() as u64) >> (rng.next_u32() % 20)) + 1);
+        }
+        let snap = m.snapshot();
+        let wire = snap.to_json().dump();
+        let back =
+            MetricsSnapshot::from_json(&crate::util::json::Json::parse(&wire).unwrap()).unwrap();
+        // full structural equality: counters, gauges, and dense hist
+        // tables all survive the sparse wire form
+        assert_eq!(back, snap);
+        assert_eq!(
+            back.hists["serve.net.latency.predict"].quantile(99.0),
+            snap.hists["serve.net.latency.predict"].quantile(99.0)
+        );
+        // a tampered (non-canonical) bucket bound is rejected, not
+        // silently rebinned: 17 lies inside bucket [16, 18)
+        let bad = wire.replace("\"buckets\":[[", "\"buckets\":[[17,1],[");
+        let parsed = crate::util::json::Json::parse(&bad).unwrap();
+        assert!(MetricsSnapshot::from_json(&parsed).is_err());
+    }
+
+    #[test]
     fn span_timer_records_on_drop() {
         let m = Metrics::new();
         {

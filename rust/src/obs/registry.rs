@@ -203,6 +203,36 @@ impl MetricsSnapshot {
             ("hists", hists),
         ])
     }
+
+    /// Decode the [`MetricsSnapshot::to_json`] form (lossless inverse —
+    /// what the serve wire protocol's `stats` reply is parsed with).
+    pub fn from_json(v: &Json) -> Result<MetricsSnapshot, String> {
+        let section = |key: &str| -> Result<&BTreeMap<String, Json>, String> {
+            match v.get(key) {
+                Some(Json::Obj(m)) => Ok(m),
+                _ => Err(format!("metrics snapshot missing {key:?} object")),
+            }
+        };
+        let mut snap = MetricsSnapshot::default();
+        for (k, j) in section("counters")? {
+            let n = j
+                .as_usize()
+                .ok_or_else(|| format!("counter {k:?} is not a non-negative integer"))?;
+            snap.counters.insert(k.clone(), n as u64);
+        }
+        for (k, j) in section("gauges")? {
+            let n = match j.as_f64() {
+                Some(f) if f.fract() == 0.0 && f.abs() < 9e15 => f as i64,
+                _ => return Err(format!("gauge {k:?} is not an integer")),
+            };
+            snap.gauges.insert(k.clone(), n);
+        }
+        for (k, j) in section("hists")? {
+            let h = HistSnapshot::from_json(j).map_err(|e| format!("hist {k:?}: {e}"))?;
+            snap.hists.insert(k.clone(), h);
+        }
+        Ok(snap)
+    }
 }
 
 /// A scoped timer: records the elapsed wall time into a histogram (in

@@ -1,0 +1,201 @@
+//! Cross-request completion cache: the calc-vs-store knob applied to
+//! traffic.
+//!
+//! A top-K completion computes the fiber-shared exclusion product
+//! `d = Π_{m≠mode} C^(m)[i_m, :]` once per request and then sweeps every
+//! candidate row against it ([`super::Engine::complete_mode`]).  Real
+//! recommender traffic repeats fibers — the same user asks for fresh
+//! recommendations again and again — so recomputing `d` per request is
+//! exactly the wasted work the paper's *calc* scheme pays per training
+//! sample.  [`CompletionCache`] is the *store* scheme across requests: a
+//! bounded, thread-safe map from `(generation, mode, fixed coordinates)`
+//! to the exclusion product.
+//!
+//! Keys embed the registry **generation** of the snapshot that produced
+//! the product (see [`super::Registry`]), not an `Arc` pointer the
+//! allocator could reuse — so promoting or rolling back a model silently
+//! invalidates its cached fibers: lookups under the new generation miss,
+//! and stale entries age out of the LRU.  The cached vector is the exact
+//! product the engine would recompute (elementwise multiplies don't
+//! re-round, so even the SIMD tier is bit-identical here), which keeps
+//! cache hits bit-for-bit equal to cache misses — pinned by
+//! `tests/serve_net.rs`.
+//!
+//! Hit/miss/eviction counters live in the server's [`crate::obs::Metrics`]
+//! registry under `serve.cache.*`, so the SLO harness and `query --stats`
+//! can watch the hit rate move with traffic shape.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::obs::{Counter, Gauge, Metrics};
+
+/// Cache key: which snapshot (by registry generation), which free mode,
+/// and the fixed coordinates (free slot normalized, since completion
+/// ignores it).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct FiberKey {
+    generation: u64,
+    mode: usize,
+    coords: Vec<u32>,
+}
+
+struct Slot {
+    d: Vec<f32>,
+    last_used: u64,
+}
+
+struct Inner {
+    map: HashMap<FiberKey, Slot>,
+    /// Monotonic access clock for LRU eviction.
+    tick: u64,
+}
+
+/// A bounded, thread-safe exclusion-product cache; see the module docs.
+pub struct CompletionCache {
+    inner: Mutex<Inner>,
+    capacity: usize,
+    hits: Arc<Counter>,
+    misses: Arc<Counter>,
+    evictions: Arc<Counter>,
+    entries: Arc<Gauge>,
+}
+
+impl CompletionCache {
+    /// A cache holding at most `capacity` fibers (minimum 1), reporting
+    /// `serve.cache.{hits,misses,evictions,entries}` through `metrics`.
+    pub fn new(capacity: usize, metrics: &Metrics) -> CompletionCache {
+        CompletionCache {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                tick: 0,
+            }),
+            capacity: capacity.max(1),
+            hits: metrics.counter("serve.cache.hits"),
+            misses: metrics.counter("serve.cache.misses"),
+            evictions: metrics.counter("serve.cache.evictions"),
+            entries: metrics.gauge("serve.cache.entries"),
+        }
+    }
+
+    /// Build the key for a completion over `mode` with `coords` fixed.
+    /// The free slot is normalized to 0 so `[4, 9, 6]` and `[4, 0, 6]`
+    /// (mode 1 free) hit the same fiber.
+    pub fn key(generation: u64, mode: usize, coords: &[u32]) -> FiberKey {
+        let mut coords = coords.to_vec();
+        if mode < coords.len() {
+            coords[mode] = 0;
+        }
+        FiberKey {
+            generation,
+            mode,
+            coords,
+        }
+    }
+
+    /// Look up a cached exclusion product, counting a hit or miss.
+    pub fn get(&self, key: &FiberKey) -> Option<Vec<f32>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.map.get_mut(key) {
+            Some(slot) => {
+                slot.last_used = tick;
+                self.hits.inc();
+                Some(slot.d.clone())
+            }
+            None => {
+                self.misses.inc();
+                None
+            }
+        }
+    }
+
+    /// Store a freshly computed exclusion product, evicting the
+    /// least-recently-used fiber when full.
+    pub fn insert(&self, key: FiberKey, d: Vec<f32>) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if !inner.map.contains_key(&key) && inner.map.len() >= self.capacity {
+            // full: evict the stalest fiber (O(capacity) scan, but only on
+            // the insert-when-full path — lookups stay O(1))
+            if let Some(stale) = inner
+                .map
+                .iter()
+                .min_by_key(|(_, slot)| slot.last_used)
+                .map(|(k, _)| k.clone())
+            {
+                inner.map.remove(&stale);
+                self.evictions.inc();
+            }
+        }
+        inner.map.insert(key, Slot { d, last_used: tick });
+        self.entries.set(inner.map.len() as i64);
+    }
+
+    /// Number of cached fibers.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lifetime hit / miss counts (for tests and reports).
+    pub fn hit_miss(&self) -> (u64, u64) {
+        (self.hits.get(), self.misses.get())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_after_insert_and_free_slot_normalization() {
+        let m = Metrics::new();
+        let cache = CompletionCache::new(8, &m);
+        let key = CompletionCache::key(1, 1, &[4, 9, 6]);
+        assert!(cache.get(&key).is_none());
+        cache.insert(key.clone(), vec![1.0, 2.0]);
+        assert_eq!(cache.get(&key), Some(vec![1.0, 2.0]));
+        // the free slot's value is irrelevant to the fiber
+        let same = CompletionCache::key(1, 1, &[4, 0, 6]);
+        assert_eq!(cache.get(&same), Some(vec![1.0, 2.0]));
+        assert_eq!(cache.hit_miss(), (2, 1));
+    }
+
+    #[test]
+    fn generation_change_misses() {
+        let m = Metrics::new();
+        let cache = CompletionCache::new(8, &m);
+        cache.insert(CompletionCache::key(1, 0, &[0, 2, 3]), vec![0.5]);
+        // same fiber, promoted snapshot: different generation, so a miss
+        assert!(cache.get(&CompletionCache::key(2, 0, &[0, 2, 3])).is_none());
+        // different free mode over the same coords is a different fiber
+        assert!(cache.get(&CompletionCache::key(1, 1, &[0, 2, 3])).is_none());
+    }
+
+    #[test]
+    fn lru_eviction_is_bounded_and_stale_first() {
+        let m = Metrics::new();
+        let cache = CompletionCache::new(2, &m);
+        let (a, b, c) = (
+            CompletionCache::key(1, 0, &[0, 1, 1]),
+            CompletionCache::key(1, 0, &[0, 2, 2]),
+            CompletionCache::key(1, 0, &[0, 3, 3]),
+        );
+        cache.insert(a.clone(), vec![1.0]);
+        cache.insert(b.clone(), vec![2.0]);
+        assert!(cache.get(&a).is_some()); // touch a: b is now stalest
+        cache.insert(c.clone(), vec![3.0]);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(&b).is_none(), "stalest fiber should be evicted");
+        assert!(cache.get(&a).is_some());
+        assert!(cache.get(&c).is_some());
+        assert_eq!(m.snapshot().counters["serve.cache.evictions"], 1);
+    }
+}

@@ -162,18 +162,30 @@ impl Engine {
     /// candidate sweep — the shared-invariant reuse that makes batched
     /// per-user recommendation cheap.  Scores are appended to `scores`.
     pub fn complete_mode(&mut self, coords: &[u32], mode: usize, scores: &mut Vec<f32>) {
-        let r = self.snap.r();
-        let rows = self.snap.dims()[mode] as usize;
         self.exclusion(coords, mode);
+        self.score_candidates(mode, &self.d, scores)
+    }
+
+    /// The candidate sweep half of [`Engine::complete_mode`]: score every
+    /// candidate index of `mode` against an exclusion product `d` computed
+    /// earlier (one R-wide dot per candidate, policy-tiered), appending to
+    /// `scores`.  Split out so the serving tier's
+    /// [`super::CompletionCache`] can replay a cached fiber invariant
+    /// without recomputing it — a cached `d` is bit-identical to a fresh
+    /// one, so hits and misses score identically.
+    pub fn score_candidates(&self, mode: usize, d: &[f32], scores: &mut Vec<f32>) {
+        let r = self.snap.r();
+        debug_assert_eq!(d.len(), r);
+        let rows = self.snap.dims()[mode] as usize;
         scores.reserve(rows);
         let table = self.snap.c_table(mode);
         if self.policy == KernelPolicy::Simd {
             for crow in table.chunks_exact(r) {
-                scores.push(simd::dot(crow, &self.d));
+                scores.push(simd::dot(crow, d));
             }
         } else {
             for crow in table.chunks_exact(r) {
-                scores.push(prim::dot(crow, &self.d));
+                scores.push(prim::dot(crow, d));
             }
         }
     }

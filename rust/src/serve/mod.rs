@@ -25,17 +25,35 @@
 //!   fresh model mid-training while in-flight queries keep reading the
 //!   old one.
 //!
+//! On top of the in-process layers sits the network tier:
+//!
+//! * [`registry`] — [`Registry`]: named, versioned snapshots with atomic
+//!   promote / rollback (readers resolve a coherent `(snapshot,
+//!   generation)` pair, never a torn mix).
+//! * [`cache`] — [`CompletionCache`]: the calc-vs-store knob applied to
+//!   traffic — a bounded LRU of fiber exclusion products keyed by
+//!   registry generation, bit-identical on hit and miss.
+//! * [`net`] — the TCP front end ([`NetServer`]), wire protocol, client
+//!   ([`NetClient`]) and SLO load harness ([`net::run_slo`]).
+//!
 //! Lifecycle: `Trainer::snapshot()` freezes the live model →
-//! `Server::publish` swaps it in (or `ModelSnapshot::save` persists it) →
-//! `ModelSnapshot::load` revives it in a later process → [`Engine`] /
-//! [`Server`] answer queries.  See ARCHITECTURE.md §Serving layer.
+//! `Server::publish` / [`Registry::publish`] swaps it in (or
+//! `ModelSnapshot::save` persists it) → `ModelSnapshot::load` revives it
+//! in a later process → [`Engine`] / [`Server`] / [`NetServer`] answer
+//! queries.  See ARCHITECTURE.md §Serving layer.
 
+pub mod cache;
 pub mod engine;
+pub mod net;
+pub mod registry;
 pub mod server;
 pub mod snapshot;
 pub mod topk;
 
+pub use cache::CompletionCache;
 pub use engine::Engine;
+pub use net::{NetClient, NetConfig, NetServer, NetServerHandle};
+pub use registry::{ModelInfo, Registry};
 pub use server::{check_coords, Request, Response, ServeStats, Server, ServerHandle};
 pub use snapshot::ModelSnapshot;
 pub use topk::{mode_topk, top_k, Scored};

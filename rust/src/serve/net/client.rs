@@ -1,0 +1,188 @@
+//! A blocking client for the serving wire protocol.
+//!
+//! One [`NetClient`] owns one TCP connection.  The simple API
+//! ([`NetClient::call`] and the admin helpers) is strictly
+//! request/response; the split [`NetClient::send`] / [`NetClient::recv`]
+//! pair pipelines — the SLO harness keeps a window of requests in flight
+//! per connection and correlates replies by id, which the protocol
+//! permits explicitly (responses may arrive out of order).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::super::registry::ModelInfo;
+use super::super::server::{Request, Response};
+use super::wire::{self, NetRequest, NetResponse};
+
+/// A blocking connection to a [`super::NetServer`].
+pub struct NetClient {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+    next_id: u64,
+}
+
+impl NetClient {
+    /// Connect to `addr` (e.g. `127.0.0.1:7171`).
+    pub fn connect(addr: &str) -> Result<NetClient> {
+        let writer = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        let _ = writer.set_nodelay(true);
+        let reader = BufReader::new(writer.try_clone().context("cloning the socket")?);
+        Ok(NetClient {
+            writer,
+            reader,
+            next_id: 0,
+        })
+    }
+
+    /// Bound every read with a timeout (`None` blocks forever).
+    pub fn set_read_timeout(&mut self, dur: Option<Duration>) -> Result<()> {
+        self.reader
+            .get_ref()
+            .set_read_timeout(dur)
+            .context("setting the read timeout")?;
+        Ok(())
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        self.next_id += 1;
+        self.next_id
+    }
+
+    fn write_frame(&mut self, frame: &str) -> Result<()> {
+        self.writer
+            .write_all(frame.as_bytes())
+            .and_then(|()| self.writer.write_all(b"\n"))
+            .context("writing a frame")?;
+        Ok(())
+    }
+
+    /// Send one request frame without waiting for its reply; returns the
+    /// correlation id to match against [`NetClient::recv`] frames.
+    pub fn send(
+        &mut self,
+        model: Option<&str>,
+        deadline_ms: Option<u64>,
+        req: Request,
+    ) -> Result<u64> {
+        let id = self.fresh_id();
+        self.write_frame(&wire::encode_request(&NetRequest::Call {
+            id,
+            model: model.map(str::to_string),
+            deadline_ms,
+            req,
+        }))?;
+        Ok(id)
+    }
+
+    /// Read the next response frame (blocks; `Err` on EOF or timeout).
+    pub fn recv(&mut self) -> Result<NetResponse> {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            let n = self.reader.read_line(&mut line).context("reading a frame")?;
+            if n == 0 {
+                bail!("server closed the connection");
+            }
+            if !line.trim().is_empty() {
+                return wire::parse_response(&line).map_err(anyhow::Error::msg);
+            }
+        }
+    }
+
+    /// One strict request/response round trip.  Shed (`Overloaded`) and
+    /// expired (`DeadlineExceeded`) outcomes come back as their
+    /// [`Response`] variants, not errors — callers decide how to treat
+    /// them.
+    pub fn call(
+        &mut self,
+        model: Option<&str>,
+        deadline_ms: Option<u64>,
+        req: Request,
+    ) -> Result<Response> {
+        let id = self.send(model, deadline_ms, req)?;
+        let frame = self.recv()?;
+        wire::into_response(frame, id).map_err(anyhow::Error::msg)
+    }
+
+    /// Predict one entry on the server's default (or named) model.
+    pub fn predict(&mut self, model: Option<&str>, coords: &[u32]) -> Result<f32> {
+        match self.call(
+            model,
+            None,
+            Request::Predict {
+                coords: coords.to_vec(),
+            },
+        )? {
+            Response::Predict(v) => Ok(v),
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+
+    fn admin(&mut self, req: NetRequest) -> Result<Vec<ModelInfo>> {
+        let id = req.id();
+        self.write_frame(&wire::encode_request(&req))?;
+        match self.recv()? {
+            NetResponse::Listing { id: got, models } if got == id => Ok(models),
+            NetResponse::Failure { message, code, .. } => bail!("{code}: {message}"),
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+
+    /// Activate a version of `model` (latest when `None`); returns the
+    /// post-op registry listing.
+    pub fn promote(&mut self, model: &str, version: Option<u64>) -> Result<Vec<ModelInfo>> {
+        let id = self.fresh_id();
+        self.admin(NetRequest::Promote {
+            id,
+            model: model.to_string(),
+            version,
+        })
+    }
+
+    /// Swap `model` back to its previously active version.
+    pub fn rollback(&mut self, model: &str) -> Result<Vec<ModelInfo>> {
+        let id = self.fresh_id();
+        self.admin(NetRequest::Rollback {
+            id,
+            model: model.to_string(),
+        })
+    }
+
+    /// Load a server-local checkpoint as a new staged version of `model`.
+    pub fn load(&mut self, model: &str, path: &str) -> Result<Vec<ModelInfo>> {
+        let id = self.fresh_id();
+        self.admin(NetRequest::Load {
+            id,
+            model: model.to_string(),
+            path: path.to_string(),
+        })
+    }
+
+    /// Describe every registered model.
+    pub fn list(&mut self) -> Result<Vec<ModelInfo>> {
+        let id = self.fresh_id();
+        self.admin(NetRequest::List { id })
+    }
+
+    /// Send a `shutdown` frame without waiting for the ack; returns its
+    /// correlation id.  Pairs with [`NetClient::recv`] when pipelined
+    /// requests are still in flight — the drain answers them all, so the
+    /// stopping ack may arrive before or after their responses.
+    pub fn send_shutdown(&mut self) -> Result<u64> {
+        let id = self.fresh_id();
+        self.write_frame(&wire::encode_request(&NetRequest::Shutdown { id }))?;
+        Ok(id)
+    }
+
+    /// Ask the server to drain and exit; returns once acknowledged.
+    pub fn shutdown(&mut self) -> Result<()> {
+        let id = self.send_shutdown()?;
+        match self.recv()? {
+            NetResponse::Stopping { id: got } if got == id => Ok(()),
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+}

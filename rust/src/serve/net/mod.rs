@@ -1,0 +1,31 @@
+//! The network serving tier: TCP front end, wire protocol, client, and
+//! SLO load harness.
+//!
+//! Four pieces, one wire:
+//!
+//! * [`wire`] — the newline-delimited JSON frame protocol (request /
+//!   response grammar, error codes, bit-exact float encoding).
+//! * [`server`] — [`NetServer`]: a std-only non-blocking front end (one
+//!   poll thread multiplexing every connection + N scoring workers) with
+//!   bounded-queue admission control ([`Response::Overloaded`] sheds),
+//!   per-request deadlines ([`Response::DeadlineExceeded`]), registry
+//!   admin ops over the wire, and a graceful drain that answers every
+//!   accepted request before exiting.
+//! * [`client`] — [`NetClient`]: a blocking connection speaking the same
+//!   frames, with strict call and pipelined send/recv APIs.
+//! * [`slo`] — [`run_slo`]: the closed-loop load harness that walks an
+//!   offered-QPS ladder against a live server and reports
+//!   p50/p95/p99/shed per step (`fasttucker slo`, `benches/serve_slo`).
+//!
+//! [`Response::Overloaded`]: super::Response::Overloaded
+//! [`Response::DeadlineExceeded`]: super::Response::DeadlineExceeded
+
+pub mod client;
+pub mod server;
+pub mod slo;
+pub mod wire;
+
+pub use client::NetClient;
+pub use server::{NetConfig, NetHandler, NetServer, NetServerHandle, NetStats, RegistryHandler};
+pub use slo::{run_slo, slo_header, SloConfig, SloRow};
+pub use wire::{NetRequest, NetResponse};

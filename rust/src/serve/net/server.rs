@@ -1,0 +1,771 @@
+//! The non-blocking TCP front end: one poll thread, N scoring workers.
+//!
+//! ```text
+//!             ┌────────────────────────────────────────────────┐
+//!  clients ──►│ poll thread: accept / read / parse / admit /   │
+//!             │ write  (nonblocking sockets, one loop)         │
+//!             └───────┬───────────────────────────▲────────────┘
+//!                     │ bounded job queue         │ completion channel
+//!             ┌───────▼───────────────────────────┴────────────┐
+//!             │ worker threads: deadline check → NetHandler    │
+//!             │ (RegistryHandler: resolve → Engine → cache)    │
+//!             └────────────────────────────────────────────────┘
+//! ```
+//!
+//! **Single-writer framing invariant:** only the poll thread ever writes
+//! a socket.  Workers hand finished frames back over a channel and the
+//! poll thread appends them to the connection's outbox, so two responses
+//! can never interleave mid-frame no matter how many workers raced —
+//! shed responses and slow completions share one connection safely
+//! (pinned by `tests/serve_net.rs`).
+//!
+//! **Admission control:** the job queue is bounded at
+//! [`NetConfig::max_pending`].  A frame that arrives to a full queue is
+//! answered [`Response::Overloaded`] *immediately* — it never queues, so
+//! the queue depth (and therefore queuing latency) is bounded by
+//! construction and overload degrades p99 into explicit sheds instead of
+//! unbounded waiting.  A per-request deadline (frame field or
+//! [`NetConfig::default_deadline_ms`]) is checked when a worker pops the
+//! job: expired jobs answer [`Response::DeadlineExceeded`] without
+//! touching the model.
+//!
+//! **Drain:** a `shutdown` frame, [`NetServerHandle::stop`], or SIGTERM
+//! (CLI path) flips `stopping`.  From that point new frames get
+//! `shutdown` errors, but everything already admitted is executed,
+//! routed, and flushed before the poll thread exits — no accepted
+//! request is ever dropped (regression-pinned).  Admin ops
+//! (`promote`/`rollback`/`list`/`load`) run inline on the poll thread
+//! against the attached [`Registry`]; they are rare, registry ops are
+//! short write-locked pointer swaps, and inlining them keeps their reply
+//! ordered after every earlier frame on the same connection.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::kernel::KernelPolicy;
+use crate::obs::{Counter, Gauge, Hist, Metrics, MetricsSnapshot};
+
+use super::super::cache::CompletionCache;
+use super::super::engine::Engine;
+use super::super::registry::Registry;
+use super::super::server::{check_coords, Request, Response};
+use super::super::snapshot::ModelSnapshot;
+use super::super::topk::top_k;
+use super::wire::{self, NetRequest};
+
+/// How long the poll thread keeps flushing outboxes after the drain
+/// completes logically, before giving up on clients that stopped reading.
+const DRAIN_FLUSH_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Idle sleep between poll iterations that made no progress.
+const IDLE_POLL: Duration = Duration::from_micros(500);
+
+/// Front-end tuning knobs (all bounded-resource limits have defaults
+/// sized for the test/CI tier; production would raise them).
+#[derive(Clone, Copy, Debug)]
+pub struct NetConfig {
+    /// Scoring worker threads.
+    pub workers: usize,
+    /// Admission bound: frames arriving to a queue this deep are shed
+    /// with [`Response::Overloaded`].
+    pub max_pending: usize,
+    /// Deadline applied to frames that don't carry their own
+    /// `deadline_ms` (0 = no default deadline).
+    pub default_deadline_ms: u64,
+    /// Kernel tier for the workers' scoring engines.
+    pub policy: KernelPolicy,
+    /// Capacity of the cross-request completion cache (fibers).
+    pub cache_fibers: usize,
+    /// A connection whose unterminated frame exceeds this many bytes is
+    /// dropped (malformed or hostile input).
+    pub max_frame_bytes: usize,
+    /// A connection whose unread responses exceed this many bytes is
+    /// dropped (client stopped reading).
+    pub max_outbox_bytes: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> NetConfig {
+        NetConfig {
+            workers: 2,
+            max_pending: 256,
+            default_deadline_ms: 0,
+            policy: KernelPolicy::Tiled,
+            cache_fibers: 1024,
+            max_frame_bytes: 1 << 20,
+            max_outbox_bytes: 8 << 20,
+        }
+    }
+}
+
+/// Final counters reported by [`NetServer::shutdown`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NetStats {
+    /// Connections accepted over the server's lifetime.
+    pub connections: u64,
+    /// Frames parsed (requests + admin + malformed).
+    pub frames: u64,
+    /// Query requests admitted to the queue (every one was answered).
+    pub requests: u64,
+    /// Requests shed by admission control.
+    pub shed: u64,
+    /// Requests whose deadline expired in the queue.
+    pub deadline_missed: u64,
+    /// Error responses (malformed frames, validation failures).
+    pub errors: u64,
+}
+
+/// What a worker executes: one admitted query frame.
+struct NetJob {
+    conn: u64,
+    id: u64,
+    model: Option<String>,
+    req: Request,
+    deadline: Option<Instant>,
+    enqueued: Instant,
+}
+
+/// Pre-registered instrument handles (the [`super::super::Server`]
+/// pattern): the hot path records through `Arc`s, never the name table.
+struct NetObs {
+    connections: Arc<Counter>,
+    active_connections: Arc<Gauge>,
+    frames: Arc<Counter>,
+    requests: Arc<Counter>,
+    shed: Arc<Counter>,
+    deadline_misses: Arc<Counter>,
+    errors: Arc<Counter>,
+    queue_depth: Arc<Gauge>,
+    lat_predict: Arc<Hist>,
+    lat_topk: Arc<Hist>,
+    lat_epoch: Arc<Hist>,
+    lat_stats: Arc<Hist>,
+}
+
+impl NetObs {
+    fn new(m: &Metrics) -> NetObs {
+        NetObs {
+            connections: m.counter("serve.net.connections"),
+            active_connections: m.gauge("serve.net.active_connections"),
+            frames: m.counter("serve.net.frames"),
+            requests: m.counter("serve.net.requests"),
+            shed: m.counter("serve.net.shed"),
+            deadline_misses: m.counter("serve.net.deadline_misses"),
+            errors: m.counter("serve.net.errors"),
+            queue_depth: m.gauge("serve.net.queue_depth"),
+            lat_predict: m.hist("serve.net.latency.predict"),
+            lat_topk: m.hist("serve.net.latency.topk"),
+            lat_epoch: m.hist("serve.net.latency.epoch"),
+            lat_stats: m.hist("serve.net.latency.stats"),
+        }
+    }
+
+    fn latency(&self, req: &Request) -> &Hist {
+        match req {
+            Request::Predict { .. } => &self.lat_predict,
+            Request::TopK { .. } => &self.lat_topk,
+            Request::Epoch => &self.lat_epoch,
+            Request::Stats => &self.lat_stats,
+        }
+    }
+}
+
+struct NetShared {
+    queue: Mutex<VecDeque<NetJob>>,
+    ready: Condvar,
+    /// Drain began: no new frames admitted; everything accepted finishes.
+    stopping: AtomicBool,
+    /// Workers may exit (set by the poll thread once the queue is dry).
+    workers_stop: AtomicBool,
+    /// The poll thread has exited (sockets closed, outboxes flushed).
+    drained: AtomicBool,
+    /// Jobs admitted whose response frame has not yet reached an outbox.
+    outstanding: AtomicU64,
+    registry: Option<Arc<Registry>>,
+    metrics: Arc<Metrics>,
+    obs: NetObs,
+    max_pending: usize,
+    default_deadline_ms: u64,
+    max_frame_bytes: usize,
+    max_outbox_bytes: usize,
+}
+
+impl NetShared {
+    fn stats(&self) -> NetStats {
+        NetStats {
+            connections: self.obs.connections.get(),
+            frames: self.obs.frames.get(),
+            requests: self.obs.requests.get(),
+            shed: self.obs.shed.get(),
+            deadline_missed: self.obs.deadline_misses.get(),
+            errors: self.obs.errors.get(),
+        }
+    }
+}
+
+/// What a worker does with one admitted request.  The production
+/// implementation is [`RegistryHandler`]; tests inject slow or failing
+/// fakes through [`NetServer::bind_with_handler`] to pin the admission,
+/// deadline, and framing behavior without a model in the loop.
+pub trait NetHandler: Send {
+    /// Answer one request routed to `model` (registry default if `None`).
+    fn call(&mut self, model: Option<&str>, req: &Request) -> Response;
+}
+
+/// The production [`NetHandler`]: resolve the named model in the
+/// [`Registry`], keep an [`Engine`] bound to the resolved snapshot
+/// (rebinding when the generation moves, i.e. after promote/rollback),
+/// and serve top-K sweeps through the shared [`CompletionCache`].
+pub struct RegistryHandler {
+    registry: Arc<Registry>,
+    cache: Arc<CompletionCache>,
+    policy: KernelPolicy,
+    /// The engine bound to the last resolved (generation, snapshot).
+    bound: Option<(u64, Engine)>,
+}
+
+impl RegistryHandler {
+    /// Build a handler over a shared registry and completion cache.
+    pub fn new(
+        registry: Arc<Registry>,
+        cache: Arc<CompletionCache>,
+        policy: KernelPolicy,
+    ) -> RegistryHandler {
+        RegistryHandler {
+            registry,
+            cache,
+            policy,
+            bound: None,
+        }
+    }
+}
+
+impl NetHandler for RegistryHandler {
+    fn call(&mut self, model: Option<&str>, req: &Request) -> Response {
+        let (snap, generation) = match self.registry.resolve(model) {
+            Ok(resolved) => resolved,
+            Err(e) => return Response::Error(e),
+        };
+        // rebind on generation change (promote/rollback/publish), never on
+        // pointer identity — generations are unique forever
+        if !matches!(&self.bound, Some((g, _)) if *g == generation) {
+            self.bound = Some((generation, Engine::with_policy(snap, self.policy)));
+        }
+        let (_, engine) = self.bound.as_mut().unwrap();
+        match req {
+            Request::Predict { coords } => match check_coords(engine.snapshot(), coords, None) {
+                Ok(()) => Response::Predict(engine.predict(coords)),
+                Err(e) => Response::Error(e),
+            },
+            Request::TopK { coords, mode, k } => {
+                if *mode >= engine.snapshot().order() {
+                    return Response::Error(format!("mode {mode} out of range"));
+                }
+                if let Err(e) = check_coords(engine.snapshot(), coords, Some(*mode)) {
+                    return Response::Error(e);
+                }
+                // the calc-vs-store knob across requests: replay the fiber
+                // invariant when cached (bit-identical to recomputing it)
+                let key = CompletionCache::key(generation, *mode, coords);
+                let mut scores = Vec::new();
+                match self.cache.get(&key) {
+                    Some(d) => engine.score_candidates(*mode, &d, &mut scores),
+                    None => {
+                        let d = engine.exclusion(coords, *mode).to_vec();
+                        engine.score_candidates(*mode, &d, &mut scores);
+                        self.cache.insert(key, d);
+                    }
+                }
+                Response::TopK(top_k(&scores, *k))
+            }
+            Request::Epoch => Response::Epoch(engine.snapshot().epoch()),
+            // Stats never reaches a handler — workers answer it from the
+            // server's own registry (see worker_loop)
+            Request::Stats => Response::Error("stats is answered by the front end".to_string()),
+        }
+    }
+}
+
+/// The running front end; see the module docs for the thread layout.
+pub struct NetServer {
+    shared: Arc<NetShared>,
+    poll: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    local_addr: SocketAddr,
+}
+
+/// Cheap, clonable control handle onto a [`NetServer`].
+#[derive(Clone)]
+pub struct NetServerHandle {
+    shared: Arc<NetShared>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `127.0.0.1:7171`, port 0 picks a free port) and
+    /// serve every model in `registry` with [`RegistryHandler`] workers
+    /// sharing one completion cache.
+    pub fn bind(addr: &str, registry: Arc<Registry>, cfg: NetConfig) -> Result<NetServer> {
+        let metrics = Metrics::shared();
+        let cache = Arc::new(CompletionCache::new(cfg.cache_fibers, &metrics));
+        let policy = cfg.policy;
+        let handler_registry = registry.clone();
+        NetServer::bind_inner(addr, Some(registry), cfg, metrics, move || {
+            Box::new(RegistryHandler::new(
+                handler_registry.clone(),
+                cache.clone(),
+                policy,
+            ))
+        })
+    }
+
+    /// [`NetServer::bind`] with an injected [`NetHandler`] factory (one
+    /// handler per worker) and no registry — the test seam for admission
+    /// control, deadlines, and drain behavior.  Admin ops answer
+    /// `bad_request` when no registry is attached.
+    pub fn bind_with_handler<F>(addr: &str, cfg: NetConfig, factory: F) -> Result<NetServer>
+    where
+        F: FnMut() -> Box<dyn NetHandler>,
+    {
+        NetServer::bind_inner(addr, None, cfg, Metrics::shared(), factory)
+    }
+
+    fn bind_inner<F>(
+        addr: &str,
+        registry: Option<Arc<Registry>>,
+        cfg: NetConfig,
+        metrics: Arc<Metrics>,
+        mut factory: F,
+    ) -> Result<NetServer>
+    where
+        F: FnMut() -> Box<dyn NetHandler>,
+    {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        listener
+            .set_nonblocking(true)
+            .context("setting the listener non-blocking")?;
+        let local_addr = listener.local_addr().context("reading the bound address")?;
+        let obs = NetObs::new(&metrics);
+        let shared = Arc::new(NetShared {
+            queue: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+            stopping: AtomicBool::new(false),
+            workers_stop: AtomicBool::new(false),
+            drained: AtomicBool::new(false),
+            outstanding: AtomicU64::new(0),
+            registry,
+            metrics,
+            obs,
+            max_pending: cfg.max_pending.max(1),
+            default_deadline_ms: cfg.default_deadline_ms,
+            max_frame_bytes: cfg.max_frame_bytes.max(1024),
+            max_outbox_bytes: cfg.max_outbox_bytes.max(4096),
+        });
+        let (tx, rx) = mpsc::channel::<(u64, String)>();
+        let workers = (0..cfg.workers.max(1))
+            .map(|_| {
+                let shared = shared.clone();
+                let tx = tx.clone();
+                let handler = factory();
+                std::thread::spawn(move || worker_loop(&shared, &tx, handler))
+            })
+            .collect();
+        drop(tx);
+        let poll = {
+            let shared = shared.clone();
+            std::thread::spawn(move || poll_loop(&shared, &listener, &rx))
+        };
+        Ok(NetServer {
+            shared,
+            poll: Some(poll),
+            workers,
+            local_addr,
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// A control handle (clone freely across threads).
+    pub fn handle(&self) -> NetServerHandle {
+        NetServerHandle {
+            shared: self.shared.clone(),
+        }
+    }
+
+    /// The front end's telemetry registry.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.shared.metrics.clone()
+    }
+
+    /// Freeze the current telemetry without a queue round-trip.
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        self.shared.metrics.snapshot()
+    }
+
+    /// True once the poll thread has finished draining and exited
+    /// (after a wire `shutdown`, [`NetServerHandle::stop`], or SIGTERM).
+    pub fn drained(&self) -> bool {
+        self.shared.drained.load(Ordering::SeqCst)
+    }
+
+    /// Begin the drain (idempotent), wait for every accepted request to
+    /// be answered and flushed, join all threads, and report final
+    /// counters.
+    pub fn shutdown(mut self) -> NetStats {
+        self.shared.stopping.store(true, Ordering::SeqCst);
+        if let Some(poll) = self.poll.take() {
+            let _ = poll.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.shared.stats()
+    }
+}
+
+impl NetServerHandle {
+    /// Begin a graceful drain: stop admitting, finish everything
+    /// accepted, flush, exit.  Returns immediately; observe completion
+    /// via [`NetServer::drained`] or [`NetServer::shutdown`].
+    pub fn stop(&self) {
+        self.shared.stopping.store(true, Ordering::SeqCst);
+    }
+
+    /// Freeze the current telemetry.
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        self.shared.metrics.snapshot()
+    }
+
+    /// Current counters (live, monotonic).
+    pub fn stats(&self) -> NetStats {
+        self.shared.stats()
+    }
+}
+
+// -- worker side --------------------------------------------------------
+
+fn worker_loop(shared: &NetShared, tx: &mpsc::Sender<(u64, String)>, mut handler: Box<dyn NetHandler>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    shared.obs.queue_depth.set(q.len() as i64);
+                    break job;
+                }
+                if shared.workers_stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = shared.ready.wait(q).unwrap();
+            }
+        };
+        let resp = if job.deadline.is_some_and(|d| Instant::now() >= d) {
+            shared.obs.deadline_misses.inc();
+            Response::DeadlineExceeded
+        } else if matches!(job.req, Request::Stats) {
+            // answered from the server's own registry so remote operators
+            // see the serve.net.* / serve.cache.* instruments
+            Response::Stats(shared.metrics.snapshot())
+        } else {
+            handler.call(job.model.as_deref(), &job.req)
+        };
+        // latency includes queueing (what a client experiences)
+        shared
+            .obs
+            .latency(&job.req)
+            .record_duration(job.enqueued.elapsed());
+        if matches!(resp, Response::Error(_)) {
+            shared.obs.errors.inc();
+        }
+        // the poll thread owns all socket writes: hand the frame back
+        let _ = tx.send((job.conn, wire::response_frame(job.id, &resp)));
+    }
+}
+
+// -- poll side ----------------------------------------------------------
+
+struct Conn {
+    stream: TcpStream,
+    inbuf: Vec<u8>,
+    out: VecDeque<u8>,
+    /// Peer closed its write side; keep until the outbox flushes.
+    eof: bool,
+}
+
+impl Conn {
+    fn push_frame(&mut self, frame: &str) {
+        self.out.extend(frame.as_bytes());
+        self.out.push_back(b'\n');
+    }
+}
+
+/// One poll-loop pass outcome for a connection.
+enum ConnIo {
+    Ok,
+    /// Protocol/socket failure: drop the connection now.
+    Drop,
+}
+
+fn read_conn(conn: &mut Conn, max_frame: usize, frames: &mut Vec<(u64, String)>, cid: u64) -> ConnIo {
+    let mut buf = [0u8; 4096];
+    loop {
+        match conn.stream.read(&mut buf) {
+            Ok(0) => {
+                conn.eof = true;
+                break;
+            }
+            Ok(n) => {
+                conn.inbuf.extend_from_slice(&buf[..n]);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return ConnIo::Drop,
+        }
+    }
+    while let Some(pos) = conn.inbuf.iter().position(|&b| b == b'\n') {
+        let raw: Vec<u8> = conn.inbuf.drain(..=pos).collect();
+        let line = String::from_utf8_lossy(&raw[..raw.len() - 1]).into_owned();
+        if !line.trim().is_empty() {
+            frames.push((cid, line));
+        }
+    }
+    if conn.inbuf.len() > max_frame {
+        // unterminated oversize frame: hostile or broken peer
+        return ConnIo::Drop;
+    }
+    ConnIo::Ok
+}
+
+fn flush_conn(conn: &mut Conn) -> ConnIo {
+    while !conn.out.is_empty() {
+        let (head, _) = conn.out.as_slices();
+        match conn.stream.write(head) {
+            Ok(0) => return ConnIo::Drop,
+            Ok(n) => {
+                conn.out.drain(..n);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return ConnIo::Drop,
+        }
+    }
+    ConnIo::Ok
+}
+
+/// Run a registry admin op and encode its reply: success answers with
+/// the full post-op listing so operators always see the resulting state.
+fn admin_frame<F>(shared: &NetShared, id: u64, op: F) -> String
+where
+    F: FnOnce(&Registry) -> Result<(), String>,
+{
+    match &shared.registry {
+        None => {
+            shared.obs.errors.inc();
+            wire::error_frame(id, "bad_request", "no registry attached to this server")
+        }
+        Some(reg) => match op(reg) {
+            Ok(()) => wire::listing_frame(id, &reg.list()),
+            Err(e) => {
+                shared.obs.errors.inc();
+                wire::error_frame(id, "bad_request", &e)
+            }
+        },
+    }
+}
+
+/// Decide the reply (if any) for one parsed frame.  `None` means the
+/// frame was admitted to the queue and a worker will answer it.
+fn dispatch_frame(shared: &NetShared, cid: u64, line: &str) -> Option<String> {
+    shared.obs.frames.inc();
+    let req = match wire::parse_request(line) {
+        Ok(req) => req,
+        Err(e) => {
+            shared.obs.errors.inc();
+            return Some(wire::error_frame(0, "bad_request", &e));
+        }
+    };
+    if shared.stopping.load(Ordering::SeqCst) {
+        return Some(wire::error_frame(
+            req.id(),
+            "shutdown",
+            "server is draining",
+        ));
+    }
+    match req {
+        NetRequest::Call {
+            id,
+            model,
+            deadline_ms,
+            req,
+        } => {
+            let deadline_ms = deadline_ms.or(match shared.default_deadline_ms {
+                0 => None,
+                ms => Some(ms),
+            });
+            let deadline = deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
+            let mut q = shared.queue.lock().unwrap();
+            if q.len() >= shared.max_pending {
+                drop(q);
+                shared.obs.shed.inc();
+                return Some(wire::response_frame(id, &Response::Overloaded));
+            }
+            q.push_back(NetJob {
+                conn: cid,
+                id,
+                model,
+                req,
+                deadline,
+                enqueued: Instant::now(),
+            });
+            shared.obs.queue_depth.set(q.len() as i64);
+            // increment before releasing the lock: a worker may finish the
+            // job (and this thread route its completion) any time after
+            shared.outstanding.fetch_add(1, Ordering::SeqCst);
+            drop(q);
+            shared.obs.requests.inc();
+            shared.ready.notify_one();
+            None
+        }
+        NetRequest::Promote { id, model, version } => Some(admin_frame(shared, id, |reg| {
+            reg.promote(&model, version).map(|_| ())
+        })),
+        NetRequest::Rollback { id, model } => {
+            Some(admin_frame(shared, id, |reg| reg.rollback(&model).map(|_| ())))
+        }
+        NetRequest::Load { id, model, path } => Some(admin_frame(shared, id, |reg| {
+            let snap = ModelSnapshot::load(Path::new(&path)).map_err(|e| format!("{e:#}"))?;
+            reg.insert(&model, snap);
+            Ok(())
+        })),
+        NetRequest::List { id } => Some(admin_frame(shared, id, |_| Ok(()))),
+        NetRequest::Shutdown { id } => {
+            shared.stopping.store(true, Ordering::SeqCst);
+            Some(wire::stopping_frame(id))
+        }
+    }
+}
+
+fn poll_loop(shared: &NetShared, listener: &TcpListener, rx: &mpsc::Receiver<(u64, String)>) {
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_conn: u64 = 1;
+    let mut frames: Vec<(u64, String)> = Vec::new();
+    let mut dead: Vec<u64> = Vec::new();
+    let mut drain_started: Option<Instant> = None;
+    loop {
+        let mut progress = false;
+
+        // 1. accept (until the drain begins)
+        if !shared.stopping.load(Ordering::SeqCst) {
+            loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        if stream.set_nonblocking(true).is_err() {
+                            continue;
+                        }
+                        let _ = stream.set_nodelay(true);
+                        conns.insert(
+                            next_conn,
+                            Conn {
+                                stream,
+                                inbuf: Vec::new(),
+                                out: VecDeque::new(),
+                                eof: false,
+                            },
+                        );
+                        next_conn += 1;
+                        shared.obs.connections.inc();
+                        shared.obs.active_connections.set(conns.len() as i64);
+                        progress = true;
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(_) => break,
+                }
+            }
+        }
+
+        // 2. read + frame
+        frames.clear();
+        dead.clear();
+        for (&cid, conn) in conns.iter_mut() {
+            if matches!(
+                read_conn(conn, shared.max_frame_bytes, &mut frames, cid),
+                ConnIo::Drop
+            ) {
+                dead.push(cid);
+            }
+        }
+        for cid in dead.drain(..) {
+            conns.remove(&cid);
+            shared.obs.active_connections.set(conns.len() as i64);
+        }
+        progress |= !frames.is_empty();
+
+        // 3. dispatch (admission, admin ops, immediate errors)
+        for (cid, line) in frames.drain(..) {
+            if let Some(reply) = dispatch_frame(shared, cid, &line) {
+                if let Some(conn) = conns.get_mut(&cid) {
+                    conn.push_frame(&reply);
+                }
+            }
+        }
+
+        // 4. route worker completions into outboxes
+        while let Ok((cid, frame)) = rx.try_recv() {
+            shared.outstanding.fetch_sub(1, Ordering::SeqCst);
+            if let Some(conn) = conns.get_mut(&cid) {
+                conn.push_frame(&frame);
+            }
+            progress = true;
+        }
+
+        // 5. flush
+        for (&cid, conn) in conns.iter_mut() {
+            let before = conn.out.len();
+            if matches!(flush_conn(conn), ConnIo::Drop) || conn.out.len() > shared.max_outbox_bytes
+            {
+                dead.push(cid);
+                continue;
+            }
+            progress |= conn.out.len() != before;
+            if conn.eof && conn.out.is_empty() {
+                dead.push(cid);
+            }
+        }
+        for cid in dead.drain(..) {
+            conns.remove(&cid);
+            shared.obs.active_connections.set(conns.len() as i64);
+        }
+
+        // 6. drain exit: everything admitted answered, everything flushed
+        if shared.stopping.load(Ordering::SeqCst) {
+            let started = *drain_started.get_or_insert_with(Instant::now);
+            let logically_done = shared.outstanding.load(Ordering::SeqCst) == 0
+                && shared.queue.lock().unwrap().is_empty();
+            let flushed = conns.values().all(|c| c.out.is_empty());
+            if (logically_done && flushed) || started.elapsed() > DRAIN_FLUSH_TIMEOUT {
+                break;
+            }
+        }
+
+        if !progress {
+            std::thread::sleep(IDLE_POLL);
+        }
+    }
+    // release the workers (queue is dry by construction) and mark done
+    {
+        let _q = shared.queue.lock().unwrap();
+        shared.workers_stop.store(true, Ordering::SeqCst);
+    }
+    shared.ready.notify_all();
+    shared.drained.store(true, Ordering::SeqCst);
+}

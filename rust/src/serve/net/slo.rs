@@ -1,0 +1,283 @@
+//! Closed-loop SLO load harness for the TCP serving tier.
+//!
+//! Drives a running [`super::NetServer`] over real sockets at a ladder of
+//! offered QPS steps and reports, per step, what a latency SLO review
+//! needs: offered vs achieved throughput, p50/p95/p99 client-observed
+//! latency, and how much load admission control shed.  Pacing is
+//! *closed-loop per connection, open-loop in aggregate*: each connection
+//! thread schedules request `i` at `start + i/rate` and never sends
+//! early, but a slow server pushes sends late — the achieved column then
+//! falls below the offered one instead of the harness silently
+//! self-throttling, which is exactly the signal the SLO curve needs at
+//! the saturation knee.
+//!
+//! Request mix: predictions with every `topk_every`-th request a top-K
+//! completion (the expensive op that exercises the
+//! [`super::super::CompletionCache`]).  Coordinates are drawn uniformly
+//! from the model's dims (fetched over the wire via `list`, so the
+//! harness needs nothing but an address), from a seeded
+//! [`Pcg32`](crate::util::rng::Pcg32) stream per connection —
+//! deterministic traffic for a fixed config.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::bench::percentile;
+use crate::util::json::{num, obj, s, Json};
+use crate::util::rng::Pcg32;
+
+use super::super::server::{Request, Response};
+use super::client::NetClient;
+
+/// One load step's configuration ladder and traffic shape.
+#[derive(Clone, Debug)]
+pub struct SloConfig {
+    /// Server address (`host:port`).
+    pub addr: String,
+    /// Model routed to (server default when `None`).
+    pub model: Option<String>,
+    /// Concurrent client connections (each paced independently).
+    pub connections: usize,
+    /// Offered-QPS ladder, one measurement step per entry.
+    pub steps: Vec<u64>,
+    /// Wall-clock duration of each step.
+    pub step_duration: Duration,
+    /// Per-request deadline forwarded to the server (`None` = none).
+    pub deadline_ms: Option<u64>,
+    /// Every `topk_every`-th request is a top-K completion (0 = never).
+    pub topk_every: usize,
+    /// Free mode for top-K requests.
+    pub mode: usize,
+    /// Candidates returned per top-K request.
+    pub k: usize,
+    /// Traffic seed (deterministic coordinates per connection).
+    pub seed: u64,
+}
+
+impl Default for SloConfig {
+    fn default() -> SloConfig {
+        SloConfig {
+            addr: String::new(),
+            model: None,
+            connections: 4,
+            steps: vec![100, 400, 1600],
+            step_duration: Duration::from_secs(2),
+            deadline_ms: None,
+            topk_every: 8,
+            mode: 0,
+            k: 10,
+            seed: 42,
+        }
+    }
+}
+
+/// One measured step of the SLO curve.
+#[derive(Clone, Debug)]
+pub struct SloRow {
+    /// QPS the harness tried to offer.
+    pub offered_qps: f64,
+    /// Successful answers per second actually achieved.
+    pub achieved_qps: f64,
+    /// Requests sent.
+    pub sent: u64,
+    /// Successful answers.
+    pub ok: u64,
+    /// Requests shed by admission control (`overloaded`).
+    pub shed: u64,
+    /// Requests expired in the queue (`deadline`).
+    pub deadline_missed: u64,
+    /// Transport or server errors.
+    pub errors: u64,
+    /// Client-observed latency percentiles, milliseconds.
+    pub p50_ms: f64,
+    /// 95th percentile latency, milliseconds.
+    pub p95_ms: f64,
+    /// 99th percentile latency, milliseconds.
+    pub p99_ms: f64,
+}
+
+impl SloRow {
+    /// The JSON row shape consumed by `scripts/bench_json.sh` and
+    /// `BENCH_serve_slo.json`.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("offered_qps", num(self.offered_qps)),
+            ("achieved_qps", num(self.achieved_qps)),
+            ("sent", num(self.sent as f64)),
+            ("ok", num(self.ok as f64)),
+            ("shed", num(self.shed as f64)),
+            ("deadline_missed", num(self.deadline_missed as f64)),
+            ("errors", num(self.errors as f64)),
+            ("p50_ms", num(self.p50_ms)),
+            ("p95_ms", num(self.p95_ms)),
+            ("p99_ms", num(self.p99_ms)),
+        ])
+    }
+
+    /// One aligned human-readable table line (pairs with [`slo_header`]).
+    pub fn render(&self) -> String {
+        format!(
+            "{:>10.0} {:>10.1} {:>8} {:>8} {:>6} {:>9} {:>7} {:>9.3} {:>9.3} {:>9.3}",
+            self.offered_qps,
+            self.achieved_qps,
+            self.sent,
+            self.ok,
+            self.shed,
+            self.deadline_missed,
+            self.errors,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+        )
+    }
+}
+
+/// Column header matching [`SloRow::render`].
+pub fn slo_header() -> String {
+    format!(
+        "{:>10} {:>10} {:>8} {:>8} {:>6} {:>9} {:>7} {:>9} {:>9} {:>9}",
+        "offered", "achieved", "sent", "ok", "shed", "deadline", "errors", "p50_ms", "p95_ms",
+        "p99_ms",
+    )
+}
+
+/// Per-thread tallies merged into an [`SloRow`] after the step.
+#[derive(Default)]
+struct StepTally {
+    sent: u64,
+    ok: u64,
+    shed: u64,
+    deadline_missed: u64,
+    errors: u64,
+    latencies_ms: Vec<f64>,
+}
+
+/// Run the whole ladder against a live server; one row per step.
+pub fn run_slo(cfg: &SloConfig) -> Result<Vec<SloRow>> {
+    // one probe connection discovers the dims to draw coordinates from
+    let dims = {
+        let mut probe = NetClient::connect(&cfg.addr)?;
+        probe.set_read_timeout(Some(Duration::from_secs(10)))?;
+        let models = probe.list().context("listing models for dims")?;
+        let info = match &cfg.model {
+            Some(name) => models.iter().find(|m| &m.name == name),
+            None => models.iter().find(|m| m.is_default),
+        };
+        match info {
+            Some(m) if !m.dims.is_empty() => m.dims.clone(),
+            Some(m) => bail!("model {:?} reports empty dims", m.name),
+            None => bail!("no matching model registered at {}", cfg.addr),
+        }
+    };
+    cfg.steps
+        .iter()
+        .map(|&qps| run_step(cfg, &dims, qps))
+        .collect()
+}
+
+fn run_step(cfg: &SloConfig, dims: &[u32], qps: u64) -> Result<SloRow> {
+    let connections = cfg.connections.max(1);
+    let per_conn_rate = qps as f64 / connections as f64;
+    if per_conn_rate <= 0.0 {
+        bail!("offered QPS must be positive");
+    }
+    let interval = Duration::from_secs_f64(1.0 / per_conn_rate);
+    let started = Instant::now();
+    let tallies: Vec<Result<StepTally>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..connections)
+            .map(|conn_idx| {
+                scope.spawn(move || -> Result<StepTally> {
+                    drive_connection(cfg, dims, qps, conn_idx, interval)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let elapsed = started.elapsed().as_secs_f64().max(1e-9);
+    let mut merged = StepTally::default();
+    for t in tallies {
+        let t = t?;
+        merged.sent += t.sent;
+        merged.ok += t.ok;
+        merged.shed += t.shed;
+        merged.deadline_missed += t.deadline_missed;
+        merged.errors += t.errors;
+        merged.latencies_ms.extend(t.latencies_ms);
+    }
+    let (p50, p95, p99) = if merged.latencies_ms.is_empty() {
+        (0.0, 0.0, 0.0)
+    } else {
+        let xs = &mut merged.latencies_ms;
+        (
+            percentile(xs, 50.0),
+            percentile(xs, 95.0),
+            percentile(xs, 99.0),
+        )
+    };
+    Ok(SloRow {
+        offered_qps: qps as f64,
+        achieved_qps: merged.ok as f64 / elapsed,
+        sent: merged.sent,
+        ok: merged.ok,
+        shed: merged.shed,
+        deadline_missed: merged.deadline_missed,
+        errors: merged.errors,
+        p50_ms: p50,
+        p95_ms: p95,
+        p99_ms: p99,
+    })
+}
+
+fn drive_connection(
+    cfg: &SloConfig,
+    dims: &[u32],
+    qps: u64,
+    conn_idx: usize,
+    interval: Duration,
+) -> Result<StepTally> {
+    let mut client = NetClient::connect(&cfg.addr)?;
+    client.set_read_timeout(Some(Duration::from_secs(30)))?;
+    // distinct deterministic stream per (seed, step, connection)
+    let mut rng = Pcg32::new(cfg.seed ^ qps, conn_idx as u64);
+    let mut tally = StepTally::default();
+    let start = Instant::now();
+    let mut i: u32 = 0;
+    while start.elapsed() < cfg.step_duration {
+        // never send early; a slow server makes us late (and the achieved
+        // column honest) rather than the pacer hiding the backlog
+        if let Some(wait) = (interval * i).checked_sub(start.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        let coords: Vec<u32> = dims.iter().map(|&d| rng.gen_range(d.max(1))).collect();
+        let req = if cfg.topk_every > 0 && (i as usize) % cfg.topk_every == 0 {
+            Request::TopK {
+                coords,
+                mode: cfg.mode,
+                k: cfg.k,
+            }
+        } else {
+            Request::Predict { coords }
+        };
+        let sent_at = Instant::now();
+        tally.sent += 1;
+        match client.call(cfg.model.as_deref(), cfg.deadline_ms, req) {
+            Ok(Response::Overloaded) => tally.shed += 1,
+            Ok(Response::DeadlineExceeded) => tally.deadline_missed += 1,
+            Ok(Response::Error(_)) => tally.errors += 1,
+            Ok(_) => {
+                tally.ok += 1;
+                tally
+                    .latencies_ms
+                    .push(sent_at.elapsed().as_secs_f64() * 1e3);
+            }
+            // transport failure: the connection is gone, stop this thread
+            Err(_) => {
+                tally.errors += 1;
+                break;
+            }
+        }
+        i += 1;
+    }
+    Ok(tally)
+}

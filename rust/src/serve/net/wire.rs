@@ -1,0 +1,713 @@
+//! The serving wire protocol: newline-delimited JSON frames.
+//!
+//! One frame is one JSON object on one line (`\n`-terminated, no
+//! newlines inside a frame — [`crate::util::json`] escapes them).  A
+//! client writes request frames and reads response frames; the `id`
+//! field (client-chosen, `0 <= id < 2^53`) correlates them, so responses
+//! may legally arrive out of order and a client may pipeline.
+//!
+//! Request frames (`op` selects the shape):
+//!
+//! ```text
+//! {"id":1,"op":"predict","coords":[4,9,6]}
+//! {"id":2,"op":"topk","coords":[4,0,6],"mode":1,"k":10}
+//! {"id":3,"op":"epoch","model":"main"}
+//! {"id":4,"op":"stats"}
+//! {"id":5,"op":"list"}
+//! {"id":6,"op":"promote","model":"main","version":2}
+//! {"id":7,"op":"rollback","model":"main"}
+//! {"id":8,"op":"load","model":"main","path":"ckpt.ftck"}
+//! {"id":9,"op":"shutdown"}
+//! ```
+//!
+//! `model` (optional on query ops: the registry default answers when
+//! absent) and `deadline_ms` (optional: admission deadline relative to
+//! frame arrival) apply to `predict` / `topk` / `epoch` / `stats`.
+//!
+//! Response frames echo `id` and carry one of:
+//!
+//! ```text
+//! {"id":1,"op":"predict","value":0.734127}
+//! {"id":2,"op":"topk","top":[{"index":3,"score":1.25},...]}
+//! {"id":3,"op":"epoch","epoch":12}
+//! {"id":4,"op":"stats","stats":{"counters":...,"gauges":...,"hists":...}}
+//! {"id":5,"op":"registry","models":[{"name":...,"versions":[...],...}]}
+//! {"id":9,"op":"shutdown","stopping":true}
+//! {"id":2,"op":"error","code":"overloaded","error":"queue full"}
+//! ```
+//!
+//! Error codes: `bad_request` (malformed frame / validation failure /
+//! unknown model), `overloaded` (admission control shed the request —
+//! maps to [`Response::Overloaded`]), `deadline` (the deadline expired
+//! queued — maps to [`Response::DeadlineExceeded`]), `shutdown` (the
+//! frame arrived after drain began).
+//!
+//! Float values (`value`, `score`) are emitted by widening `f32 → f64`
+//! and printing the shortest round-tripping decimal, so a prediction
+//! crosses the wire **bit-identically** — the acceptance criterion
+//! pinned by `tests/serve_net.rs`.  Non-finite floats (impossible for a
+//! trained model, but defended anyway) encode as `null` and fail
+//! decoding loudly rather than emitting invalid JSON.
+
+use crate::obs::MetricsSnapshot;
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::super::registry::ModelInfo;
+use super::super::server::{Request, Response};
+use super::super::topk::Scored;
+
+/// One decoded request frame.
+#[derive(Clone, Debug)]
+pub enum NetRequest {
+    /// A query op (`predict` / `topk` / `epoch` / `stats`) routed to a
+    /// model by name (registry default when `None`).
+    Call {
+        /// Correlation id echoed in the response.
+        id: u64,
+        /// Target model name; the registry default answers when absent.
+        model: Option<String>,
+        /// Milliseconds (from frame arrival) before the request is
+        /// answered `deadline` instead of executed.
+        deadline_ms: Option<u64>,
+        /// The in-process request this frame wraps.
+        req: Request,
+    },
+    /// Activate a version (latest when `None`) of `model`.
+    Promote {
+        /// Correlation id echoed in the response.
+        id: u64,
+        /// Target model name.
+        model: String,
+        /// Version to activate; latest when absent.
+        version: Option<u64>,
+    },
+    /// Swap `model` back to its previously active version.
+    Rollback {
+        /// Correlation id echoed in the response.
+        id: u64,
+        /// Target model name.
+        model: String,
+    },
+    /// Load a checkpoint from a server-local path as a new staged version
+    /// of `model`.
+    Load {
+        /// Correlation id echoed in the response.
+        id: u64,
+        /// Target model name.
+        model: String,
+        /// Server-local FTCK checkpoint path.
+        path: String,
+    },
+    /// Describe every registered model.
+    List {
+        /// Correlation id echoed in the response.
+        id: u64,
+    },
+    /// Begin a graceful drain: answer everything accepted so far, then
+    /// exit the poll loop.
+    Shutdown {
+        /// Correlation id echoed in the response.
+        id: u64,
+    },
+}
+
+impl NetRequest {
+    /// The frame's correlation id.
+    pub fn id(&self) -> u64 {
+        match self {
+            NetRequest::Call { id, .. }
+            | NetRequest::Promote { id, .. }
+            | NetRequest::Rollback { id, .. }
+            | NetRequest::Load { id, .. }
+            | NetRequest::List { id }
+            | NetRequest::Shutdown { id } => *id,
+        }
+    }
+}
+
+/// One decoded response frame (client side).
+#[derive(Clone, Debug)]
+pub enum NetResponse {
+    /// A successful query reply.
+    Call {
+        /// Correlation id of the request this answers.
+        id: u64,
+        /// The wrapped in-process response.
+        resp: Response,
+    },
+    /// A registry listing (reply to `list` / `promote` / `rollback` /
+    /// `load`, so admin callers always see the resulting state).
+    Listing {
+        /// Correlation id of the request this answers.
+        id: u64,
+        /// Post-op registry contents.
+        models: Vec<ModelInfo>,
+    },
+    /// Acknowledgement that the server began draining.
+    Stopping {
+        /// Correlation id of the request this answers.
+        id: u64,
+    },
+    /// Any error frame; `code` distinguishes shed / expired / malformed.
+    Failure {
+        /// Correlation id of the request this answers (0 when the frame
+        /// was too malformed to carry one).
+        id: u64,
+        /// Machine-readable error class (see the module docs).
+        code: String,
+        /// Human-readable detail.
+        message: String,
+    },
+}
+
+// -- shared JSON helpers (the dist/event.rs idiom) ---------------------
+
+fn get_u64(v: &Json, key: &str) -> Result<u64, String> {
+    v.get(key)
+        .and_then(Json::as_usize)
+        .map(|u| u as u64)
+        .ok_or_else(|| format!("missing or non-integer field {key:?}"))
+}
+
+fn opt_u64(v: &Json, key: &str) -> Result<Option<u64>, String> {
+    match v.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(j) => j
+            .as_usize()
+            .map(|u| Some(u as u64))
+            .ok_or_else(|| format!("non-integer field {key:?}")),
+    }
+}
+
+fn get_str(v: &Json, key: &str) -> Result<String, String> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("missing or non-string field {key:?}"))
+}
+
+fn get_coords(v: &Json) -> Result<Vec<u32>, String> {
+    v.get("coords")
+        .and_then(Json::as_arr)
+        .ok_or("missing coords array")?
+        .iter()
+        .map(|j| match j.as_usize() {
+            Some(u) if u <= u32::MAX as usize => Ok(u as u32),
+            _ => Err("coordinate is not a u32".to_string()),
+        })
+        .collect()
+}
+
+/// Encode an `f32` for the wire: widen to `f64` (exact) and let the
+/// emitter print the shortest round-tripping decimal.  Non-finite values
+/// become `null` so the frame stays valid JSON.
+fn f32_json(v: f32) -> Json {
+    if v.is_finite() {
+        num(v as f64)
+    } else {
+        Json::Null
+    }
+}
+
+fn f32_field(v: &Json, key: &str) -> Result<f32, String> {
+    match v.get(key) {
+        Some(Json::Num(n)) => Ok(*n as f32),
+        Some(Json::Null) => Err(format!("field {key:?} is non-finite")),
+        _ => Err(format!("missing numeric field {key:?}")),
+    }
+}
+
+// -- request frames ----------------------------------------------------
+
+/// Encode a request frame (one line, no trailing newline).
+pub fn encode_request(req: &NetRequest) -> String {
+    let mut fields: Vec<(&str, Json)> = vec![("id", num(req.id() as f64))];
+    match req {
+        NetRequest::Call {
+            model,
+            deadline_ms,
+            req,
+            ..
+        } => {
+            if let Some(m) = model {
+                fields.push(("model", s(m)));
+            }
+            if let Some(d) = deadline_ms {
+                fields.push(("deadline_ms", num(*d as f64)));
+            }
+            match req {
+                Request::Predict { coords } => {
+                    fields.push(("op", s("predict")));
+                    fields.push((
+                        "coords",
+                        arr(coords.iter().map(|&c| num(c as f64)).collect()),
+                    ));
+                }
+                Request::TopK { coords, mode, k } => {
+                    fields.push(("op", s("topk")));
+                    fields.push((
+                        "coords",
+                        arr(coords.iter().map(|&c| num(c as f64)).collect()),
+                    ));
+                    fields.push(("mode", num(*mode as f64)));
+                    fields.push(("k", num(*k as f64)));
+                }
+                Request::Epoch => fields.push(("op", s("epoch"))),
+                Request::Stats => fields.push(("op", s("stats"))),
+            }
+        }
+        NetRequest::Promote { model, version, .. } => {
+            fields.push(("op", s("promote")));
+            fields.push(("model", s(model)));
+            if let Some(v) = version {
+                fields.push(("version", num(*v as f64)));
+            }
+        }
+        NetRequest::Rollback { model, .. } => {
+            fields.push(("op", s("rollback")));
+            fields.push(("model", s(model)));
+        }
+        NetRequest::Load { model, path, .. } => {
+            fields.push(("op", s("load")));
+            fields.push(("model", s(model)));
+            fields.push(("path", s(path)));
+        }
+        NetRequest::List { .. } => fields.push(("op", s("list"))),
+        NetRequest::Shutdown { .. } => fields.push(("op", s("shutdown"))),
+    }
+    obj(fields).dump()
+}
+
+/// Decode one request frame.
+pub fn parse_request(line: &str) -> Result<NetRequest, String> {
+    let v = Json::parse(line.trim()).map_err(|e| format!("bad frame: {e}"))?;
+    let id = get_u64(&v, "id")?;
+    let op = get_str(&v, "op")?;
+    let model = match v.get("model") {
+        None | Some(Json::Null) => None,
+        Some(j) => Some(
+            j.as_str()
+                .ok_or("field \"model\" is not a string")?
+                .to_string(),
+        ),
+    };
+    let deadline_ms = opt_u64(&v, "deadline_ms")?;
+    let call = |req: Request| NetRequest::Call {
+        id,
+        model: model.clone(),
+        deadline_ms,
+        req,
+    };
+    match op.as_str() {
+        "predict" => Ok(call(Request::Predict {
+            coords: get_coords(&v)?,
+        })),
+        "topk" => Ok(call(Request::TopK {
+            coords: get_coords(&v)?,
+            mode: get_u64(&v, "mode")? as usize,
+            k: get_u64(&v, "k")? as usize,
+        })),
+        "epoch" => Ok(call(Request::Epoch)),
+        "stats" => Ok(call(Request::Stats)),
+        "promote" => Ok(NetRequest::Promote {
+            id,
+            model: get_str(&v, "model")?,
+            version: opt_u64(&v, "version")?,
+        }),
+        "rollback" => Ok(NetRequest::Rollback {
+            id,
+            model: get_str(&v, "model")?,
+        }),
+        "load" => Ok(NetRequest::Load {
+            id,
+            model: get_str(&v, "model")?,
+            path: get_str(&v, "path")?,
+        }),
+        "list" => Ok(NetRequest::List { id }),
+        "shutdown" => Ok(NetRequest::Shutdown { id }),
+        other => Err(format!("unknown op {other:?}")),
+    }
+}
+
+// -- response frames ---------------------------------------------------
+
+/// Encode a query reply.  [`Response::Error`] / [`Response::Overloaded`]
+/// / [`Response::DeadlineExceeded`] become `error` frames with the
+/// matching code, so one encoder covers the success and shed paths.
+pub fn response_frame(id: u64, resp: &Response) -> String {
+    match resp {
+        Response::Predict(v) => obj(vec![
+            ("id", num(id as f64)),
+            ("op", s("predict")),
+            ("value", f32_json(*v)),
+        ])
+        .dump(),
+        Response::TopK(top) => obj(vec![
+            ("id", num(id as f64)),
+            ("op", s("topk")),
+            (
+                "top",
+                arr(top
+                    .iter()
+                    .map(|sc| {
+                        obj(vec![
+                            ("index", num(sc.index as f64)),
+                            ("score", f32_json(sc.score)),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ])
+        .dump(),
+        Response::Epoch(e) => obj(vec![
+            ("id", num(id as f64)),
+            ("op", s("epoch")),
+            ("epoch", num(*e as f64)),
+        ])
+        .dump(),
+        Response::Stats(snap) => obj(vec![
+            ("id", num(id as f64)),
+            ("op", s("stats")),
+            ("stats", snap.to_json()),
+        ])
+        .dump(),
+        Response::Overloaded => error_frame(id, "overloaded", "queue full, request shed"),
+        Response::DeadlineExceeded => error_frame(id, "deadline", "deadline expired in queue"),
+        Response::Error(e) => error_frame(id, "bad_request", e),
+    }
+}
+
+/// Encode a registry listing reply.
+pub fn listing_frame(id: u64, models: &[ModelInfo]) -> String {
+    obj(vec![
+        ("id", num(id as f64)),
+        ("op", s("registry")),
+        ("models", arr(models.iter().map(ModelInfo::to_json).collect())),
+    ])
+    .dump()
+}
+
+/// Encode the drain acknowledgement.
+pub fn stopping_frame(id: u64) -> String {
+    obj(vec![
+        ("id", num(id as f64)),
+        ("op", s("shutdown")),
+        ("stopping", Json::Bool(true)),
+    ])
+    .dump()
+}
+
+/// Encode an error frame (see the module docs for codes).
+pub fn error_frame(id: u64, code: &str, message: &str) -> String {
+    obj(vec![
+        ("id", num(id as f64)),
+        ("op", s("error")),
+        ("code", s(code)),
+        ("error", s(message)),
+    ])
+    .dump()
+}
+
+/// Decode one response frame (client side).
+pub fn parse_response(line: &str) -> Result<NetResponse, String> {
+    let v = Json::parse(line.trim()).map_err(|e| format!("bad frame: {e}"))?;
+    let id = get_u64(&v, "id")?;
+    match get_str(&v, "op")?.as_str() {
+        "predict" => Ok(NetResponse::Call {
+            id,
+            resp: Response::Predict(f32_field(&v, "value")?),
+        }),
+        "topk" => {
+            let top = v
+                .get("top")
+                .and_then(Json::as_arr)
+                .ok_or("missing top array")?
+                .iter()
+                .map(|j| {
+                    Ok(Scored {
+                        index: get_u64(j, "index")? as u32,
+                        score: f32_field(j, "score")?,
+                    })
+                })
+                .collect::<Result<Vec<Scored>, String>>()?;
+            Ok(NetResponse::Call {
+                id,
+                resp: Response::TopK(top),
+            })
+        }
+        "epoch" => Ok(NetResponse::Call {
+            id,
+            resp: Response::Epoch(get_u64(&v, "epoch")?),
+        }),
+        "stats" => {
+            let snap = v.get("stats").ok_or("missing stats object")?;
+            Ok(NetResponse::Call {
+                id,
+                resp: Response::Stats(MetricsSnapshot::from_json(snap)?),
+            })
+        }
+        "registry" => {
+            let models = v
+                .get("models")
+                .and_then(Json::as_arr)
+                .ok_or("missing models array")?
+                .iter()
+                .map(ModelInfo::from_json)
+                .collect::<Result<Vec<ModelInfo>, String>>()?;
+            Ok(NetResponse::Listing { id, models })
+        }
+        "shutdown" => Ok(NetResponse::Stopping { id }),
+        "error" => Ok(NetResponse::Failure {
+            id,
+            code: get_str(&v, "code")?,
+            message: get_str(&v, "error")?,
+        }),
+        other => Err(format!("unknown response op {other:?}")),
+    }
+}
+
+/// Map a decoded response frame for request `id` back into the
+/// in-process [`Response`] a [`super::super::ServerHandle`] would have
+/// returned — `overloaded` / `deadline` codes become their dedicated
+/// variants, other failures become [`Response::Error`].
+pub fn into_response(frame: NetResponse, id: u64) -> Result<Response, String> {
+    match frame {
+        NetResponse::Call { id: got, resp } if got == id => Ok(resp),
+        NetResponse::Failure {
+            id: got,
+            code,
+            message,
+        } if got == id => Ok(match code.as_str() {
+            "overloaded" => Response::Overloaded,
+            "deadline" => Response::DeadlineExceeded,
+            _ => Response::Error(message),
+        }),
+        other => Err(format!("response for the wrong request: {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(req: NetRequest) -> NetRequest {
+        parse_request(&encode_request(&req)).unwrap()
+    }
+
+    #[test]
+    fn request_frames_roundtrip() {
+        let call = roundtrip_req(NetRequest::Call {
+            id: 7,
+            model: Some("main".into()),
+            deadline_ms: Some(250),
+            req: Request::Predict {
+                coords: vec![4, 9, 6],
+            },
+        });
+        match call {
+            NetRequest::Call {
+                id,
+                model,
+                deadline_ms,
+                req: Request::Predict { coords },
+            } => {
+                assert_eq!((id, deadline_ms), (7, Some(250)));
+                assert_eq!(model.as_deref(), Some("main"));
+                assert_eq!(coords, vec![4, 9, 6]);
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+        match roundtrip_req(NetRequest::Call {
+            id: 8,
+            model: None,
+            deadline_ms: None,
+            req: Request::TopK {
+                coords: vec![1, 0, 2],
+                mode: 1,
+                k: 10,
+            },
+        }) {
+            NetRequest::Call {
+                model: None,
+                deadline_ms: None,
+                req: Request::TopK { coords, mode, k },
+                ..
+            } => assert_eq!((coords, mode, k), (vec![1, 0, 2], 1, 10)),
+            other => panic!("wrong decode: {other:?}"),
+        }
+        assert!(matches!(
+            roundtrip_req(NetRequest::Call {
+                id: 1,
+                model: None,
+                deadline_ms: None,
+                req: Request::Stats,
+            }),
+            NetRequest::Call {
+                req: Request::Stats,
+                ..
+            }
+        ));
+        match roundtrip_req(NetRequest::Promote {
+            id: 2,
+            model: "m".into(),
+            version: Some(3),
+        }) {
+            NetRequest::Promote { id, model, version } => {
+                assert_eq!((id, model.as_str(), version), (2, "m", Some(3)))
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+        match roundtrip_req(NetRequest::Load {
+            id: 3,
+            model: "m".into(),
+            path: "a/b.ftck".into(),
+        }) {
+            NetRequest::Load { model, path, .. } => {
+                assert_eq!((model.as_str(), path.as_str()), ("m", "a/b.ftck"))
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+        assert!(matches!(
+            roundtrip_req(NetRequest::Rollback {
+                id: 4,
+                model: "m".into()
+            }),
+            NetRequest::Rollback { id: 4, .. }
+        ));
+        assert!(matches!(
+            roundtrip_req(NetRequest::List { id: 5 }),
+            NetRequest::List { id: 5 }
+        ));
+        assert!(matches!(
+            roundtrip_req(NetRequest::Shutdown { id: 6 }),
+            NetRequest::Shutdown { id: 6 }
+        ));
+    }
+
+    #[test]
+    fn malformed_requests_are_rejected() {
+        for bad in [
+            "",                                       // empty line
+            "{",                                      // truncated JSON
+            r#"{"op":"predict","coords":[1]}"#,       // missing id
+            r#"{"id":1,"op":"warp"}"#,                // unknown op
+            r#"{"id":1,"op":"predict"}"#,             // missing coords
+            r#"{"id":1,"op":"predict","coords":[-1]}"#, // negative coord
+            r#"{"id":1,"op":"topk","coords":[1]}"#,   // missing mode/k
+            r#"{"id":1,"op":"promote"}"#,             // missing model
+            r#"{"id":1.5,"op":"list"}"#,              // fractional id
+        ] {
+            assert!(parse_request(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn float_values_cross_the_wire_bit_identically() {
+        // shortest-decimal f64 printing round-trips any finite f32 widened
+        // to f64 — sweep awkward values plus a pseudo-random pile
+        let mut awkward = vec![
+            0.0f32,
+            -0.0,
+            1.0,
+            f32::MIN_POSITIVE,
+            f32::MAX,
+            -f32::MAX,
+            1.0 + f32::EPSILON,
+            0.1,
+            1.0 / 3.0,
+            core::f32::consts::PI,
+        ];
+        let mut state = 0x9E3779B97F4A7C15u64;
+        for _ in 0..200 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            let bits = (state >> 32) as u32;
+            let v = f32::from_bits(bits);
+            if v.is_finite() {
+                awkward.push(v);
+            }
+        }
+        for v in awkward {
+            let line = response_frame(9, &Response::Predict(v));
+            match parse_response(&line).unwrap() {
+                NetResponse::Call {
+                    id: 9,
+                    resp: Response::Predict(got),
+                } => assert_eq!(got.to_bits(), v.to_bits(), "value {v:?} via {line}"),
+                other => panic!("wrong decode: {other:?}"),
+            }
+        }
+        // non-finite defends as null, and decoding fails loudly
+        let line = response_frame(1, &Response::Predict(f32::NAN));
+        assert!(Json::parse(&line).is_ok(), "frame must stay valid JSON");
+        assert!(parse_response(&line).is_err());
+    }
+
+    #[test]
+    fn response_frames_roundtrip() {
+        let top = Response::TopK(vec![
+            Scored {
+                index: 3,
+                score: 1.25,
+            },
+            Scored {
+                index: 0,
+                score: -0.5,
+            },
+        ]);
+        match parse_response(&response_frame(2, &top)).unwrap() {
+            NetResponse::Call {
+                id: 2,
+                resp: Response::TopK(got),
+            } => {
+                assert_eq!(got.len(), 2);
+                assert_eq!((got[0].index, got[0].score), (3, 1.25));
+                assert_eq!((got[1].index, got[1].score), (0, -0.5));
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+        assert!(matches!(
+            parse_response(&response_frame(3, &Response::Epoch(12))).unwrap(),
+            NetResponse::Call {
+                id: 3,
+                resp: Response::Epoch(12)
+            }
+        ));
+        assert!(matches!(
+            parse_response(&stopping_frame(4)).unwrap(),
+            NetResponse::Stopping { id: 4 }
+        ));
+        // shed / expired / failed map back through into_response
+        for (resp, want) in [
+            (Response::Overloaded, "overloaded"),
+            (Response::DeadlineExceeded, "deadline"),
+            (Response::Error("boom".into()), "bad_request"),
+        ] {
+            let line = response_frame(5, &resp);
+            assert!(line.contains(want), "{line} should carry code {want}");
+            let back = into_response(parse_response(&line).unwrap(), 5).unwrap();
+            assert_eq!(
+                std::mem::discriminant(&back),
+                std::mem::discriminant(&resp)
+            );
+        }
+        // a reply for a different id is an error, not a silent mismatch
+        let frame = parse_response(&response_frame(5, &Response::Epoch(1))).unwrap();
+        assert!(into_response(frame, 6).is_err());
+    }
+
+    #[test]
+    fn stats_frame_carries_a_full_snapshot() {
+        let m = crate::obs::Metrics::new();
+        m.counter("serve.net.requests").add(5);
+        m.hist("serve.net.latency.predict").record(1500);
+        let snap = m.snapshot();
+        let line = response_frame(11, &Response::Stats(snap.clone()));
+        match parse_response(&line).unwrap() {
+            NetResponse::Call {
+                id: 11,
+                resp: Response::Stats(got),
+            } => assert_eq!(got, snap),
+            other => panic!("wrong decode: {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,418 @@
+//! Model registry: named, versioned snapshots with atomic promote/rollback.
+//!
+//! A [`Registry`] maps model *names* to ordered sets of *versions*, each an
+//! immutable [`ModelSnapshot`].  Exactly one version per name is **active**
+//! (the one that answers queries naming that model) and one name may be the
+//! **default** (the one that answers queries naming no model).  The whole
+//! table lives behind a single `RwLock`, and a snapshot is one `Arc`, so
+//! [`Registry::resolve`] on the hot path is a read lock plus a pointer
+//! clone — promote/rollback are short write-locked pointer swaps, and a
+//! reader can never observe a half-updated model (the same torn-read-free
+//! argument as [`super::Server::publish`], pinned by
+//! `tests/serve_net.rs`).
+//!
+//! Every inserted version is stamped with a registry-wide monotonically
+//! increasing **generation** id.  Generations — not `Arc` pointers, which
+//! the allocator can reuse — key the cross-request
+//! [`super::CompletionCache`], so promoting a new version implicitly
+//! invalidates cached invariants without any flush protocol.
+//!
+//! Lifecycle (mirrored by the CLI `registry` subcommand and the wire
+//! `promote`/`rollback`/`load`/`list` ops):
+//!
+//! ```text
+//! insert "m" v1 ── first version auto-activates ──► active=v1
+//! insert "m" v2 ── staged, not serving ──────────► active=v1
+//! promote "m" (v2) ──────────────────────────────► active=v2, previous=v1
+//! rollback "m" ──────────────────────────────────► active=v1, previous=v2
+//! ```
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::snapshot::ModelSnapshot;
+
+/// One version slot: the snapshot plus its registry-wide generation tag.
+struct Versioned {
+    snap: ModelSnapshot,
+    generation: u64,
+}
+
+/// All versions of one named model.
+struct Entry {
+    /// Version number → snapshot (BTreeMap keeps them ordered, so
+    /// "latest" is `last_key_value`).
+    versions: BTreeMap<u64, Versioned>,
+    /// The version currently answering queries for this name.
+    active: u64,
+    /// The version `rollback` returns to (the previously active one).
+    previous: Option<u64>,
+}
+
+#[derive(Default)]
+struct State {
+    models: BTreeMap<String, Entry>,
+    /// The name `resolve(None)` routes to.
+    default: Option<String>,
+}
+
+/// A concurrent name → versioned-snapshot table with atomic
+/// promote/rollback; see the module docs for the lifecycle.
+#[derive(Default)]
+pub struct Registry {
+    state: RwLock<State>,
+    /// Next generation id (stamped onto every inserted version).
+    generation: AtomicU64,
+}
+
+/// A point-in-time description of one registered model, as reported by
+/// [`Registry::list`] and the wire `list` op.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelInfo {
+    /// Model name.
+    pub name: String,
+    /// All registered version numbers, ascending.
+    pub versions: Vec<u64>,
+    /// The version currently answering queries.
+    pub active: u64,
+    /// The version `rollback` would restore, if any.
+    pub previous: Option<u64>,
+    /// Whether unnamed queries route here.
+    pub is_default: bool,
+    /// Epoch tag of the active snapshot.
+    pub epoch: u64,
+    /// Tensor dims of the active snapshot (needed by remote load
+    /// generators to build valid coordinates).
+    pub dims: Vec<u32>,
+    /// Parameter count of the active snapshot.
+    pub params: usize,
+}
+
+impl ModelInfo {
+    /// JSON object form (crosses the wire in `list` replies).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", s(&self.name)),
+            (
+                "versions",
+                arr(self.versions.iter().map(|&v| num(v as f64)).collect()),
+            ),
+            ("active", num(self.active as f64)),
+            (
+                "previous",
+                match self.previous {
+                    Some(v) => num(v as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("default", Json::Bool(self.is_default)),
+            ("epoch", num(self.epoch as f64)),
+            (
+                "dims",
+                arr(self.dims.iter().map(|&d| num(d as f64)).collect()),
+            ),
+            ("params", num(self.params as f64)),
+        ])
+    }
+
+    /// Decode the [`ModelInfo::to_json`] form.
+    pub fn from_json(v: &Json) -> Result<ModelInfo, String> {
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or("model info missing name")?
+            .to_string();
+        let field_u64 = |key: &str| -> Result<u64, String> {
+            v.get(key)
+                .and_then(Json::as_usize)
+                .map(|u| u as u64)
+                .ok_or_else(|| format!("model info {name:?}: bad field {key:?}"))
+        };
+        let versions = v
+            .get("versions")
+            .and_then(Json::as_arr)
+            .ok_or("model info missing versions")?
+            .iter()
+            .map(|j| j.as_usize().map(|u| u as u64))
+            .collect::<Option<Vec<u64>>>()
+            .ok_or("model info: non-integer version")?;
+        let previous = match v.get("previous") {
+            None | Some(Json::Null) => None,
+            Some(j) => Some(j.as_usize().ok_or("model info: bad previous")? as u64),
+        };
+        let dims = v
+            .get("dims")
+            .and_then(Json::as_arr)
+            .ok_or("model info missing dims")?
+            .iter()
+            .map(|j| j.as_usize().map(|u| u as u32))
+            .collect::<Option<Vec<u32>>>()
+            .ok_or("model info: non-integer dim")?;
+        Ok(ModelInfo {
+            versions,
+            active: field_u64("active")?,
+            previous,
+            is_default: v.get("default").and_then(Json::as_bool).unwrap_or(false),
+            epoch: field_u64("epoch")?,
+            dims,
+            params: field_u64("params")? as usize,
+            name,
+        })
+    }
+}
+
+impl Registry {
+    /// A fresh, empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// A fresh registry behind an `Arc`, ready to share with a server.
+    pub fn shared() -> Arc<Registry> {
+        Arc::new(Registry::new())
+    }
+
+    /// Register `snap` as the next version of `name` (1 for a new name)
+    /// and return that version number.  The first version of a name
+    /// auto-activates, and the first name registered becomes the default;
+    /// later versions are *staged* — they serve only after
+    /// [`Registry::promote`].
+    pub fn insert(&self, name: &str, snap: ModelSnapshot) -> u64 {
+        let generation = self.generation.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut st = self.state.write().unwrap();
+        if st.default.is_none() {
+            st.default = Some(name.to_string());
+        }
+        let entry = st.models.entry(name.to_string()).or_insert_with(|| Entry {
+            versions: BTreeMap::new(),
+            active: 0,
+            previous: None,
+        });
+        let version = entry.versions.last_key_value().map_or(1, |(&v, _)| v + 1);
+        entry.versions.insert(version, Versioned { snap, generation });
+        if entry.active == 0 {
+            entry.active = version;
+        }
+        version
+    }
+
+    /// Insert *and* activate in one write-locked step — the live-training
+    /// publish path ([`crate::session::Session::run_with_registry`]), where
+    /// every snapshot should serve immediately.  Returns the new version.
+    pub fn publish(&self, name: &str, snap: ModelSnapshot) -> u64 {
+        let generation = self.generation.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut st = self.state.write().unwrap();
+        if st.default.is_none() {
+            st.default = Some(name.to_string());
+        }
+        let entry = st.models.entry(name.to_string()).or_insert_with(|| Entry {
+            versions: BTreeMap::new(),
+            active: 0,
+            previous: None,
+        });
+        let version = entry.versions.last_key_value().map_or(1, |(&v, _)| v + 1);
+        entry.versions.insert(version, Versioned { snap, generation });
+        if entry.active != 0 && entry.active != version {
+            entry.previous = Some(entry.active);
+        }
+        entry.active = version;
+        version
+    }
+
+    /// Activate `version` of `name` (the latest version when `None`),
+    /// remembering the outgoing active version for [`Registry::rollback`].
+    /// Returns the now-active version.
+    pub fn promote(&self, name: &str, version: Option<u64>) -> Result<u64, String> {
+        let mut st = self.state.write().unwrap();
+        let entry = st
+            .models
+            .get_mut(name)
+            .ok_or_else(|| format!("unknown model {name:?}"))?;
+        let target = match version {
+            Some(v) => {
+                if !entry.versions.contains_key(&v) {
+                    return Err(format!("model {name:?} has no version {v}"));
+                }
+                v
+            }
+            None => *entry.versions.last_key_value().unwrap().0,
+        };
+        if target != entry.active {
+            entry.previous = Some(entry.active);
+            entry.active = target;
+        }
+        Ok(target)
+    }
+
+    /// Swap the active version back to the previously active one (so a
+    /// second rollback undoes the first).  Errors when nothing was ever
+    /// promoted over the original version.
+    pub fn rollback(&self, name: &str) -> Result<u64, String> {
+        let mut st = self.state.write().unwrap();
+        let entry = st
+            .models
+            .get_mut(name)
+            .ok_or_else(|| format!("unknown model {name:?}"))?;
+        let prev = entry
+            .previous
+            .ok_or_else(|| format!("model {name:?} has no previous version to roll back to"))?;
+        entry.previous = Some(entry.active);
+        entry.active = prev;
+        Ok(prev)
+    }
+
+    /// Route unnamed queries to `name`.
+    pub fn set_default(&self, name: &str) -> Result<(), String> {
+        let mut st = self.state.write().unwrap();
+        if !st.models.contains_key(name) {
+            return Err(format!("unknown model {name:?}"));
+        }
+        st.default = Some(name.to_string());
+        Ok(())
+    }
+
+    /// The active snapshot for `name` (or the default model when `None`),
+    /// plus its generation tag for cache keying.  One read lock + one
+    /// `Arc` clone: the returned snapshot is immutable, so concurrent
+    /// promotes can never tear it.
+    pub fn resolve(&self, name: Option<&str>) -> Result<(ModelSnapshot, u64), String> {
+        let st = self.state.read().unwrap();
+        let name = match name {
+            Some(n) => n,
+            None => st
+                .default
+                .as_deref()
+                .ok_or("registry is empty (no default model)")?,
+        };
+        let entry = st
+            .models
+            .get(name)
+            .ok_or_else(|| format!("unknown model {name:?}"))?;
+        let v = &entry.versions[&entry.active];
+        Ok((v.snap.clone(), v.generation))
+    }
+
+    /// Describe every registered model (sorted by name).
+    pub fn list(&self) -> Vec<ModelInfo> {
+        let st = self.state.read().unwrap();
+        st.models
+            .iter()
+            .map(|(name, entry)| {
+                let active = &entry.versions[&entry.active].snap;
+                ModelInfo {
+                    name: name.clone(),
+                    versions: entry.versions.keys().copied().collect(),
+                    active: entry.active,
+                    previous: entry.previous,
+                    is_default: st.default.as_deref() == Some(name),
+                    epoch: active.epoch(),
+                    dims: active.dims().to_vec(),
+                    params: active.param_count(),
+                }
+            })
+            .collect()
+    }
+
+    /// Number of registered model names.
+    pub fn len(&self) -> usize {
+        self.state.read().unwrap().models.len()
+    }
+
+    /// True when no model has been registered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::Algo;
+    use crate::model::TuckerModel;
+
+    fn snap(seed: u64, epoch: u64) -> ModelSnapshot {
+        let m = TuckerModel::init(&[6, 7, 8], 8, 8, seed);
+        ModelSnapshot::from_model(&m, Algo::Plus, epoch)
+    }
+
+    #[test]
+    fn insert_promote_rollback_lifecycle() {
+        let reg = Registry::new();
+        assert!(reg.resolve(None).is_err());
+        assert_eq!(reg.insert("m", snap(1, 10)), 1);
+        assert_eq!(reg.resolve(None).unwrap().0.epoch(), 10); // auto-active + default
+        assert_eq!(reg.insert("m", snap(2, 20)), 2);
+        // staged: v2 does not serve until promoted
+        assert_eq!(reg.resolve(Some("m")).unwrap().0.epoch(), 10);
+        assert_eq!(reg.promote("m", None).unwrap(), 2);
+        assert_eq!(reg.resolve(Some("m")).unwrap().0.epoch(), 20);
+        assert_eq!(reg.rollback("m").unwrap(), 1);
+        assert_eq!(reg.resolve(Some("m")).unwrap().0.epoch(), 10);
+        // rollback is its own inverse
+        assert_eq!(reg.rollback("m").unwrap(), 2);
+        assert_eq!(reg.resolve(Some("m")).unwrap().0.epoch(), 20);
+    }
+
+    #[test]
+    fn publish_activates_immediately() {
+        let reg = Registry::new();
+        reg.publish("live", snap(1, 1));
+        reg.publish("live", snap(2, 2));
+        assert_eq!(reg.resolve(Some("live")).unwrap().0.epoch(), 2);
+        // and the outgoing version is the rollback target
+        assert_eq!(reg.rollback("live").unwrap(), 1);
+        assert_eq!(reg.resolve(Some("live")).unwrap().0.epoch(), 1);
+    }
+
+    #[test]
+    fn generations_are_unique_across_names_and_versions() {
+        let reg = Registry::new();
+        reg.insert("a", snap(1, 0));
+        reg.insert("b", snap(2, 0));
+        reg.insert("a", snap(3, 0));
+        reg.promote("a", Some(2)).unwrap();
+        let ga = reg.resolve(Some("a")).unwrap().1;
+        let gb = reg.resolve(Some("b")).unwrap().1;
+        reg.rollback("a").unwrap();
+        let ga1 = reg.resolve(Some("a")).unwrap().1;
+        assert!(ga != gb && ga != ga1 && gb != ga1);
+    }
+
+    #[test]
+    fn errors_are_explicit() {
+        let reg = Registry::new();
+        reg.insert("m", snap(1, 0));
+        assert!(reg.promote("nope", None).is_err());
+        assert!(reg.promote("m", Some(9)).is_err());
+        assert!(reg.rollback("m").is_err()); // nothing ever promoted over v1
+        assert!(reg.resolve(Some("nope")).is_err());
+        assert!(reg.set_default("nope").is_err());
+    }
+
+    #[test]
+    fn list_and_default_routing() {
+        let reg = Registry::new();
+        reg.insert("a", snap(1, 5));
+        reg.insert("b", snap(2, 6));
+        reg.insert("b", snap(3, 7));
+        reg.promote("b", None).unwrap();
+        let infos = reg.list();
+        assert_eq!(infos.len(), 2);
+        assert_eq!(infos[0].name, "a");
+        assert!(infos[0].is_default);
+        assert_eq!(infos[1].versions, vec![1, 2]);
+        assert_eq!(infos[1].active, 2);
+        assert_eq!(infos[1].previous, Some(1));
+        assert_eq!(infos[1].epoch, 7);
+        assert_eq!(infos[1].dims, vec![6, 7, 8]);
+        // JSON round-trip of the listing rows
+        for info in &infos {
+            assert_eq!(&ModelInfo::from_json(&info.to_json()).unwrap(), info);
+        }
+        reg.set_default("b").unwrap();
+        assert_eq!(reg.resolve(None).unwrap().0.epoch(), 7);
+    }
+}

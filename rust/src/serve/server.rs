@@ -72,6 +72,13 @@ pub enum Response {
     Epoch(u64),
     /// Telemetry snapshot answering a [`Request::Stats`].
     Stats(MetricsSnapshot),
+    /// Admission control shed this request before it entered the queue —
+    /// the network tier's backpressure signal (the in-process queue never
+    /// sheds).  Retry later; the request was *not* executed.
+    Overloaded,
+    /// The request's deadline expired before a worker reached it; it was
+    /// *not* executed.  Only the network tier sets deadlines.
+    DeadlineExceeded,
     /// The request was malformed or the server is stopping.
     Error(String),
 }

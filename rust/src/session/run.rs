@@ -11,7 +11,7 @@ use anyhow::{ensure, Context, Result};
 use crate::coordinator::{EpochStats, TrainConfig, Trainer};
 use crate::data::{CacheStats, PagedTensor, TensorView};
 use crate::obs::{Metrics, MetricsFile};
-use crate::serve::{ModelSnapshot, Server};
+use crate::serve::{ModelSnapshot, Registry, Server};
 use crate::session::observer::{EpochEvent, Observer, RunReport};
 use crate::session::spec::{DataSource, RunSpec, Schedule};
 use crate::tensor::{split::train_test_split, SparseTensor};
@@ -30,6 +30,17 @@ impl TrainData {
             TrainData::Paged(p) => p,
         }
     }
+}
+
+/// Where mid-run snapshot publishes go: the in-process [`Server`]
+/// (hot-swap) or a named model in a [`Registry`] (the network tier).
+enum PublishSink<'a> {
+    None,
+    Server(&'a Server),
+    Registry {
+        registry: &'a Registry,
+        model: &'a str,
+    },
 }
 
 /// The builder-constructed run driver — one validated spec, executed.
@@ -292,7 +303,7 @@ impl Session {
     /// Calling `run` again continues training for another round of the
     /// schedule.
     pub fn run(&mut self, observer: &mut dyn Observer) -> Result<RunReport> {
-        self.drive(None, observer)
+        self.drive(PublishSink::None, observer)
     }
 
     /// Like [`Session::run`], but publishes a model snapshot to `server`
@@ -303,12 +314,26 @@ impl Session {
         server: &Server,
         observer: &mut dyn Observer,
     ) -> Result<RunReport> {
-        self.drive(Some(server), observer)
+        self.drive(PublishSink::Server(server), observer)
+    }
+
+    /// Like [`Session::run`], but publishes a model snapshot into
+    /// `registry` as a new **active** version of `model` every
+    /// `schedule.publish_every` epochs — the network serving tier's
+    /// train-and-serve loop: [`crate::serve::NetServer`] workers resolve
+    /// the fresh generation on their next request.
+    pub fn run_with_registry(
+        &mut self,
+        registry: &Registry,
+        model: &str,
+        observer: &mut dyn Observer,
+    ) -> Result<RunReport> {
+        self.drive(PublishSink::Registry { registry, model }, observer)
     }
 
     fn drive(
         &mut self,
-        server: Option<&Server>,
+        sink: PublishSink<'_>,
         observer: &mut dyn Observer,
     ) -> Result<RunReport> {
         let t0 = Instant::now();
@@ -380,9 +405,14 @@ impl Session {
                 None
             };
 
-            let published = match server {
-                Some(srv) if sched.publish_every > 0 && epoch % sched.publish_every == 0 => {
+            let due = sched.publish_every > 0 && epoch % sched.publish_every == 0;
+            let published = match &sink {
+                PublishSink::Server(srv) if due => {
                     srv.publish(self.trainer.snapshot());
+                    true
+                }
+                PublishSink::Registry { registry, model } if due => {
+                    registry.publish(model, self.trainer.snapshot());
                     true
                 }
                 _ => false,

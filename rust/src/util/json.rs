@@ -100,7 +100,10 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                // -0.0 must stay on the float path ("-0" parses back with
+                // the sign bit; "0" would not) — the serve wire protocol
+                // relies on every finite f32 round-tripping bit-exactly
+                if n.fract() == 0.0 && n.abs() < 1e15 && !(*n == 0.0 && n.is_sign_negative()) {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -367,6 +370,14 @@ mod tests {
         for (s, want) in [("0", 0.0), ("-3.5", -3.5), ("1e3", 1000.0), ("2.5e-2", 0.025)] {
             assert_eq!(Json::parse(s).unwrap().as_f64(), Some(want));
         }
+    }
+
+    #[test]
+    fn negative_zero_roundtrips_with_its_sign() {
+        let dumped = Json::Num(-0.0).dump();
+        assert_eq!(dumped, "-0");
+        let back = Json::parse(&dumped).unwrap().as_f64().unwrap();
+        assert!(back == 0.0 && back.is_sign_negative());
     }
 
     #[test]

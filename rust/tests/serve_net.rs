@@ -1,0 +1,398 @@
+//! Network serving tier acceptance suite.
+//!
+//! Pins the load-bearing guarantees of `serve::net` over real loopback
+//! sockets:
+//!
+//! 1. a prediction answered over the wire is **bit-identical** to the
+//!    in-process [`Engine::predict`] on the same snapshot (and top-K
+//!    agrees index-for-index, score bits included);
+//! 2. promote / rollback are atomic under concurrent queries — every
+//!    answer matches exactly one registered version, never a torn mix,
+//!    and the completion cache replays bit-identical fibers across the
+//!    generation change;
+//! 3. admission control and deadlines degrade loudly: a slow handler
+//!    makes over-bound frames come back `Overloaded` and expired frames
+//!    `DeadlineExceeded` — never silence, never a corrupted neighbor
+//!    frame (every id is answered exactly once on the right connection);
+//! 4. graceful drain answers every accepted request before the server
+//!    exits — a pipelined burst followed by `shutdown` yields every
+//!    response plus the stopping ack, then EOF;
+//! 5. `stats` round-trips the server's metrics registry over the wire.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use fasttucker::coordinator::Algo;
+use fasttucker::model::TuckerModel;
+use fasttucker::serve::net::{NetConfig, NetHandler, NetResponse, NetServer};
+use fasttucker::serve::{
+    mode_topk, Engine, ModelSnapshot, NetClient, Registry, Request, Response,
+};
+use fasttucker::util::rng::Pcg32;
+
+const DIMS: [u32; 3] = [19, 13, 11];
+
+fn snap(seed: u64, epoch: u64) -> ModelSnapshot {
+    let model = TuckerModel::init(&DIMS, 16, 16, seed);
+    ModelSnapshot::from_model(&model, Algo::Plus, epoch)
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("ft_serve_net_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Spin up a registry-backed server on an ephemeral loopback port.
+fn start_server(cfg: NetConfig) -> (NetServer, std::sync::Arc<Registry>, String) {
+    let registry = Registry::shared();
+    let server = NetServer::bind("127.0.0.1:0", registry.clone(), cfg).unwrap();
+    let addr = server.local_addr().to_string();
+    (server, registry, addr)
+}
+
+/// Acceptance criterion: the wire path (engine → f32 → JSON → f32) is
+/// bit-identical to calling [`Engine::predict`] in process, and top-K
+/// survives the trip index-for-index with score bits intact.
+#[test]
+fn wire_predictions_bit_identical_to_engine() {
+    let cfg = NetConfig::default();
+    let (server, registry, addr) = start_server(cfg);
+    let s = snap(0xF1DE, 4);
+    registry.publish("main", s.clone());
+    let mut engine = Engine::with_policy(s, cfg.policy);
+
+    let mut client = NetClient::connect(&addr).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut rng = Pcg32::new(77, 0xB17);
+    for _ in 0..200 {
+        let coords: Vec<u32> = DIMS.iter().map(|&d| rng.gen_range(d)).collect();
+        let over_wire = client.predict(Some("main"), &coords).unwrap();
+        let in_process = engine.predict(&coords);
+        assert_eq!(
+            over_wire.to_bits(),
+            in_process.to_bits(),
+            "wire prediction diverged at {coords:?}: {over_wire} vs {in_process}"
+        );
+    }
+
+    // top-K over the wire == mode_topk in process (the cache is empty on
+    // the first call and warm on the second; both must match exactly)
+    for round in 0..2 {
+        let coords = vec![3, 0, 7];
+        let expect = mode_topk(&mut engine, &coords, 1, 5);
+        match client
+            .call(Some("main"), None, Request::TopK { coords, mode: 1, k: 5 })
+            .unwrap()
+        {
+            Response::TopK(got) => {
+                assert_eq!(got.len(), expect.len());
+                for (g, e) in got.iter().zip(&expect) {
+                    assert_eq!(g.index, e.index, "round {round}");
+                    assert_eq!(g.score.to_bits(), e.score.to_bits(), "round {round}");
+                }
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+
+    // the second top-K hit the completion cache
+    let stats = server.metrics_snapshot();
+    assert!(
+        stats.counters.get("serve.cache.hits").copied().unwrap_or(0) >= 1,
+        "warm top-K should hit the fiber cache: {:?}",
+        stats.counters
+    );
+    server.shutdown();
+}
+
+/// Promote / rollback flip the answering snapshot atomically: under a
+/// storm of concurrent queries, every epoch and every prediction matches
+/// exactly one of the two registered versions — no torn reads, no stale
+/// errors — and after rollback the original version answers again.
+#[test]
+fn promote_rollback_atomic_under_concurrent_queries() {
+    let (server, registry, addr) = start_server(NetConfig {
+        workers: 4,
+        ..NetConfig::default()
+    });
+    let s1 = snap(0xAAA, 1);
+    let s2 = snap(0xBBB, 2);
+    registry.insert("main", s1.clone()); // v1 activates (first version)
+    registry.insert("main", s2.clone()); // v2 staged
+    let coords = vec![5, 6, 7];
+    let v1 = Engine::new(s1).predict(&coords);
+    let v2 = Engine::new(s2).predict(&coords);
+    assert_ne!(v1.to_bits(), v2.to_bits(), "seeds must give distinct models");
+
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let readers: Vec<_> = (0..3)
+            .map(|_| {
+                let addr = &addr;
+                let coords = &coords;
+                let stop = &stop;
+                scope.spawn(move || {
+                    let mut client = NetClient::connect(addr).unwrap();
+                    client
+                        .set_read_timeout(Some(Duration::from_secs(30)))
+                        .unwrap();
+                    let mut checked = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        let p = client.predict(Some("main"), coords).unwrap();
+                        assert!(
+                            p.to_bits() == v1.to_bits() || p.to_bits() == v2.to_bits(),
+                            "torn or stale prediction {p}: not v1 ({v1}) or v2 ({v2})"
+                        );
+                        match client.call(Some("main"), None, Request::Epoch).unwrap() {
+                            Response::Epoch(e) => {
+                                assert!(e == 1 || e == 2, "epoch {e} is neither version")
+                            }
+                            other => panic!("unexpected reply {other:?}"),
+                        }
+                        checked += 1;
+                    }
+                    checked
+                })
+            })
+            .collect();
+
+        // flip versions under the readers
+        let mut admin = NetClient::connect(&addr).unwrap();
+        admin.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        for _ in 0..10 {
+            let listing = admin.promote("main", None).unwrap();
+            assert_eq!(listing[0].active, 2);
+            assert_eq!(listing[0].previous, Some(1));
+            let listing = admin.rollback("main").unwrap();
+            assert_eq!(listing[0].active, 1);
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        stop.store(true, Ordering::Relaxed);
+        let total: u64 = readers.into_iter().map(|r| r.join().unwrap()).sum();
+        assert!(total > 0, "readers never got a query through");
+    });
+
+    // rolled back: v1 answers again, over the wire
+    let mut client = NetClient::connect(&addr).unwrap();
+    assert_eq!(
+        client.predict(Some("main"), &coords).unwrap().to_bits(),
+        v1.to_bits()
+    );
+    server.shutdown();
+}
+
+/// Registry lifecycle over the wire: a checkpoint saved to disk is
+/// loadable as a staged version via `load`, `list` reflects it, and
+/// promoting by explicit version activates it.
+#[test]
+fn load_and_promote_checkpoint_over_wire() {
+    let (server, registry, addr) = start_server(NetConfig::default());
+    registry.publish("main", snap(0x111, 7));
+    let staged = snap(0x222, 9);
+    let path = tmp("staged.ftck");
+    staged.save(&path).unwrap();
+
+    let mut client = NetClient::connect(&addr).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let listing = client.load("main", path.to_str().unwrap()).unwrap();
+    assert_eq!(listing[0].versions, vec![1, 2]);
+    assert_eq!(listing[0].active, 1, "load stages, it must not activate");
+
+    let listing = client.promote("main", Some(2)).unwrap();
+    assert_eq!(listing[0].active, 2);
+    match client.call(Some("main"), None, Request::Epoch).unwrap() {
+        Response::Epoch(e) => assert_eq!(e, 9, "the staged checkpoint answers"),
+        other => panic!("unexpected reply {other:?}"),
+    }
+
+    // loading a garbage path fails loudly and changes nothing
+    let err = client.load("main", "/nonexistent/nope.ftck").unwrap_err();
+    assert!(format!("{err:#}").contains("bad_request"), "{err:#}");
+    assert_eq!(client.list().unwrap()[0].versions, vec![1, 2]);
+    server.shutdown();
+}
+
+/// A deliberately slow handler pins the overload story: frames beyond
+/// the admission bound come back `Overloaded`, frames that expire in the
+/// queue come back `DeadlineExceeded`, every single id is answered
+/// exactly once, and a second connection's frames are never corrupted by
+/// the shed traffic racing the slow completions.
+#[test]
+fn slow_handler_sheds_expires_and_never_corrupts_framing() {
+    struct SlowHandler;
+    impl NetHandler for SlowHandler {
+        fn call(&mut self, _model: Option<&str>, _req: &Request) -> Response {
+            std::thread::sleep(Duration::from_millis(30));
+            Response::Predict(1.0)
+        }
+    }
+    let server = NetServer::bind_with_handler(
+        "127.0.0.1:0",
+        NetConfig {
+            workers: 1,
+            max_pending: 2,
+            ..NetConfig::default()
+        },
+        || Box::new(SlowHandler) as Box<dyn NetHandler>,
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    const BURST: usize = 12;
+    let run_conn = || {
+        let mut client = NetClient::connect(&addr).unwrap();
+        client
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .unwrap();
+        // pipeline the burst: a 20 ms deadline with a 30 ms handler means
+        // anything queued behind one job has already expired at pop time
+        let ids: Vec<u64> = (0..BURST)
+            .map(|_| {
+                client
+                    .send(None, Some(20), Request::Predict { coords: vec![1, 2, 3] })
+                    .unwrap()
+            })
+            .collect();
+        let mut answered: HashMap<u64, &'static str> = HashMap::new();
+        for _ in 0..BURST {
+            let frame = client.recv().unwrap();
+            let (id, kind) = match frame {
+                NetResponse::Call {
+                    id,
+                    resp: Response::Predict(v),
+                } => {
+                    assert_eq!(v.to_bits(), 1.0f32.to_bits());
+                    (id, "ok")
+                }
+                NetResponse::Failure { id, code, .. } => (
+                    id,
+                    match code.as_str() {
+                        "overloaded" => "shed",
+                        "deadline" => "expired",
+                        other => panic!("unexpected error code {other:?}"),
+                    },
+                ),
+                other => panic!("unexpected frame {other:?}"),
+            };
+            assert!(
+                answered.insert(id, kind).is_none(),
+                "id {id} answered twice"
+            );
+        }
+        let sent: HashSet<u64> = ids.iter().copied().collect();
+        let got: HashSet<u64> = answered.keys().copied().collect();
+        assert_eq!(sent, got, "every sent id answered exactly once, no others");
+        answered
+    };
+
+    // two connections burst concurrently: sheds and slow completions
+    // interleave on the wire, framing must survive on both
+    let (a, b) = std::thread::scope(|scope| {
+        let ta = scope.spawn(run_conn);
+        let tb = scope.spawn(run_conn);
+        (ta.join().unwrap(), tb.join().unwrap())
+    });
+    let count = |m: &HashMap<u64, &str>, k: &str| m.values().filter(|v| **v == k).count();
+    let shed = count(&a, "shed") + count(&b, "shed");
+    let expired = count(&a, "expired") + count(&b, "expired");
+    let ok = count(&a, "ok") + count(&b, "ok");
+    assert!(shed > 0, "burst of {BURST}x2 over a 2-deep queue must shed");
+    assert!(expired > 0, "a 20 ms deadline behind a 30 ms job must expire");
+    assert!(ok > 0, "some requests must still succeed");
+
+    let stats = server.shutdown();
+    assert_eq!(stats.shed, shed as u64);
+    assert_eq!(stats.deadline_missed, expired as u64);
+}
+
+/// Graceful drain: a pipelined burst followed by `shutdown` on the same
+/// connection yields every single response plus the stopping ack, then a
+/// clean EOF — no accepted request is ever dropped (regression pin).
+#[test]
+fn drain_answers_every_accepted_request() {
+    let (server, registry, addr) = start_server(NetConfig {
+        workers: 2,
+        ..NetConfig::default()
+    });
+    registry.publish("main", snap(0xD0D0, 3));
+
+    let mut client = NetClient::connect(&addr).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    const BURST: usize = 40;
+    let mut pending: HashSet<u64> = (0..BURST)
+        .map(|_| {
+            client
+                .send(Some("main"), None, Request::Predict { coords: vec![1, 2, 3] })
+                .unwrap()
+        })
+        .collect();
+    // the shutdown frame races the workers; everything sent before it
+    // was accepted and must still be answered
+    client.send_shutdown().unwrap();
+
+    let mut stopped = false;
+    while !pending.is_empty() || !stopped {
+        match client.recv().unwrap() {
+            NetResponse::Call {
+                id,
+                resp: Response::Predict(_),
+            } => {
+                assert!(pending.remove(&id), "unknown or duplicate id {id}");
+            }
+            NetResponse::Stopping { .. } => stopped = true,
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+    // after the drain the server closes the socket: clean EOF
+    let eof = client.recv().unwrap_err();
+    assert!(
+        format!("{eof:#}").contains("closed"),
+        "expected EOF after drain, got {eof:#}"
+    );
+
+    // the poll thread exits on its own (no external stop() needed)
+    let t0 = std::time::Instant::now();
+    while !server.drained() {
+        assert!(t0.elapsed() < Duration::from_secs(30), "drain never finished");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, BURST as u64);
+    assert_eq!(stats.shed, 0);
+}
+
+/// `stats` round-trips the server's own metrics registry over the wire:
+/// after traffic, the snapshot a client receives carries the serve.net
+/// counters and latency histograms.
+#[test]
+fn stats_round_trip_over_wire() {
+    let (server, registry, addr) = start_server(NetConfig::default());
+    registry.publish("main", snap(0x57A7, 5));
+
+    let mut client = NetClient::connect(&addr).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    for _ in 0..7 {
+        client.predict(Some("main"), &[1, 2, 3]).unwrap();
+    }
+    let snap = match client.call(None, None, Request::Stats).unwrap() {
+        Response::Stats(s) => s,
+        other => panic!("unexpected reply {other:?}"),
+    };
+    assert!(snap.counters.get("serve.net.requests").copied().unwrap_or(0) >= 7);
+    assert!(snap.counters.get("serve.net.connections").copied().unwrap_or(0) >= 1);
+    let lat = snap
+        .hists
+        .get("serve.net.latency.predict")
+        .expect("predict latency histogram present");
+    assert!(lat.count() >= 7, "histogram count {} < 7", lat.count());
+    // the wire snapshot is the server's own snapshot, not a facsimile
+    let direct = server.metrics_snapshot();
+    assert!(
+        direct.counters.get("serve.net.requests").copied().unwrap_or(0)
+            >= snap.counters["serve.net.requests"],
+        "server-side counters can only have moved forward"
+    );
+    server.shutdown();
+}

@@ -15,7 +15,7 @@ set -euo pipefail
 out_dir="${1:-.}"
 mkdir -p "$out_dir"
 
-benches=(parallel_scaling table8_tc_speedup)
+benches=(parallel_scaling table8_tc_speedup serve_slo)
 
 for b in "${benches[@]}"; do
     log="$(mktemp)"
