@@ -1,0 +1,361 @@
+//! Backend-independent driver state shared by the channel and TCP
+//! backends: data resolution, the per-round barrier (model collection,
+//! averaging, eval/checkpoint/early-stop bookkeeping), and the final
+//! report.
+//!
+//! [`crate::dist::local`] and [`crate::dist::net`] differ only in how
+//! events and models travel (mpsc channels vs. sockets); everything that
+//! decides *what the run computes* lives here so the two backends cannot
+//! drift — the 1-worker byte-identity guarantee holds over TCP because
+//! it is literally the same code path.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::{EpochStats, TrainConfig};
+use crate::cpu_ref;
+use crate::data::{PagedTensor, TensorView};
+use crate::dist::event::{Event, MemberId};
+use crate::model::TuckerModel;
+use crate::serve::ModelSnapshot;
+use crate::session::{DataSource, EpochEvent, Observer, RunReport, Schedule};
+use crate::tensor::{split::train_test_split, SparseTensor};
+
+/// Target sections per worker for in-RAM tensors (more sections than
+/// workers so a re-deal after an eviction stays balanced; the actual
+/// count is trimmed so no section is empty).  FTB2 stores use their
+/// real on-disk sections instead.
+const RAM_SECTIONS_PER_WORKER: usize = 8;
+
+/// The training data, RAM or paged (the distributed twin of the
+/// session's internal enum — both feed workers through [`TensorView`]).
+pub(crate) enum DistData {
+    /// An in-RAM tensor (already split; this is the train part).
+    Ram(SparseTensor),
+    /// A paged FTB2 store (sections are its on-disk pages).
+    Paged(PagedTensor),
+}
+
+impl DistData {
+    pub(crate) fn view(&self) -> &dyn TensorView {
+        match self {
+            DistData::Ram(t) => t,
+            DistData::Paged(p) => p,
+        }
+    }
+}
+
+/// Resolve a data source exactly like a serial session would (same
+/// split, same seed), plus the section geometry the shard assignment
+/// deals over.  Returns `(train data, test tensor, n_sections,
+/// section_entries)`.
+///
+/// Every distributed party — the local driver, the TCP coordinator, and
+/// each TCP worker — resolves through this one function, so section
+/// geometry is a pure function of `(source, test_frac, seed, workers)`
+/// and never has to cross the wire on trust alone (the TCP worker
+/// cross-checks its computed `section_entries` against the welcome
+/// frame).
+pub(crate) fn resolve_dist_data(
+    source: &DataSource,
+    test_frac: f64,
+    seed: u64,
+    workers: usize,
+) -> Result<(DistData, SparseTensor, u32, usize)> {
+    match source {
+        DataSource::Store(path) => {
+            let paged = PagedTensor::open(path).with_context(|| format!("opening {path:?}"))?;
+            let meta = paged.meta().clone();
+            let empty = SparseTensor::new(meta.dims.clone());
+            let n_sections = u32::try_from(meta.num_pages().max(1))
+                .map_err(|_| anyhow!("store has more than u32::MAX sections"))?;
+            Ok((
+                DistData::Paged(paged),
+                empty,
+                n_sections,
+                meta.page_entries,
+            ))
+        }
+        _ => {
+            let tensor = source.resolve()?;
+            let (train, test) = if test_frac > 0.0 {
+                train_test_split(&tensor, test_frac, seed)
+            } else {
+                let empty = SparseTensor::new(tensor.dims.clone());
+                (tensor, empty)
+            };
+            let nnz = train.values.len();
+            // aim for ~RAM_SECTIONS_PER_WORKER sections per worker, then
+            // shrink the count to the non-empty fixed-stride ranges:
+            // `n_sections = ceil(nnz / section_entries)` puts every
+            // section's start offset below nnz, so no member is dealt
+            // only empty sections (such a worker would echo its model
+            // back untouched and the averaging barrier would dilute that
+            // round's gradient updates by 1/N)
+            let target = (workers * RAM_SECTIONS_PER_WORKER).min(nnz.max(1));
+            let section_entries = nnz.div_ceil(target).max(1);
+            let n_sections = nnz.div_ceil(section_entries).max(1);
+            Ok((
+                DistData::Ram(train),
+                test,
+                n_sections as u32,
+                section_entries,
+            ))
+        }
+    }
+}
+
+/// Everything a distributed backend's drive loop delegates at the round
+/// barrier: the global/per-member model books, averaging, evaluation,
+/// checkpointing, early stopping, learning-rate decay, and the epoch
+/// history.  The backend stays a pure transport: it collects
+/// `(member, model, stats)` triples however its wire works and hands
+/// them here.
+pub(crate) struct RoundDriver<'a> {
+    cfg: &'a TrainConfig,
+    sched: &'a Schedule,
+    test: &'a SparseTensor,
+    /// Current hyper-parameters (carries learning-rate decay forward).
+    pub(crate) hyper: cpu_ref::Hyper,
+    /// The last averaged global model.
+    pub(crate) global: TuckerModel,
+    /// Each member's model between averaging barriers (`sync_every > 1`).
+    last_model: BTreeMap<MemberId, TuckerModel>,
+    can_eval: bool,
+    history: Vec<EpochEvent>,
+    best_rmse: Option<f64>,
+    final_eval: Option<(f64, f64)>,
+    strikes: usize,
+    stopped_early: bool,
+    last_epoch_checkpointed: bool,
+    epochs_run: usize,
+}
+
+impl<'a> RoundDriver<'a> {
+    /// Set up the books and run the epoch-0 evaluation (when the
+    /// schedule evaluates at all).
+    pub(crate) fn new(
+        cfg: &'a TrainConfig,
+        sched: &'a Schedule,
+        test: &'a SparseTensor,
+        global0: TuckerModel,
+        observer: &mut dyn Observer,
+    ) -> RoundDriver<'a> {
+        let can_eval = sched.eval_every > 0 && test.nnz() > 0;
+        let mut driver = RoundDriver {
+            cfg,
+            sched,
+            test,
+            hyper: cfg.hyper,
+            global: global0,
+            last_model: BTreeMap::new(),
+            can_eval,
+            history: Vec::new(),
+            best_rmse: None,
+            final_eval: None,
+            strikes: 0,
+            stopped_early: false,
+            last_epoch_checkpointed: false,
+            epochs_run: 0,
+        };
+        if can_eval {
+            let (rmse, mae) = cpu_ref::evaluate(&driver.global, test);
+            driver.best_rmse = Some(rmse);
+            driver.final_eval = Some((rmse, mae));
+            let ev = EpochEvent {
+                epoch: 0,
+                stats: None,
+                rmse: Some(rmse),
+                mae: Some(mae),
+                lr_a: driver.hyper.lr_a,
+                checkpoint: None,
+                published: false,
+                cache: None,
+            };
+            observer.on_epoch(&ev);
+            driver.history.push(ev);
+        }
+        driver
+    }
+
+    /// The model `member` starts its next round from: its own model
+    /// between averaging barriers, the global model otherwise.
+    pub(crate) fn model_for(&self, member: MemberId) -> TuckerModel {
+        self.last_model.get(&member).unwrap_or(&self.global).clone()
+    }
+
+    /// Forget an evicted member's per-member model.
+    pub(crate) fn drop_member(&mut self, member: MemberId) {
+        self.last_model.remove(&member);
+    }
+
+    /// Execute one round barrier over the collected results (already in
+    /// ascending member-id order — the averaging order is deterministic)
+    /// and return the event to apply to the coordinator:
+    /// `SyncComplete` normally, `Shutdown` when early stopping fires.
+    pub(crate) fn run_barrier(
+        &mut self,
+        round: u64,
+        average: bool,
+        picked: Vec<(MemberId, TuckerModel, EpochStats)>,
+        observer: &mut dyn Observer,
+    ) -> Result<Event> {
+        let mut agg = EpochStats::default();
+        for (_, _, stats) in &picked {
+            agg.factor.merge(&stats.factor);
+            agg.core.merge(&stats.core);
+        }
+        if average {
+            let models: Vec<&TuckerModel> = picked.iter().map(|(_, m, _)| m).collect();
+            if !models.is_empty() {
+                self.global = average_models(&models);
+            }
+            for (m, _, _) in &picked {
+                self.last_model.insert(*m, self.global.clone());
+            }
+        } else {
+            for (m, model, _) in picked {
+                self.last_model.insert(m, model);
+            }
+        }
+
+        let epoch = (round + 1) as usize;
+        self.epochs_run = epoch;
+        let lr_a = self.hyper.lr_a;
+        let eval = if self.can_eval && epoch % self.sched.eval_every == 0 {
+            let (rmse, mae) = cpu_ref::evaluate(&self.global, self.test);
+            self.final_eval = Some((rmse, mae));
+            Some((rmse, mae))
+        } else {
+            None
+        };
+        let checkpoint = match &self.sched.checkpoint {
+            Some(path)
+                if self.sched.checkpoint_every > 0
+                    && epoch % self.sched.checkpoint_every == 0 =>
+            {
+                ModelSnapshot::from_model(&self.global, self.cfg.algo, round + 1).save(path)?;
+                Some(path.clone())
+            }
+            _ => None,
+        };
+        self.last_epoch_checkpointed = checkpoint.is_some();
+
+        if let (Some(es), Some((rmse, _))) = (&self.sched.early_stop, eval) {
+            let improved = match self.best_rmse {
+                Some(best) => rmse < best - es.min_delta,
+                None => true,
+            };
+            if improved {
+                self.strikes = 0;
+            } else {
+                self.strikes += 1;
+                if self.strikes >= es.patience {
+                    self.stopped_early = true;
+                }
+            }
+        }
+        if let Some((rmse, _)) = eval {
+            self.best_rmse = Some(self.best_rmse.map_or(rmse, |b| b.min(rmse)));
+        }
+
+        let ev = EpochEvent {
+            epoch,
+            stats: Some(agg),
+            rmse: eval.map(|e| e.0),
+            mae: eval.map(|e| e.1),
+            lr_a,
+            checkpoint,
+            published: false,
+            cache: None,
+        };
+        observer.on_epoch(&ev);
+        self.history.push(ev);
+
+        if self.stopped_early {
+            Ok(Event::Shutdown)
+        } else {
+            if let Some(decay) = self.sched.lr_decay {
+                self.hyper.lr_a *= decay;
+                self.hyper.lr_b *= decay;
+            }
+            Ok(Event::SyncComplete { round })
+        }
+    }
+
+    /// Close the books: write the final checkpoint if the cadence didn't
+    /// already cover the last epoch, build the report, and notify the
+    /// observer.  Returns `(report, final model)`.
+    pub(crate) fn finish(
+        self,
+        wall_s: f64,
+        observer: &mut dyn Observer,
+    ) -> Result<(RunReport, TuckerModel)> {
+        if let Some(path) = &self.sched.checkpoint {
+            if !self.last_epoch_checkpointed {
+                ModelSnapshot::from_model(&self.global, self.cfg.algo, self.epochs_run as u64)
+                    .save(path)?;
+            }
+        }
+        let report = RunReport {
+            epochs_run: self.epochs_run,
+            stopped_early: self.stopped_early,
+            final_rmse: self.final_eval.map(|e| e.0),
+            final_mae: self.final_eval.map(|e| e.1),
+            best_rmse: self.best_rmse,
+            wall_s,
+            history: self.history,
+        };
+        observer.on_finish(&report);
+        Ok((report, self.global))
+    }
+}
+
+/// Element-wise mean of the members' models, accumulated in `f64`.
+/// Callers pass models in ascending member-id order, so the sum order —
+/// and therefore the result, bit for bit — is deterministic.  Averaging
+/// a single model is the identity (`(f64::from(x) / 1.0) as f32 == x`).
+pub(crate) fn average_models(models: &[&TuckerModel]) -> TuckerModel {
+    let mut out = models[0].clone();
+    let k = models.len() as f64;
+    for n in 0..out.factors.len() {
+        for (i, slot) in out.factors[n].iter_mut().enumerate() {
+            let sum: f64 = models.iter().map(|m| f64::from(m.factors[n][i])).sum();
+            *slot = (sum / k) as f32;
+        }
+        for (i, slot) in out.cores[n].iter_mut().enumerate() {
+            let sum: f64 = models.iter().map(|m| f64::from(m.cores[n][i])).sum();
+            *slot = (sum / k) as f32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(seed: u64) -> TuckerModel {
+        TuckerModel::init_with_mean(&[4, 5, 6], 16, 16, seed, 1.0)
+    }
+
+    #[test]
+    fn averaging_one_model_is_the_identity() {
+        let m = model(3);
+        let avg = average_models(&[&m]);
+        for n in 0..m.factors.len() {
+            assert_eq!(m.factors[n], avg.factors[n]);
+            assert_eq!(m.cores[n], avg.cores[n]);
+        }
+    }
+
+    #[test]
+    fn averaging_is_the_elementwise_mean() {
+        let a = model(1);
+        let b = model(2);
+        let avg = average_models(&[&a, &b]);
+        let expect = (f64::from(a.factors[0][0]) + f64::from(b.factors[0][0])) / 2.0;
+        assert_eq!(avg.factors[0][0], expect as f32);
+    }
+}

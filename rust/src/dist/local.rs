@@ -2,9 +2,10 @@
 //! coordinator, `mpsc` channels as the wire.
 //!
 //! This is the reference implementation of the distributed protocol —
-//! the TCP backend (a later PR) replaces the channels and the
-//! tick-from-wall-clock mapping here, and nothing else: the
-//! [`Coordinator`] itself never sees a clock.  The mapping is
+//! the TCP backend ([`crate::dist::net`]) replaces the channels with
+//! sockets and keeps the same tick-from-wall-clock mapping, and nothing
+//! else: the [`Coordinator`] itself never sees a clock, and the barrier
+//! semantics are shared code ([`crate::dist::driver`]).  The mapping is
 //! [`TICK_MS`] milliseconds of wall time per tick, so the default
 //! heartbeat timeout of 60 ticks is ~300 ms against workers that
 //! heartbeat every ~20 ms ([`crate::dist::worker::HEARTBEAT_MS`]).
@@ -32,22 +33,20 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::coordinator::EpochStats;
-use crate::cpu_ref;
-use crate::data::{PagedTensor, TensorView};
+use crate::data::TensorView;
 use crate::dist::coordinator::Coordinator;
+use crate::dist::driver::{resolve_dist_data, RoundDriver};
 use crate::dist::event::{CoordinatorState, Directive, DistConfig, Event, MemberId};
 use crate::dist::worker::{worker_loop, Fault, RoundResult, WorkerCmd};
 use crate::model::TuckerModel;
 use crate::obs::{Counter, FlightRecorder, Hist, Metrics, MetricsFile};
-use crate::serve::ModelSnapshot;
-use crate::session::{DataSource, EpochEvent, Observer, RunReport, RunSpec};
-use crate::tensor::{split::train_test_split, SparseTensor};
+use crate::session::{Observer, RunReport, RunSpec};
 
 /// Wall-clock milliseconds per coordinator tick in this backend.
 pub const TICK_MS: u64 = 5;
 
 /// One coordinator tick's worth of wall time.
-const TICK: Duration = Duration::from_millis(TICK_MS);
+pub(crate) const TICK: Duration = Duration::from_millis(TICK_MS);
 
 /// The longest stretch of wall time one drive-loop pass may convert into
 /// coordinator ticks.  Directive handling can stall the driver for
@@ -63,17 +62,11 @@ const TICK: Duration = Duration::from_millis(TICK_MS);
 /// [`TICK_MS`] of real silence), and a stalled pass contributes at most
 /// two ticks.  The tick counter may therefore lag wall time — nothing
 /// requires it to be wall-accurate, only monotonic.
-const PASS_CREDIT_MAX: Duration = Duration::from_millis(2 * TICK_MS);
+pub(crate) const PASS_CREDIT_MAX: Duration = Duration::from_millis(2 * TICK_MS);
 
 /// Hard wall-clock ceiling on a local distributed run — a liveness bug
 /// should fail a test, not hang it (and CI) forever.
-const WATCHDOG_S: u64 = 600;
-
-/// Target sections per worker for in-RAM tensors (more sections than
-/// workers so a re-deal after an eviction stays balanced; the actual
-/// count is trimmed so no section is empty).  FTB2 stores use their
-/// real on-disk sections instead.
-const RAM_SECTIONS_PER_WORKER: usize = 8;
+pub(crate) const WATCHDOG_S: u64 = 600;
 
 /// Injected failure for the fault tests: worker number `member_index`
 /// (0-based spawn index) dies mid-epoch in `round`.
@@ -108,42 +101,26 @@ pub fn run_local(spec: &RunSpec, observer: &mut dyn Observer) -> Result<DistRun>
     run_local_with(spec, &LocalOpts::default(), observer)
 }
 
-/// The training data, RAM or paged (the distributed twin of the
-/// session's internal enum — both feed workers through [`TensorView`]).
-enum DistData {
-    Ram(SparseTensor),
-    Paged(PagedTensor),
-}
-
-impl DistData {
-    fn view(&self) -> &dyn TensorView {
-        match self {
-            DistData::Ram(t) => t,
-            DistData::Paged(p) => p,
-        }
-    }
-}
-
 /// Telemetry for one distributed run: registry handles the drive loop
 /// bumps, the flight-recorder tape of every protocol message, and the
 /// JSONL sink both are dumped to on completion or watchdog abort.
 /// Created only when [`RunSpec::metrics`] is set — with it absent every
 /// recording site takes the `None` branch and the run's outputs are
 /// bit-identical (pinned by `tests/dist.rs`).
-struct DistTelemetry {
+pub(crate) struct DistTelemetry {
     registry: Metrics,
     flight: FlightRecorder,
     file: MetricsFile,
-    ticks: Arc<Counter>,
+    pub(crate) ticks: Arc<Counter>,
     heartbeats: Arc<Counter>,
     evictions: Arc<Counter>,
     rounds: Arc<Counter>,
-    round_ns: Arc<Hist>,
-    barrier_ns: Arc<Hist>,
+    pub(crate) round_ns: Arc<Hist>,
+    pub(crate) barrier_ns: Arc<Hist>,
 }
 
 impl DistTelemetry {
-    fn create(path: &Path) -> Result<DistTelemetry> {
+    pub(crate) fn create(path: &Path) -> Result<DistTelemetry> {
         let registry = Metrics::new();
         let file = MetricsFile::create(path)
             .with_context(|| format!("creating metrics file {path:?}"))?;
@@ -162,7 +139,7 @@ impl DistTelemetry {
 
     /// Tape a worker → coordinator event before it is applied, so even
     /// events the coordinator rejects are on record.
-    fn on_event(&self, tick: u64, ev: &Event) {
+    pub(crate) fn on_event(&self, tick: u64, ev: &Event) {
         if matches!(ev, Event::Heartbeat { .. }) {
             self.heartbeats.inc();
         }
@@ -170,7 +147,7 @@ impl DistTelemetry {
     }
 
     /// Tape a coordinator → worker directive as it is issued.
-    fn on_directive(&self, tick: u64, d: &Directive) {
+    pub(crate) fn on_directive(&self, tick: u64, d: &Directive) {
         match d {
             Directive::Evict { .. } => self.evictions.inc(),
             Directive::BeginRound { .. } => self.rounds.inc(),
@@ -182,7 +159,7 @@ impl DistTelemetry {
     /// Dump the final registry snapshot plus the flight tape.  The
     /// watchdog-abort path ignores the result — a sink error must never
     /// mask the liveness failure being reported.
-    fn finish(&mut self) -> io::Result<()> {
+    pub(crate) fn finish(&mut self) -> io::Result<()> {
         self.file.write_snapshot("dist", &self.registry.snapshot())?;
         self.file.write_flight(&self.flight)
     }
@@ -209,47 +186,8 @@ pub fn run_local_with(
 
     // --- data: mirror Session::from_spec so the 1-worker run sees the
     // exact same train/test split as the serial trainer ------------------
-    let (data, test, n_sections, section_entries) = match &spec.data {
-        DataSource::Store(path) => {
-            let paged = PagedTensor::open(path).with_context(|| format!("opening {path:?}"))?;
-            let meta = paged.meta().clone();
-            let empty = SparseTensor::new(meta.dims.clone());
-            let n_sections = u32::try_from(meta.num_pages().max(1))
-                .map_err(|_| anyhow!("store has more than u32::MAX sections"))?;
-            (
-                DistData::Paged(paged),
-                empty,
-                n_sections,
-                meta.page_entries,
-            )
-        }
-        _ => {
-            let tensor = spec.data.resolve()?;
-            let (train, test) = if sched.test_frac > 0.0 {
-                train_test_split(&tensor, sched.test_frac, cfg.seed)
-            } else {
-                let empty = SparseTensor::new(tensor.dims.clone());
-                (tensor, empty)
-            };
-            let nnz = train.values.len();
-            // aim for ~RAM_SECTIONS_PER_WORKER sections per worker, then
-            // shrink the count to the non-empty fixed-stride ranges:
-            // `n_sections = ceil(nnz / section_entries)` puts every
-            // section's start offset below nnz, so no member is dealt
-            // only empty sections (such a worker would echo its model
-            // back untouched and the averaging barrier would dilute that
-            // round's gradient updates by 1/N)
-            let target = (workers * RAM_SECTIONS_PER_WORKER).min(nnz.max(1));
-            let section_entries = nnz.div_ceil(target).max(1);
-            let n_sections = nnz.div_ceil(section_entries).max(1);
-            (
-                DistData::Ram(train),
-                test,
-                n_sections as u32,
-                section_entries,
-            )
-        }
-    };
+    let (data, test, n_sections, section_entries) =
+        resolve_dist_data(&spec.data, sched.test_frac, cfg.seed, workers)?;
     let view: &dyn TensorView = data.view();
     ensure!(
         view.nnz() < u32::MAX as usize,
@@ -308,37 +246,8 @@ pub fn run_local_with(
         drop(done_tx);
 
         let mut coord = Coordinator::new(dist_cfg);
-        let mut hyper = cfg.hyper;
-        let mut global = global0;
-        let mut last_model: BTreeMap<MemberId, TuckerModel> = BTreeMap::new();
+        let mut driver = RoundDriver::new(cfg, sched, &test, global0, observer);
         let mut pending: Vec<RoundResult> = Vec::new();
-
-        let can_eval = sched.eval_every > 0 && test.nnz() > 0;
-        let mut history: Vec<EpochEvent> = Vec::new();
-        let mut best_rmse: Option<f64> = None;
-        let mut final_eval: Option<(f64, f64)> = None;
-        let mut strikes = 0usize;
-        let mut stopped_early = false;
-        let mut last_epoch_checkpointed = false;
-        let mut epochs_run = 0usize;
-
-        if can_eval {
-            let (rmse, mae) = cpu_ref::evaluate(&global, &test);
-            best_rmse = Some(rmse);
-            final_eval = Some((rmse, mae));
-            let ev = EpochEvent {
-                epoch: 0,
-                stats: None,
-                rmse: Some(rmse),
-                mae: Some(mae),
-                lr_a: hyper.lr_a,
-                checkpoint: None,
-                published: false,
-                cache: None,
-            };
-            observer.on_epoch(&ev);
-            history.push(ev);
-        }
 
         let mut tick_debt = Duration::ZERO;
         let mut last_pass = Instant::now();
@@ -401,7 +310,7 @@ pub fn run_local_with(
                 match d {
                     Directive::EnterWarmup | Directive::Evict { .. } => {
                         if let Directive::Evict { member } = d {
-                            last_model.remove(&member);
+                            driver.drop_member(member);
                         }
                         observer.on_round(&coord.state());
                     }
@@ -409,8 +318,7 @@ pub fn run_local_with(
                         observer.on_round(&coord.state());
                         round_started = Some(Instant::now());
                         for (member, sections) in assignment.shards {
-                            let model =
-                                last_model.get(&member).unwrap_or(&global).clone();
+                            let model = driver.model_for(member);
                             if let Some(tx) = cmds.get(&member) {
                                 // a dead worker's channel errors; the
                                 // coordinator will evict it by timeout
@@ -418,7 +326,7 @@ pub fn run_local_with(
                                     round,
                                     sections,
                                     model,
-                                    hyper,
+                                    hyper: driver.hyper,
                                 });
                             }
                         }
@@ -451,101 +359,13 @@ pub fn run_local_with(
                                 picked.push((m, model, stats));
                             }
                         }
-                        let mut agg = EpochStats::default();
-                        for (_, _, stats) in &picked {
-                            agg.factor.merge(&stats.factor);
-                            agg.core.merge(&stats.core);
+                        let done = driver.run_barrier(round, average, picked, observer)?;
+                        if let Some(t) = &tel {
+                            t.on_event(coord.ticks(), &done);
                         }
-                        if average {
-                            let models: Vec<&TuckerModel> =
-                                picked.iter().map(|(_, m, _)| m).collect();
-                            if !models.is_empty() {
-                                global = average_models(&models);
-                            }
-                            for (m, _, _) in &picked {
-                                last_model.insert(*m, global.clone());
-                            }
-                        } else {
-                            for (m, model, _) in picked {
-                                last_model.insert(m, model);
-                            }
-                        }
-
-                        let epoch = (round + 1) as usize;
-                        epochs_run = epoch;
-                        let lr_a = hyper.lr_a;
-                        let eval = if can_eval && epoch % sched.eval_every == 0 {
-                            let (rmse, mae) = cpu_ref::evaluate(&global, &test);
-                            final_eval = Some((rmse, mae));
-                            Some((rmse, mae))
-                        } else {
-                            None
-                        };
-                        let checkpoint = match &sched.checkpoint {
-                            Some(path)
-                                if sched.checkpoint_every > 0
-                                    && epoch % sched.checkpoint_every == 0 =>
-                            {
-                                ModelSnapshot::from_model(&global, cfg.algo, round + 1)
-                                    .save(path)?;
-                                Some(path.clone())
-                            }
-                            _ => None,
-                        };
-                        last_epoch_checkpointed = checkpoint.is_some();
-
-                        if let (Some(es), Some((rmse, _))) = (&sched.early_stop, eval) {
-                            let improved = match best_rmse {
-                                Some(best) => rmse < best - es.min_delta,
-                                None => true,
-                            };
-                            if improved {
-                                strikes = 0;
-                            } else {
-                                strikes += 1;
-                                if strikes >= es.patience {
-                                    stopped_early = true;
-                                }
-                            }
-                        }
-                        if let Some((rmse, _)) = eval {
-                            best_rmse = Some(best_rmse.map_or(rmse, |b| b.min(rmse)));
-                        }
-
-                        let ev = EpochEvent {
-                            epoch,
-                            stats: Some(agg),
-                            rmse: eval.map(|e| e.0),
-                            mae: eval.map(|e| e.1),
-                            lr_a,
-                            checkpoint,
-                            published: false,
-                            cache: None,
-                        };
-                        observer.on_epoch(&ev);
-                        history.push(ev);
-
-                        if stopped_early {
-                            let shutdown = Event::Shutdown;
-                            if let Some(t) = &tel {
-                                t.on_event(coord.ticks(), &shutdown);
-                            }
-                            coord
-                                .apply(&shutdown)
-                                .map_err(|e| anyhow!("coordinator rejected Shutdown: {e}"))?;
-                        } else {
-                            if let Some(decay) = sched.lr_decay {
-                                hyper.lr_a *= decay;
-                                hyper.lr_b *= decay;
-                            }
-                            let done = Event::SyncComplete { round };
-                            if let Some(t) = &tel {
-                                t.on_event(coord.ticks(), &done);
-                            }
-                            coord
-                                .apply(&done)
-                                .map_err(|e| anyhow!("coordinator rejected SyncComplete: {e}"))?;
-                        }
+                        coord.apply(&done).map_err(|e| {
+                            anyhow!("coordinator rejected {}: {e}", done.kind())
+                        })?;
                         if let Some(t) = &tel {
                             t.barrier_ns.record_duration(barrier_t0.elapsed());
                         }
@@ -588,78 +408,15 @@ pub fn run_local_with(
             }
         }
 
-        if let Some(path) = &sched.checkpoint {
-            if !last_epoch_checkpointed {
-                ModelSnapshot::from_model(&global, cfg.algo, epochs_run as u64).save(path)?;
-            }
-        }
-
         if let Some(t) = tel.as_mut() {
             t.finish().context("writing dist metrics file")?;
         }
 
-        let report = RunReport {
-            epochs_run,
-            stopped_early,
-            final_rmse: final_eval.map(|e| e.0),
-            final_mae: final_eval.map(|e| e.1),
-            best_rmse,
-            wall_s: t0.elapsed().as_secs_f64(),
-            history,
-        };
-        observer.on_finish(&report);
+        let (report, model) = driver.finish(t0.elapsed().as_secs_f64(), observer)?;
         Ok(DistRun {
             report,
-            model: global,
+            model,
             final_state: coord.state(),
         })
     })
-}
-
-/// Element-wise mean of the members' models, accumulated in `f64`.
-/// Callers pass models in ascending member-id order, so the sum order —
-/// and therefore the result, bit for bit — is deterministic.  Averaging
-/// a single model is the identity (`(f64::from(x) / 1.0) as f32 == x`).
-fn average_models(models: &[&TuckerModel]) -> TuckerModel {
-    let mut out = models[0].clone();
-    let k = models.len() as f64;
-    for n in 0..out.factors.len() {
-        for (i, slot) in out.factors[n].iter_mut().enumerate() {
-            let sum: f64 = models.iter().map(|m| f64::from(m.factors[n][i])).sum();
-            *slot = (sum / k) as f32;
-        }
-        for (i, slot) in out.cores[n].iter_mut().enumerate() {
-            let sum: f64 = models.iter().map(|m| f64::from(m.cores[n][i])).sum();
-            *slot = (sum / k) as f32;
-        }
-    }
-    out
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn model(seed: u64) -> TuckerModel {
-        TuckerModel::init_with_mean(&[4, 5, 6], 16, 16, seed, 1.0)
-    }
-
-    #[test]
-    fn averaging_one_model_is_the_identity() {
-        let m = model(3);
-        let avg = average_models(&[&m]);
-        for n in 0..m.factors.len() {
-            assert_eq!(m.factors[n], avg.factors[n]);
-            assert_eq!(m.cores[n], avg.cores[n]);
-        }
-    }
-
-    #[test]
-    fn averaging_is_the_elementwise_mean() {
-        let a = model(1);
-        let b = model(2);
-        let avg = average_models(&[&a, &b]);
-        let expect = (f64::from(a.factors[0][0]) + f64::from(b.factors[0][0])) / 2.0;
-        assert_eq!(avg.factors[0][0], expect as f32);
-    }
 }

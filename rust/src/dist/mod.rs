@@ -21,6 +21,15 @@
 //! * [`local`] — the in-process backend: N workers on threads, `mpsc`
 //!   channels as the wire, wall time mapped to ticks.  Drives a
 //!   [`crate::session::RunSpec`] end to end (`train --workers N`).
+//! * [`net`] — the TCP backend: the same protocol over sockets, one
+//!   coordinator process (`train --coordinator ADDR --workers N`) and N
+//!   worker processes (`train --join ADDR`).  Newline-delimited JSON
+//!   frames of the [`event`] vocabulary, FTM1 model payloads at
+//!   barriers, framing shared with the serving tier
+//!   ([`crate::serve::net::frame`]).
+//! * `driver` (crate-private) — the barrier/eval/checkpoint driver both
+//!   backends share, so the 1-worker byte-identity guarantee holds over
+//!   TCP because it is literally the same code path.
 //!
 //! Semantics in one paragraph: each round, the coordinator deals the
 //! tensor's sections to the live members ([`shard::assign`]); every
@@ -34,8 +43,10 @@
 //! byte-identically, which is what makes the whole layer testable.
 
 pub mod coordinator;
+pub(crate) mod driver;
 pub mod event;
 pub mod local;
+pub mod net;
 pub mod shard;
 pub mod worker;
 
@@ -44,4 +55,5 @@ pub use event::{
     CoordinatorState, Directive, DistConfig, DistPhase, Event, MemberId, ShardAssignment,
 };
 pub use local::{run_local, run_local_with, DistRun, FaultSpec, LocalOpts};
+pub use net::{run_coordinator, run_coordinator_on, run_worker, JoinOpts, WorkerSummary};
 pub use worker::{worker_loop, Fault, WorkerCmd};

@@ -1,0 +1,806 @@
+//! The TCP backend: the same distributed protocol as [`crate::dist::local`]
+//! with sockets in place of channels.
+//!
+//! One **coordinator process** (`train --coordinator LISTEN --workers N`)
+//! binds a listener, drives the pure [`Coordinator`] state machine from
+//! the same wall-clock→tick mapping as the channel backend
+//! ([`crate::dist::local::TICK_MS`] ms per tick, stall credit clamped),
+//! and runs the shared
+//! barrier driver ([`crate::dist::driver`]).  N **worker processes**
+//! (`train --join ADDR [--store data.ftb2]`) connect, train their dealt
+//! sections each round, and ship models back.
+//!
+//! ## Wire grammar
+//!
+//! The control stream is newline-delimited JSON frames of the *existing*
+//! protocol vocabulary — [`Event`] lines worker→coordinator,
+//! [`Directive`] lines coordinator→worker — with the
+//! [`crate::serve::net::frame`] framing discipline (single writer per
+//! socket, length-sane line reader).  Three wire-level extensions:
+//!
+//! * **Handshake**: the worker's first frame is `join` with `member: 0`
+//!   ("assign me") and a `proto` field; the coordinator assigns the next
+//!   member id (1-based, accept order) and answers a `welcome` frame
+//!   carrying the id, the section geometry, and the full
+//!   [`RunSpec`] JSON — one source of truth for training config.
+//! * **Model payloads**: a `begin_round` directive line is immediately
+//!   followed by a binary payload frame (`u64` length, `u64` FNV-1a
+//!   checksum, then FTM1 model bytes — exactly the checkpoint encoding);
+//!   a `step_complete` event line is likewise followed by the worker's
+//!   updated model.  FTM1 bytes preserve every f32 bit pattern, so the
+//!   1-worker TCP run stays byte-identical to the serial trainer.
+//! * **Extension fields**: `begin_round` lines carry `hyper` (the
+//!   current learning rates, so decay reaches every process) and
+//!   `step_complete` lines carry `stats` (the phase timings the barrier
+//!   aggregates).  [`Event::from_json`]/[`Directive::from_json`] ignore
+//!   unknown fields, so the vocabulary types are unchanged.
+//!
+//! ## Liveness
+//!
+//! Heartbeat eviction is unchanged: workers heartbeat every
+//! [`HEARTBEAT_MS`] and the coordinator evicts after 60 ticks
+//! (~300 ms) of silence, exactly as in the channel backend.  On top of
+//! that both ends bound their socket reads: a worker uses the serving
+//! client's timeout mechanism ([`DEFAULT_TIMEOUT`], `--timeout-ms`) so a
+//! dead coordinator can't wedge it, and the coordinator drops any
+//! connection silent for [`READ_IDLE`] (a live worker is never silent —
+//! heartbeats flow constantly).  An evicted worker's socket is shut
+//! down; the worker sees EOF and exits loudly.
+
+use std::collections::BTreeMap;
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError, Sender};
+use std::sync::Mutex;
+use std::thread::Scope;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::coordinator::{EpochStats, PhaseStats, Trainer};
+use crate::cpu_ref::Hyper;
+use crate::data::{ShardView, TensorView};
+use crate::dist::coordinator::Coordinator;
+use crate::dist::driver::{resolve_dist_data, RoundDriver};
+use crate::dist::event::{Directive, DistConfig, Event, MemberId};
+use crate::dist::local::{DistRun, DistTelemetry, PASS_CREDIT_MAX, TICK, WATCHDOG_S};
+use crate::dist::worker::{Fault, RoundResult, HEARTBEAT_MS};
+use crate::model::TuckerModel;
+use crate::serve::net::client::DEFAULT_TIMEOUT;
+use crate::serve::net::frame::{read_line_bounded, read_payload, FrameWriter};
+use crate::session::{DataSource, Observer, RunSpec};
+use crate::util::json::{self, Json};
+
+/// Control frames (including the spec-bearing welcome and the full
+/// shard assignment) larger than this are a protocol violation.
+const MAX_CONTROL_FRAME: usize = 1 << 20;
+
+/// Model payload bound — a hostile length prefix is rejected before any
+/// allocation happens.
+const MAX_MODEL_BYTES: usize = 1 << 30;
+
+/// Wire protocol version spoken by this build.
+const PROTO: u64 = 1;
+
+/// Coordinator-side idle bound per connection: a live worker heartbeats
+/// every [`HEARTBEAT_MS`], so a socket with no frame for this long is
+/// dead (its member was evicted ~300 ms into the silence) and gets
+/// dropped.
+const READ_IDLE: Duration = Duration::from_secs(10);
+
+// ======================================================================
+// Wire helpers (extension fields on the Event/Directive lines)
+// ======================================================================
+
+/// Append one extension field to an encoded frame object.
+fn with_field(mut frame: Json, key: &str, value: Json) -> Json {
+    if let Json::Obj(m) = &mut frame {
+        m.insert(key.to_string(), value);
+    }
+    frame
+}
+
+fn hyper_json(h: &Hyper) -> Json {
+    // f32 → f64 widening is exact, and the emitter prints the shortest
+    // round-tripping decimal, so learning rates cross bit-identically
+    json::obj(vec![
+        ("lr_a", json::num(h.lr_a as f64)),
+        ("lr_b", json::num(h.lr_b as f64)),
+        ("lam_a", json::num(h.lam_a as f64)),
+        ("lam_b", json::num(h.lam_b as f64)),
+    ])
+}
+
+fn f32_field(v: &Json, key: &str) -> Result<f32> {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .map(|x| x as f32)
+        .ok_or_else(|| anyhow!("missing numeric field {key:?}"))
+}
+
+fn hyper_from_json(v: &Json) -> Result<Hyper> {
+    Ok(Hyper {
+        lr_a: f32_field(v, "lr_a")?,
+        lr_b: f32_field(v, "lr_b")?,
+        lam_a: f32_field(v, "lam_a")?,
+        lam_b: f32_field(v, "lam_b")?,
+    })
+}
+
+fn u64_field(v: &Json, key: &str) -> Result<u64> {
+    v.get(key)
+        .and_then(Json::as_usize)
+        .map(|x| x as u64)
+        .ok_or_else(|| anyhow!("missing integer field {key:?}"))
+}
+
+fn phase_json(p: &PhaseStats) -> Json {
+    json::obj(vec![
+        ("sample_ns", json::num(p.sample.as_nanos() as f64)),
+        ("gather_ns", json::num(p.gather.as_nanos() as f64)),
+        ("exec_ns", json::num(p.exec.as_nanos() as f64)),
+        ("scatter_ns", json::num(p.scatter.as_nanos() as f64)),
+        ("precompute_ns", json::num(p.precompute.as_nanos() as f64)),
+        ("blocks", json::num(p.blocks as f64)),
+        ("samples", json::num(p.samples as f64)),
+        ("padded_slots", json::num(p.padded_slots as f64)),
+        ("inv_hits", json::num(p.inv_hits as f64)),
+        ("inv_misses", json::num(p.inv_misses as f64)),
+    ])
+}
+
+fn phase_from_json(v: &Json) -> Result<PhaseStats> {
+    let ns = |key| u64_field(v, key).map(Duration::from_nanos);
+    Ok(PhaseStats {
+        sample: ns("sample_ns")?,
+        gather: ns("gather_ns")?,
+        exec: ns("exec_ns")?,
+        scatter: ns("scatter_ns")?,
+        precompute: ns("precompute_ns")?,
+        blocks: u64_field(v, "blocks")? as usize,
+        samples: u64_field(v, "samples")? as usize,
+        padded_slots: u64_field(v, "padded_slots")? as usize,
+        inv_hits: u64_field(v, "inv_hits")?,
+        inv_misses: u64_field(v, "inv_misses")?,
+    })
+}
+
+fn stats_json(s: &EpochStats) -> Json {
+    json::obj(vec![
+        ("factor", phase_json(&s.factor)),
+        ("core", phase_json(&s.core)),
+    ])
+}
+
+fn stats_from_json(v: &Json) -> Result<EpochStats> {
+    Ok(EpochStats {
+        factor: phase_from_json(v.get("factor").ok_or_else(|| anyhow!("missing factor stats"))?)?,
+        core: phase_from_json(v.get("core").ok_or_else(|| anyhow!("missing core stats"))?)?,
+    })
+}
+
+fn welcome_frame(member: MemberId, section_entries: usize, spec: &RunSpec) -> String {
+    json::obj(vec![
+        ("kind", json::s("welcome")),
+        ("proto", json::num(PROTO as f64)),
+        ("member", json::num(member as f64)),
+        ("section_entries", json::num(section_entries as f64)),
+        ("spec", spec.to_json()),
+    ])
+    .dump()
+}
+
+// ======================================================================
+// Coordinator process
+// ======================================================================
+
+/// Bind `listen` (e.g. `127.0.0.1:7270`) and run the coordinator until
+/// the run completes.  `spec.train.workers` is the quorum: that many
+/// workers must join before the first round deals.
+pub fn run_coordinator(
+    spec: &RunSpec,
+    listen: &str,
+    observer: &mut dyn Observer,
+) -> Result<DistRun> {
+    let listener =
+        TcpListener::bind(listen).with_context(|| format!("binding coordinator on {listen}"))?;
+    run_coordinator_on(spec, listener, observer)
+}
+
+/// [`run_coordinator`] on an already-bound listener (tests bind port 0
+/// and read the real port back before handing the listener in).
+pub fn run_coordinator_on(
+    spec: &RunSpec,
+    listener: TcpListener,
+    observer: &mut dyn Observer,
+) -> Result<DistRun> {
+    spec.validate()
+        .map_err(|e| anyhow!(e))
+        .context("invalid run spec")?;
+    let workers = spec.train.workers;
+    ensure!(
+        workers > 0,
+        "run_coordinator needs train.workers >= 1 (the quorum to wait for)"
+    );
+    let cfg = &spec.train;
+    let sched = &spec.schedule;
+
+    // resolve data exactly like the channel backend (and the serial
+    // session): same split, same section geometry, same init
+    let (data, test, n_sections, section_entries) =
+        resolve_dist_data(&spec.data, sched.test_frac, cfg.seed, workers)?;
+    let view: &dyn TensorView = data.view();
+    ensure!(
+        view.nnz() < u32::MAX as usize,
+        "tensor has {} entries; the block samplers address at most 2^32 - 2",
+        view.nnz()
+    );
+    let global0 = TuckerModel::init_with_mean(
+        &view.dims().to_vec(),
+        cfg.j,
+        cfg.r,
+        cfg.seed,
+        view.mean_value(),
+    );
+    let dist_cfg = DistConfig {
+        min_members: workers,
+        warmup_ticks: 2,
+        heartbeat_timeout_ticks: 60,
+        rounds: sched.epochs as u64,
+        sync_every: 1,
+        seed: cfg.seed,
+        n_sections,
+    };
+
+    let mut tel = match &spec.metrics {
+        Some(path) => Some(DistTelemetry::create(path)?),
+        None => None,
+    };
+
+    listener
+        .set_nonblocking(true)
+        .context("making the listener non-blocking")?;
+
+    let stop = AtomicBool::new(false);
+    let next_member = AtomicU64::new(1);
+    let writers: Mutex<BTreeMap<MemberId, FrameWriter>> = Mutex::new(BTreeMap::new());
+    let (event_tx, event_rx) = mpsc::channel::<Event>();
+    let (done_tx, done_rx) = mpsc::channel::<RoundResult>();
+
+    let t0 = Instant::now();
+    std::thread::scope(|scope| -> Result<DistRun> {
+        // accept thread: handshakes happen on per-connection reader
+        // threads so a slow joiner can't stall later accepts
+        {
+            let stop = &stop;
+            let next_member = &next_member;
+            let writers = &writers;
+            let listener = &listener;
+            let event_tx = event_tx.clone();
+            let done_tx = done_tx.clone();
+            scope.spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let event_tx = event_tx.clone();
+                            let done_tx = done_tx.clone();
+                            scope.spawn(move || {
+                                // a connection failing is a per-worker
+                                // event (heartbeat eviction handles the
+                                // fallout), never run-fatal
+                                let _ = serve_connection(
+                                    stream,
+                                    section_entries,
+                                    spec,
+                                    next_member,
+                                    writers,
+                                    &event_tx,
+                                    &done_tx,
+                                );
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(5)),
+                    }
+                }
+            });
+        }
+        drop(event_tx);
+        drop(done_tx);
+
+        let mut coord = Coordinator::new(dist_cfg);
+        let mut driver = RoundDriver::new(cfg, sched, &test, global0, observer);
+        let mut pending: Vec<RoundResult> = Vec::new();
+
+        let mut tick_debt = Duration::ZERO;
+        let mut last_pass = Instant::now();
+        let mut round_started: Option<Instant> = None;
+        let run = 'drive: loop {
+            // 1. drain worker events (same cadence as the channel
+            // backend: rejected events are dropped by design)
+            match event_rx.recv_timeout(Duration::from_millis(1)) {
+                Ok(ev) => {
+                    if let Some(t) = &tel {
+                        t.on_event(coord.ticks(), &ev);
+                    }
+                    let _ = coord.apply(&ev);
+                    while let Ok(ev) = event_rx.try_recv() {
+                        if let Some(t) = &tel {
+                            t.on_event(coord.ticks(), &ev);
+                        }
+                        let _ = coord.apply(&ev);
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+
+            // 2. wall time → ticks, with the stall-forgetting credit
+            // clamp (see dist::local::PASS_CREDIT_MAX)
+            let now = Instant::now();
+            tick_debt += now.duration_since(last_pass).min(PASS_CREDIT_MAX);
+            last_pass = now;
+            let mut directives = Vec::new();
+            while tick_debt >= TICK {
+                tick_debt -= TICK;
+                while let Ok(ev) = event_rx.try_recv() {
+                    if let Some(t) = &tel {
+                        t.on_event(coord.ticks(), &ev);
+                    }
+                    let _ = coord.apply(&ev);
+                }
+                if let Some(t) = &tel {
+                    t.ticks.inc();
+                }
+                directives.extend(coord.tick());
+            }
+
+            // 3. obey the directives
+            for d in directives {
+                if let Some(t) = &tel {
+                    t.on_directive(coord.ticks(), &d);
+                }
+                match d {
+                    Directive::EnterWarmup => {
+                        observer.on_round(&coord.state());
+                        // the quorum is set: connections that joined too
+                        // late (or never completed a handshake) are not
+                        // members — close them out
+                        let members = coord.state().members;
+                        let mut map = writers.lock().unwrap();
+                        map.retain(|m, w| {
+                            let keep = members.contains(m);
+                            if !keep {
+                                w.shutdown();
+                            }
+                            keep
+                        });
+                    }
+                    Directive::Evict { member } => {
+                        driver.drop_member(member);
+                        if let Some(w) = writers.lock().unwrap().remove(&member) {
+                            w.shutdown();
+                        }
+                        observer.on_round(&coord.state());
+                    }
+                    Directive::BeginRound { round, assignment } => {
+                        observer.on_round(&coord.state());
+                        round_started = Some(Instant::now());
+                        let line = with_field(
+                            Directive::BeginRound {
+                                round,
+                                assignment: assignment.clone(),
+                            }
+                            .to_json(),
+                            "hyper",
+                            hyper_json(&driver.hyper),
+                        )
+                        .dump();
+                        let map = writers.lock().unwrap();
+                        for (member, _sections) in &assignment.shards {
+                            if let Some(w) = map.get(member) {
+                                // a dead worker's send errors; the
+                                // coordinator will evict it by timeout
+                                let _ = w.send_line_with_payload(
+                                    &line,
+                                    &driver.model_for(*member).to_bytes(),
+                                );
+                            }
+                        }
+                    }
+                    Directive::RunSync {
+                        round,
+                        members,
+                        average,
+                    } => {
+                        observer.on_round(&coord.state());
+                        let barrier_t0 = Instant::now();
+                        if let Some(t) = &tel {
+                            if let Some(started) = round_started.take() {
+                                t.round_ns.record_duration(started.elapsed());
+                            }
+                        }
+                        while let Ok(r) = done_rx.try_recv() {
+                            pending.push(r);
+                        }
+                        pending.retain(|(_, r, _, _)| *r >= round);
+                        // members are sorted by id, so `picked` is too —
+                        // the averaging order is deterministic
+                        let mut picked: Vec<(MemberId, TuckerModel, EpochStats)> = Vec::new();
+                        for &m in &members {
+                            if let Some(pos) = pending
+                                .iter()
+                                .position(|(pm, pr, _, _)| *pm == m && *pr == round)
+                            {
+                                let (_, _, model, stats) = pending.remove(pos);
+                                picked.push((m, model, stats));
+                            }
+                        }
+                        // errors break out of the drive loop instead of
+                        // `?`-ing straight out of the closure: the
+                        // teardown below must run so the accept thread
+                        // (which only checks the stop flag) exits
+                        let done = match driver.run_barrier(round, average, picked, observer) {
+                            Ok(done) => done,
+                            Err(e) => break 'drive Err(e),
+                        };
+                        if let Some(t) = &tel {
+                            t.on_event(coord.ticks(), &done);
+                        }
+                        if let Err(e) = coord.apply(&done) {
+                            break 'drive Err(anyhow!(
+                                "coordinator rejected {}: {e}",
+                                done.kind()
+                            ));
+                        }
+                        if let Some(t) = &tel {
+                            t.barrier_ns.record_duration(barrier_t0.elapsed());
+                        }
+                    }
+                    Directive::Finish => {
+                        observer.on_round(&coord.state());
+                        let line = Directive::Finish.to_json().dump();
+                        for w in writers.lock().unwrap().values() {
+                            let _ = w.send_line(&line);
+                        }
+                        break 'drive Ok(());
+                    }
+                }
+            }
+
+            if t0.elapsed().as_secs() > WATCHDOG_S {
+                if let Some(t) = tel.as_mut() {
+                    let _ = t.finish();
+                }
+                break 'drive Err(anyhow!(
+                    "distributed run exceeded the {WATCHDOG_S}s watchdog in phase {} \
+                     (round {}, {} members)",
+                    coord.phase().name(),
+                    coord.round(),
+                    coord.members().len()
+                ));
+            }
+        };
+
+        // teardown: stop accepting, close every socket (unblocking the
+        // reader threads), then let the scope join them
+        stop.store(true, Ordering::SeqCst);
+        for w in writers.lock().unwrap().values() {
+            w.shutdown();
+        }
+        run?;
+
+        if let Some(t) = tel.as_mut() {
+            t.finish().context("writing dist metrics file")?;
+        }
+        let (report, model) = driver.finish(t0.elapsed().as_secs_f64(), observer)?;
+        Ok(DistRun {
+            report,
+            model,
+            final_state: coord.state(),
+        })
+    })
+}
+
+/// One connection's coordinator-side life: handshake (assign a member
+/// id, answer `welcome`), then forward every event — pairing each
+/// `step_complete` with its model payload into the done queue *before*
+/// the event, the ordering the barrier relies on.
+#[allow(clippy::too_many_arguments)] // one call site, in the accept loop
+fn serve_connection(
+    stream: TcpStream,
+    section_entries: usize,
+    spec: &RunSpec,
+    next_member: &AtomicU64,
+    writers: &Mutex<BTreeMap<MemberId, FrameWriter>>,
+    event_tx: &Sender<Event>,
+    done_tx: &Sender<RoundResult>,
+) -> Result<()> {
+    let _ = stream.set_nodelay(true);
+    stream
+        .set_read_timeout(Some(READ_IDLE))
+        .context("setting the connection read timeout")?;
+    stream
+        .set_write_timeout(Some(DEFAULT_TIMEOUT))
+        .context("setting the connection write timeout")?;
+    let writer = FrameWriter::new(stream.try_clone().context("cloning the socket")?);
+    let mut reader = BufReader::new(stream);
+
+    // handshake: first frame must be a join asking for an id
+    let line = read_line_bounded(&mut reader, MAX_CONTROL_FRAME)?
+        .ok_or_else(|| anyhow!("peer closed before the handshake"))?;
+    let v = Json::parse(&line).map_err(|e| anyhow!("bad handshake frame: {e}"))?;
+    match Event::from_json(&v) {
+        Ok(Event::Join { member: 0 }) => {}
+        _ => bail!("expected a join handshake, got {line:?}"),
+    }
+    if let Some(p) = v.get("proto").and_then(Json::as_usize) {
+        ensure!(
+            p as u64 == PROTO,
+            "protocol version mismatch: peer speaks {p}, this coordinator speaks {PROTO}"
+        );
+    }
+    let member = next_member.fetch_add(1, Ordering::SeqCst);
+    writer.send_line(&welcome_frame(member, section_entries, spec))?;
+    writers.lock().unwrap().insert(member, writer);
+    let _ = event_tx.send(Event::Join { member });
+
+    // event stream
+    loop {
+        let line = match read_line_bounded(&mut reader, MAX_CONTROL_FRAME)? {
+            None => return Ok(()), // clean EOF: worker exited
+            Some(l) => l,
+        };
+        let v = Json::parse(&line).map_err(|e| anyhow!("bad frame from member {member}: {e}"))?;
+        let ev = Event::from_json(&v)
+            .map_err(|e| anyhow!("bad event from member {member}: {e}"))?;
+        // a member may only speak for itself — anything else is a
+        // protocol violation and drops the connection
+        match &ev {
+            Event::Join { member: m }
+            | Event::Heartbeat { member: m }
+            | Event::StepComplete { member: m, .. } => {
+                ensure!(
+                    *m == member,
+                    "member {member} sent a frame claiming member {m}"
+                );
+            }
+            Event::SyncComplete { .. } | Event::Shutdown => {
+                bail!("member {member} sent a coordinator-only event {}", ev.kind())
+            }
+        }
+        if let Event::StepComplete { round, .. } = ev {
+            let stats = match v.get("stats") {
+                Some(s) => stats_from_json(s)?,
+                None => EpochStats::default(),
+            };
+            let bytes = read_payload(&mut reader, MAX_MODEL_BYTES)?;
+            let model = TuckerModel::from_bytes(&bytes)
+                .with_context(|| format!("decoding member {member}'s round {round} model"))?;
+            // result before event: when the coordinator has seen the
+            // StepComplete, the model is already in the done queue
+            let _ = done_tx.send((member, round, model, stats));
+        }
+        if event_tx.send(ev).is_err() {
+            return Ok(()); // drive loop exited; nothing left to do
+        }
+    }
+}
+
+// ======================================================================
+// Worker process
+// ======================================================================
+
+/// How a worker process joins a run.
+#[derive(Clone, Debug, Default)]
+pub struct JoinOpts {
+    /// Use this local FTB2 store instead of the data source in the
+    /// coordinator's spec (the multi-machine path: every worker opens
+    /// its own copy of the store).
+    pub store: Option<PathBuf>,
+    /// Socket read/write timeout (`None` → the serving client's
+    /// [`DEFAULT_TIMEOUT`]); `--timeout-ms` on the CLI.
+    pub timeout: Option<Duration>,
+    /// Die silently partway through the given round (tests only — the
+    /// socket is shut down exactly as a `kill -9` would).
+    pub fault: Option<Fault>,
+}
+
+/// What a finished worker reports.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerSummary {
+    /// The member id the coordinator assigned.
+    pub member: MemberId,
+    /// Rounds this worker trained.
+    pub rounds: u64,
+}
+
+/// Connect to a coordinator at `addr` and work until the run finishes.
+pub fn run_worker(addr: &str, opts: &JoinOpts) -> Result<WorkerSummary> {
+    let timeout = opts.timeout.unwrap_or(DEFAULT_TIMEOUT);
+    let stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting coordinator {addr}"))?;
+    let _ = stream.set_nodelay(true);
+    // the same bounded-read mechanism as the serving NetClient: a dead
+    // coordinator surfaces as a loud timeout, never a wedged worker
+    stream
+        .set_read_timeout(Some(timeout))
+        .context("setting the read timeout")?;
+    stream
+        .set_write_timeout(Some(timeout))
+        .context("setting the write timeout")?;
+    let writer = FrameWriter::new(stream.try_clone().context("cloning the socket")?);
+    let mut reader = BufReader::new(stream);
+
+    // handshake
+    writer.send_line(
+        &with_field(
+            Event::Join { member: 0 }.to_json(),
+            "proto",
+            json::num(PROTO as f64),
+        )
+        .dump(),
+    )?;
+    let line = read_line_bounded(&mut reader, MAX_CONTROL_FRAME)?
+        .ok_or_else(|| anyhow!("coordinator closed the connection during the handshake"))?;
+    let v = Json::parse(&line).map_err(|e| anyhow!("bad welcome frame: {e}"))?;
+    ensure!(
+        v.get("kind").and_then(Json::as_str) == Some("welcome"),
+        "expected a welcome frame, got {line:?}"
+    );
+    let proto = u64_field(&v, "proto")?;
+    ensure!(
+        proto == PROTO,
+        "protocol version mismatch: coordinator speaks {proto}, this worker speaks {PROTO}"
+    );
+    let member = u64_field(&v, "member")?;
+    let wire_section_entries = u64_field(&v, "section_entries")? as usize;
+    let spec = RunSpec::from_json(v.get("spec").ok_or_else(|| anyhow!("welcome has no spec"))?)
+        .map_err(|e| anyhow!("bad spec in welcome: {e}"))?;
+
+    // heartbeats start *before* data resolution: the coordinator's
+    // liveness window opens at the join, and loading/splitting a big
+    // tensor must not read as silence
+    let alive = AtomicBool::new(true);
+    std::thread::scope(|scope| -> Result<WorkerSummary> {
+        spawn_heartbeats(scope, &alive, &writer, member);
+        let result = (|| -> Result<WorkerSummary> {
+            // resolve data through the same shared path as the
+            // coordinator, then cross-check the section geometry — a
+            // worker pointed at different data would otherwise train
+            // garbage silently
+            let source = match &opts.store {
+                Some(path) => DataSource::Store(path.clone()),
+                None => spec.data.clone(),
+            };
+            let (data, _test, _n_sections, section_entries) = resolve_dist_data(
+                &source,
+                spec.schedule.test_frac,
+                spec.train.seed,
+                spec.train.workers.max(1),
+            )?;
+            ensure!(
+                section_entries == wire_section_entries,
+                "section geometry mismatch: this worker's data yields {section_entries} \
+                 entries/section, the coordinator dealt {wire_section_entries} — \
+                 different data?"
+            );
+            let view: &dyn TensorView = data.view();
+            ensure!(
+                view.nnz() < u32::MAX as usize,
+                "tensor has {} entries; the block samplers address at most 2^32 - 2",
+                view.nnz()
+            );
+            worker_rounds(
+                member,
+                view,
+                &spec,
+                section_entries,
+                &mut reader,
+                &writer,
+                opts.fault,
+            )
+        })();
+        alive.store(false, Ordering::Relaxed);
+        if opts.fault.is_some() && result.is_ok() {
+            // simulated crash: drop the socket like the process died
+            writer.shutdown();
+        }
+        result
+    })
+}
+
+/// Heartbeat side thread: every [`HEARTBEAT_MS`], one `heartbeat` line
+/// through the shared frame writer (2 ms slices so teardown never waits
+/// a full period).
+fn spawn_heartbeats<'scope>(
+    scope: &'scope Scope<'scope, '_>,
+    alive: &'scope AtomicBool,
+    writer: &'scope FrameWriter,
+    member: MemberId,
+) {
+    let frame = Event::Heartbeat { member }.to_json().dump();
+    scope.spawn(move || {
+        let slices = HEARTBEAT_MS.div_ceil(2).max(1);
+        while alive.load(Ordering::Relaxed) {
+            for _ in 0..slices {
+                if !alive.load(Ordering::Relaxed) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            if writer.send_line(&frame).is_err() {
+                return; // connection gone; the round loop will notice
+            }
+        }
+    });
+}
+
+/// The worker's round loop: obey `begin_round` directives until
+/// `finish` (or a simulated fault).  The training sequence per round is
+/// exactly [`crate::dist::worker`]'s — `epoch_no = round` keeps the
+/// sampler streams on the serial schedule.
+fn worker_rounds(
+    member: MemberId,
+    view: &dyn TensorView,
+    spec: &RunSpec,
+    section_entries: usize,
+    reader: &mut BufReader<TcpStream>,
+    writer: &FrameWriter,
+    fault: Option<Fault>,
+) -> Result<WorkerSummary> {
+    let mut rounds = 0u64;
+    loop {
+        let line = read_line_bounded(reader, MAX_CONTROL_FRAME)?
+            .ok_or_else(|| anyhow!("coordinator closed the connection (evicted?)"))?;
+        let v = Json::parse(&line).map_err(|e| anyhow!("bad directive frame: {e}"))?;
+        let d = Directive::from_json(&v).map_err(|e| anyhow!("bad directive: {e}"))?;
+        match d {
+            Directive::BeginRound { round, assignment } => {
+                let hyper = hyper_from_json(
+                    v.get("hyper")
+                        .ok_or_else(|| anyhow!("begin_round without hyper"))?,
+                )?;
+                let bytes = read_payload(reader, MAX_MODEL_BYTES)?;
+                let model = TuckerModel::from_bytes(&bytes)
+                    .with_context(|| format!("decoding the round {round} model"))?;
+                let sections = assignment.sections_for(member).to_vec();
+                let shard = ShardView::new(view, &sections, section_entries);
+                let (model, stats) = if shard.nnz() == 0 {
+                    // nothing to train: echo the model back untouched
+                    (model, EpochStats::default())
+                } else {
+                    let mut run_cfg = spec.train.clone();
+                    run_cfg.hyper = hyper;
+                    let mut trainer = Trainer::with_model(&shard, run_cfg, model)?;
+                    trainer.epoch_no = round;
+                    let factor = trainer.factor_phase(&shard)?;
+                    if fault.is_some_and(|f| f.round == round) {
+                        // simulated mid-epoch crash: no StepComplete;
+                        // the caller shuts the socket down
+                        return Ok(WorkerSummary { member, rounds });
+                    }
+                    let core = trainer.core_phase(&shard)?;
+                    (trainer.model, EpochStats { factor, core })
+                };
+                rounds += 1;
+                let line = with_field(
+                    Event::StepComplete { member, round }.to_json(),
+                    "stats",
+                    stats_json(&stats),
+                )
+                .dump();
+                writer.send_line_with_payload(&line, &model.to_bytes())?;
+            }
+            Directive::Finish => return Ok(WorkerSummary { member, rounds }),
+            // not addressed to workers; tolerated for forward compat
+            Directive::EnterWarmup | Directive::RunSync { .. } | Directive::Evict { .. } => {}
+        }
+    }
+}

@@ -89,6 +89,14 @@ fn usage() -> &'static str {
             --metrics FILE.jsonl appends telemetry snapshots per epoch and,\n\
             under --workers, the protocol flight-recorder tape — purely\n\
             observational, the trained model is bit-identical without it)\n\
+     train --coordinator HOST:PORT --workers N [train's config flags]\n\
+           (the TCP coordinator: binds HOST:PORT, waits for N worker\n\
+            processes to join, then runs the same sharded protocol over\n\
+            sockets — 1 worker over loopback matches serial byte-for-byte)\n\
+     train --join HOST:PORT [--store FILE.ftb2] [--timeout-ms MS]\n\
+           (a TCP worker process: all training config comes from the\n\
+            coordinator's welcome frame; --store opens a local copy of\n\
+            the paged store instead of the coordinator's data source)\n\
      serve [--checkpoint FILE] [--data FILE|--toy] [--epochs T] [--nnz K]\n\
            [--spec FILE] [--dump-spec] [train's config flags: --algo,\n\
             --backend, --threads, --j, --r, --seed, --artifacts, ...]\n\
@@ -110,13 +118,15 @@ fn usage() -> &'static str {
      query --checkpoint FILE --coords I1,I2,...,IN [--mode M] [--topk K]\n\
            [--cpu-kernel tiled|scalar|simd]\n\
      query --connect HOST:PORT [--model NAME] [--deadline-ms D]\n\
+           [--timeout-ms MS]\n\
            (--coords ... [--mode M] [--topk K] | --stats | --epoch |\n\
-            --shutdown)\n\
+            --shutdown; --timeout-ms bounds every socket read/write,\n\
+            default 30000)\n\
            (same output formats as the checkpoint path, over the wire;\n\
             --stats prints the server's telemetry registry, --shutdown\n\
             asks it to drain)\n\
      registry <list|promote|rollback|load> --connect HOST:PORT\n\
-           [--model NAME] [--version V] [--path FILE.ftck]\n\
+           [--model NAME] [--version V] [--path FILE.ftck] [--timeout-ms MS]\n\
            (admin ops against a live server; every op prints the\n\
             resulting registry table)\n\
      slo   --connect HOST:PORT [--model NAME] [--connections C]\n\
@@ -337,10 +347,33 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
             "cpu-kernel", "epochs", "j", "r", "lr-a", "lr-b", "lam-a", "lam-b", "test-frac",
             "seed", "artifacts", "save", "checkpoint", "checkpoint-every", "eval-every",
             "early-stop", "min-delta", "lr-decay", "toy", "spec", "dump-spec", "metrics",
+            "coordinator", "join", "timeout-ms",
         ],
         &["toy", "dump-spec"],
     )
     .map_err(anyhow::Error::msg)?;
+
+    // `--join ADDR` turns this process into a TCP worker: all training
+    // config arrives in the coordinator's welcome frame, so the only
+    // flags that matter are --store (local data override), --timeout-ms
+    // and the address itself
+    if let Some(addr) = a.get("join") {
+        let opts = dist::JoinOpts {
+            store: a.get("store").map(PathBuf::from),
+            timeout: Some(Duration::from_millis(
+                a.get_parse("timeout-ms", 30_000u64).map_err(anyhow::Error::msg)?,
+            )),
+            fault: None,
+        };
+        println!("joining coordinator at {addr}");
+        let summary = dist::run_worker(addr, &opts)?;
+        println!(
+            "worker {} finished: {} rounds trained",
+            summary.member, summary.rounds
+        );
+        return Ok(());
+    }
+
     let spec = match a.get("spec") {
         Some(path) => {
             let mut s = RunSpec::load(Path::new(path))?;
@@ -358,6 +391,27 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         return Ok(());
     }
 
+    // `--coordinator LISTEN` binds a TCP listener and waits for
+    // --workers N worker processes (`train --join LISTEN`) instead of
+    // spawning in-process threads; everything downstream of the wire is
+    // the same distributed driver
+    if let Some(listen) = a.get("coordinator") {
+        spec.validate().map_err(anyhow::Error::msg)?;
+        ensure!(
+            spec.train.workers > 0,
+            "--coordinator needs --workers N (the quorum of joining processes)"
+        );
+        println!(
+            "data {} | algo {} backend {} | coordinator on {listen}, waiting for {} workers",
+            spec.data.describe(),
+            spec.train.algo.name(),
+            spec.train.backend.name(),
+            spec.train.workers
+        );
+        let run = dist::run_coordinator(&spec, listen, &mut ProgressPrinter)?;
+        return finish_dist_run(run, &spec, &a);
+    }
+
     // --workers N routes through the distributed driver instead of a
     // serial session: N in-process workers over disjoint section ranges
     // with barrier averaging (see ARCHITECTURE.md §The distributed layer)
@@ -371,30 +425,7 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
             spec.train.workers
         );
         let run = dist::run_local(&spec, &mut ProgressPrinter)?;
-        if run.report.stopped_early {
-            println!(
-                "early stop: test RMSE plateaued after {} epochs (best {:.4})",
-                run.report.epochs_run,
-                run.report.best_rmse.unwrap_or(f64::NAN)
-            );
-        }
-        println!("dist: {}", run.final_state);
-        if let Some(path) = &spec.metrics {
-            println!("metrics + flight tape written to {}", path.display());
-        }
-        if let Some(path) = a.get("save") {
-            run.model.save(Path::new(path))?;
-            println!("saved model to {path}");
-        }
-        if let Some(path) = &spec.schedule.checkpoint {
-            println!(
-                "saved serve checkpoint to {} (epoch {}, algo {})",
-                path.display(),
-                run.report.epochs_run,
-                spec.train.algo.name()
-            );
-        }
-        return Ok(());
+        return finish_dist_run(run, &spec, &a);
     }
 
     let mut session = Session::from_spec(&spec)?;
@@ -428,6 +459,36 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
             "saved serve checkpoint to {} (epoch {}, algo {})",
             path.display(),
             session.trainer().epoch_no,
+            spec.train.algo.name()
+        );
+    }
+    Ok(())
+}
+
+/// The common tail of a distributed run (channel or TCP backend): early
+/// stop / final-state / metrics reporting and the --save / --checkpoint
+/// confirmations — identical to what a serial session prints.
+fn finish_dist_run(run: dist::DistRun, spec: &RunSpec, a: &Args) -> Result<()> {
+    if run.report.stopped_early {
+        println!(
+            "early stop: test RMSE plateaued after {} epochs (best {:.4})",
+            run.report.epochs_run,
+            run.report.best_rmse.unwrap_or(f64::NAN)
+        );
+    }
+    println!("dist: {}", run.final_state);
+    if let Some(path) = &spec.metrics {
+        println!("metrics + flight tape written to {}", path.display());
+    }
+    if let Some(path) = a.get("save") {
+        run.model.save(Path::new(path))?;
+        println!("saved model to {path}");
+    }
+    if let Some(path) = &spec.schedule.checkpoint {
+        println!(
+            "saved serve checkpoint to {} (epoch {}, algo {})",
+            path.display(),
+            run.report.epochs_run,
             spec.train.algo.name()
         );
     }
@@ -783,7 +844,7 @@ fn cmd_query(argv: Vec<String>) -> Result<()> {
         argv,
         &[
             "checkpoint", "coords", "mode", "topk", "cpu-kernel", "connect", "model",
-            "deadline-ms", "stats", "epoch", "shutdown",
+            "deadline-ms", "timeout-ms", "stats", "epoch", "shutdown",
         ],
         &["stats", "epoch", "shutdown"],
     )
@@ -828,11 +889,23 @@ fn cmd_query(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+/// Open a [`NetClient`] honoring `--timeout-ms` (socket read/write bound;
+/// default 30 s — see `serve::net::client::DEFAULT_TIMEOUT`).
+fn connect_client(a: &Args, addr: &str) -> Result<NetClient> {
+    match a.get("timeout-ms") {
+        Some(_) => {
+            let ms: u64 = a.get_parse("timeout-ms", 30_000).map_err(anyhow::Error::msg)?;
+            NetClient::connect_with_timeout(addr, Some(Duration::from_millis(ms)))
+        }
+        None => NetClient::connect(addr),
+    }
+}
+
 /// The `query --connect` path: the same predict / top-K / epoch shapes as
 /// the checkpoint path (identical output formats), plus `--stats` (remote
 /// telemetry) and `--shutdown` (graceful drain), over the wire protocol.
 fn query_over_wire(a: &Args, addr: &str) -> Result<()> {
-    let mut client = NetClient::connect(addr)?;
+    let mut client = connect_client(a, addr)?;
     let model = a.get("model");
     let deadline_ms = match a.get("deadline-ms") {
         Some(_) => Some(a.get_parse("deadline-ms", 0u64).map_err(anyhow::Error::msg)?),
@@ -895,10 +968,14 @@ fn cmd_registry(argv: Vec<String>) -> Result<()> {
              [--model NAME] [--version V] [--path FILE.ftck]"
         );
     };
-    let a = Args::parse(rest.to_vec(), &["connect", "model", "version", "path"], &[])
-        .map_err(anyhow::Error::msg)?;
+    let a = Args::parse(
+        rest.to_vec(),
+        &["connect", "model", "version", "path", "timeout-ms"],
+        &[],
+    )
+    .map_err(anyhow::Error::msg)?;
     let addr = a.get("connect").context("--connect HOST:PORT required")?;
-    let mut client = NetClient::connect(addr)?;
+    let mut client = connect_client(&a, addr)?;
     let model = || a.get("model").context("--model NAME required");
     let models = match sub.as_str() {
         "list" => client.list()?,

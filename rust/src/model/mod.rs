@@ -262,6 +262,43 @@ impl TuckerModel {
     /// Write a binary checkpoint (`FTM1` format).
     pub fn save(&self, path: &Path) -> Result<()> {
         let mut w = BufWriter::new(File::create(path)?);
+        self.write_ftm1(&mut w)
+    }
+
+    /// Load a binary checkpoint written by [`TuckerModel::save`].
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+        Self::read_ftm1(&mut r)
+    }
+
+    /// Encode the model as `FTM1` bytes — the exact byte sequence
+    /// [`TuckerModel::save`] writes to disk, so checkpoints and wire
+    /// payloads are `cmp`-comparable.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(self.byte_len());
+        self.write_ftm1(&mut buf)
+            .expect("writing to a Vec cannot fail");
+        buf
+    }
+
+    /// Decode an `FTM1` byte buffer produced by [`TuckerModel::to_bytes`]
+    /// (or read from a checkpoint file).
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut r = bytes;
+        let model = Self::read_ftm1(&mut r)?;
+        if !r.is_empty() {
+            bail!("trailing bytes after the model checkpoint");
+        }
+        Ok(model)
+    }
+
+    fn byte_len(&self) -> usize {
+        let floats: usize = self.factors.iter().map(Vec::len).sum::<usize>()
+            + self.cores.iter().map(Vec::len).sum::<usize>();
+        4 + 4 * (3 + self.dims.len()) + 4 * floats
+    }
+
+    fn write_ftm1<W: Write>(&self, w: &mut W) -> Result<()> {
         w.write_all(Self::MAGIC)?;
         w.write_all(&(self.order() as u32).to_le_bytes())?;
         w.write_all(&(self.j as u32).to_le_bytes())?;
@@ -282,28 +319,29 @@ impl TuckerModel {
         Ok(())
     }
 
-    /// Load a binary checkpoint written by [`TuckerModel::save`].
-    pub fn load(path: &Path) -> Result<Self> {
-        let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+    fn read_ftm1<R: Read>(r: &mut R) -> Result<Self> {
         let mut magic = [0u8; 4];
         r.read_exact(&mut magic)?;
         if &magic != Self::MAGIC {
             bail!("not a model checkpoint");
         }
-        let order = read_u32(&mut r)? as usize;
-        let j = read_u32(&mut r)? as usize;
-        let rr = read_u32(&mut r)? as usize;
+        let order = read_u32(r)? as usize;
+        if order == 0 || order > 16 {
+            bail!("implausible model order {order}");
+        }
+        let j = read_u32(r)? as usize;
+        let rr = read_u32(r)? as usize;
         let mut dims = Vec::with_capacity(order);
         for _ in 0..order {
-            dims.push(read_u32(&mut r)?);
+            dims.push(read_u32(r)?);
         }
         let mut factors = Vec::with_capacity(order);
         for &d in &dims {
-            factors.push(read_f32s(&mut r, d as usize * j)?);
+            factors.push(read_f32s(r, d as usize * j)?);
         }
         let mut cores = Vec::with_capacity(order);
         for _ in 0..order {
-            cores.push(read_f32s(&mut r, j * rr)?);
+            cores.push(read_f32s(r, j * rr)?);
         }
         Ok(Self {
             dims,
@@ -336,6 +374,19 @@ mod tests {
 
     fn model() -> TuckerModel {
         TuckerModel::init(&[10, 12, 14], 16, 16, 42)
+    }
+
+    #[test]
+    fn bytes_roundtrip_is_exact() {
+        let m = model();
+        let bytes = m.to_bytes();
+        let back = TuckerModel::from_bytes(&bytes).unwrap();
+        assert_eq!(m.dims, back.dims);
+        assert_eq!((m.j, m.r), (back.j, back.r));
+        assert_eq!(m.factors, back.factors);
+        assert_eq!(m.cores, back.cores);
+        assert!(TuckerModel::from_bytes(&bytes[..bytes.len() - 1]).is_err());
+        assert!(TuckerModel::from_bytes(b"FTMX").is_err());
     }
 
     #[test]

@@ -98,7 +98,16 @@ impl Engine {
     pub fn predict(&self, coords: &[u32]) -> f32 {
         let n = self.snap.order();
         let r = self.snap.r();
-        debug_assert_eq!(coords.len(), n);
+        // a real check, not debug_assert: this is a public API boundary,
+        // and in release a short slice would silently read wrong factor
+        // rows (the wire path validates earlier via check_coords, but
+        // in-process callers land here directly)
+        assert_eq!(
+            coords.len(),
+            n,
+            "predict needs one coordinate per mode (got {}, model order {n})",
+            coords.len()
+        );
         if r <= MAX_STACK_R {
             let mut acc = [1.0f32; MAX_STACK_R];
             for (m, &c) in coords.iter().enumerate() {
@@ -126,7 +135,12 @@ impl Engine {
     /// into `out`.
     pub fn predict_batch(&self, coords: &[u32], out: &mut Vec<f32>) {
         let n = self.snap.order();
-        debug_assert_eq!(coords.len() % n, 0);
+        assert_eq!(
+            coords.len() % n,
+            0,
+            "batch coords length {} is not a multiple of the model order {n}",
+            coords.len()
+        );
         out.reserve(coords.len() / n);
         for q in coords.chunks_exact(n) {
             out.push(self.predict(q));

@@ -6,8 +6,15 @@
 //! pair pipelines — the SLO harness keeps a window of requests in flight
 //! per connection and correlates replies by id, which the protocol
 //! permits explicitly (responses may arrive out of order).
+//!
+//! Every connection is bounded by a socket read/write timeout
+//! ([`DEFAULT_TIMEOUT`], 30 s) so a stalled or half-dead server errors
+//! loudly instead of wedging the caller; `--timeout-ms` on the CLI and
+//! [`NetClient::set_timeout`] tune it.  The distributed TCP worker
+//! (`crate::dist::net`) applies the same mechanism to its coordinator
+//! connection.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufReader, Write};
 use std::net::TcpStream;
 use std::time::Duration;
 
@@ -15,7 +22,18 @@ use anyhow::{bail, Context, Result};
 
 use super::super::registry::ModelInfo;
 use super::super::server::{Request, Response};
+use super::frame::{self, is_timeout};
 use super::wire::{self, NetRequest, NetResponse};
+
+/// Default socket read/write timeout.  A stalled or half-dead server
+/// surfaces as a loud timeout error after this long instead of wedging
+/// the caller forever; override per-call-site with
+/// [`NetClient::connect_with_timeout`] or [`NetClient::set_timeout`]
+/// (`--timeout-ms` on the CLI).
+pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Response frames longer than this are a protocol violation.
+const MAX_FRAME_BYTES: usize = 1 << 20;
 
 /// A blocking connection to a [`super::NetServer`].
 pub struct NetClient {
@@ -25,16 +43,35 @@ pub struct NetClient {
 }
 
 impl NetClient {
-    /// Connect to `addr` (e.g. `127.0.0.1:7171`).
+    /// Connect to `addr` (e.g. `127.0.0.1:7171`) with the
+    /// [`DEFAULT_TIMEOUT`] bounding every read and write.
     pub fn connect(addr: &str) -> Result<NetClient> {
+        Self::connect_with_timeout(addr, Some(DEFAULT_TIMEOUT))
+    }
+
+    /// Connect with an explicit socket timeout (`None` blocks forever —
+    /// only sensible for tests that control both ends).
+    pub fn connect_with_timeout(addr: &str, timeout: Option<Duration>) -> Result<NetClient> {
         let writer = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
         let _ = writer.set_nodelay(true);
         let reader = BufReader::new(writer.try_clone().context("cloning the socket")?);
-        Ok(NetClient {
+        let mut client = NetClient {
             writer,
             reader,
             next_id: 0,
-        })
+        };
+        client.set_timeout(timeout)?;
+        Ok(client)
+    }
+
+    /// Bound every read *and* write with a timeout (`None` blocks
+    /// forever).
+    pub fn set_timeout(&mut self, dur: Option<Duration>) -> Result<()> {
+        self.set_read_timeout(dur)?;
+        self.writer
+            .set_write_timeout(dur)
+            .context("setting the write timeout")?;
+        Ok(())
     }
 
     /// Bound every read with a timeout (`None` blocks forever).
@@ -55,7 +92,13 @@ impl NetClient {
         self.writer
             .write_all(frame.as_bytes())
             .and_then(|()| self.writer.write_all(b"\n"))
-            .context("writing a frame")?;
+            .map_err(|e| {
+                if is_timeout(&e) {
+                    anyhow::anyhow!("timed out writing a frame (server not reading?)")
+                } else {
+                    anyhow::Error::new(e).context("writing a frame")
+                }
+            })?;
         Ok(())
     }
 
@@ -77,18 +120,12 @@ impl NetClient {
         Ok(id)
     }
 
-    /// Read the next response frame (blocks; `Err` on EOF or timeout).
+    /// Read the next response frame (blocks; `Err` on EOF or timeout —
+    /// a socket-timeout expiry surfaces as a distinct "timed out" error).
     pub fn recv(&mut self) -> Result<NetResponse> {
-        let mut line = String::new();
-        loop {
-            line.clear();
-            let n = self.reader.read_line(&mut line).context("reading a frame")?;
-            if n == 0 {
-                bail!("server closed the connection");
-            }
-            if !line.trim().is_empty() {
-                return wire::parse_response(&line).map_err(anyhow::Error::msg);
-            }
+        match frame::read_line_bounded(&mut self.reader, MAX_FRAME_BYTES)? {
+            None => bail!("server closed the connection"),
+            Some(line) => wire::parse_response(&line).map_err(anyhow::Error::msg),
         }
     }
 

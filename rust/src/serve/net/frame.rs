@@ -1,0 +1,315 @@
+//! Shared socket framing for every wire in the crate.
+//!
+//! Both network tiers — the serving front end ([`super::server`]) and the
+//! distributed TCP transport (`crate::dist::net`) — speak
+//! newline-delimited frames over TCP.  This module is the single home for
+//! the framing discipline so the two wires cannot drift:
+//!
+//! * **Non-blocking side** ([`Conn`], [`read_conn`], [`flush_conn`]):
+//!   the poll-loop primitives the serving front end multiplexes with.
+//!   One buffered connection, split on `\n`, with an unterminated-frame
+//!   length bound (hostile peers get dropped, not buffered forever).
+//! * **Blocking side** ([`read_line_bounded`]): the same length-sane line
+//!   reader for clients and workers that own one socket and can afford to
+//!   block (with a socket timeout — see [`is_timeout`]).
+//! * **Binary payloads** ([`write_payload`], [`read_payload`]): a
+//!   length-prefixed, FNV-1a-checksummed byte frame that the distributed
+//!   wire interleaves with its JSON control stream to ship FTM1 model
+//!   bytes at barriers without base64 bloat.
+//! * **Shared-socket writes** ([`FrameWriter`]): whole-frame writes
+//!   serialized behind one lock, preserving the single-writer-per-socket
+//!   invariant when more than one thread (heartbeat + round loop) must
+//!   speak on a connection.
+
+use std::collections::VecDeque;
+use std::io::{self, BufRead, ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::fnv::fnv1a;
+
+// -- non-blocking (poll loop) primitives --------------------------------
+
+/// One multiplexed connection: the socket plus its partial-frame input
+/// buffer and unflushed output bytes.
+pub struct Conn {
+    /// The non-blocking socket.
+    pub stream: TcpStream,
+    /// Bytes read but not yet terminated by `\n`.
+    pub inbuf: Vec<u8>,
+    /// Bytes queued for the poll thread to flush.
+    pub out: VecDeque<u8>,
+    /// Peer closed its write side; keep until the outbox flushes.
+    pub eof: bool,
+}
+
+impl Conn {
+    /// Wrap a freshly accepted (already non-blocking) socket.
+    pub fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            inbuf: Vec::new(),
+            out: VecDeque::new(),
+            eof: false,
+        }
+    }
+
+    /// Queue one newline-terminated frame on the outbox.
+    pub fn push_frame(&mut self, frame: &str) {
+        self.out.extend(frame.as_bytes());
+        self.out.push_back(b'\n');
+    }
+}
+
+/// One poll-loop pass outcome for a connection.
+pub enum ConnIo {
+    /// Connection is healthy (possibly idle).
+    Ok,
+    /// Protocol/socket failure: drop the connection now.
+    Drop,
+}
+
+/// Drain readable bytes from `conn` and split complete `\n`-terminated
+/// frames into `frames` (tagged with `cid`).  An unterminated frame
+/// longer than `max_frame` bytes is hostile or broken input and drops
+/// the connection.
+pub fn read_conn(
+    conn: &mut Conn,
+    max_frame: usize,
+    frames: &mut Vec<(u64, String)>,
+    cid: u64,
+) -> ConnIo {
+    let mut buf = [0u8; 4096];
+    loop {
+        match conn.stream.read(&mut buf) {
+            Ok(0) => {
+                conn.eof = true;
+                break;
+            }
+            Ok(n) => {
+                conn.inbuf.extend_from_slice(&buf[..n]);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return ConnIo::Drop,
+        }
+    }
+    while let Some(pos) = conn.inbuf.iter().position(|&b| b == b'\n') {
+        let raw: Vec<u8> = conn.inbuf.drain(..=pos).collect();
+        let line = String::from_utf8_lossy(&raw[..raw.len() - 1]).into_owned();
+        if !line.trim().is_empty() {
+            frames.push((cid, line));
+        }
+    }
+    if conn.inbuf.len() > max_frame {
+        // unterminated oversize frame: hostile or broken peer
+        return ConnIo::Drop;
+    }
+    ConnIo::Ok
+}
+
+/// Write as much of the outbox as the socket will take without blocking.
+pub fn flush_conn(conn: &mut Conn) -> ConnIo {
+    while !conn.out.is_empty() {
+        let (head, _) = conn.out.as_slices();
+        match conn.stream.write(head) {
+            Ok(0) => return ConnIo::Drop,
+            Ok(n) => {
+                conn.out.drain(..n);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return ConnIo::Drop,
+        }
+    }
+    ConnIo::Ok
+}
+
+// -- blocking primitives ------------------------------------------------
+
+/// True when an I/O error is a socket-timeout expiry.  Unix reports a
+/// timed-out blocking read as `WouldBlock`, Windows as `TimedOut`; both
+/// mean the same thing to a caller holding a deadline.
+pub fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+/// Read one non-blank `\n`-terminated line, bounding the frame at
+/// `max_frame` bytes.  Returns `Ok(None)` on a clean EOF between frames;
+/// errors on EOF mid-frame, an oversize frame, or a socket timeout (the
+/// timeout surfaces as a distinct, self-explanatory message).
+pub fn read_line_bounded<R: BufRead>(r: &mut R, max_frame: usize) -> Result<Option<String>> {
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        let (consumed, done) = {
+            let buf = match r.fill_buf() {
+                Ok(b) => b,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) if is_timeout(&e) => {
+                    bail!("timed out waiting for a frame (socket read timeout)")
+                }
+                Err(e) => return Err(e).context("reading a frame"),
+            };
+            if buf.is_empty() {
+                if line.is_empty() {
+                    return Ok(None);
+                }
+                bail!("connection closed mid-frame");
+            }
+            match buf.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    line.extend_from_slice(&buf[..pos]);
+                    (pos + 1, true)
+                }
+                None => {
+                    line.extend_from_slice(buf);
+                    (buf.len(), false)
+                }
+            }
+        };
+        r.consume(consumed);
+        if line.len() > max_frame {
+            bail!(
+                "oversize frame ({} bytes exceeds the {max_frame} byte bound)",
+                line.len()
+            );
+        }
+        if done {
+            let text = String::from_utf8_lossy(&line).into_owned();
+            if text.trim().is_empty() {
+                line.clear();
+                continue;
+            }
+            return Ok(Some(text));
+        }
+    }
+}
+
+// -- binary payload frames ----------------------------------------------
+
+/// Byte length of the payload-frame header: `u64` LE payload length then
+/// `u64` LE FNV-1a checksum of the payload bytes.
+pub const PAYLOAD_HEADER_BYTES: usize = 16;
+
+/// Write one length-prefixed, checksummed binary payload frame.
+pub fn write_payload<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<()> {
+    w.write_all(&(payload.len() as u64).to_le_bytes())?;
+    w.write_all(&fnv1a(payload).to_le_bytes())?;
+    w.write_all(payload)
+}
+
+/// Read one binary payload frame written by [`write_payload`], bounding
+/// the payload at `max_bytes` and verifying the FNV-1a checksum.
+pub fn read_payload<R: Read>(r: &mut R, max_bytes: usize) -> Result<Vec<u8>> {
+    let mut header = [0u8; PAYLOAD_HEADER_BYTES];
+    r.read_exact(&mut header).map_err(|e| {
+        if is_timeout(&e) {
+            anyhow::anyhow!("timed out waiting for a payload frame (socket read timeout)")
+        } else {
+            anyhow::Error::new(e).context("reading a payload header")
+        }
+    })?;
+    let len = u64::from_le_bytes(header[..8].try_into().unwrap());
+    let sum = u64::from_le_bytes(header[8..].try_into().unwrap());
+    if len as usize > max_bytes {
+        bail!("payload frame of {len} bytes exceeds the {max_bytes} byte bound");
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload).context("reading a payload")?;
+    if fnv1a(&payload) != sum {
+        bail!("payload checksum mismatch (corrupt or desynchronized stream)");
+    }
+    Ok(payload)
+}
+
+// -- shared-socket writer ------------------------------------------------
+
+/// A cloneable handle that serializes whole-frame writes on one socket.
+///
+/// The framing invariant everywhere in this crate is *single writer per
+/// socket*: two frames must never interleave mid-line.  Where one thread
+/// owns the socket that is free; where two threads must write (a
+/// worker's heartbeat thread and its round loop), every frame goes
+/// through this lock as one atomic `write_all`.
+#[derive(Clone)]
+pub struct FrameWriter {
+    inner: Arc<Mutex<TcpStream>>,
+}
+
+impl FrameWriter {
+    /// Wrap a connected stream.
+    pub fn new(stream: TcpStream) -> FrameWriter {
+        FrameWriter {
+            inner: Arc::new(Mutex::new(stream)),
+        }
+    }
+
+    /// Write `frame` + `\n` as one locked write.
+    pub fn send_line(&self, frame: &str) -> Result<()> {
+        let mut buf = Vec::with_capacity(frame.len() + 1);
+        buf.extend_from_slice(frame.as_bytes());
+        buf.push(b'\n');
+        let mut stream = self.inner.lock().unwrap();
+        stream.write_all(&buf).context("writing a frame")?;
+        Ok(())
+    }
+
+    /// Write a control line immediately followed by its binary payload
+    /// frame, under one lock so no other frame can split them.
+    pub fn send_line_with_payload(&self, frame: &str, payload: &[u8]) -> Result<()> {
+        let mut stream = self.inner.lock().unwrap();
+        stream
+            .write_all(frame.as_bytes())
+            .and_then(|()| stream.write_all(b"\n"))
+            .and_then(|()| write_payload(&mut *stream, payload))
+            .context("writing a payload frame")?;
+        Ok(())
+    }
+
+    /// Tear the connection down (both directions); any thread blocked
+    /// reading the peer half returns immediately.  Errors are ignored —
+    /// the socket may already be gone.
+    pub fn shutdown(&self) {
+        let _ = self.inner.lock().unwrap().shutdown(std::net::Shutdown::Both);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    #[test]
+    fn line_reader_bounds_and_splits() {
+        let mut r = BufReader::new(&b"alpha\n\n  \nbeta\n"[..]);
+        assert_eq!(read_line_bounded(&mut r, 64).unwrap().as_deref(), Some("alpha"));
+        assert_eq!(read_line_bounded(&mut r, 64).unwrap().as_deref(), Some("beta"));
+        assert!(read_line_bounded(&mut r, 64).unwrap().is_none());
+
+        let mut r = BufReader::new(&b"0123456789\n"[..]);
+        assert!(read_line_bounded(&mut r, 4).is_err());
+
+        let mut r = BufReader::new(&b"partial"[..]);
+        assert!(read_line_bounded(&mut r, 64).is_err());
+    }
+
+    #[test]
+    fn payload_roundtrip_and_corruption() {
+        let payload: Vec<u8> = (0..=255u8).collect();
+        let mut buf = Vec::new();
+        write_payload(&mut buf, &payload).unwrap();
+        assert_eq!(buf.len(), PAYLOAD_HEADER_BYTES + payload.len());
+        assert_eq!(read_payload(&mut &buf[..], 1 << 10).unwrap(), payload);
+
+        // checksum catches a flipped byte
+        let mut bad = buf.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x40;
+        assert!(read_payload(&mut &bad[..], 1 << 10).is_err());
+
+        // length bound rejects before allocating
+        assert!(read_payload(&mut &buf[..], 16).is_err());
+    }
+}

@@ -1,10 +1,14 @@
 //! The network serving tier: TCP front end, wire protocol, client, and
 //! SLO load harness.
 //!
-//! Four pieces, one wire:
+//! Five pieces, one wire:
 //!
 //! * [`wire`] — the newline-delimited JSON frame protocol (request /
 //!   response grammar, error codes, bit-exact float encoding).
+//! * [`frame`] — the shared socket framing discipline (poll-loop
+//!   connection primitives, bounded blocking line reader, checksummed
+//!   binary payload frames, single-writer frame writer); also the
+//!   transport substrate for `crate::dist::net`.
 //! * [`server`] — [`NetServer`]: a std-only non-blocking front end (one
 //!   poll thread multiplexing every connection + N scoring workers) with
 //!   bounded-queue admission control ([`Response::Overloaded`] sheds),
@@ -21,6 +25,7 @@
 //! [`Response::DeadlineExceeded`]: super::Response::DeadlineExceeded
 
 pub mod client;
+pub mod frame;
 pub mod server;
 pub mod slo;
 pub mod wire;

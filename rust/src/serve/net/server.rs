@@ -40,7 +40,7 @@
 //! ordered after every earlier frame on the same connection.
 
 use std::collections::{HashMap, VecDeque};
-use std::io::{ErrorKind, Read, Write};
+use std::io::ErrorKind;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -59,6 +59,7 @@ use super::super::registry::Registry;
 use super::super::server::{check_coords, Request, Response};
 use super::super::snapshot::ModelSnapshot;
 use super::super::topk::top_k;
+use super::frame::{flush_conn, read_conn, Conn, ConnIo};
 use super::wire::{self, NetRequest};
 
 /// How long the poll thread keeps flushing outboxes after the drain
@@ -493,74 +494,10 @@ fn worker_loop(shared: &NetShared, tx: &mpsc::Sender<(u64, String)>, mut handler
 }
 
 // -- poll side ----------------------------------------------------------
-
-struct Conn {
-    stream: TcpStream,
-    inbuf: Vec<u8>,
-    out: VecDeque<u8>,
-    /// Peer closed its write side; keep until the outbox flushes.
-    eof: bool,
-}
-
-impl Conn {
-    fn push_frame(&mut self, frame: &str) {
-        self.out.extend(frame.as_bytes());
-        self.out.push_back(b'\n');
-    }
-}
-
-/// One poll-loop pass outcome for a connection.
-enum ConnIo {
-    Ok,
-    /// Protocol/socket failure: drop the connection now.
-    Drop,
-}
-
-fn read_conn(conn: &mut Conn, max_frame: usize, frames: &mut Vec<(u64, String)>, cid: u64) -> ConnIo {
-    let mut buf = [0u8; 4096];
-    loop {
-        match conn.stream.read(&mut buf) {
-            Ok(0) => {
-                conn.eof = true;
-                break;
-            }
-            Ok(n) => {
-                conn.inbuf.extend_from_slice(&buf[..n]);
-            }
-            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
-            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-            Err(_) => return ConnIo::Drop,
-        }
-    }
-    while let Some(pos) = conn.inbuf.iter().position(|&b| b == b'\n') {
-        let raw: Vec<u8> = conn.inbuf.drain(..=pos).collect();
-        let line = String::from_utf8_lossy(&raw[..raw.len() - 1]).into_owned();
-        if !line.trim().is_empty() {
-            frames.push((cid, line));
-        }
-    }
-    if conn.inbuf.len() > max_frame {
-        // unterminated oversize frame: hostile or broken peer
-        return ConnIo::Drop;
-    }
-    ConnIo::Ok
-}
-
-fn flush_conn(conn: &mut Conn) -> ConnIo {
-    while !conn.out.is_empty() {
-        let (head, _) = conn.out.as_slices();
-        match conn.stream.write(head) {
-            Ok(0) => return ConnIo::Drop,
-            Ok(n) => {
-                conn.out.drain(..n);
-            }
-            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
-            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-            Err(_) => return ConnIo::Drop,
-        }
-    }
-    ConnIo::Ok
-}
+//
+// The connection/framing primitives (`Conn`, `read_conn`, `flush_conn`)
+// live in [`super::frame`] — they are shared with the distributed TCP
+// transport so the two wires keep one framing discipline.
 
 /// Run a registry admin op and encode its reply: success answers with
 /// the full post-op listing so operators always see the resulting state.
@@ -673,15 +610,7 @@ fn poll_loop(shared: &NetShared, listener: &TcpListener, rx: &mpsc::Receiver<(u6
                             continue;
                         }
                         let _ = stream.set_nodelay(true);
-                        conns.insert(
-                            next_conn,
-                            Conn {
-                                stream,
-                                inbuf: Vec::new(),
-                                out: VecDeque::new(),
-                                eof: false,
-                            },
-                        );
+                        conns.insert(next_conn, Conn::new(stream));
                         next_conn += 1;
                         shared.obs.connections.inc();
                         shared.obs.active_connections.set(conns.len() as i64);

@@ -179,6 +179,16 @@ fn opt_u64(v: &Json, key: &str) -> Result<Option<u64>, String> {
     }
 }
 
+/// A numeric field bounded by the u32 candidate space (dimension sizes
+/// are u32, so any larger value is unsatisfiable and rejected at decode
+/// with the same discipline as the coord guard below).
+fn get_u32_sized(v: &Json, key: &str) -> Result<usize, String> {
+    match get_u64(v, key)? {
+        u if u <= u32::MAX as u64 => Ok(u as usize),
+        _ => Err(format!("field {key:?} is not a u32")),
+    }
+}
+
 fn get_str(v: &Json, key: &str) -> Result<String, String> {
     v.get(key)
         .and_then(Json::as_str)
@@ -304,8 +314,12 @@ pub fn parse_request(line: &str) -> Result<NetRequest, String> {
         })),
         "topk" => Ok(call(Request::TopK {
             coords: get_coords(&v)?,
-            mode: get_u64(&v, "mode")? as usize,
-            k: get_u64(&v, "k")? as usize,
+            // candidate spaces are u32-dimensioned (like coords, guarded
+            // in get_coords), so a mode or k beyond u32 can never be
+            // satisfied — reject it at decode instead of carrying an
+            // unbounded usize into the scoring path
+            mode: get_u32_sized(&v, "mode")?,
+            k: get_u32_sized(&v, "k")?,
         })),
         "epoch" => Ok(call(Request::Epoch)),
         "stats" => Ok(call(Request::Stats)),

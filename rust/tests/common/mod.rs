@@ -1,0 +1,40 @@
+//! Shared adversarial corpus for the wire-facing test suites.
+//!
+//! Both network tiers — the serving front end and the distributed TCP
+//! transport — speak newline-delimited JSON frames through
+//! `serve::net::frame`, so they share one hostile-input corpus: frames
+//! that are not JSON, frames of the wrong shape, binary noise, integers
+//! beyond the f64-exact range, an unterminated oversize line, and a
+//! connect-and-close.  The invariant every endpoint must hold against
+//! all of them: answer a loud error or drop the connection — never
+//! panic, never wedge, never corrupt a neighboring frame.
+#![allow(dead_code)] // each test crate uses the slice it needs
+
+/// Malformed control frames a hostile peer might open with.  None of
+/// them is a valid `join` handshake (the dist coordinator must not
+/// spend a member id on any of these) and none is a valid serving
+/// request.
+pub fn malformed_control_frames() -> Vec<Vec<u8>> {
+    let mut frames: Vec<Vec<u8>> = vec![
+        // not JSON at all
+        b"not json at all\n".to_vec(),
+        // valid protocol event, but not a handshake
+        b"{\"kind\":\"heartbeat\",\"member\":1}\n".to_vec(),
+        // a join that claims an id instead of asking for one
+        b"{\"kind\":\"join\",\"member\":42}\n".to_vec(),
+        // a join with no member field
+        b"{\"kind\":\"join\"}\n".to_vec(),
+        // member id beyond 2^53 (not f64-exact)
+        b"{\"kind\":\"join\",\"member\":9007199254740994}\n".to_vec(),
+        // truncated JSON
+        b"{\"kind\":\"join\",\"mem\n".to_vec(),
+        // binary noise
+        b"\x00\xff\xfe\x01 binary garbage \x80\x81\n".to_vec(),
+        // connect and say nothing (immediate close)
+        Vec::new(),
+    ];
+    // an unterminated line twice the 1 MiB control-frame bound: the
+    // reader must drop the peer, not buffer forever
+    frames.push(vec![b'x'; 2 << 20]);
+    frames
+}

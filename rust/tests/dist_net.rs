@@ -1,0 +1,323 @@
+//! TCP distributed-backend acceptance suite.
+//!
+//! The channel backend's guarantees, re-pinned over real loopback
+//! sockets:
+//!
+//! 1. one worker over TCP is **byte-identical** (FTM1 bytes included)
+//!    to the serial trainer — the sockets, JSON frames, and model
+//!    payloads add nothing and lose nothing;
+//! 2. a worker killed mid-round (socket dropped, heartbeats stop) is
+//!    evicted by the heartbeat timeout and the run completes on the
+//!    survivor, every round accounted for;
+//! 3. hostile peers — garbage handshakes, oversize frames, ids beyond
+//!    2^53, binary noise — are dropped without consuming member ids,
+//!    and a real run proceeds untouched on the same listener;
+//! 4. a worker facing a broken or silent coordinator fails loudly
+//!    (bad-welcome / protocol-mismatch / timeout errors), never wedges.
+
+mod common;
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use fasttucker::coordinator::{Backend, TrainConfig};
+use fasttucker::dist::{
+    run_coordinator_on, run_worker, CoordinatorState, DistPhase, Fault, JoinOpts,
+};
+use fasttucker::model::TuckerModel;
+use fasttucker::session::{
+    DataSource, NullObserver, Observer, RunSpec, Schedule, Session, SynthPreset, SynthSpec,
+};
+
+/// A synthetic spec the serial Session and both distributed backends
+/// accept: small order-3 tensor, deterministic CPU reference backend.
+fn base_spec(nnz: usize, epochs: usize) -> RunSpec {
+    RunSpec {
+        data: DataSource::Synth(SynthSpec {
+            preset: SynthPreset::Order,
+            order: 3,
+            dim: 24,
+            nnz,
+            seed: 11,
+        }),
+        train: TrainConfig {
+            backend: Backend::CpuRef,
+            ..TrainConfig::default()
+        },
+        schedule: Schedule {
+            epochs,
+            eval_every: 0,
+            test_frac: 0.0,
+            ..Schedule::default()
+        },
+        metrics: None,
+    }
+}
+
+fn assert_models_bit_identical(a: &TuckerModel, b: &TuckerModel) {
+    assert_eq!(a.dims, b.dims);
+    assert_eq!((a.j, a.r), (b.j, b.r));
+    for (n, (fa, fb)) in a.factors.iter().zip(&b.factors).enumerate() {
+        assert!(
+            fa.iter().zip(fb).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "factor {n} differs"
+        );
+    }
+    for (n, (ca, cb)) in a.cores.iter().zip(&b.cores).enumerate() {
+        assert!(
+            ca.iter().zip(cb).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "core {n} differs"
+        );
+    }
+}
+
+/// Records every coordinator state the driver surfaces through
+/// [`Observer::on_round`].
+#[derive(Default)]
+struct StateTrace {
+    states: Vec<CoordinatorState>,
+}
+
+impl Observer for StateTrace {
+    fn on_round(&mut self, state: &CoordinatorState) {
+        self.states.push(state.clone());
+    }
+}
+
+/// An ephemeral loopback listener plus its dialable address.
+fn loopback_listener() -> (TcpListener, String) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    (listener, addr)
+}
+
+// ======================================================================
+// acceptance: byte parity and fault recovery over real sockets
+// ======================================================================
+
+/// Acceptance criterion: one worker over loopback TCP produces the
+/// exact FTM1 bytes of the serial trainer.  The handshake, the JSON
+/// control frames, the hyper extension field, and the binary model
+/// payloads all round-trip bit patterns (the CI `dist-tcp-smoke` job
+/// `cmp`-checks the same thing end to end via the CLI).
+#[test]
+fn one_tcp_worker_matches_serial_bytes() {
+    let mut spec = base_spec(2_000, 3);
+
+    let mut session = Session::from_spec(&spec).unwrap();
+    session.run(&mut NullObserver).unwrap();
+    let serial = session.trainer_mut().model.clone();
+
+    spec.train.workers = 1;
+    let (listener, addr) = loopback_listener();
+    let (run, summary) = std::thread::scope(|s| {
+        let coord = s.spawn(|| run_coordinator_on(&spec, listener, &mut NullObserver));
+        let worker = s.spawn(|| run_worker(&addr, &JoinOpts::default()));
+        (coord.join().unwrap(), worker.join().unwrap())
+    });
+    let run = run.unwrap();
+    let summary = summary.unwrap();
+
+    assert_eq!(run.final_state.phase, DistPhase::Done);
+    assert_eq!(run.report.epochs_run, 3);
+    assert_eq!(summary.member, 1);
+    assert_eq!(summary.rounds, 3);
+    assert_models_bit_identical(&serial, &run.model);
+    // the checkpoint encodings match byte for byte, not just bit-wise
+    // field by field
+    assert!(
+        serial.to_bytes() == run.model.to_bytes(),
+        "FTM1 bytes differ between serial and TCP runs"
+    );
+}
+
+/// Acceptance criterion: a worker killed mid-round (simulated `kill -9`:
+/// no StepComplete, heartbeats stop, socket dropped) is evicted by the
+/// heartbeat timeout and the run completes every round on the survivor.
+#[test]
+fn tcp_worker_killed_mid_round_is_evicted_and_the_run_completes() {
+    let mut spec = base_spec(3_000, 4);
+    spec.schedule.eval_every = 1;
+    spec.schedule.test_frac = 0.25;
+
+    let mut session = Session::from_spec(&spec).unwrap();
+    let serial_rmse = session.run(&mut NullObserver).unwrap().final_rmse.unwrap();
+
+    spec.train.workers = 2;
+    let (listener, addr) = loopback_listener();
+    let doomed_opts = JoinOpts {
+        fault: Some(Fault { round: 1 }),
+        ..JoinOpts::default()
+    };
+    let mut trace = StateTrace::default();
+    let (run, healthy, doomed) = std::thread::scope(|s| {
+        let coord = s.spawn(|| run_coordinator_on(&spec, listener, &mut trace));
+        let healthy = s.spawn(|| run_worker(&addr, &JoinOpts::default()));
+        let doomed = s.spawn(|| run_worker(&addr, &doomed_opts));
+        (
+            coord.join().unwrap(),
+            healthy.join().unwrap(),
+            doomed.join().unwrap(),
+        )
+    });
+    let run = run.unwrap();
+    let healthy = healthy.unwrap();
+    let doomed = doomed.unwrap();
+
+    // the run completed every round despite losing a worker mid-epoch
+    assert_eq!(run.final_state.phase, DistPhase::Done);
+    assert_eq!(run.report.epochs_run, 4);
+    assert_eq!(
+        run.final_state.members,
+        vec![healthy.member],
+        "only the survivor may remain"
+    );
+    assert_eq!(healthy.rounds, 4, "the survivor trains every round");
+    assert_eq!(doomed.rounds, 1, "the victim dies inside round 1");
+    assert!(
+        trace.states.iter().any(|s| s.members.len() == 2),
+        "both members should appear before the fault"
+    );
+    assert!(
+        trace.states.iter().any(|s| s.members.len() == 1),
+        "the eviction should surface through on_round"
+    );
+
+    // quality: the survivor still converges toward the serial plateau
+    // (same 35% headroom rationale as the channel backend's fault test:
+    // the victim's round-1 updates are lost outright)
+    let dist_rmse = run.report.final_rmse.unwrap();
+    let init_rmse = run.report.history[0].rmse.unwrap();
+    assert!(dist_rmse < init_rmse, "faulted run never improved");
+    assert!(
+        (dist_rmse - serial_rmse).abs() <= 0.35 * serial_rmse,
+        "faulted rmse {dist_rmse} strays from serial {serial_rmse}"
+    );
+}
+
+// ======================================================================
+// adversarial frames against the coordinator
+// ======================================================================
+
+/// Every hostile handshake in the shared corpus is dropped without
+/// consuming a member id, without wedging the accept loop, and without
+/// leaking a welcome — then a real worker joins the same listener and
+/// the run completes normally.
+#[test]
+fn hostile_handshakes_are_dropped_and_the_run_survives() {
+    let mut spec = base_spec(1_500, 2);
+    spec.train.workers = 1;
+    let (listener, addr) = loopback_listener();
+
+    std::thread::scope(|s| {
+        let coord = s.spawn(|| run_coordinator_on(&spec, listener, &mut NullObserver));
+
+        for (i, frame) in common::malformed_control_frames().into_iter().enumerate() {
+            let mut sock = TcpStream::connect(&addr).unwrap();
+            sock.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+            // writes may legally fail mid-way: the coordinator drops
+            // oversize peers before they finish sending
+            let _ = sock.write_all(&frame);
+            let _ = sock.shutdown(Shutdown::Write);
+            let mut sink = Vec::new();
+            match sock.read_to_end(&mut sink) {
+                Ok(_) => {}
+                // a reset is a loud drop too; only a wedge (timeout) fails
+                Err(e) => assert!(
+                    !matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ),
+                    "hostile frame {i} wedged the coordinator: {e}"
+                ),
+            }
+            assert!(
+                !String::from_utf8_lossy(&sink).contains("\"welcome\""),
+                "hostile frame {i} was welcomed: {sink:?}"
+            );
+        }
+
+        // the same listener still serves a real run, and the hostile
+        // peers consumed no member ids
+        let worker = s.spawn(|| run_worker(&addr, &JoinOpts::default()));
+        let run = coord.join().unwrap().unwrap();
+        let summary = worker.join().unwrap().unwrap();
+        assert_eq!(run.final_state.phase, DistPhase::Done);
+        assert_eq!(run.report.epochs_run, 2);
+        assert_eq!(
+            summary.member, 1,
+            "hostile peers must not consume member ids"
+        );
+        assert_eq!(run.final_state.members, vec![1]);
+    });
+}
+
+// ======================================================================
+// adversarial coordinators against the worker
+// ======================================================================
+
+/// Accept one connection, drain the peer's handshake, answer `reply`,
+/// then hold the socket open until the peer hangs up.
+fn fake_coordinator(listener: TcpListener, reply: Vec<u8>) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let (mut sock, _) = listener.accept().unwrap();
+        let mut buf = [0u8; 1024];
+        let _ = sock.read(&mut buf); // the worker's join line
+        let _ = sock.write_all(&reply);
+        let _ = sock.shutdown(Shutdown::Write);
+        // wait for the peer to close so the reply is never reset away
+        while matches!(sock.read(&mut buf), Ok(n) if n > 0) {}
+    })
+}
+
+/// A worker pointed at a broken coordinator errors loudly — garbage,
+/// wrong-kind, and wrong-protocol welcomes each name their failure.
+#[test]
+fn worker_rejects_bad_welcomes_loudly() {
+    let cases: &[(&[u8], &str)] = &[
+        (b"this is not json\n", "welcome"),
+        (b"{\"kind\":\"begin_round\",\"round\":0}\n", "welcome"),
+        (
+            b"{\"kind\":\"welcome\",\"proto\":99,\"member\":1,\"section_entries\":8}\n",
+            "protocol version mismatch",
+        ),
+    ];
+    for (reply, needle) in cases {
+        let (listener, addr) = loopback_listener();
+        let fake = fake_coordinator(listener, reply.to_vec());
+        let err = run_worker(&addr, &JoinOpts::default()).unwrap_err();
+        assert!(
+            format!("{err:#}").contains(needle),
+            "reply {:?} should fail with {needle:?}, got: {err:#}",
+            String::from_utf8_lossy(reply)
+        );
+        fake.join().unwrap();
+    }
+}
+
+/// Satellite pin: the worker reuses the serving client's bounded-read
+/// mechanism, so a silent coordinator surfaces as a loud, prompt
+/// timeout error — never a wedged process.
+#[test]
+fn worker_timeout_is_loud_not_a_wedge() {
+    // bound but never accept: the connect succeeds (backlog) and then
+    // the handshake read must hit the configured timeout
+    let (listener, addr) = loopback_listener();
+    let opts = JoinOpts {
+        timeout: Some(Duration::from_millis(200)),
+        ..JoinOpts::default()
+    };
+    let t0 = Instant::now();
+    let err = run_worker(&addr, &opts).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("timed out"),
+        "expected a timeout error, got: {err:#}"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "a 200 ms timeout took {:?}",
+        t0.elapsed()
+    );
+    drop(listener);
+}

@@ -26,11 +26,13 @@ use fasttucker::synth::{generate, SynthConfig};
 use fasttucker::tensor::SparseTensor;
 use fasttucker::util::fnv::{FNV_OFFSET, FNV_PRIME};
 
-/// Fixture path, relative to the crate root (stable under `cargo test`
-/// from any working directory).
+/// Fixture path, anchored at the workspace root (`CARGO_MANIFEST_DIR`
+/// is the repo root — the package manifest lives there, with the test
+/// roots routed to `rust/tests/` — so the path must carry the `rust/`
+/// prefix; stable under `cargo test` from any working directory).
 const FIXTURE: &str = concat!(
     env!("CARGO_MANIFEST_DIR"),
-    "/tests/data/reference_trajectory.txt"
+    "/rust/tests/data/reference_trajectory.txt"
 );
 
 // The reference recipe.  Changing any of these invalidates the committed

@@ -31,6 +31,8 @@ use fasttucker::serve::{
 };
 use fasttucker::util::rng::Pcg32;
 
+mod common;
+
 const DIMS: [u32; 3] = [19, 13, 11];
 
 fn snap(seed: u64, epoch: u64) -> ModelSnapshot {
@@ -394,5 +396,153 @@ fn stats_round_trip_over_wire() {
             >= snap.counters["serve.net.requests"],
         "server-side counters can only have moved forward"
     );
+    server.shutdown();
+}
+
+/// Hardening pin: adversarial frames — garbage between valid frames,
+/// truncated lines, an oversized `k`, integers beyond 2^53, non-finite
+/// values — come back as loud `bad_request` errors (or a dropped
+/// connection for unbounded input), never a panic, and never corrupt a
+/// neighboring frame: a bit-exact predict still answers right after
+/// every piece of garbage, on the same connection.
+#[test]
+fn adversarial_frames_never_corrupt_the_wire() {
+    use std::io::{BufRead, BufReader, Read, Write};
+    use std::net::{Shutdown, TcpStream};
+
+    use fasttucker::serve::net::wire;
+    use fasttucker::util::json::Json;
+
+    fn read_frame(reader: &mut BufReader<TcpStream>) -> Json {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(!line.is_empty(), "server hung up unexpectedly");
+        Json::parse(line.trim()).expect("server emitted invalid JSON")
+    }
+    fn op_of(j: &Json) -> String {
+        j.get("op").and_then(Json::as_str).unwrap_or("?").to_string()
+    }
+
+    let cfg = NetConfig::default();
+    let (server, registry, addr) = start_server(cfg);
+    let s = snap(0xBAD, 6);
+    registry.publish("main", s.clone());
+    let mut engine = Engine::with_policy(s, cfg.policy);
+    let coords = [3u32, 4, 5];
+    let expect = engine.predict(&coords);
+
+    let sock = TcpStream::connect(&addr).unwrap();
+    sock.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    let mut reader = BufReader::new(sock.try_clone().unwrap());
+
+    // garbage between valid frames: each hostile line earns exactly one
+    // bad_request, and the pipelined predict right behind it still
+    // answers with the engine's exact bits
+    let mut id = 0u64;
+    for frame in common::malformed_control_frames() {
+        if frame.is_empty() || frame.len() > 1 << 20 {
+            continue; // the hangup / oversize cases get their own connections below
+        }
+        (&sock).write_all(&frame).unwrap();
+        id += 1;
+        let req =
+            format!("{{\"id\":{id},\"op\":\"predict\",\"model\":\"main\",\"coords\":[3,4,5]}}\n");
+        (&sock).write_all(req.as_bytes()).unwrap();
+        let (mut got_err, mut got_val) = (false, false);
+        for _ in 0..2 {
+            let j = read_frame(&mut reader);
+            match op_of(&j).as_str() {
+                "error" => {
+                    assert_eq!(
+                        j.get("code").and_then(Json::as_str),
+                        Some("bad_request"),
+                        "garbage must be a bad_request: {j:?}"
+                    );
+                    got_err = true;
+                }
+                "predict" => {
+                    assert_eq!(j.get("id").and_then(Json::as_usize), Some(id as usize));
+                    let v = j.get("value").and_then(Json::as_f64).unwrap() as f32;
+                    assert_eq!(
+                        v.to_bits(),
+                        expect.to_bits(),
+                        "prediction corrupted by preceding garbage"
+                    );
+                    got_val = true;
+                }
+                other => panic!("unexpected frame op {other:?}: {j:?}"),
+            }
+        }
+        assert!(got_err && got_val, "garbage frame swallowed a reply");
+    }
+
+    // validation failures at decode: a k beyond u32 and a coordinate
+    // beyond 2^53 are both unsatisfiable and rejected loudly
+    for bad in [
+        r#"{"id":90,"op":"topk","model":"main","coords":[3,4,5],"mode":1,"k":4294967296}"#,
+        r#"{"id":91,"op":"predict","model":"main","coords":[9007199254740993]}"#,
+    ] {
+        (&sock).write_all(format!("{bad}\n").as_bytes()).unwrap();
+        let j = read_frame(&mut reader);
+        assert_eq!(op_of(&j), "error", "{bad} must be rejected: {j:?}");
+        assert_eq!(j.get("code").and_then(Json::as_str), Some("bad_request"));
+    }
+
+    // an id beyond 2^53 still answers (f64-rounded) — documented client
+    // contract is id < 2^53, but violating it must never panic or wedge
+    (&sock)
+        .write_all(b"{\"id\":9007199254740994,\"op\":\"epoch\",\"model\":\"main\"}\n")
+        .unwrap();
+    let j = read_frame(&mut reader);
+    assert_eq!(op_of(&j), "epoch", "huge-id frame must still answer: {j:?}");
+
+    // non-finite floats encode as null (valid JSON) and fail decoding
+    // loudly on the client side — never an invalid frame on the wire
+    let nan_frame = wire::response_frame(7, &fasttucker::serve::Response::Predict(f32::NAN));
+    assert!(Json::parse(&nan_frame).is_ok(), "NaN frame must stay valid JSON");
+    assert!(
+        wire::parse_response(&nan_frame).is_err(),
+        "a null value must fail decoding loudly"
+    );
+
+    // an unterminated frame over the bound drops that connection only
+    let sock2 = TcpStream::connect(&addr).unwrap();
+    sock2.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    let big = vec![b'x'; 2 << 20];
+    let _ = (&sock2).write_all(&big);
+    let mut sink = Vec::new();
+    match sock2.try_clone().unwrap().read_to_end(&mut sink) {
+        Ok(_) => {}
+        Err(e) => assert!(
+            !matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            ),
+            "oversize frame wedged the server: {e}"
+        ),
+    }
+    assert!(sink.is_empty(), "an oversize frame must never be answered");
+
+    // a line truncated by a hangup is discarded, not parsed
+    let sock3 = TcpStream::connect(&addr).unwrap();
+    sock3.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    (&sock3).write_all(b"{\"id\":1,\"op\":\"pre").unwrap();
+    sock3.shutdown(Shutdown::Write).unwrap();
+    sink.clear();
+    let _ = sock3.try_clone().unwrap().read_to_end(&mut sink);
+    assert!(sink.is_empty(), "a truncated line must never be answered");
+
+    // the original connection and a fresh client both still answer
+    // bit-exactly: nothing above touched the shared state
+    id += 1;
+    let req = format!("{{\"id\":{id},\"op\":\"predict\",\"model\":\"main\",\"coords\":[3,4,5]}}\n");
+    (&sock).write_all(req.as_bytes()).unwrap();
+    let j = read_frame(&mut reader);
+    assert_eq!(op_of(&j), "predict");
+    let v = j.get("value").and_then(Json::as_f64).unwrap() as f32;
+    assert_eq!(v.to_bits(), expect.to_bits());
+    let mut client = NetClient::connect(&addr).unwrap();
+    let fresh = client.predict(Some("main"), &coords).unwrap();
+    assert_eq!(fresh.to_bits(), expect.to_bits());
     server.shutdown();
 }
